@@ -1,0 +1,87 @@
+//! Quickstart — the smallest end-to-end tour of the system.
+//!
+//! 1. Load the AOT artifact manifest and compile one model on the PJRT
+//!    CPU client (Layer 3 ⇄ Layer 2 bridge).
+//! 2. Train it for a handful of steps on the synthetic corpus.
+//! 3. Ask the pure-Rust Toeplitz substrate the paper's core question in
+//!    miniature: how well does an r-point asymmetric-SKI factorization
+//!    approximate a smooth Toeplitz operator, and what does the
+//!    sparse+low-rank split buy?
+//!
+//! Run with: `cargo run --release --example quickstart`
+
+use anyhow::Result;
+
+use ski_tnn::config::RunConfig;
+use ski_tnn::coordinator::Trainer;
+use ski_tnn::runtime::Engine;
+use ski_tnn::toeplitz::{conv1d, gaussian_kernel, Ski, ToeplitzKernel};
+
+fn main() -> Result<()> {
+    // ------------------------------------------------------------------
+    // 1+2. Compile & train an FD-TNN for a few steps.
+    // ------------------------------------------------------------------
+    let run = RunConfig {
+        config: "lm_fd_3l".into(),
+        steps: 10,
+        eval_every: 5,
+        eval_batches: 2,
+        log_every: 5,
+        corpus_bytes: 200_000,
+        ..RunConfig::default()
+    };
+    let engine = Engine::new(&run.artifacts)?;
+    println!("PJRT platform: {}", engine.platform());
+    let cfg = engine.config(&run.config)?;
+    println!(
+        "model {}: {} params, {} blocks, n={}, variant={}",
+        cfg.name,
+        cfg.param_count,
+        cfg.blocks,
+        cfg.n,
+        cfg.variant.as_str()
+    );
+    let mut trainer = Trainer::new(&engine, run)?;
+    let stats = trainer.train()?;
+    println!("after 10 steps: val ppl {:.1}\n", stats.ppl);
+
+    // ------------------------------------------------------------------
+    // 3. The paper's §3.2 decomposition on the Rust substrate.
+    // ------------------------------------------------------------------
+    let n = 512;
+    // A "spiky near the diagonal, smooth elsewhere" kernel — the shape
+    // the paper observes in trained TNNs (their Fig. 2 motivation).
+    let spike = |t: i64| if t.unsigned_abs() < 4 { (4 - t.abs()) as f32 * 0.25 } else { 0.0 };
+    let smooth = |t: f64| gaussian_kernel(t, 80.0);
+    let full = ToeplitzKernel::from_fn(n, |t| spike(t) + smooth(t as f64));
+
+    let x: Vec<f32> = (0..n).map(|i| (i as f32 * 0.37).sin()).collect();
+    let exact = full.apply_fft(&x);
+
+    // sparse branch = 7-tap conv; low-rank branch = r-point SKI
+    let w: Vec<f32> = (-3i64..=3).map(spike).collect();
+    let sparse_y = conv1d(&x, &w, false);
+    println!("SKI approximation error vs rank (n = {n}, sparse filter m = 7):");
+    println!("{:>6} {:>14} {:>20}", "r", "low-rank only", "sparse + low-rank");
+    for r in [8usize, 16, 32, 64, 128] {
+        let ski = Ski::from_kernel(n, r, |t| spike(t.round() as i64) as f32 + smooth(t));
+        let ski_smooth = Ski::from_kernel(n, r, smooth);
+        let lr_only = ski.apply_sparse(&x);
+        let both: Vec<f32> = ski_smooth
+            .apply_sparse(&x)
+            .iter()
+            .zip(sparse_y.iter())
+            .map(|(a, b)| a + b)
+            .collect();
+        let rel = |approx: &[f32]| {
+            let num: f32 =
+                exact.iter().zip(approx).map(|(a, b)| (a - b) * (a - b)).sum::<f32>();
+            let den: f32 = exact.iter().map(|a| a * a).sum::<f32>();
+            (num / den).sqrt()
+        };
+        println!("{:>6} {:>14.5} {:>20.5}", r, rel(&lr_only), rel(&both));
+    }
+    println!("\n→ the sparse+low-rank split (paper §3.2) absorbs the diagonal spike that");
+    println!("  interpolation alone cannot, exactly the paper's motivation for T_sparse.");
+    Ok(())
+}

@@ -1,0 +1,120 @@
+//! Serving demo — dynamic batching over the `logits` artifact.
+//!
+//! Loads (or initializes) a model, starts the dynamic batcher, and
+//! drives it with concurrent synthetic clients at a configurable
+//! arrival rate, reporting throughput, batch fill, and latency
+//! percentiles — the serving-side counterpart of the paper's speed
+//! claims (an FD/SKI TNO also shrinks inference latency, since the
+//! same TNO runs inside the `logits` entry).
+//!
+//! Usage:
+//! ```text
+//! cargo run --release --example serve -- --config lra_text_fd \
+//!     --requests 400 --clients 8 --max-wait-ms 2
+//! cargo run --release --example serve -- --config lm_fd_3l \
+//!     --resume runs/lm/lm_fd_3l_step300.ckpt
+//! ```
+
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use ski_tnn::config::RunConfig;
+use ski_tnn::runtime::{Engine, ModelState};
+use ski_tnn::server::{serve_model, Batcher, ServerConfig};
+use ski_tnn::util::bench::Table;
+use ski_tnn::util::cli::Args;
+use ski_tnn::util::rng::Rng;
+
+fn main() -> Result<()> {
+    let args = Args::parse(false);
+    let mut rc = RunConfig::default();
+    rc.config = "lra_text_fd".into();
+    rc.apply_args(&args);
+    let requests = args.usize_or("requests", 400);
+    let clients = args.usize_or("clients", 8);
+    let think_us = args.u64_or("think-us", 500);
+
+    let engine = Engine::new(&rc.artifacts)?;
+    let cfg = engine.config(&rc.config)?.clone();
+    let state = match &rc.resume {
+        Some(p) => ModelState::load(&engine, p)?,
+        None => ModelState::init(&engine, &rc.config, rc.seed as u32)?,
+    };
+    engine.load(&rc.config, "logits")?; // compile before load arrives
+
+    let server_cfg = ServerConfig {
+        max_batch: cfg.batch,
+        n: cfg.n,
+        max_wait: Duration::from_millis(args.u64_or("max-wait-ms", 2)),
+        queue_depth: args.usize_or("queue-depth", 64),
+    };
+    println!(
+        "serving {} (batch {}, n {}, {} classes/vocab) · {clients} clients · {requests} requests",
+        rc.config,
+        cfg.batch,
+        cfg.n,
+        if cfg.task == ski_tnn::runtime::Task::Cls { cfg.num_classes } else { cfg.vocab },
+    );
+
+    let batcher = Batcher::new(server_cfg);
+    let handle = batcher.handle();
+    let per_client = requests / clients;
+    let workers: Vec<_> = (0..clients)
+        .map(|c| {
+            let h = handle.clone();
+            let n = cfg.n;
+            let seed = rc.seed + c as u64;
+            std::thread::spawn(move || -> (Vec<f64>, Vec<f64>) {
+                let mut rng = Rng::new(seed);
+                let mut lat = Vec::with_capacity(per_client);
+                let mut queued = Vec::with_capacity(per_client);
+                for _ in 0..per_client {
+                    let len = 8 + rng.below(n.saturating_sub(8).max(1));
+                    let ids: Vec<i32> = (0..len).map(|_| rng.below(256) as i32).collect();
+                    let t0 = Instant::now();
+                    let resp = h.infer(ids).expect("infer");
+                    lat.push(t0.elapsed().as_secs_f64());
+                    queued.push(resp.queued.as_secs_f64());
+                    std::thread::sleep(Duration::from_micros(think_us));
+                }
+                (lat, queued)
+            })
+        })
+        .collect();
+    drop(handle);
+
+    let t0 = Instant::now();
+    let stats = batcher.run(serve_model(&engine, &state))?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    let mut lats = Vec::new();
+    let mut queueds = Vec::new();
+    for w in workers {
+        let (l, q) = w.join().unwrap();
+        lats.extend(l);
+        queueds.extend(q);
+    }
+    lats.sort_by(|a, b| a.total_cmp(b));
+    queueds.sort_by(|a, b| a.total_cmp(b));
+    let pct = |v: &[f64], p: f64| v[((v.len() as f64 - 1.0) * p) as usize];
+
+    let mut t = Table::new("serving summary", &["metric", "value"]);
+    t.row(&["requests".into(), format!("{}", stats.requests)]);
+    t.row(&["batches".into(), format!("{}", stats.batches)]);
+    t.row(&[
+        "mean batch fill".into(),
+        format!("{:.1}%", 100.0 * stats.mean_batch_fill(cfg.batch)),
+    ]);
+    t.row(&["throughput".into(), format!("{:.1} req/s", stats.requests as f64 / wall)]);
+    t.row(&["latency p50".into(), format!("{:.1} ms", 1e3 * pct(&lats, 0.5))]);
+    t.row(&["latency p95".into(), format!("{:.1} ms", 1e3 * pct(&lats, 0.95))]);
+    t.row(&["latency p99".into(), format!("{:.1} ms", 1e3 * pct(&lats, 0.99))]);
+    t.row(&["queue wait p95".into(), format!("{:.1} ms", 1e3 * pct(&queueds, 0.95))]);
+    t.row(&[
+        "exec time share".into(),
+        format!("{:.1}% of wall", 100.0 * stats.exec_seconds / wall),
+    ]);
+    t.print();
+    Ok(())
+}

@@ -1,0 +1,157 @@
+//! End-to-end pre-training driver — the paper's Wikitext-103 section.
+//!
+//! Trains TNO variants side-by-side on the synthetic grammar corpus and
+//! reports the paper's comparisons:
+//!
+//! * **Table 1 rows** — final val perplexity per variant (TNN baseline
+//!   vs FD-TNN), plus measured steps/sec and the FD speedup.
+//! * **Fig 7b / 8 / 9 curves** — val-PPL-vs-iteration series written to
+//!   `<out-dir>/<config>_metrics.{csv,json}`.
+//! * **Fig 7a** — perplexity vs inference length via the `fwd_n{L}`
+//!   artifacts (`--ppl-vs-len`, causal 3-layer configs only).
+//!
+//! Usage:
+//! ```text
+//! cargo run --release --example train_lm -- \
+//!     --mode causal --variants base,fd --steps 300 --out-dir runs/lm
+//! cargo run --release --example train_lm -- --mode bidir \
+//!     --variants base,fd,ski --steps 200 --out-dir runs/lm_bidir
+//! cargo run --release --example train_lm -- --ppl-vs-len --steps 150
+//! ```
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use ski_tnn::config::RunConfig;
+use ski_tnn::coordinator::{evaluate, Trainer};
+use ski_tnn::data::{BatchSource, CausalLmStream, Corpus, Split};
+use ski_tnn::runtime::Engine;
+use ski_tnn::util::bench::Table;
+use ski_tnn::util::cli::Args;
+
+fn config_name(mode: &str, variant: &str, rpe: usize) -> Result<String> {
+    Ok(match (mode, variant) {
+        ("causal", "base") => format!("lm_base_{rpe}l"),
+        ("causal", "fd") => format!("lm_fd_{rpe}l"),
+        ("causal", "ski") => {
+            bail!("SKI-TNO is bidirectional-only (paper Appendix B); use --mode bidir")
+        }
+        ("bidir", "base") => format!("lm_bidir_base_{rpe}l"),
+        ("bidir", "fd") => format!("lm_bidir_fd_{rpe}l"),
+        ("bidir", "ski") => "lm_bidir_ski".to_string(),
+        (m, v) => bail!("unknown mode/variant {m}/{v}"),
+    })
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse(false);
+    let mode = args.str_or("mode", "causal");
+    let variants = args.list_or("variants", &["base", "fd"]);
+    let rpe = args.usize_or("rpe-layers", 3);
+    let steps = args.usize_or("steps", 300);
+    let seed = args.u64_or("seed", 0);
+
+    let mut base_run = RunConfig::default();
+    base_run.apply_args(&args);
+    base_run.steps = steps;
+    base_run.seed = seed;
+
+    let engine = Engine::new(&base_run.artifacts)?;
+    println!(
+        "platform: {} | corpus: {} bytes (synthetic grammar)",
+        engine.platform(),
+        base_run.corpus_bytes
+    );
+
+    let mut table = Table::new(
+        &format!(
+            "Pre-training ({mode}, {rpe}-layer RPE, {steps} steps) — paper Table 1 / Figs 7-9"
+        ),
+        &["variant", "config", "final val PPL", "steps/s", "vs base"],
+    );
+    let mut rows: Vec<(String, f64, f64)> = Vec::new();
+    let mut trained: Vec<(String, Trainer)> = Vec::new();
+
+    for variant in &variants {
+        let config = config_name(&mode, variant, rpe)?;
+        let mut run = base_run.clone();
+        run.config = config.clone();
+        let mut trainer = Trainer::new(&engine, run)?;
+        println!("\n=== training {config} ===");
+        let stats = trainer.train()?;
+        let sps = trainer
+            .metrics
+            .series("final", "steps_per_sec")
+            .last()
+            .map(|(_, v)| *v)
+            .unwrap_or(f64::NAN);
+        rows.push((variant.clone(), stats.ppl, sps));
+        trained.push((config, trainer));
+    }
+
+    let base_sps = rows.iter().find(|(v, _, _)| v == "base").map(|(_, _, s)| *s);
+    for ((variant, ppl, sps), (config, _)) in rows.iter().zip(trained.iter()) {
+        let speedup = base_sps
+            .map(|b| format!("{:+.1}%", 100.0 * (sps / b - 1.0)))
+            .unwrap_or_else(|| "—".into());
+        table.row(&[
+            variant.clone(),
+            config.clone(),
+            format!("{ppl:.2}"),
+            format!("{sps:.2}"),
+            speedup,
+        ]);
+    }
+    table.print();
+
+    // ------------------------------------------------------------------
+    // Fig 7a: perplexity vs inference length (causal 3-layer configs
+    // carry fwd_n{64,128,384,512} artifacts).
+    // ------------------------------------------------------------------
+    if args.flag("ppl-vs-len") {
+        if mode != "causal" || rpe != 3 {
+            bail!("--ppl-vs-len needs --mode causal --rpe-layers 3 (extra lowerings)");
+        }
+        let corpus = Arc::new(Corpus::generate(seed, base_run.corpus_bytes).tokens());
+        let mut t7 = Table::new(
+            "PPL vs inference length (paper Fig 7a; trained at n=256, warp extrapolation)",
+            &["config", "n=64", "n=128", "n=256", "n=384", "n=512"],
+        );
+        for (config, trainer) in &trained {
+            let cfg = engine.config(config)?;
+            let mut cells = vec![config.clone()];
+            for len in [64usize, 128, 256, 384, 512] {
+                let entry =
+                    if len == cfg.n { "fwd".to_string() } else { format!("fwd_n{len}") };
+                if !cfg.entries.contains_key(&entry) {
+                    cells.push("—".into());
+                    continue;
+                }
+                let mut src: Box<dyn BatchSource> = Box::new(CausalLmStream::new(
+                    corpus.clone(),
+                    Split::Val,
+                    cfg.batch,
+                    len,
+                    seed + 1,
+                ));
+                let stats = evaluate(
+                    &engine,
+                    &trainer.state,
+                    &entry,
+                    src.as_mut(),
+                    base_run.eval_batches,
+                )?;
+                cells.push(format!("{:.2}", stats.ppl));
+            }
+            t7.row(&cells);
+        }
+        t7.print();
+    }
+
+    // Fig 7b/8/9 series live in the metrics files when --out-dir is set.
+    if let Some(dir) = &base_run.out_dir {
+        println!("\nval-PPL-vs-iteration curves written under {}", dir.display());
+    }
+    Ok(())
+}

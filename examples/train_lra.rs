@@ -1,0 +1,106 @@
+//! Long-Range-Arena driver — the paper's Table 2 / Fig 1a experiments.
+//!
+//! Trains the three TNO variants (TNN baseline, SKI-TNN, FD-TNN) on
+//! the synthetic LRA task suite and reports the accuracy grid plus the
+//! per-variant speed, the two axes of the paper's Fig 1a bubble plot.
+//!
+//! Usage:
+//! ```text
+//! cargo run --release --example train_lra -- \
+//!     --tasks text,listops --variants base,ski,fd --steps 200 --out-dir runs/lra
+//! cargo run --release --example train_lra --            # all 5 tasks
+//! ```
+
+use anyhow::Result;
+
+use ski_tnn::config::RunConfig;
+use ski_tnn::coordinator::Trainer;
+use ski_tnn::runtime::Engine;
+use ski_tnn::util::bench::Table;
+use ski_tnn::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::parse(false);
+    let tasks = args.list_or(
+        "tasks",
+        &["text", "listops", "retrieval", "pathfinder", "image"],
+    );
+    let variants = args.list_or("variants", &["base", "ski", "fd"]);
+    let steps = args.usize_or("steps", 200);
+
+    let mut base_run = RunConfig::default();
+    base_run.apply_args(&args);
+    base_run.steps = steps;
+    if args.get("eval-batches").is_none() {
+        base_run.eval_batches = 16; // accuracy needs more eval examples
+    }
+
+    let engine = Engine::new(&base_run.artifacts)?;
+    println!("platform: {} | LRA suite (synthetic generators, n=1024)", engine.platform());
+
+    // accuracy grid [task][variant] + speed grid
+    let mut acc = vec![vec![f64::NAN; variants.len()]; tasks.len()];
+    let mut sps = vec![vec![f64::NAN; variants.len()]; tasks.len()];
+
+    for (ti, task) in tasks.iter().enumerate() {
+        for (vi, variant) in variants.iter().enumerate() {
+            let config = format!("lra_{task}_{variant}");
+            if engine.config(&config).is_err() {
+                println!("skipping {config} (not in manifest)");
+                continue;
+            }
+            let mut run = base_run.clone();
+            run.config = config.clone();
+            let mut trainer = Trainer::new(&engine, run)?;
+            println!("\n=== training {config} ({steps} steps) ===");
+            let stats = trainer.train()?;
+            acc[ti][vi] = 100.0 * stats.acc;
+            sps[ti][vi] = trainer
+                .metrics
+                .series("final", "steps_per_sec")
+                .last()
+                .map(|(_, v)| *v)
+                .unwrap_or(f64::NAN);
+        }
+    }
+
+    let headers: Vec<&str> =
+        std::iter::once("task").chain(variants.iter().map(|v| v.as_str())).collect();
+    let mut t_acc = Table::new(
+        &format!("LRA accuracy %, {steps} steps (paper Table 2 shape: FD ≥ TNN ≥ SKI)"),
+        &headers,
+    );
+    let mut t_sps = Table::new(
+        "LRA training steps/sec (paper Fig 1a x-axis: SKI & FD faster than TNN)",
+        &headers,
+    );
+    for (ti, task) in tasks.iter().enumerate() {
+        t_acc.row(
+            &std::iter::once(task.clone())
+                .chain(acc[ti].iter().map(|a| format!("{a:.1}")))
+                .collect::<Vec<_>>(),
+        );
+        t_sps.row(
+            &std::iter::once(task.clone())
+                .chain(sps[ti].iter().map(|s| format!("{s:.2}")))
+                .collect::<Vec<_>>(),
+        );
+    }
+    // column averages (the paper's Avg row)
+    let avg_row = |grid: &[Vec<f64>]| -> Vec<String> {
+        std::iter::once("avg".to_string())
+            .chain((0..variants.len()).map(|vi| {
+                let vals: Vec<f64> = grid
+                    .iter()
+                    .map(|r| r[vi])
+                    .filter(|v| v.is_finite())
+                    .collect();
+                format!("{:.1}", vals.iter().sum::<f64>() / vals.len().max(1) as f64)
+            }))
+            .collect()
+    };
+    t_acc.row(&avg_row(&acc));
+    t_acc.print();
+    t_sps.print();
+    Ok(())
+}

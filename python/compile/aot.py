@@ -1,0 +1,266 @@
+"""AOT lowering driver: JAX → HLO text artifacts + manifest.json.
+
+Python's only job in this system is to run once, here, at build time
+(`make artifacts`).  For every config in :mod:`configs` it lowers:
+
+  * ``init``    — ``(seed u32) → (*params)``
+  * ``step``    — ``(*params, *m, *v, t, *batch) → (*params', *m', *v', t', loss)``
+  * ``fwd``     — ``(*params, *batch) → (loss, metric)``
+  * ``logits``  — ``(*params, ids) → (logits)``  (serving entry)
+  * ``fwd_n{L}``— extra eval-only lowerings at other sequence lengths
+                  (perplexity-vs-inference-length, paper Fig 7a)
+
+HLO **text** is the interchange format: jax ≥ 0.5 emits HloModuleProto
+with 64-bit instruction ids which xla_extension 0.5.1 (the version the
+`xla` Rust crate binds) rejects; the text parser reassigns ids and
+round-trips cleanly.  See /opt/xla-example/README.md.
+
+Lowering is embarrassingly parallel across configs; ``--jobs N`` forks
+workers (default: up to 8).
+"""
+
+import argparse
+import dataclasses
+import json
+import os
+import sys
+from concurrent.futures import ProcessPoolExecutor
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model, train
+from .configs import CONFIGS, CORE, ModelCfg, batch_spec
+
+_DTYPES = {"f32": jnp.float32, "i32": jnp.int32, "u32": jnp.uint32}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants is MANDATORY: the default printer elides big
+    # array literals as ``constant({...})`` and the HLO text parser then
+    # silently materialises them as ZEROS — any graph that multiplies a
+    # computed value by a large constant (the Hilbert causal window, the
+    # SKI table centre mask, the FD edge mask) would run as a zero
+    # operator on the Rust side while every python-side jit test passes.
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    # ...and metadata must be OFF: the new printer emits attribute keys
+    # (source_end_line, …) the 0.5.1 text parser rejects outright.
+    opts.print_metadata = False
+    return comp.get_hlo_module().to_string(opts)
+
+
+def _spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, _DTYPES[dtype])
+
+
+def param_specs(cfg: ModelCfg):
+    """Flattened (name, shape) list + treedef of the model parameters."""
+    shapes = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0), cfg))
+    paths, treedef = jax.tree_util.tree_flatten_with_path(shapes)
+    names, leaves = [], []
+    for path, leaf in paths:
+        names.append(jax.tree_util.keystr(path, simple=True, separator="."))
+        leaves.append(leaf)
+    return names, leaves, treedef
+
+
+def _io_desc(name, leaf):
+    dt = {jnp.float32.dtype: "f32", jnp.int32.dtype: "i32", jnp.uint32.dtype: "u32"}[
+        leaf.dtype
+    ]
+    return {"name": name, "shape": list(leaf.shape), "dtype": dt}
+
+
+def lower_config(cfg: ModelCfg, out_dir: str):
+    """Lower all entries for one config; return its manifest fragment."""
+    names, leaves, treedef = param_specs(cfg)
+    unf = lambda flat: jax.tree_util.tree_unflatten(treedef, list(flat))
+    nparams = len(leaves)
+    bspec = batch_spec(cfg)
+    batch_leaves = [_spec(shape, dt) for (_n, shape, dt) in bspec]
+
+    entries = {}
+
+    def emit(entry_name, fn, arg_specs, in_desc, out_desc):
+        lowered = jax.jit(fn).lower(*arg_specs)
+        text = to_hlo_text(lowered)
+        fname = f"{cfg.name}.{entry_name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        entries[entry_name] = {
+            "file": fname,
+            "inputs": in_desc,
+            "outputs": out_desc,
+        }
+
+    # ---- init ----
+    def init_fn(seed):
+        key = jax.random.PRNGKey(seed)
+        p = model.init(key, cfg)
+        return tuple(jax.tree_util.tree_leaves(p))
+
+    emit(
+        "init",
+        init_fn,
+        [_spec((), "u32")],
+        [{"name": "seed", "shape": [], "dtype": "u32"}],
+        [_io_desc(n, l) for n, l in zip(names, leaves)],
+    )
+
+    # ---- step ----
+    def step_fn(*args):
+        p = unf(args[:nparams])
+        m = unf(args[nparams : 2 * nparams])
+        v = unf(args[2 * nparams : 3 * nparams])
+        t = args[3 * nparams]
+        batch = args[3 * nparams + 1 :]
+        p, m, v, t, loss = train.train_step(p, m, v, t, batch, cfg)
+        fl = jax.tree_util.tree_leaves
+        return tuple(fl(p)) + tuple(fl(m)) + tuple(fl(v)) + (t, loss)
+
+    step_in = (
+        [_io_desc(n, l) for n, l in zip(names, leaves)]
+        + [_io_desc(f"m.{n}", l) for n, l in zip(names, leaves)]
+        + [_io_desc(f"v.{n}", l) for n, l in zip(names, leaves)]
+        + [{"name": "t", "shape": [], "dtype": "f32"}]
+        + [{"name": bn, "shape": list(bs), "dtype": bd} for bn, bs, bd in bspec]
+    )
+    step_out = (
+        [_io_desc(n, l) for n, l in zip(names, leaves)]
+        + [_io_desc(f"m.{n}", l) for n, l in zip(names, leaves)]
+        + [_io_desc(f"v.{n}", l) for n, l in zip(names, leaves)]
+        + [
+            {"name": "t", "shape": [], "dtype": "f32"},
+            {"name": "loss", "shape": [], "dtype": "f32"},
+        ]
+    )
+    emit(
+        "step",
+        step_fn,
+        leaves + leaves + leaves + [_spec((), "f32")] + batch_leaves,
+        step_in,
+        step_out,
+    )
+
+    # ---- fwd (loss + metric on one batch) ----
+    def fwd_fn(*args):
+        p = unf(args[:nparams])
+        batch = args[nparams:]
+        loss, metric = model.loss_fn(p, batch, cfg)
+        return loss, metric
+
+    emit(
+        "fwd",
+        fwd_fn,
+        leaves + batch_leaves,
+        [_io_desc(n, l) for n, l in zip(names, leaves)]
+        + [{"name": bn, "shape": list(bs), "dtype": bd} for bn, bs, bd in bspec],
+        [
+            {"name": "loss", "shape": [], "dtype": "f32"},
+            {"name": "metric", "shape": [], "dtype": "f32"},
+        ],
+    )
+
+    # ---- logits (serving) ----
+    ids_shape = (cfg.batch, cfg.n)
+    out_shape = (
+        (cfg.batch, cfg.num_classes)
+        if cfg.task == "cls"
+        else (cfg.batch, cfg.vocab)
+    )
+
+    def logits_fn(*args):
+        p = unf(args[:nparams])
+        return (model.logits_entry(p, args[nparams], cfg),)
+
+    emit(
+        "logits",
+        logits_fn,
+        leaves + [_spec(ids_shape, "i32")],
+        [_io_desc(n, l) for n, l in zip(names, leaves)]
+        + [{"name": "ids", "shape": list(ids_shape), "dtype": "i32"}],
+        [{"name": "logits", "shape": list(out_shape), "dtype": "f32"}],
+    )
+
+    # ---- extra eval lengths (Fig 7a) ----
+    for L in cfg.eval_lens:
+        ecfg = dataclasses.replace(cfg, n=L, eval_lens=())
+        ebspec = batch_spec(ecfg)
+        ebatch = [_spec(shape, dt) for (_n, shape, dt) in ebspec]
+
+        def fwd_L(*args, _ecfg=ecfg):
+            p = unf(args[:nparams])
+            loss, metric = model.loss_fn(p, args[nparams:], _ecfg)
+            return loss, metric
+
+        emit(
+            f"fwd_n{L}",
+            fwd_L,
+            leaves + ebatch,
+            [_io_desc(n, l) for n, l in zip(names, leaves)]
+            + [{"name": bn, "shape": list(bs), "dtype": bd} for bn, bs, bd in ebspec],
+            [
+                {"name": "loss", "shape": [], "dtype": "f32"},
+                {"name": "metric", "shape": [], "dtype": "f32"},
+            ],
+        )
+
+    frag = cfg.to_dict()
+    frag["params"] = [_io_desc(n, l) for n, l in zip(names, leaves)]
+    frag["param_count"] = int(sum(int(jnp.prod(jnp.array(l.shape))) for l in leaves))
+    frag["entries"] = entries
+    return cfg.name, frag
+
+
+def _worker(args):
+    name, out_dir = args
+    return lower_config(CONFIGS[name], out_dir)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument("--only", nargs="*", help="subset of config names")
+    ap.add_argument("--core", action="store_true", help="lower only the CORE set")
+    ap.add_argument("--jobs", type=int, default=min(8, os.cpu_count() or 1))
+    args = ap.parse_args()
+
+    names = args.only or (CORE if args.core else list(CONFIGS))
+    for n in names:
+        if n not in CONFIGS:
+            sys.exit(f"unknown config {n!r}; have {list(CONFIGS)}")
+    os.makedirs(args.out, exist_ok=True)
+
+    work = [(n, args.out) for n in names]
+    frags = {}
+    if args.jobs > 1 and len(work) > 1:
+        with ProcessPoolExecutor(max_workers=args.jobs) as ex:
+            for name, frag in ex.map(_worker, work):
+                frags[name] = frag
+                print(f"lowered {name}: {list(frag['entries'])}", flush=True)
+    else:
+        for w in work:
+            name, frag = _worker(w)
+            frags[name] = frag
+            print(f"lowered {name}: {list(frag['entries'])}", flush=True)
+
+    # Merge with any existing manifest so partial lowering is additive.
+    mpath = os.path.join(args.out, "manifest.json")
+    manifest = {"configs": {}}
+    if os.path.exists(mpath):
+        with open(mpath) as f:
+            manifest = json.load(f)
+    manifest["configs"].update(frags)
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"wrote {mpath} with {len(manifest['configs'])} configs")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,165 @@
+"""Model / lowering configurations and the artifact manifest schema.
+
+Every entry in :data:`CONFIGS` becomes a family of AOT artifacts
+(`init`, `step`, `fwd`, `logits`, plus fixed extra eval lengths for the
+perplexity-vs-length experiment).  The Rust coordinator consumes
+``artifacts/manifest.json`` and never re-derives any of these shapes.
+
+Scaling note (documented in DESIGN.md): the paper trains on A100s at
+n=512 (Wikitext-103) and n=1024–4096 (LRA).  On the CPU PJRT substrate
+we keep the same *structure* (block counts, RPE depths, r/m ratios,
+sequence-length sweeps 512→2048) with reduced widths so that full
+train-eval cycles complete in CI time.  All comparisons are
+within-substrate, matching how the paper reports *relative* speedups.
+"""
+
+from dataclasses import dataclass, field, asdict
+
+
+@dataclass
+class ModelCfg:
+    name: str
+    task: str  # 'lm_causal' | 'lm_bidir' | 'cls'
+    variant: str  # 'base' | 'ski' | 'fd'
+    vocab: int = 259  # 256 bytes + PAD + MASK + CLS
+    n: int = 256
+    d: int = 128
+    blocks: int = 2
+    expand: int = 1  # GTU expansion factor (TNO channel count = d*expand)
+    glu_mult: int = 2  # GLU hidden multiplier
+    rpe_layers: int = 3
+    rpe_hidden: int = 32
+    rpe_act: str = "relu"
+    lam: float = 0.99
+    r: int = 64  # SKI rank (inducing points)
+    m: int = 32  # SKI sparse filter size
+    tbl: int = 65  # SKI table grid points (odd; centre pinned to 0)
+    num_classes: int = 10
+    batch: int = 8
+    lr: float = 1e-3
+    warmup: int = 100
+    clip: float = 1.0
+    ski_lowrank_only: bool = False
+    eval_lens: tuple = ()  # extra fwd-only lowerings at other seq lens
+
+    @property
+    def causal(self) -> bool:
+        return self.task == "lm_causal"
+
+    @property
+    def e(self) -> int:
+        return self.d * self.expand
+
+    def to_dict(self):
+        d = asdict(self)
+        d["eval_lens"] = list(self.eval_lens)
+        return d
+
+
+PAD, MASK, CLS = 256, 257, 258
+
+
+def _lm(name, variant, task="lm_causal", **kw):
+    kw.setdefault("n", 256)
+    kw.setdefault("d", 128)
+    kw.setdefault("blocks", 2)
+    kw.setdefault("batch", 8)
+    return ModelCfg(name=name, task=task, variant=variant, **kw)
+
+
+def _timing(name, variant, n, **kw):
+    # fig10/fig11 step-time configs: structure of the paper's 512/2048
+    # sweep, thin width so CPU steps stay sub-second.
+    return ModelCfg(
+        name=name,
+        task="lm_bidir",
+        variant=variant,
+        n=n,
+        d=64,
+        blocks=2,
+        batch=2,
+        rpe_layers=6 if variant == "base" else 3,
+        **kw,
+    )
+
+
+def _lra(task_name, variant, n, ncls, **kw):
+    return ModelCfg(
+        name=f"lra_{task_name}_{variant}",
+        task="cls",
+        variant=variant,
+        n=n,
+        d=64,
+        blocks=2,
+        batch=4,
+        num_classes=ncls,
+        r=kw.pop("r", 64),
+        m=kw.pop("m", 32),
+        **kw,
+    )
+
+
+def build_configs():
+    cfgs = [
+        # --- Table 1 / Fig 1b / Fig 7: causal LM pre-training ----------
+        _lm("lm_base_3l", "base", rpe_layers=3, eval_lens=(64, 128, 384, 512)),
+        _lm("lm_fd_3l", "fd", rpe_layers=3, eval_lens=(64, 128, 384, 512)),
+        _lm("lm_base_6l", "base", rpe_layers=6),
+        _lm("lm_fd_6l", "fd", rpe_layers=6),
+        # --- Fig 1b / Fig 8 / Fig 9: bidirectional pre-training --------
+        _lm("lm_bidir_base_3l", "base", task="lm_bidir", rpe_layers=3),
+        _lm("lm_bidir_fd_3l", "fd", task="lm_bidir", rpe_layers=3),
+        _lm("lm_bidir_base_6l", "base", task="lm_bidir", rpe_layers=6),
+        _lm("lm_bidir_fd_6l", "fd", task="lm_bidir", rpe_layers=6),
+        _lm("lm_bidir_ski", "ski", task="lm_bidir"),
+        # --- Fig 10 / Fig 11: sequence-length scaling ------------------
+        _timing("t512_base6", "base", 512),
+        _timing("t512_ski", "ski", 512),
+        _timing("t2048_base6", "base", 2048),
+        _timing("t2048_ski", "ski", 2048),
+        _timing("t512_ski_lronly", "ski", 512, ski_lowrank_only=True),
+        _timing("t2048_ski_lronly", "ski", 2048, ski_lowrank_only=True),
+    ]
+    # --- Table 2 / Fig 1a: LRA tasks (5 tasks × 3 variants) ------------
+    # 1-D tasks use the paper's r=64, m=32; 2-D tasks r=32, m=16.
+    lra = [
+        ("text", 1024, 2, dict()),
+        ("listops", 1024, 10, dict()),
+        ("retrieval", 1024, 2, dict()),
+        ("pathfinder", 1024, 2, dict(r=32, m=16)),
+        ("image", 1024, 10, dict(r=32, m=16, rpe_act="relu")),
+    ]
+    for tname, n, ncls, extra in lra:
+        for variant in ("base", "ski", "fd"):
+            cfgs.append(_lra(tname, variant, n, ncls, **dict(extra)))
+    return {c.name: c for c in cfgs}
+
+
+CONFIGS = build_configs()
+
+# The cheap subset used by `make artifacts-core` and the python tests.
+CORE = [
+    "lm_base_3l",
+    "lm_fd_3l",
+    "lm_bidir_ski",
+    "lm_bidir_fd_3l",
+]
+
+
+def batch_spec(cfg: ModelCfg):
+    """Input specs (name, shape, dtype) of one training batch."""
+    b, n = cfg.batch, cfg.n
+    if cfg.task == "lm_causal":
+        return [("tokens", (b, n + 1), "i32")]
+    if cfg.task == "lm_bidir":
+        return [
+            ("ids", (b, n), "i32"),
+            ("tgt", (b, n), "i32"),
+            ("mask", (b, n), "f32"),
+        ]
+    if cfg.task == "cls":
+        return [("ids", (b, n), "i32"), ("labels", (b,), "i32")]
+    raise ValueError(cfg.task)
+
+
+__all__ = ["ModelCfg", "CONFIGS", "CORE", "batch_spec", "PAD", "MASK", "CLS"]

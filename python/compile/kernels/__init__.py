@@ -1,0 +1,36 @@
+"""Layer-1 Pallas kernels for the SKI-TNN / FD-TNN reproduction.
+
+Every kernel here is the compute hot-spot of one TNO variant from
+"SKI to go Faster" (Moreno, Mei & Walters, 2023):
+
+- :mod:`conv1d`    — depthwise short 1-D convolution: the action of the
+  *sparse* component ``T_sparse`` of the sparse+low-rank Toeplitz
+  decomposition (paper §3.2, Algorithm 1).
+- :mod:`ski`       — the fused asymmetric-SKI low-rank apply
+  ``y = W A Wᵀ x`` (paper §3.2.1), with ``A`` built in-kernel from its
+  ``2r-1`` Toeplitz taps.
+- :mod:`toeplitz`  — standalone inducing-point Toeplitz matvec
+  ``v = A u`` used by tests and micro-benchmarks.
+- :mod:`fdmod`     — frequency-domain complex modulation ``ŷ = k̂ ⊙ x̂``
+  expressed over real/imag pairs (paper §3.3, Algorithm 2).
+
+All kernels are written with explicit ``BlockSpec`` tilings (batch ×
+channel-tile grids) so the HBM↔VMEM schedule is what a real TPU lowering
+would use; in this environment they are lowered with ``interpret=True``
+(the CPU PJRT plugin cannot execute Mosaic custom-calls) and checked
+against the pure-jnp oracles in :mod:`ref`.
+
+Each kernel carries a ``jax.custom_vjp`` so that the *backward* pass of
+the train step also runs through Pallas kernels where the transpose is
+itself one of our kernels (conv ↔ flipped conv, ``W A Wᵀ`` ↔ reversed
+taps, ``k̂ ⊙`` ↔ conjugate ``k̂ ⊙``); small reductions (filter/tap
+gradients) use jnp segment-sums.
+"""
+
+from .conv1d import conv1d
+from .ski import ski_lowrank
+from .toeplitz import toeplitz_av
+from .fdmod import fdmod
+from . import ref
+
+__all__ = ["conv1d", "ski_lowrank", "toeplitz_av", "fdmod", "ref"]

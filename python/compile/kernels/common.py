@@ -1,0 +1,57 @@
+"""Shared helpers for the Pallas kernels.
+
+Tiling policy
+-------------
+All kernels grid over ``(batch, channel-tiles)``.  The channel tile is
+``d_tile = min(d, 128)`` — 128 lanes is the native TPU vector width and
+keeps every block's VMEM working set far below the ~16 MiB budget even
+at the longest LRA sequence length we lower (n = 4096: a full
+``(n, 128)`` f32 sequence tile is 2 MiB, leaving room for double
+buffering).  Sequence-length tiling (with halos for the conv) is the
+next refinement documented in DESIGN.md §Perf; at the shapes this paper
+evaluates it is not needed to fit VMEM.
+
+``interpret=True`` is mandatory here: real TPU lowering emits a Mosaic
+custom-call that the CPU PJRT plugin cannot execute.  The kernels are
+still written against the Pallas block model so the same code targets
+TPU unchanged.
+"""
+
+import jax
+
+# The CPU plugin cannot run Mosaic custom-calls; interpret mode lowers the
+# kernels to plain HLO so the AOT artifacts execute on the Rust PJRT client.
+INTERPRET = True
+
+
+def d_tile(d: int) -> int:
+    """Channel tile width: full channel dim up to one TPU lane-width."""
+    for cand in (128, 64, 32, 16, 8, 4, 2, 1):
+        if cand <= d and d % cand == 0:
+            return cand
+    return 1
+
+
+def vmem_bytes_conv(n: int, dt: int, m: int) -> int:
+    """Analytic VMEM footprint of one conv1d block (f32)."""
+    return 4 * (n * dt + m * dt + n * dt)  # x tile + filter + out tile
+
+
+def vmem_bytes_ski(n: int, dt: int, r: int) -> int:
+    """Analytic VMEM footprint of one ski_lowrank block (f32)."""
+    # x tile, W (n,r), taps, A (r,r,dt), u/v (r,dt), out tile
+    return 4 * (n * dt + n * r + (2 * r - 1) * dt + r * r * dt + 2 * r * dt + n * dt)
+
+
+def vmem_bytes_fdmod(f: int, dt: int) -> int:
+    """Analytic VMEM footprint of one fdmod block (f32)."""
+    return 4 * (2 * f * dt + 4 * f * dt)  # k pair + x pair + y pair
+
+
+__all__ = [
+    "INTERPRET",
+    "d_tile",
+    "vmem_bytes_conv",
+    "vmem_bytes_ski",
+    "vmem_bytes_fdmod",
+]

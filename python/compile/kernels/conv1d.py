@@ -1,0 +1,155 @@
+"""Depthwise short 1-D convolution — the action of ``T_sparse``.
+
+Paper §3.2 / Algorithm 1: applying the sparse component of the Toeplitz
+decomposition (``m`` non-zero diagonals) is exactly a depthwise 1-D
+convolution with filter size ``m``.  For bidirectional models the filter
+is centred (diagonals ``-⌈m/2⌉+1 … ⌊m/2⌋``); for causal models it covers
+diagonals ``0 … m-1`` only.
+
+The kernel grids over ``(batch, channel-tiles)``; one block loads an
+``(n, d_tile)`` sequence tile plus the ``(m, d_tile)`` filter into VMEM
+and produces the output tile with ``m`` shifted fused multiply-adds —
+the natural VPU schedule (no im2col, no matmul detour).
+
+Backward: ``dx`` is the same Pallas kernel run in the *adjoint* padding
+mode with the time-reversed filter; ``dw`` is an ``m``-term reduction
+done with jnp slices (``m ≤ 33``, negligible).
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import INTERPRET, d_tile
+
+# Padding modes: how the filter taps are aligned against the sequence.
+_CAUSAL = "causal"  # y[i] = sum_t w[t] x[i-t]            (lags 0..m-1)
+_SYM = "sym"  # y[i] = sum_t w[t] x[i-(t-c)], c=m//2      (lags -(m-1-c)..c)
+_ANTI = "anti"  # y[i] = sum_t w[t] x[i+t]                (adjoint of causal)
+
+
+def _pads(mode: str, m: int):
+    if mode == _CAUSAL:
+        return (m - 1, 0)
+    if mode == _ANTI:
+        return (0, m - 1)
+    if mode == _SYM:
+        c = m // 2
+        return (m - 1 - c, c)
+    raise ValueError(f"bad conv mode {mode}")
+
+
+def _conv_kernel(x_ref, w_ref, o_ref, *, mode: str):
+    x = x_ref[0]  # (n, dt)
+    w = w_ref[...]  # (m, dt)
+    m = w.shape[0]
+    n = x.shape[0]
+    lo, hi = _pads(mode, m)
+    xp = jnp.pad(x, ((lo, hi), (0, 0)))
+    acc = jnp.zeros_like(x)
+    # m shifted FMAs over the (n, dt) tile; unrolled at trace time.
+    for t in range(m):
+        if mode == _ANTI:
+            # y[i] = sum_t w[t] x[i+t]  -> slice starting at t
+            acc = acc + w[t] * jax.lax.dynamic_slice_in_dim(xp, t, n, axis=0)
+        else:
+            # y[i] = sum_t w[t] x[i-t(+c)] -> reversed tap order over slices
+            acc = acc + w[m - 1 - t] * jax.lax.dynamic_slice_in_dim(xp, t, n, axis=0)
+    o_ref[0] = acc
+
+
+def _conv_call(x, w, mode: str):
+    b, n, d = x.shape
+    m = w.shape[0]
+    dt = d_tile(d)
+    return pl.pallas_call(
+        partial(_conv_kernel, mode=mode),
+        grid=(b, d // dt),
+        in_specs=[
+            pl.BlockSpec((1, n, dt), lambda i, c: (i, 0, c)),
+            pl.BlockSpec((m, dt), lambda i, c: (0, c)),
+        ],
+        out_specs=pl.BlockSpec((1, n, dt), lambda i, c: (i, 0, c)),
+        out_shape=jax.ShapeDtypeStruct((b, n, d), x.dtype),
+        interpret=INTERPRET,
+    )(x, w)
+
+
+def _conv_ref_slices(x, w, mode: str):
+    """jnp (non-Pallas) equivalent used for the dw reduction in bwd."""
+    b, n, d = x.shape
+    m = w.shape[0]
+    lo, hi = _pads(mode, m)
+    xp = jnp.pad(x, ((0, 0), (lo, hi), (0, 0)))
+    acc = jnp.zeros_like(x)
+    for t in range(m):
+        if mode == _ANTI:
+            acc = acc + w[t] * jax.lax.dynamic_slice_in_dim(xp, t, n, axis=1)
+        else:
+            acc = acc + w[m - 1 - t] * jax.lax.dynamic_slice_in_dim(xp, t, n, axis=1)
+    return acc
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(2,))
+def conv1d(x, w, causal: bool = True):
+    """Depthwise 1-D convolution ``y = T_sparse x``.
+
+    Args:
+      x: ``(b, n, d)`` f32 sequence.
+      w: ``(m, d)`` depthwise filter (one length-``m`` filter per channel).
+      causal: causal (lags ``0..m-1``) vs centred/bidirectional taps.
+
+    Returns:
+      ``(b, n, d)`` f32.
+    """
+    return _conv_call(x, w, _CAUSAL if causal else _SYM)
+
+
+def _conv1d_fwd(x, w, causal):
+    return conv1d(x, w, causal), (x, w)
+
+
+def _conv1d_bwd(causal, res, dy):
+    x, w = res
+    m, _ = w.shape
+    n = x.shape[1]
+    if causal:
+        # Adjoint of causal conv: dx[j] = sum_t w[t] dy[j+t] (anticausal).
+        dx = _conv_call(dy, w, _ANTI)
+        xp = jnp.pad(x, ((0, 0), (m - 1, 0), (0, 0)))
+        dw = jnp.stack(
+            [
+                jnp.sum(
+                    jax.lax.dynamic_slice_in_dim(xp, m - 1 - t, n, axis=1) * dy,
+                    axis=(0, 1),
+                )
+                for t in range(m)
+            ]
+        )
+    else:
+        c = m // 2
+        # Adjoint of centred conv = centred conv with time-reversed taps,
+        # with the centre mirrored for even m (lag set -(m-1-c)..c flips).
+        lo, hi = m - 1 - c, c
+        dyp = jnp.pad(dy, ((0, 0), (hi, lo), (0, 0)))
+        dx = jnp.zeros_like(x)
+        for t in range(m):
+            dx = dx + w[t] * jax.lax.dynamic_slice_in_dim(dyp, t, n, axis=1)
+        xp = jnp.pad(x, ((0, 0), (lo, hi), (0, 0)))
+        dw = jnp.stack(
+            [
+                jnp.sum(
+                    jax.lax.dynamic_slice_in_dim(xp, m - 1 - t, n, axis=1) * dy,
+                    axis=(0, 1),
+                )
+                for t in range(m)
+            ]
+        )
+    return dx, dw
+
+
+conv1d.defvjp(_conv1d_fwd, _conv1d_bwd)
+
+__all__ = ["conv1d"]

@@ -1,0 +1,89 @@
+"""Frequency-domain modulation ``ŷ = k̂ ⊙ x̂`` over real/imag pairs.
+
+The elementwise hot-spot of FD-TNO (paper §3.3, Algorithm 2): after the
+rFFT of the (zero-padded) input and the construction of the causal or
+bidirectional kernel frequency response, every output frequency bin is
+one complex multiply per channel.  Complex numbers are carried as
+separate real/imag planes — the layout a TPU VPU wants (no complex
+dtype in Mosaic) — and the kernel grids over (batch, channel-tiles)
+with full ``(n_freq, d_tile)`` blocks.
+
+Backward: the input cotangent is the same kernel with the conjugate
+response (``k̂ → k̂*``); the response cotangent is a batch reduction of
+``x̂* ⊙ dŷ`` done in jnp.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import INTERPRET, d_tile
+
+
+def _fdmod_kernel(kr_ref, ki_ref, xr_ref, xi_ref, yr_ref, yi_ref):
+    kr = kr_ref[...]  # (f, dt)
+    ki = ki_ref[...]
+    xr = xr_ref[0]  # (f, dt)
+    xi = xi_ref[0]
+    yr_ref[0] = kr * xr - ki * xi
+    yi_ref[0] = kr * xi + ki * xr
+
+
+def _fdmod_call(kr, ki, xr, xi):
+    b, f, d = xr.shape
+    dt = d_tile(d)
+    return pl.pallas_call(
+        _fdmod_kernel,
+        grid=(b, d // dt),
+        in_specs=[
+            pl.BlockSpec((f, dt), lambda i, c: (0, c)),
+            pl.BlockSpec((f, dt), lambda i, c: (0, c)),
+            pl.BlockSpec((1, f, dt), lambda i, c: (i, 0, c)),
+            pl.BlockSpec((1, f, dt), lambda i, c: (i, 0, c)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, f, dt), lambda i, c: (i, 0, c)),
+            pl.BlockSpec((1, f, dt), lambda i, c: (i, 0, c)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, f, d), xr.dtype),
+            jax.ShapeDtypeStruct((b, f, d), xr.dtype),
+        ],
+        interpret=INTERPRET,
+    )(kr, ki, xr, xi)
+
+
+@jax.custom_vjp
+def fdmod(kr, ki, xr, xi):
+    """Complex modulation ``ŷ = k̂ ⊙ x̂`` on real/imag planes.
+
+    Args:
+      kr, ki: ``(f, d)`` kernel frequency response (shared over batch).
+      xr, xi: ``(b, f, d)`` input spectrum.
+
+    Returns:
+      ``(yr, yi)`` each ``(b, f, d)``.
+    """
+    return _fdmod_call(kr, ki, xr, xi)
+
+
+def _fdmod_fwd(kr, ki, xr, xi):
+    return _fdmod_call(kr, ki, xr, xi), (kr, ki, xr, xi)
+
+
+def _fdmod_bwd(res, dys):
+    kr, ki, xr, xi = res
+    dyr, dyi = dys
+    # dx = conj(k) ⊙ dy  — same kernel, conjugate response.
+    dxr, dxi = _fdmod_call(kr, -ki, dyr, dyi)
+    # dk = sum_b conj(x) ⊙ dy
+    dkr = jnp.sum(xr * dyr + xi * dyi, axis=0)
+    dki = jnp.sum(xr * dyi - xi * dyr, axis=0)
+    return dkr, dki, dxr, dxi
+
+
+fdmod.defvjp(_fdmod_fwd, _fdmod_bwd)
+
+__all__ = ["fdmod"]

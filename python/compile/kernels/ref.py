@@ -1,0 +1,178 @@
+"""Pure-jnp oracles for every Pallas kernel and TNO building block.
+
+These are the CORE correctness signal of the build path: every kernel
+in this package is asserted ``allclose`` against its oracle over shape /
+hyper-parameter sweeps in ``python/tests``, and the L2 TNO compositions
+are asserted against dense ``O(n²)`` Toeplitz matrix products built
+here.  Nothing in this module is ever lowered into an artifact.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Kernel oracles
+# ---------------------------------------------------------------------------
+
+
+def conv1d_ref(x, w, causal=True):
+    """Depthwise conv oracle: explicit lag sum, same alignment as conv1d."""
+    b, n, d = x.shape
+    m = w.shape[0]
+    c = 0 if causal else m // 2
+    out = jnp.zeros_like(x)
+    for t in range(m):
+        lag = t - c  # y[i] += w[t] x[i - lag]
+        if lag >= 0:
+            seg = jnp.pad(x[:, : n - lag if lag else n], ((0, 0), (lag, 0), (0, 0)))
+        else:
+            seg = jnp.pad(x[:, -lag:], ((0, 0), (0, -lag), (0, 0)))
+        out = out + w[t] * seg
+    return out
+
+
+def toeplitz_dense(taps):
+    """Dense per-channel Toeplitz matrix from taps.
+
+    Args:
+      taps: ``(2r-1, d)`` with ``A_ij = taps[i-j+r-1]``.
+    Returns:
+      ``(r, r, d)``.
+    """
+    r = (taps.shape[0] + 1) // 2
+    ii = jax.lax.broadcasted_iota(jnp.int32, (r, r), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (r, r), 1)
+    return jnp.take(taps, ii - jj + r - 1, axis=0)
+
+
+def toeplitz_av_ref(taps, u):
+    A = toeplitz_dense(taps)  # (r, r, d)
+    return jnp.einsum("ijl,bjl->bil", A, u)
+
+
+def ski_lowrank_ref(x, W, taps):
+    """Dense W A Wᵀ x."""
+    A = toeplitz_dense(taps)  # (r, r, d)
+    u = jnp.einsum("nr,bnd->brd", W, x)
+    v = jnp.einsum("ijl,bjl->bil", A, u)
+    return jnp.einsum("nr,brd->bnd", W, v)
+
+
+def ski_dense_matrix(W, taps):
+    """The full dense low-rank approximation ``T̃ = W A Wᵀ`` (n, n, d)."""
+    A = toeplitz_dense(taps)
+    return jnp.einsum("ir,rsl,js->ijl", W, A, W)
+
+
+def fdmod_ref(kr, ki, xr, xi):
+    k = kr + 1j * ki
+    x = xr + 1j * xi
+    y = k[None] * x
+    return jnp.real(y), jnp.imag(y)
+
+
+# ---------------------------------------------------------------------------
+# TNO oracles (dense O(n^2) Toeplitz action)
+# ---------------------------------------------------------------------------
+
+
+def tno_dense_ref(x, k_neg, k_zero, k_pos):
+    """Apply the dense per-channel Toeplitz matrix T to x.
+
+    Args:
+      x: ``(b, n, d)``.
+      k_neg: ``(n-1, d)`` kernel at lags ``-1 .. -(n-1)`` (k_neg[j] = k[-(j+1)]).
+      k_zero: ``(d,)`` kernel at lag 0.
+      k_pos: ``(n-1, d)`` kernel at lags ``1 .. n-1``.
+
+    Returns:
+      ``(b, n, d)`` with ``y[b,i,l] = sum_j k_l[i-j] x[b,j,l]``.
+    """
+    n = x.shape[1]
+    # full lag vector indexed by (i - j + n - 1) in 0..2n-2
+    full = jnp.concatenate([k_neg[::-1], k_zero[None], k_pos], axis=0)  # (2n-1, d)
+    ii = jax.lax.broadcasted_iota(jnp.int32, (n, n), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (n, n), 1)
+    T = jnp.take(full, ii - jj + n - 1, axis=0)  # (n, n, d)
+    return jnp.einsum("ijl,bjl->bil", T, x)
+
+
+def toeplitz_fft_ref(x, k_neg, k_zero, k_pos):
+    """Same action as :func:`tno_dense_ref` via the 2n circulant embedding."""
+    n = x.shape[1]
+    zero = jnp.zeros_like(k_zero)[None]
+    # circulant first column: [k0, k1.., k_{n-1}, 0, k_{-(n-1)}, .., k_{-1}]
+    c = jnp.concatenate([k_zero[None], k_pos, zero, k_neg[::-1]], axis=0)  # (2n, d)
+    ch = jnp.fft.rfft(c, axis=0)
+    xh = jnp.fft.rfft(x, n=2 * n, axis=1)
+    y = jnp.fft.irfft(ch[None] * xh, n=2 * n, axis=1)
+    return y[:, :n]
+
+
+def causal_spectrum_ref(khat_r, n):
+    """Causal kernel spectrum from a real (even) frequency response.
+
+    Implements Algorithm 2's Hilbert-transform step directly: the real
+    samples ``khat_r(ω_m)``, ``ω_m = mπ/n`` for ``m = 0..n``, define an
+    even real kernel of period ``2n``; zeroing its negative-time half
+    (half-weighting the self-conjugate t=0 and t=n samples) yields the
+    causal kernel whose spectrum is ``k̂ - i·H{k̂}``.
+
+    Returns the complex ``(n+1, d)`` causal spectrum.
+    """
+    kt = jnp.fft.irfft(khat_r.astype(jnp.complex64), n=2 * n, axis=0)  # (2n, d)
+    w = jnp.concatenate(
+        [
+            jnp.ones((1,)),
+            2.0 * jnp.ones((n - 1,)),
+            jnp.ones((1,)),
+            jnp.zeros((n - 1,)),
+        ]
+    )
+    kc = kt * w[:, None]
+    return jnp.fft.rfft(kc, axis=0)  # (n+1, d)
+
+
+def hilbert_definition_ref(khat_r):
+    """Discrete Hilbert transform by Definition 1 (convolution with h).
+
+    ``h[l] = 2/(πl)`` for odd ``l``, 0 for even ``l``; the frequency
+    samples are treated as a periodic sequence of length ``2n`` (the
+    even extension of the ``n+1`` rFFT samples), matching the DFT-based
+    window construction up to the finite-length wrap-around.
+
+    Used as an *independent* check that :func:`causal_spectrum_ref`'s
+    imaginary part is the discrete Hilbert transform of its real part.
+    """
+    nf = khat_r.shape[0]  # n + 1
+    n = nf - 1
+    # Even periodic extension over the full 2n DFT grid.
+    ext = jnp.concatenate([khat_r, khat_r[1:-1][::-1]], axis=0)  # (2n, d)
+    ll = jnp.arange(2 * n)
+    # periodic Hilbert kernel for even length: h[l] = 2/ (N tan(pi l / N)) on odd l
+    # (the finite-N form of 2/(pi l); tends to 2/(pi l) as N->inf)
+    denom = jnp.tan(jnp.pi * ll / (2 * n))
+    h = jnp.where(ll % 2 == 1, 2.0 / (2 * n) / jnp.where(ll % 2 == 1, denom, 1.0), 0.0)
+    # circular convolution over the frequency index
+    H = jnp.real(
+        jnp.fft.ifft(
+            jnp.fft.fft(ext, axis=0) * jnp.fft.fft(h)[:, None],
+            axis=0,
+        )
+    )
+    return H[:nf]
+
+
+__all__ = [
+    "conv1d_ref",
+    "toeplitz_dense",
+    "toeplitz_av_ref",
+    "ski_lowrank_ref",
+    "ski_dense_matrix",
+    "fdmod_ref",
+    "tno_dense_ref",
+    "toeplitz_fft_ref",
+    "causal_spectrum_ref",
+    "hilbert_definition_ref",
+]

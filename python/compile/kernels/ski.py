@@ -1,0 +1,131 @@
+"""Fused asymmetric-SKI low-rank apply ``y = W A Wᵀ x`` (paper §3.2.1).
+
+``W ∈ R^{n×r}`` is the sparse linear-interpolation matrix of structured
+kernel interpolation (hat-function rows, ≤2 non-zeros each); ``A ∈
+R^{r×r}`` is the *asymmetric* inducing-point Gram matrix, which for a
+stationary kernel on a uniform inducing grid is itself Toeplitz and is
+therefore carried as its ``2r-1`` taps per channel.
+
+One Pallas block fuses the whole low-rank branch for a
+``(batch, channel-tile)`` cell:
+
+    u = Wᵀ x        (r×n · n×dt matmul — MXU-shaped)
+    A = gather(taps)  ((r,r,dt) built from the 2r-1 taps)
+    v = A ⋄ u       (per-channel r×r matvec, batched over the tile)
+    y = W v         (n×r · r×dt matmul — MXU-shaped)
+
+so the sequence tile is read from HBM exactly once and the tiny
+(r ≤ 64) intermediates never leave VMEM.  This is the practical
+"batched dense matmul" realisation the paper lands on (their §3.2.1
+note about sparse tensors being slower than dense for n ≤ 512); the
+mathematically-O(n + r log r) sparse path is implemented and measured
+in the Rust substrate (``rust/src/toeplitz``) for the fig10/fig11
+comparisons.
+
+Backward: ``dx = W Aᵀ Wᵀ dy`` is the *same* kernel with the tap vector
+reversed (Toeplitz transpose); ``dA = (Wᵀdy)(Wᵀx)ᵀ`` reduces to tap
+gradients with an anti-diagonal segment-sum.  ``W`` is a structural
+constant (it never trains), so its cotangent is zero.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import INTERPRET, d_tile
+
+
+def interp_matrix(n: int, r: int, dtype=jnp.float32):
+    """Dense hat-function interpolation matrix ``W`` (n, r).
+
+    Observation points ``i = 0..n-1`` are mapped onto ``r`` uniformly
+    spaced inducing points covering ``[0, n-1]`` (spacing ``h``);
+    row ``i`` holds the linear-interpolation weights
+    ``W_ij = max(0, 1 - |i/h - j|)`` (≤ 2 adjacent non-zeros, rows sum
+    to 1).  Built from iotas so it lowers to a tiny HLO expression
+    rather than an (n·r) literal.
+    """
+    h = (n - 1) / (r - 1)
+    i = jax.lax.broadcasted_iota(dtype, (n, r), 0)
+    j = jax.lax.broadcasted_iota(dtype, (n, r), 1)
+    return jnp.maximum(0.0, 1.0 - jnp.abs(i / h - j))
+
+
+def _ski_kernel(x_ref, w_ref, t_ref, o_ref, *, r: int):
+    x = x_ref[0]  # (n, dt)
+    W = w_ref[...]  # (n, r)
+    taps = t_ref[...]  # (2r-1, dt)
+    # u = Wᵀ x : (r, dt)
+    u = W.T @ x
+    # A[i, j, l] = taps[i - j + r - 1, l]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (r, r), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (r, r), 1)
+    A = jnp.take(taps, ii - jj + r - 1, axis=0)  # (r, r, dt)
+    # v[i, l] = sum_j A[i, j, l] u[j, l]
+    v = jnp.einsum("ijl,jl->il", A, u)
+    # y = W v : (n, dt)
+    o_ref[0] = W @ v
+
+
+def _ski_call(x, W, taps):
+    b, n, d = x.shape
+    r = W.shape[1]
+    dt = d_tile(d)
+    return pl.pallas_call(
+        partial(_ski_kernel, r=r),
+        grid=(b, d // dt),
+        in_specs=[
+            pl.BlockSpec((1, n, dt), lambda i, c: (i, 0, c)),
+            pl.BlockSpec((n, r), lambda i, c: (0, 0)),
+            pl.BlockSpec((2 * r - 1, dt), lambda i, c: (0, c)),
+        ],
+        out_specs=pl.BlockSpec((1, n, dt), lambda i, c: (i, 0, c)),
+        out_shape=jax.ShapeDtypeStruct((b, n, d), x.dtype),
+        interpret=INTERPRET,
+    )(x, W, taps)
+
+
+@jax.custom_vjp
+def ski_lowrank(x, W, taps):
+    """Apply the SKI low-rank Toeplitz approximation ``y = W A Wᵀ x``.
+
+    Args:
+      x: ``(b, n, d)`` f32 sequence.
+      W: ``(n, r)`` interpolation matrix (see :func:`interp_matrix`);
+         structurally constant — receives a zero cotangent.
+      taps: ``(2r-1, d)`` per-channel Toeplitz taps of the inducing Gram
+        matrix ``A`` (``A_ij = taps[i-j+r-1]``), ordered from lag
+        ``-(r-1)`` to ``r-1``.
+
+    Returns:
+      ``(b, n, d)`` f32.
+    """
+    return _ski_call(x, W, taps)
+
+
+def _ski_fwd(x, W, taps):
+    return _ski_call(x, W, taps), (x, W, taps)
+
+
+def _ski_bwd(res, dy):
+    x, W, taps = res
+    r = W.shape[1]
+    d = x.shape[2]
+    # dx = W Aᵀ Wᵀ dy; Aᵀ has taps reversed along the lag axis.
+    dx = _ski_call(dy, W, taps[::-1])
+    # dA = (Wᵀ dy)(Wᵀ x)ᵀ per channel; reduce anti-diagonals to taps.
+    p = jnp.einsum("nr,bnd->brd", W, x)  # Wᵀ x
+    q = jnp.einsum("nr,bnd->brd", W, dy)  # Wᵀ dy
+    dA = jnp.einsum("bid,bjd->ijd", q, p)  # (r, r, d)
+    ii = jax.lax.broadcasted_iota(jnp.int32, (r, r), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (r, r), 1)
+    seg = (ii - jj + r - 1).reshape(-1)
+    dtaps = jax.ops.segment_sum(dA.reshape(r * r, d), seg, num_segments=2 * r - 1)
+    return dx, jnp.zeros_like(W), dtaps
+
+
+ski_lowrank.defvjp(_ski_fwd, _ski_bwd)
+
+__all__ = ["ski_lowrank", "interp_matrix"]

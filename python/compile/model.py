@@ -1,0 +1,187 @@
+"""The Toeplitz Neural Network (L2): GTU + GLU blocks around the TNOs.
+
+Architecture follows Qin et al. (2023) Figure 3 (reproduced in the
+paper's Appendix A): each sequence-modeling block is
+
+    x ← x + GTU(LN(x))          # token + channel mixing
+    x ← x + GLU(LN(x))          # channel mixing
+
+with GTU(u) = (φ(uW_u) ⊙ TNO(φ(uW_v))) W_o and GLU per Shazeer (2020).
+The TNO variant (base / ski / fd) is the only thing that differs across
+the paper's comparisons; everything else is shared so speed and quality
+deltas isolate the token-mixing change.
+
+Heads:
+  * ``lm_causal`` — next-token cross-entropy (perplexity experiments),
+  * ``lm_bidir``  — masked-token cross-entropy (RoBERTa-style
+    pre-training, the paper's bidirectional setting),
+  * ``cls``       — mean-pool + linear head (LRA tasks).
+
+Parameters are nested dicts; the AOT manifest records the flattened
+(jax tree) order so the Rust coordinator addresses buffers by index.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import rpe as rpe_mod
+from . import tno as tno_mod
+from .configs import ModelCfg, MASK
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def _dense_init(key, fan_in, fan_out, scale=1.0):
+    return scale * (1.0 / fan_in) ** 0.5 * jax.random.normal(key, (fan_in, fan_out))
+
+
+def tno_params_init(key, cfg: ModelCfg):
+    e = cfg.e
+    if cfg.variant == "base":
+        sizes = rpe_mod.rpe_sizes(cfg.rpe_hidden, cfg.rpe_layers, e)
+        return {"rpe": rpe_mod.mlp_init(key, sizes, out_scale=0.3)}
+    if cfg.variant == "ski":
+        k1, k2 = jax.random.split(key)
+        return {
+            "table": 0.3 * jax.random.normal(k1, (cfg.tbl, e)),
+            "filt": 0.3 * (1.0 / cfg.m) ** 0.5 * jax.random.normal(k2, (cfg.m, e)),
+        }
+    if cfg.variant == "fd":
+        out = e if cfg.causal else 2 * e
+        sizes = rpe_mod.rpe_sizes(cfg.rpe_hidden, cfg.rpe_layers, out)
+        return {"rpe": rpe_mod.mlp_init(key, sizes, out_scale=0.3)}
+    raise ValueError(cfg.variant)
+
+
+def block_init(key, cfg: ModelCfg):
+    d, e = cfg.d, cfg.e
+    f = cfg.glu_mult * d
+    ks = jax.random.split(key, 8)
+    return {
+        "ln1_g": jnp.ones((d,)),
+        "ln1_b": jnp.zeros((d,)),
+        "gtu": {
+            "wu": _dense_init(ks[0], d, e),
+            "wv": _dense_init(ks[1], d, e),
+            "wo": _dense_init(ks[2], e, d),
+            "tno": tno_params_init(ks[3], cfg),
+        },
+        "ln2_g": jnp.ones((d,)),
+        "ln2_b": jnp.zeros((d,)),
+        "glu": {
+            "w1": _dense_init(ks[4], d, f),
+            "w2": _dense_init(ks[5], d, f),
+            "w3": _dense_init(ks[6], f, d),
+        },
+    }
+
+
+def init(key, cfg: ModelCfg):
+    ks = jax.random.split(key, cfg.blocks + 3)
+    head_out = cfg.num_classes if cfg.task == "cls" else cfg.vocab
+    return {
+        "emb": 0.02 * jax.random.normal(ks[0], (cfg.vocab, cfg.d)),
+        "blocks": [block_init(ks[1 + i], cfg) for i in range(cfg.blocks)],
+        "lnf_g": jnp.ones((cfg.d,)),
+        "lnf_b": jnp.zeros((cfg.d,)),
+        "head": _dense_init(ks[-1], cfg.d, head_out),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def _ln(x, g, b):
+    return rpe_mod.layer_norm(x, g, b)
+
+
+def gtu(x, p, cfg: ModelCfg, causal: bool):
+    u = jax.nn.silu(x @ p["wu"])
+    v = jax.nn.silu(x @ p["wv"])
+    t = tno_mod.tno_apply(v, p["tno"], cfg, causal)
+    return (u * t) @ p["wo"]
+
+
+def glu(x, p):
+    return (jax.nn.silu(x @ p["w1"]) * (x @ p["w2"])) @ p["w3"]
+
+
+def backbone(params, ids, cfg: ModelCfg):
+    """Token ids ``(b, n)`` → features ``(b, n, d)``."""
+    causal = cfg.causal
+    x = jnp.take(params["emb"], ids, axis=0)
+    for bp in params["blocks"]:
+        x = x + gtu(_ln(x, bp["ln1_g"], bp["ln1_b"]), bp["gtu"], cfg, causal)
+        x = x + glu(_ln(x, bp["ln2_g"], bp["ln2_b"]), bp["glu"])
+    return _ln(x, params["lnf_g"], params["lnf_b"])
+
+
+def logits_fn(params, ids, cfg: ModelCfg):
+    h = backbone(params, ids, cfg)
+    if cfg.task == "cls":
+        return jnp.mean(h, axis=1) @ params["head"]  # (b, C)
+    return h @ params["head"]  # (b, n, V)
+
+
+def _xent(logits, targets):
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    tgt = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return lse - tgt
+
+
+def loss_fn(params, batch, cfg: ModelCfg):
+    """Returns ``(loss, metric)``.
+
+    metric: summed token count for LM tasks (so perplexity aggregates
+    exactly across batches) and correct-prediction count for cls.
+    """
+    if cfg.task == "lm_causal":
+        (tokens,) = batch
+        ids, tgt = tokens[:, :-1], tokens[:, 1:]
+        lg = logits_fn(params, ids, cfg)
+        nll = _xent(lg, tgt)
+        return jnp.mean(nll), jnp.float32(nll.size) * 1.0
+    if cfg.task == "lm_bidir":
+        ids, tgt, mask = batch
+        lg = logits_fn(params, ids, cfg)
+        nll = _xent(lg, tgt) * mask
+        denom = jnp.maximum(jnp.sum(mask), 1.0)
+        return jnp.sum(nll) / denom, denom
+    if cfg.task == "cls":
+        ids, labels = batch
+        lg = logits_fn(params, ids, cfg)
+        nll = _xent(lg, labels)
+        correct = jnp.sum((jnp.argmax(lg, axis=-1) == labels).astype(jnp.float32))
+        return jnp.mean(nll), correct
+    raise ValueError(cfg.task)
+
+
+def logits_entry(params, batch_ids, cfg: ModelCfg):
+    """Serving entrypoint: class logits, or last-position LM logits."""
+    lg = logits_fn(params, batch_ids, cfg)
+    if cfg.task == "cls":
+        return lg
+    return lg[:, -1, :]
+
+
+def mask_batch_tokens(ids, key, rate=0.15):
+    """Reference MLM masking (mirrors rust/src/data/lm.rs; used in tests)."""
+    m = jax.random.bernoulli(key, rate, ids.shape)
+    masked = jnp.where(m, MASK, ids)
+    return masked, ids, m.astype(jnp.float32)
+
+
+__all__ = [
+    "init",
+    "backbone",
+    "logits_fn",
+    "loss_fn",
+    "logits_entry",
+    "gtu",
+    "glu",
+    "mask_batch_tokens",
+]

@@ -1,0 +1,144 @@
+"""Toeplitz Neural Operators — the four token-mixing variants.
+
+- :func:`tno_base`      — baseline TNN (Qin et al. 2023): MLP RPE at all
+  2n-1 lags × explicit decay bias, applied via 2n-circulant FFT.
+- :func:`tno_ski`       — paper §3.2: sparse (depthwise conv) + low-rank
+  (asymmetric SKI, ``W A Wᵀ``) with the inverse-time-warp table RPE.
+  Bidirectional only: Appendix B shows causal masking turns the SKI
+  apply into a sequential cumulative sum that forfeits the speedup
+  (reproduced in the Rust substrate, `toeplitz::causal_ski_scan`).
+- :func:`tno_fd_causal` — paper §3.3.1: real frequency-response RPE,
+  imaginary part via the discrete Hilbert transform ⇒ causal kernel,
+  no explicit decay bias, one fewer kernel FFT than the baseline.
+- :func:`tno_fd_bidir`  — paper §3.3.2: complex frequency response
+  (2d-wide RPE), again skipping the kernel FFT and decay bias.
+
+All operate on ``(b, n, e)`` activations channel-wise.  FFTs stay in
+XLA (jnp.fft); the per-bin complex modulation, the depthwise conv and
+the SKI apply run as Pallas kernels (L1).
+"""
+
+import jax.numpy as jnp
+
+from . import rpe as rpe_mod
+from .kernels import conv1d, fdmod, ski_lowrank
+from .kernels.ski import interp_matrix
+
+
+def _rfft_pad(x, n):
+    """rFFT of x zero-padded to length 2n along the sequence axis."""
+    xh = jnp.fft.rfft(x, n=2 * n, axis=1)
+    return jnp.real(xh), jnp.imag(xh)
+
+
+def _irfft_take(yr, yi, n):
+    y = jnp.fft.irfft(yr + 1j * yi, n=2 * n, axis=1)
+    return y[:, :n]
+
+
+def tno_base(x, params, *, lam: float, causal: bool, act: str = "relu"):
+    """Baseline TNN TNO: circulant-FFT action of T built from the MLP RPE."""
+    b, n, d = x.shape
+    k_neg, k_zero, k_pos = rpe_mod.time_rpe(params["rpe"], n, d, lam, causal, act)
+    zero = jnp.zeros_like(k_zero)[None]
+    # circulant first column: [k_0, k_1..k_{n-1}, 0, k_{-(n-1)}..k_{-1}]
+    c = jnp.concatenate([k_zero[None], k_pos, zero, k_neg[::-1]], axis=0)  # (2n, d)
+    ch = jnp.fft.rfft(c, axis=0)
+    xr, xi = _rfft_pad(x, n)
+    yr, yi = fdmod(jnp.real(ch), jnp.imag(ch), xr, xi)
+    return _irfft_take(yr, yi, n)
+
+
+def tno_ski(
+    x,
+    params,
+    *,
+    lam: float,
+    r: int,
+    lowrank_only: bool = False,
+):
+    """SKI-TNO: depthwise-conv sparse branch + fused W A Wᵀ low-rank branch.
+
+    ``params`` carries ``filt`` (m, d) and ``table`` (tbl, d).  ``W`` is
+    a structural constant built in-graph from iotas.  ``lowrank_only``
+    drops the sparse branch (the fig11 ablation).
+    """
+    b, n, d = x.shape
+    h = (n - 1) / (r - 1)
+    taps = rpe_mod.ski_taps(params["table"], r, h, lam)  # (2r-1, d)
+    W = interp_matrix(n, r, x.dtype)
+    y = ski_lowrank(x, W, taps)
+    if not lowrank_only:
+        y = y + conv1d(x, params["filt"], False)
+    return y
+
+
+def fd_causal_spectrum(khat_r, n: int):
+    """Causal spectrum ``k̂ - i·H{k̂}`` from the real response (Algorithm 2).
+
+    irFFT the even real response to the (even, real) time kernel, keep
+    the non-negative-time half (double the strictly-positive lags, keep
+    t=0 and t=n once), and rFFT back: the result's imaginary part is
+    exactly the discrete Hilbert transform of its real part, and its
+    inverse transform is causal.
+    """
+    kt = jnp.fft.irfft(khat_r, n=2 * n, axis=0)  # (2n, d), real even
+    w = jnp.concatenate(
+        [
+            jnp.ones((1,), kt.dtype),
+            2.0 * jnp.ones((n - 1,), kt.dtype),
+            jnp.ones((1,), kt.dtype),
+            jnp.zeros((n - 1,), kt.dtype),
+        ]
+    )
+    kh = jnp.fft.rfft(kt * w[:, None], axis=0)  # (n+1, d)
+    return jnp.real(kh), jnp.imag(kh)
+
+
+def tno_fd_causal(x, params, *, act: str = "relu"):
+    """Causal FD-TNO (Algorithm 2): Hilbert-transform-enforced causality."""
+    b, n, d = x.shape
+    khat_r = rpe_mod.fd_rpe_real(params["rpe"], n, act=act)  # (n+1, d)
+    kr, ki = fd_causal_spectrum(khat_r, n)
+    xr, xi = _rfft_pad(x, n)
+    yr, yi = fdmod(kr, ki, xr, xi)
+    return _irfft_take(yr, yi, n)
+
+
+def tno_fd_bidir(x, params, *, act: str = "relu"):
+    """Bidirectional FD-TNO: complex response, no Hilbert constraint."""
+    b, n, d = x.shape
+    kr, ki = rpe_mod.fd_rpe_complex(params["rpe"], n, d, act=act)
+    xr, xi = _rfft_pad(x, n)
+    yr, yi = fdmod(kr, ki, xr, xi)
+    return _irfft_take(yr, yi, n)
+
+
+def tno_apply(x, params, cfg, causal: bool):
+    """Dispatch on the config's variant. ``cfg`` is a ModelCfg."""
+    if cfg.variant == "base":
+        return tno_base(x, params, lam=cfg.lam, causal=causal, act=cfg.rpe_act)
+    if cfg.variant == "ski":
+        if causal:
+            raise ValueError(
+                "SKI-TNO is bidirectional-only (paper Appendix B: causal "
+                "masking negates SKI's benefits)"
+            )
+        return tno_ski(
+            x, params, lam=cfg.lam, r=cfg.r, lowrank_only=cfg.ski_lowrank_only
+        )
+    if cfg.variant == "fd":
+        if causal:
+            return tno_fd_causal(x, params, act=cfg.rpe_act)
+        return tno_fd_bidir(x, params, act=cfg.rpe_act)
+    raise ValueError(f"unknown TNO variant {cfg.variant}")
+
+
+__all__ = [
+    "tno_base",
+    "tno_ski",
+    "tno_fd_causal",
+    "tno_fd_bidir",
+    "fd_causal_spectrum",
+    "tno_apply",
+]

@@ -1,0 +1,68 @@
+"""Fused train step (fwd + bwd + Adam) lowered as a single artifact.
+
+The Rust coordinator drives training by repeatedly executing this one
+compiled computation; Python never runs after `make artifacts`.  The
+whole optimizer state lives in the artifact's input/output signature:
+
+    step(*params, *m, *v, t, *batch) -> (*params', *m', *v', t', loss)
+
+Gradients are clipped to a global norm, the learning rate follows a
+linear warmup into a constant (the TNN repo's default schedule shape),
+and Adam uses bias correction.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import model
+from .configs import ModelCfg
+
+B1, B2, EPS = 0.9, 0.98, 1e-8
+
+
+def adam_init(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return zeros, jax.tree_util.tree_map(jnp.zeros_like, params)
+
+
+def train_step(params, m, v, t, batch, cfg: ModelCfg):
+    """One fused optimization step. ``t`` is the f32 step counter."""
+
+    def loss_of(p):
+        loss, _metric = model.loss_fn(p, batch, cfg)
+        return loss
+
+    loss, grads = jax.value_and_grad(loss_of)(params)
+
+    # Global-norm clip.
+    leaves = jax.tree_util.tree_leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(g * g) for g in leaves))
+    scale = jnp.minimum(1.0, cfg.clip / (gnorm + 1e-6))
+    grads = jax.tree_util.tree_map(lambda g: g * scale, grads)
+
+    t1 = t + 1.0
+    lr = cfg.lr * jnp.minimum(1.0, t1 / float(cfg.warmup))
+    bc1 = 1.0 - B1**t1
+    bc2 = 1.0 - B2**t1
+
+    def upd(p, mi, vi, g):
+        mi = B1 * mi + (1.0 - B1) * g
+        vi = B2 * vi + (1.0 - B2) * g * g
+        p = p - lr * (mi / bc1) / (jnp.sqrt(vi / bc2) + EPS)
+        return p, mi, vi
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_m = jax.tree_util.tree_leaves(m)
+    flat_v = jax.tree_util.tree_leaves(v)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    out_p, out_m, out_v = [], [], []
+    for p, mi, vi, g in zip(flat_p, flat_m, flat_v, flat_g):
+        p, mi, vi = upd(p, mi, vi, g)
+        out_p.append(p)
+        out_m.append(mi)
+        out_v.append(vi)
+    unf = jax.tree_util.tree_unflatten
+    return unf(treedef, out_p), unf(treedef, out_m), unf(treedef, out_v), t1, loss
+
+
+__all__ = ["adam_init", "train_step", "B1", "B2", "EPS"]

@@ -1,0 +1,13 @@
+"""Pytest wiring: make `compile.*` importable from the repo's python/ dir
+and keep hypothesis deadlines off (Pallas interpret mode is slow and
+deliberately so — correctness, not wall-clock, is under test here)."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from hypothesis import settings
+
+settings.register_profile("kernels", max_examples=12, deadline=None)
+settings.load_profile("kernels")

@@ -1,0 +1,233 @@
+"""Layer-1 Pallas kernels vs their pure-jnp oracles.
+
+Every kernel is swept over shapes/hyper-parameters with hypothesis and
+asserted allclose against `kernels.ref`; the custom_vjp backward passes
+are asserted against jax autodiff *of the oracle* so both the forward
+kernel and its hand-written transpose are covered.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from compile.kernels import conv1d, fdmod, ref, ski_lowrank, toeplitz_av
+from compile.kernels.ski import interp_matrix
+
+KEY = jax.random.PRNGKey(0)
+
+
+def keys(n):
+    return jax.random.split(KEY, n)
+
+
+def allclose(a, b, tol=1e-5):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=tol, atol=tol)
+
+
+# ---------------------------------------------------------------------------
+# conv1d
+# ---------------------------------------------------------------------------
+
+
+@given(
+    b=st.integers(1, 3),
+    n=st.sampled_from([8, 17, 64, 128]),
+    d=st.sampled_from([1, 3, 8, 128]),
+    m=st.integers(1, 9),
+    causal=st.booleans(),
+)
+def test_conv1d_matches_ref(b, n, d, m, causal):
+    k1, k2 = keys(2)
+    x = jax.random.normal(k1, (b, n, d))
+    w = jax.random.normal(k2, (m, d))
+    allclose(conv1d(x, w, causal), ref.conv1d_ref(x, w, causal))
+
+
+@given(causal=st.booleans(), m=st.integers(1, 7))
+def test_conv1d_grads_match_ref(causal, m):
+    k1, k2 = keys(2)
+    x = jax.random.normal(k1, (2, 24, 4))
+    w = jax.random.normal(k2, (m, 4))
+
+    def loss_kernel(x, w):
+        return jnp.sum(jnp.sin(conv1d(x, w, causal)))
+
+    def loss_ref(x, w):
+        return jnp.sum(jnp.sin(ref.conv1d_ref(x, w, causal)))
+
+    gx, gw = jax.grad(loss_kernel, argnums=(0, 1))(x, w)
+    rx, rw = jax.grad(loss_ref, argnums=(0, 1))(x, w)
+    allclose(gx, rx, 1e-4)
+    allclose(gw, rw, 1e-4)
+
+
+def test_conv1d_causal_ignores_future():
+    k1, k2 = keys(2)
+    x = jax.random.normal(k1, (1, 32, 2))
+    w = jax.random.normal(k2, (5, 2))
+    y0 = conv1d(x, w, True)
+    x2 = x.at[:, 20:].set(99.0)
+    y1 = conv1d(x2, w, True)
+    allclose(y0[:, :20], y1[:, :20])
+
+
+# ---------------------------------------------------------------------------
+# toeplitz_av
+# ---------------------------------------------------------------------------
+
+
+@given(
+    b=st.integers(1, 3),
+    r=st.sampled_from([2, 5, 16, 64]),
+    d=st.sampled_from([1, 4, 32]),
+)
+def test_toeplitz_av_matches_ref(b, r, d):
+    k1, k2 = keys(2)
+    taps = jax.random.normal(k1, (2 * r - 1, d))
+    u = jax.random.normal(k2, (b, r, d))
+    allclose(toeplitz_av(taps, u), ref.toeplitz_av_ref(taps, u))
+
+
+def test_toeplitz_av_grads_match_ref():
+    k1, k2 = keys(2)
+    r, d = 8, 4
+    taps = jax.random.normal(k1, (2 * r - 1, d))
+    u = jax.random.normal(k2, (2, r, d))
+
+    gt, gu = jax.grad(lambda t, u: jnp.sum(toeplitz_av(t, u) ** 2), argnums=(0, 1))(taps, u)
+    rt, ru = jax.grad(lambda t, u: jnp.sum(ref.toeplitz_av_ref(t, u) ** 2), argnums=(0, 1))(
+        taps, u
+    )
+    allclose(gt, rt, 1e-4)
+    allclose(gu, ru, 1e-4)
+
+
+def test_toeplitz_av_identity_taps():
+    r, d = 6, 2
+    taps = jnp.zeros((2 * r - 1, d)).at[r - 1].set(1.0)  # lag-0 tap = 1 ⇒ A = I
+    u = jax.random.normal(KEY, (1, r, d))
+    allclose(toeplitz_av(taps, u), u)
+
+
+# ---------------------------------------------------------------------------
+# ski_lowrank
+# ---------------------------------------------------------------------------
+
+
+@given(
+    b=st.integers(1, 2),
+    n=st.sampled_from([16, 65, 128]),
+    r=st.sampled_from([4, 16, 64]),
+    d=st.sampled_from([1, 8, 128]),
+)
+def test_ski_lowrank_matches_ref(b, n, r, d):
+    k1, k2 = keys(2)
+    x = jax.random.normal(k1, (b, n, d))
+    taps = jax.random.normal(k2, (2 * r - 1, d))
+    W = interp_matrix(n, r)
+    allclose(ski_lowrank(x, W, taps), ref.ski_lowrank_ref(x, W, taps), 2e-5)
+
+
+def test_ski_lowrank_grads_match_ref():
+    k1, k2 = keys(2)
+    n, r, d = 32, 8, 4
+    x = jax.random.normal(k1, (2, n, d))
+    taps = jax.random.normal(k2, (2 * r - 1, d))
+    W = interp_matrix(n, r)
+
+    gx, gt = jax.grad(lambda x, t: jnp.sum(ski_lowrank(x, W, t) ** 2), argnums=(0, 1))(x, taps)
+    rx, rt = jax.grad(lambda x, t: jnp.sum(ref.ski_lowrank_ref(x, W, t) ** 2), argnums=(0, 1))(
+        x, taps
+    )
+    allclose(gx, rx, 1e-4)
+    allclose(gt, rt, 1e-4)
+
+
+def test_interp_matrix_rows_sum_to_one():
+    for n, r in [(16, 4), (128, 64), (100, 7)]:
+        W = interp_matrix(n, r)
+        np.testing.assert_allclose(np.asarray(jnp.sum(W, axis=1)), np.ones(n), rtol=1e-6)
+        # ≤ 2 nonzeros per row (linear interpolation)
+        assert int(jnp.max(jnp.sum((W > 0).astype(jnp.int32), axis=1))) <= 2
+        # interpolation is exact at inducing points: W @ e_j hits 1
+        assert np.isclose(float(jnp.max(W)), 1.0, atol=1e-6)
+
+
+def test_ski_is_exact_when_r_equals_n():
+    """With one inducing point per observation, W = I and the SKI
+    factorisation reproduces the dense Toeplitz action exactly."""
+    n = d = 16
+    k1, k2 = keys(2)
+    x = jax.random.normal(k1, (1, n, d))
+    taps = jax.random.normal(k2, (2 * n - 1, d))
+    W = interp_matrix(n, n)
+    got = ski_lowrank(x, W, taps)
+    want = ref.toeplitz_av_ref(taps, x)
+    allclose(got, want, 1e-4)
+
+
+# ---------------------------------------------------------------------------
+# fdmod
+# ---------------------------------------------------------------------------
+
+
+@given(
+    b=st.integers(1, 3),
+    f=st.sampled_from([4, 65, 129]),
+    d=st.sampled_from([1, 8, 128]),
+)
+def test_fdmod_matches_ref(b, f, d):
+    k1, k2, k3, k4 = keys(4)
+    kr = jax.random.normal(k1, (f, d))
+    ki = jax.random.normal(k2, (f, d))
+    xr = jax.random.normal(k3, (b, f, d))
+    xi = jax.random.normal(k4, (b, f, d))
+    got = fdmod(kr, ki, xr, xi)
+    want = ref.fdmod_ref(kr, ki, xr, xi)
+    allclose(got[0], want[0])
+    allclose(got[1], want[1])
+
+
+def test_fdmod_grads_match_ref():
+    k1, k2, k3, k4 = keys(4)
+    f, d = 16, 4
+    args = (
+        jax.random.normal(k1, (f, d)),
+        jax.random.normal(k2, (f, d)),
+        jax.random.normal(k3, (2, f, d)),
+        jax.random.normal(k4, (2, f, d)),
+    )
+
+    def loss(fn):
+        def inner(*a):
+            yr, yi = fn(*a)
+            return jnp.sum(yr**2) + jnp.sum(yr * yi)
+
+        return inner
+
+    got = jax.grad(loss(fdmod), argnums=(0, 1, 2, 3))(*args)
+    want = jax.grad(loss(ref.fdmod_ref), argnums=(0, 1, 2, 3))(*args)
+    for g, w in zip(got, want):
+        allclose(g, w, 1e-4)
+
+
+def test_fdmod_unit_response_is_identity():
+    f, d = 9, 3
+    kr, ki = jnp.ones((f, d)), jnp.zeros((f, d))
+    xr = jax.random.normal(KEY, (1, f, d))
+    xi = jax.random.normal(keys(2)[1], (1, f, d))
+    yr, yi = fdmod(kr, ki, xr, xi)
+    allclose(yr, xr)
+    allclose(yi, xi)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32])
+def test_kernels_preserve_dtype(dtype):
+    x = jnp.ones((1, 8, 4), dtype)
+    w = jnp.ones((3, 4), dtype)
+    assert conv1d(x, w, True).dtype == dtype
+    taps = jnp.ones((7, 4), dtype)
+    u = jnp.ones((1, 4, 4), dtype)
+    assert toeplitz_av(taps, u).dtype == dtype

@@ -1,0 +1,152 @@
+"""Numeric checks of the paper's theory (§4, Appendices C–E).
+
+* Proposition 1 — a scalar ReLU MLP with LayerNorm is piecewise linear.
+* Theorem 1 — the SKI spectral-norm error bound dominates the actual
+  error for smooth kernels, and the actual error shrinks with rank.
+* Theorems 2–4 — smoothness of the frequency-response MLP orders the
+  time-domain decay: GeLU ≲ SiLU ≪ ReLU tails.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import rpe as rpe_mod
+from compile.kernels import ref
+from compile.kernels.ski import interp_matrix
+
+KEY = jax.random.PRNGKey(3)
+
+
+# ---------------------------------------------------------------------------
+# Proposition 1
+# ---------------------------------------------------------------------------
+
+
+def test_prop1_relu_mlp_piecewise_linear():
+    # Threshold sits above f32 arithmetic noise (~1e-6 relative after
+    # LayerNorm amplification) and below genuine ReLU slope changes; a
+    # piecewise-linear function has curvature at isolated points only.
+    params = rpe_mod.mlp_init(KEY, [1, 16, 16, 4])
+    grid = jnp.linspace(-1.0, 1.0, 2001)[:, None]
+    y = rpe_mod.mlp_apply(params, grid, act="relu")  # (2001, 4)
+    dd = jnp.abs(y[2:] - 2.0 * y[1:-1] + y[:-2])
+    scale = jnp.maximum(jnp.max(jnp.abs(y), axis=0), 1.0)
+    kinks = jnp.sum(dd / scale[None] > 1e-4, axis=0)
+    assert int(jnp.max(kinks)) < 150, f"not piecewise linear: {kinks} kinks"
+
+
+def test_prop1_fails_for_gelu():
+    """Sanity for the test itself: a GeLU MLP is *not* piecewise linear,
+    so nearly every grid point carries curvature."""
+    params = rpe_mod.mlp_init(KEY, [1, 16, 16, 4])
+    grid = jnp.linspace(-1.0, 1.0, 2001)[:, None]
+    y = rpe_mod.mlp_apply(params, grid, act="gelu")
+    dd = jnp.abs(y[2:] - 2.0 * y[1:-1] + y[:-2])
+    scale = jnp.maximum(jnp.max(jnp.abs(y), axis=0), 1.0)
+    kinks = jnp.sum(dd / scale[None] > 1e-7, axis=0)
+    assert int(jnp.min(kinks)) > 1000
+
+
+# ---------------------------------------------------------------------------
+# Theorem 1 (SKI error bound)
+# ---------------------------------------------------------------------------
+
+
+def spectral_norm(M):
+    return float(jnp.linalg.norm(M, ord=2))
+
+
+def test_theorem1_bound_dominates_actual_error():
+    """Build T from a smooth kernel, form the SKI approximation with
+    linear interpolation on r inducing points, and verify
+    ‖WAWᵀ − T_r,opt‖₂ ≤ bound(r) with the paper's constants."""
+    n, scale = 128, 24.0
+    k = lambda t: np.exp(-0.5 * (t / scale) ** 2)  # gaussian, C^∞
+    # L bounds |k''| for linear interpolation (N = 1): |k''| ≤ 1/scale²
+    L = 1.0 / scale**2
+    t_full = np.arange(n)
+    T = jnp.asarray(k(t_full[:, None] - t_full[None, :]), jnp.float32)
+
+    prev_err = None
+    for r in [9, 17, 33, 65]:
+        h = (n - 1) / (r - 1)
+        p = np.arange(r) * h
+        A = jnp.asarray(k(p[:, None] - p[None, :]), jnp.float32)
+        W = interp_matrix(n, r)
+        F = jnp.asarray(k(t_full[:, None] - p[None, :]), jnp.float32)
+        B = jnp.asarray(k(p[:, None] - t_full[None, :]), jnp.float32)
+        ski = W @ A @ W.T
+
+        # optimal rank-r approximation via SVD
+        U, S, Vt = jnp.linalg.svd(T)
+        T_opt = (U[:, :r] * S[:r]) @ Vt[:r]
+        E_ski = spectral_norm(ski - T_opt)
+        # Nyström error term (A is symmetric PD here, invertible)
+        E_nyst = spectral_norm(F @ jnp.linalg.solve(A, B) - T_opt)
+
+        sig_r_A = float(jnp.linalg.svd(A, compute_uv=False)[-1])
+        sig1 = min(
+            float(jnp.linalg.svd(F, compute_uv=False)[0]),
+            float(jnp.linalg.svd(B, compute_uv=False)[0]),
+        )
+        psi_max = h**2 / 8.0  # |ψ_N|/(N+1)! for linear interpolation
+        bound = (
+            np.sqrt(n * r) * psi_max * L * (2.0 * np.sqrt(n) + sig1 / sig_r_A) + E_nyst
+        )
+        assert E_ski <= bound * 1.01, f"r={r}: error {E_ski} exceeds bound {bound}"
+        if prev_err is not None:
+            assert E_ski <= prev_err * 1.5, "SKI error should not blow up with rank"
+        prev_err = E_ski
+
+
+def test_ski_error_shrinks_with_rank():
+    n, scale = 128, 24.0
+    k = lambda t: np.exp(-0.5 * (t / scale) ** 2)
+    t_full = np.arange(n)
+    T = jnp.asarray(k(t_full[:, None] - t_full[None, :]), jnp.float32)
+    errs = []
+    for r in [5, 9, 17, 33, 65]:
+        h = (n - 1) / (r - 1)
+        p = np.arange(r) * h
+        A = jnp.asarray(k(p[:, None] - p[None, :]), jnp.float32)
+        W = interp_matrix(n, r)
+        errs.append(spectral_norm(W @ A @ W.T - T))
+    assert errs[-1] < errs[0] * 0.05, f"no convergence: {errs}"
+    assert all(b <= a * 1.05 for a, b in zip(errs, errs[1:])), errs
+
+
+# ---------------------------------------------------------------------------
+# Theorems 2–4 (smoothness ⇒ decay)
+# ---------------------------------------------------------------------------
+
+
+def impulse_tail_ratio(act: str, n: int = 512, d: int = 8, nseeds: int = 6) -> float:
+    """tail-band envelope / head-band envelope of the FD RPE impulse
+    response, averaged over seeds — smaller = faster decay."""
+    head, tail = 0.0, 0.0
+    for s in range(nseeds):
+        params = rpe_mod.mlp_init(jax.random.PRNGKey(100 + s), [1, 32, 32, d], out_scale=0.3)
+        khat = rpe_mod.fd_rpe_real(params, n, act=act)  # (n+1, d)
+        kt = jnp.fft.irfft(khat.astype(jnp.complex64), n=2 * n, axis=0)[:n]
+        a = np.abs(np.asarray(kt))
+        head += float(a[1:8].max())
+        tail += float(a[n // 2 :].max())
+    return tail / head
+
+
+def test_thm2_to_4_decay_ordering():
+    gelu = impulse_tail_ratio("gelu")
+    silu = impulse_tail_ratio("silu")
+    relu = impulse_tail_ratio("relu")
+    # ReLU (merely continuous) keeps visibly heavier tails than the
+    # smooth activations; GeLU/SiLU are close at random init (paper
+    # Figs 4-5 "visually similar").
+    assert relu > 1.5 * max(gelu, silu), f"gelu {gelu} silu {silu} relu {relu}"
+    assert gelu < 0.01 and silu < 0.01, f"smooth tails too heavy: {gelu}, {silu}"
+
+
+def test_all_impulse_responses_decay_overall():
+    for act in ["gelu", "silu", "relu"]:
+        ratio = impulse_tail_ratio(act)
+        assert ratio < 0.2, f"{act}: impulse response does not decay ({ratio})"

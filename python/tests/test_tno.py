@@ -1,0 +1,277 @@
+"""Layer-2 TNO variants vs dense O(n²) oracles + causality invariants.
+
+The heart of the reproduction: each TNO (base / SKI / FD-causal /
+FD-bidir) must equal the dense Toeplitz-matrix action it claims to
+accelerate, and the causal variants must be *exactly* causal.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import rpe as rpe_mod
+from compile import tno as tno_mod
+from compile.configs import ModelCfg
+from compile.kernels import ref
+from compile.kernels.ski import interp_matrix
+
+KEY = jax.random.PRNGKey(7)
+
+
+def allclose(a, b, tol=1e-4):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=tol, atol=tol)
+
+
+def small_cfg(variant, task="lm_bidir", **kw):
+    return ModelCfg(name="t", task=task, variant=variant, n=32, d=8, rpe_hidden=8,
+                    rpe_layers=2, r=8, m=5, tbl=9, **kw)
+
+
+def tno_params(cfg, key=KEY):
+    from compile import model
+
+    return model.tno_params_init(key, cfg)
+
+
+# ---------------------------------------------------------------------------
+# Base TNO
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("causal", [True, False])
+def test_tno_base_matches_dense_toeplitz(causal):
+    cfg = small_cfg("base", task="lm_causal" if causal else "lm_bidir")
+    p = tno_params(cfg)
+    x = jax.random.normal(KEY, (2, cfg.n, cfg.d))
+    got = tno_mod.tno_base(x, p, lam=cfg.lam, causal=causal, act="relu")
+    k_neg, k_zero, k_pos = rpe_mod.time_rpe(p["rpe"], cfg.n, cfg.d, cfg.lam, causal, "relu")
+    want = ref.tno_dense_ref(x, k_neg, k_zero, k_pos)
+    allclose(got, want)
+
+
+def test_tno_base_fft_ref_matches_dense_ref():
+    n, d = 16, 3
+    k1, k2, k3, k4 = jax.random.split(KEY, 4)
+    k_neg = jax.random.normal(k1, (n - 1, d))
+    k_zero = jax.random.normal(k2, (d,))
+    k_pos = jax.random.normal(k3, (n - 1, d))
+    x = jax.random.normal(k4, (2, n, d))
+    allclose(
+        ref.toeplitz_fft_ref(x, k_neg, k_zero, k_pos),
+        ref.tno_dense_ref(x, k_neg, k_zero, k_pos),
+    )
+
+
+def test_tno_base_causal_ignores_future():
+    cfg = small_cfg("base", task="lm_causal")
+    p = tno_params(cfg)
+    x = jax.random.normal(KEY, (1, cfg.n, cfg.d))
+    y0 = tno_mod.tno_base(x, p, lam=cfg.lam, causal=True, act="relu")
+    x2 = x.at[:, 20:].set(1e3)
+    y1 = tno_mod.tno_base(x2, p, lam=cfg.lam, causal=True, act="relu")
+    allclose(y0[:, :20], y1[:, :20], 1e-3)
+
+
+def test_decay_bias_applied():
+    """The λ^{|t|} bias must shrink far-lag kernel values."""
+    cfg = small_cfg("base", lam=0.5)
+    p = tno_params(cfg)
+    k_neg, _, k_pos = rpe_mod.time_rpe(p["rpe"], cfg.n, cfg.d, 0.5, False, "relu")
+    # raw MLP values at the same positions, no bias
+    r_neg, _, r_pos = rpe_mod.time_rpe(p["rpe"], cfg.n, cfg.d, 1.0, False, "relu")
+    t = np.arange(1, cfg.n)
+    np.testing.assert_allclose(
+        np.asarray(k_pos), np.asarray(r_pos) * (0.5 ** t)[:, None], rtol=1e-5, atol=1e-6
+    )
+    np.testing.assert_allclose(
+        np.asarray(k_neg), np.asarray(r_neg) * (0.5 ** t)[:, None], rtol=1e-5, atol=1e-6
+    )
+
+
+# ---------------------------------------------------------------------------
+# SKI TNO
+# ---------------------------------------------------------------------------
+
+
+def test_tno_ski_equals_conv_plus_lowrank_dense():
+    cfg = small_cfg("ski")
+    p = tno_params(cfg)
+    x = jax.random.normal(KEY, (2, cfg.n, cfg.d))
+    got = tno_mod.tno_ski(x, p, lam=cfg.lam, r=cfg.r)
+    # oracle: dense W A Wᵀ x + centred depthwise conv
+    h = (cfg.n - 1) / (cfg.r - 1)
+    taps = rpe_mod.ski_taps(p["table"], cfg.r, h, cfg.lam)
+    W = interp_matrix(cfg.n, cfg.r)
+    want = ref.ski_lowrank_ref(x, W, taps) + ref.conv1d_ref(x, p["filt"], causal=False)
+    allclose(got, want)
+
+
+def test_tno_ski_lowrank_only_ablation():
+    cfg = small_cfg("ski")
+    p = tno_params(cfg)
+    x = jax.random.normal(KEY, (1, cfg.n, cfg.d))
+    both = tno_mod.tno_ski(x, p, lam=cfg.lam, r=cfg.r, lowrank_only=False)
+    lr = tno_mod.tno_ski(x, p, lam=cfg.lam, r=cfg.r, lowrank_only=True)
+    conv = ref.conv1d_ref(x, p["filt"], causal=False)
+    allclose(both, lr + conv)
+
+
+def test_tno_ski_rejects_causal_dispatch():
+    cfg = small_cfg("ski", task="lm_causal")
+    p = tno_params(cfg)
+    x = jnp.zeros((1, cfg.n, cfg.d))
+    with pytest.raises(ValueError, match="bidirectional-only"):
+        tno_mod.tno_apply(x, p, cfg, causal=True)
+
+
+def test_inverse_time_warp_properties():
+    lam = 0.9
+    t = jnp.array([-1e6, -10.0, -1.0, 0.0, 1.0, 10.0, 1e6])
+    x = rpe_mod.inverse_time_warp(t, lam)
+    xs = np.asarray(x)
+    assert np.all(np.abs(xs) <= 1.0), "warp maps into [-1, 1]"
+    # signs match wherever the warp has not underflowed to ±0
+    nz = np.abs(xs) > 0
+    assert np.all(np.sign(xs[nz]) == np.sign(np.asarray(t)[nz]))
+    # long lags compress toward 0 — extrapolation becomes interpolation
+    assert abs(xs[0]) < 1e-6 and abs(xs[-1]) < 1e-6
+    # |x| decreases with |t| and the warp is odd-symmetric
+    assert abs(xs[1]) < abs(xs[2])
+    assert np.isclose(abs(xs[2]), abs(xs[4]))
+    assert abs(xs[5]) < abs(xs[4])
+
+
+def test_table_lookup_centre_pinned_and_interpolates():
+    tbl, d = 9, 3
+    table = jax.random.normal(KEY, (tbl, d))
+    # centre is structurally zero → k(0) = 0 and warp(±∞) → 0
+    out = rpe_mod.table_lookup(table, jnp.zeros((1,)))
+    allclose(out, jnp.zeros((1, d)), 1e-6)
+    # exact at grid points (except pinned centre)
+    grid = jnp.linspace(-1.0, 1.0, tbl)
+    vals = rpe_mod.table_lookup(table, grid)
+    centre = tbl // 2
+    mask = jnp.ones((tbl, 1)).at[centre, 0].set(0.0)
+    allclose(vals, table * mask, 1e-5)
+
+
+# ---------------------------------------------------------------------------
+# FD TNO (causal + bidirectional)
+# ---------------------------------------------------------------------------
+
+
+def test_fd_causal_spectrum_hilbert_pair():
+    """Imag part of the causal spectrum = discrete Hilbert transform of
+    the real part (Definition 1), checked against the independent
+    convolution-form implementation."""
+    n, d = 64, 4
+    khat_r = jax.random.normal(KEY, (n + 1, d))
+    kr, ki = tno_mod.fd_causal_spectrum(khat_r, n)
+    allclose(kr, khat_r, 1e-4)  # real part preserved
+    want_im = -ref.hilbert_definition_ref(khat_r)
+    allclose(ki, want_im, 1e-3)
+
+
+def test_fd_causal_spectrum_time_kernel_is_causal():
+    n, d = 32, 2
+    khat_r = jax.random.normal(KEY, (n + 1, d))
+    kr, ki = tno_mod.fd_causal_spectrum(khat_r, n)
+    kt = jnp.fft.irfft(kr + 1j * ki, n=2 * n, axis=0)
+    # negative-time half (t = n+1 .. 2n-1) must vanish
+    np.testing.assert_allclose(np.asarray(kt[n + 1 :]), 0.0, atol=1e-5)
+
+
+def test_tno_fd_causal_ignores_future():
+    cfg = small_cfg("fd", task="lm_causal")
+    p = tno_params(cfg)
+    x = jax.random.normal(KEY, (1, cfg.n, cfg.d))
+    y0 = tno_mod.tno_fd_causal(x, p, act="relu")
+    x2 = x.at[:, 20:].set(1e3)
+    y1 = tno_mod.tno_fd_causal(x2, p, act="relu")
+    allclose(y0[:, :20], y1[:, :20], 1e-3)
+
+
+def test_tno_fd_causal_matches_dense_toeplitz():
+    """The FD-causal TNO is the action of the causal Toeplitz matrix
+    built from its own time-domain kernel."""
+    cfg = small_cfg("fd", task="lm_causal")
+    p = tno_params(cfg)
+    n, d = cfg.n, cfg.d
+    x = jax.random.normal(KEY, (2, n, d))
+    got = tno_mod.tno_fd_causal(x, p, act="relu")
+    khat_r = rpe_mod.fd_rpe_real(p["rpe"], n, act="relu")
+    kr, ki = tno_mod.fd_causal_spectrum(khat_r, n)
+    kt = jnp.fft.irfft(kr + 1j * ki, n=2 * n, axis=0)  # causal kernel, lags 0..n
+    k_pos = kt[1:n]
+    k_zero = kt[0]
+    k_neg = jnp.zeros_like(k_pos)
+    want = ref.tno_dense_ref(x, k_neg, k_zero, k_pos)
+    allclose(got, want, 1e-3)
+
+
+def test_tno_fd_bidir_matches_dense_toeplitz():
+    """The bidirectional FD TNO applies the (generally asymmetric) real
+    Toeplitz operator defined by its complex frequency response."""
+    cfg = small_cfg("fd", task="lm_bidir")
+    p = tno_params(cfg)
+    n, d = cfg.n, cfg.d
+    x = jax.random.normal(KEY, (1, n, d))
+    got = tno_mod.tno_fd_bidir(x, p, act="relu")
+    kr, ki = rpe_mod.fd_rpe_complex(p["rpe"], n, d, act="relu")
+    kt = jnp.fft.irfft(kr + 1j * ki, n=2 * n, axis=0)  # (2n, d) real kernel
+    k_zero = kt[0]
+    k_pos = kt[1:n]  # positive lags
+    k_neg = kt[2 * n - 1 : n : -1]  # lags -1 .. -(n-1)
+    want = ref.tno_dense_ref(x, k_neg, k_zero, k_pos)
+    allclose(got, want, 1e-3)
+
+
+def test_fd_rpe_complex_real_edges():
+    """Imag response must vanish at ω = 0 and ω = π so the time kernel
+    is real (§3.3.2)."""
+    cfg = small_cfg("fd", task="lm_bidir")
+    p = tno_params(cfg)
+    kr, ki = rpe_mod.fd_rpe_complex(p["rpe"], cfg.n, cfg.d, act="relu")
+    np.testing.assert_allclose(np.asarray(ki[0]), 0.0, atol=1e-7)
+    np.testing.assert_allclose(np.asarray(ki[-1]), 0.0, atol=1e-7)
+
+
+def test_fd_bidir_time_kernel_is_real():
+    cfg = small_cfg("fd", task="lm_bidir")
+    p = tno_params(cfg)
+    n, d = cfg.n, cfg.d
+    kr, ki = rpe_mod.fd_rpe_complex(p["rpe"], n, d, act="relu")
+    # build the full 2n DFT spectrum the irfft implies and check it is
+    # Hermitian (equivalent: irfft output exactly reproduces rfft input)
+    kt = jnp.fft.irfft(kr + 1j * ki, n=2 * n, axis=0)
+    back = jnp.fft.rfft(kt, axis=0)
+    allclose(jnp.real(back), kr, 1e-4)
+    allclose(jnp.imag(back), ki, 1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Dispatch
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "variant,task",
+    [("base", "lm_causal"), ("base", "lm_bidir"), ("ski", "lm_bidir"),
+     ("fd", "lm_causal"), ("fd", "lm_bidir")],
+)
+def test_tno_apply_dispatch_shapes(variant, task):
+    cfg = small_cfg(variant, task=task)
+    p = tno_params(cfg)
+    x = jax.random.normal(KEY, (2, cfg.n, cfg.d))
+    y = tno_mod.tno_apply(x, p, cfg, causal=cfg.causal)
+    assert y.shape == x.shape
+    assert bool(jnp.all(jnp.isfinite(y)))
+
+
+def test_tno_apply_unknown_variant():
+    cfg = dataclasses.replace(small_cfg("base"), variant="nope")
+    with pytest.raises(ValueError):
+        tno_mod.tno_apply(jnp.zeros((1, 8, 4)), {}, cfg, causal=False)

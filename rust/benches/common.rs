@@ -1,0 +1,144 @@
+//! Shared bench plumbing for the paper-table/figure harnesses.
+//!
+//! Each measurement runs in a **subprocess** (the bench binary re-execs
+//! itself with `--_child <config>`): one PJRT client, one compile, one
+//! model — so per-config wall-clock and peak-RSS numbers are clean
+//! rather than accumulating across a 15-config sweep in one process.
+//! The child prints a single `RESULT {json}` line the parent parses.
+
+#![allow(dead_code)] // each bench binary uses a subset of these helpers
+
+use std::process::Command;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+
+use ski_tnn::coordinator::{batch_for, to_literals};
+use ski_tnn::data::{Corpus, Split};
+use ski_tnn::runtime::{Engine, ModelState, Task};
+use ski_tnn::util::json::{self, Json};
+
+/// One config's measured step performance.
+#[derive(Debug, Clone)]
+pub struct Measured {
+    pub config: String,
+    pub ms_per_step: f64,
+    pub steps_per_sec: f64,
+    pub peak_rss_mb: f64,
+    pub compile_s: f64,
+}
+
+/// Peak resident set (VmHWM) of this process, in MiB.
+pub fn peak_rss_mb() -> f64 {
+    let status = std::fs::read_to_string("/proc/self/status").unwrap_or_default();
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmHWM:") {
+            let kb: f64 = rest
+                .trim()
+                .trim_end_matches("kB")
+                .trim()
+                .parse()
+                .unwrap_or(0.0);
+            return kb / 1024.0;
+        }
+    }
+    0.0
+}
+
+/// Child-mode entrypoint: if `--_child` is present, run the
+/// measurement, print `RESULT {...}` and exit. Call first in `main`.
+pub fn run_child_if_requested() {
+    let args: Vec<String> = std::env::args().collect();
+    let Some(pos) = args.iter().position(|a| a == "--_child") else {
+        return;
+    };
+    let config = args[pos + 1].clone();
+    let steps: usize = args
+        .iter()
+        .position(|a| a == "--_steps")
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(5);
+    match child_measure(&config, steps) {
+        Ok(m) => {
+            println!(
+                "RESULT {{\"ms_per_step\": {}, \"peak_rss_mb\": {}, \"compile_s\": {}}}",
+                m.ms_per_step, m.peak_rss_mb, m.compile_s
+            );
+            std::process::exit(0);
+        }
+        Err(e) => {
+            eprintln!("child error for {config}: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn child_measure(config: &str, steps: usize) -> Result<Measured> {
+    let engine = Engine::new("artifacts")?;
+    let cfg = engine.config(config)?.clone();
+    let corpus = match cfg.task {
+        Task::Cls => None,
+        _ => Some(Arc::new(
+            Corpus::generate(0, (cfg.n * cfg.batch * 16).max(200_000)).tokens(),
+        )),
+    };
+    let t0 = Instant::now();
+    let mut state = ModelState::init(&engine, config, 0)?;
+    let _ = engine.load(config, "step")?;
+    let compile_s = t0.elapsed().as_secs_f64();
+
+    let mut src = batch_for(&engine, config, Split::Train, corpus, 1)?;
+    let batch = to_literals(&src.next_batch())?;
+    // warmup (first execution pays one-off allocs)
+    state.step(&batch)?;
+    let t1 = Instant::now();
+    for _ in 0..steps {
+        state.step(&batch)?;
+    }
+    let ms = 1e3 * t1.elapsed().as_secs_f64() / steps as f64;
+    Ok(Measured {
+        config: config.to_string(),
+        ms_per_step: ms,
+        steps_per_sec: 1e3 / ms,
+        peak_rss_mb: peak_rss_mb(),
+        compile_s,
+    })
+}
+
+/// Measure one config in a fresh subprocess.
+pub fn measure(config: &str, steps: usize) -> Result<Measured> {
+    let exe = std::env::current_exe().context("current_exe")?;
+    let out = Command::new(exe)
+        .args(["--_child", config, "--_steps", &steps.to_string()])
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .output()
+        .context("spawning child")?;
+    if !out.status.success() {
+        return Err(anyhow!(
+            "child for {config} failed:\n{}",
+            String::from_utf8_lossy(&out.stderr)
+        ));
+    }
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let line = stdout
+        .lines()
+        .find_map(|l| l.strip_prefix("RESULT "))
+        .ok_or_else(|| anyhow!("no RESULT line from child for {config}"))?;
+    let v = json::parse(line).map_err(|e| anyhow!("bad child json: {e}"))?;
+    let f = |k: &str| v.get(k).and_then(Json::as_f64).unwrap_or(f64::NAN);
+    let ms = f("ms_per_step");
+    Ok(Measured {
+        config: config.to_string(),
+        ms_per_step: ms,
+        steps_per_sec: 1e3 / ms,
+        peak_rss_mb: f("peak_rss_mb"),
+        compile_s: f("compile_s"),
+    })
+}
+
+/// Format a relative speedup of `new` over `base` as `+NN.N%`.
+pub fn speedup_pct(base_ms: f64, new_ms: f64) -> String {
+    format!("{:+.1}%", 100.0 * (base_ms / new_ms - 1.0))
+}

@@ -1,0 +1,45 @@
+//! Fig 10 — wall-clock per step and memory vs sequence length:
+//! SKI-TNN vs the 6-layer-RPE TNN baseline at n ∈ {512, 2048}.
+//!
+//! Paper claims at these lengths: ~25% / ~30% time-per-step reduction
+//! and ~17% / ~42% memory reduction for SKI.  The timing configs
+//! (`t512_*`, `t2048_*`) keep the paper's structure (6-layer RPE for
+//! the baseline, r=64/m=32 SKI) at widths that make CPU steps tractable.
+//!
+//! Run: `cargo bench --bench fig10_seqlen_scaling [-- --steps N]`
+
+mod common;
+
+use ski_tnn::util::bench::Table;
+use ski_tnn::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    common::run_child_if_requested();
+    let args = Args::parse(false);
+    let steps = args.usize_or("steps", 5);
+
+    let mut t = Table::new(
+        "Fig 10: step time & peak memory vs sequence length — TNN-6L vs SKI",
+        &["n", "TNN ms", "SKI ms", "time cut", "TNN MB", "SKI MB", "mem cut", "paper"],
+    );
+    for (n, base, ski, paper) in [
+        (512, "t512_base6", "t512_ski", "-25% t, -17% m"),
+        (2048, "t2048_base6", "t2048_ski", "-30% t, -42% m"),
+    ] {
+        eprintln!("measuring n={n} ({steps} steps each)...");
+        let b = common::measure(base, steps)?;
+        let s = common::measure(ski, steps)?;
+        t.row(&[
+            n.to_string(),
+            format!("{:.0}", b.ms_per_step),
+            format!("{:.0}", s.ms_per_step),
+            format!("{:+.1}%", 100.0 * (s.ms_per_step / b.ms_per_step - 1.0)),
+            format!("{:.0}", b.peak_rss_mb),
+            format!("{:.0}", s.peak_rss_mb),
+            format!("{:+.1}%", 100.0 * (s.peak_rss_mb / b.peak_rss_mb - 1.0)),
+            paper.to_string(),
+        ]);
+    }
+    t.print();
+    Ok(())
+}

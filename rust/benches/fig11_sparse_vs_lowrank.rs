@@ -1,0 +1,44 @@
+//! Fig 11 — SKI ablation: low-rank-only vs sparse + low-rank.
+//!
+//! Paper finding: the low-rank branch is the primary cost in both time
+//! and memory, but the sparse branch (the depthwise 1-D conv) still
+//! adds a visible share of the step time while contributing almost no
+//! memory.  The `*_ski_lronly` configs drop the conv branch from the
+//! lowered graph (`ski_lowrank_only=True`), so the delta is exactly
+//! the conv's cost inside the fused train step.
+//!
+//! Run: `cargo bench --bench fig11_sparse_vs_lowrank [-- --steps N]`
+
+mod common;
+
+use ski_tnn::util::bench::Table;
+use ski_tnn::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    common::run_child_if_requested();
+    let args = Args::parse(false);
+    let steps = args.usize_or("steps", 5);
+
+    let mut t = Table::new(
+        "Fig 11: SKI-TNN step cost — low-rank only vs sparse + low-rank",
+        &["n", "low-rank ms", "sparse+LR ms", "conv share", "LR MB", "S+LR MB"],
+    );
+    for (n, lronly, both) in
+        [(512, "t512_ski_lronly", "t512_ski"), (2048, "t2048_ski_lronly", "t2048_ski")]
+    {
+        eprintln!("measuring n={n}...");
+        let l = common::measure(lronly, steps)?;
+        let b = common::measure(both, steps)?;
+        t.row(&[
+            n.to_string(),
+            format!("{:.0}", l.ms_per_step),
+            format!("{:.0}", b.ms_per_step),
+            format!("{:.1}%", 100.0 * (b.ms_per_step - l.ms_per_step) / b.ms_per_step),
+            format!("{:.0}", l.peak_rss_mb),
+            format!("{:.0}", b.peak_rss_mb),
+        ]);
+    }
+    t.print();
+    println!("paper shape: low-rank dominates both axes; conv adds time, ~no memory");
+    Ok(())
+}

@@ -1,0 +1,79 @@
+//! Fig 1b — pre-training speedups (iterations/sec) for causal and
+//! bidirectional models at both RPE depths, FD-TNN (and SKI-TNN) vs
+//! the TNN baseline.
+//!
+//! Paper claim: FD-TNN gains 5-15% causal and 35-80% bidirectional
+//! (the bidirectional path saves the kernel FFT *and* the decay bias;
+//! the causal path still pays the Hilbert-transform FFT pair).
+//!
+//! With `--lra`, also measures the per-task LRA training speed that
+//! forms the x-axis of Fig 1a (accuracy axis: `example train_lra`).
+//!
+//! Run: `cargo bench --bench fig1_speedups [-- --steps N --lra]`
+
+mod common;
+
+use ski_tnn::util::bench::Table;
+use ski_tnn::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    common::run_child_if_requested();
+    let args = Args::parse(false);
+    let steps = args.usize_or("steps", 8);
+
+    let rows = [
+        ("causal 3L", "lm_base_3l", "lm_fd_3l"),
+        ("causal 6L", "lm_base_6l", "lm_fd_6l"),
+        ("bidir 3L", "lm_bidir_base_3l", "lm_bidir_fd_3l"),
+        ("bidir 6L", "lm_bidir_base_6l", "lm_bidir_fd_6l"),
+    ];
+    let mut t = Table::new(
+        "Fig 1b: pre-training iterations/sec — FD-TNN vs TNN",
+        &["setting", "TNN it/s", "FD it/s", "FD speedup"],
+    );
+    for (label, base, fd) in rows {
+        eprintln!("measuring {base} vs {fd}...");
+        let mb = common::measure(base, steps)?;
+        let mf = common::measure(fd, steps)?;
+        t.row(&[
+            label.to_string(),
+            format!("{:.2}", mb.steps_per_sec),
+            format!("{:.2}", mf.steps_per_sec),
+            common::speedup_pct(mb.ms_per_step, mf.ms_per_step),
+        ]);
+    }
+    // SKI-TNN is MLP-free, bidirectional-only (the paper's Fig 1b note)
+    eprintln!("measuring lm_bidir_ski...");
+    let base = common::measure("lm_bidir_base_6l", steps)?;
+    let ski = common::measure("lm_bidir_ski", steps)?;
+    t.row(&[
+        "bidir SKI vs 6L".into(),
+        format!("{:.2}", base.steps_per_sec),
+        format!("{:.2}", ski.steps_per_sec),
+        common::speedup_pct(base.ms_per_step, ski.ms_per_step),
+    ]);
+    t.print();
+
+    if args.flag("lra") {
+        let mut t = Table::new(
+            "Fig 1a (speed axis): LRA step time ms (bubble size: peak RSS MB)",
+            &["task", "TNN", "SKI", "FD", "SKI speedup", "FD speedup"],
+        );
+        for task in ["text", "listops", "retrieval", "pathfinder", "image"] {
+            eprintln!("measuring lra_{task}_*...");
+            let b = common::measure(&format!("lra_{task}_base"), steps)?;
+            let s = common::measure(&format!("lra_{task}_ski"), steps)?;
+            let f = common::measure(&format!("lra_{task}_fd"), steps)?;
+            t.row(&[
+                task.to_string(),
+                format!("{:.0} ({:.0}M)", b.ms_per_step, b.peak_rss_mb),
+                format!("{:.0} ({:.0}M)", s.ms_per_step, s.peak_rss_mb),
+                format!("{:.0} ({:.0}M)", f.ms_per_step, f.peak_rss_mb),
+                common::speedup_pct(b.ms_per_step, s.ms_per_step),
+                common::speedup_pct(b.ms_per_step, f.ms_per_step),
+            ]);
+        }
+        t.print();
+    }
+    Ok(())
+}

@@ -1,0 +1,120 @@
+//! §Perf harness — where does a fused train step actually spend time?
+//!
+//! Splits one step into the L3-visible phases:
+//!   1. batch generation (host, prefetchable),
+//!   2. HostTensor → XLA literal conversion,
+//!   3. `execute` (the XLA computation — L2/L1 territory),
+//!   4. output tuple pull + decompose (host),
+//! and reports each as ms and % of step. L3's job is to make 1, 2 and 4
+//! vanish next to 3; the prefetcher already moves 1 off the step path
+//! (measured here both ways).  Also prints per-entry compile times and
+//! the HLO op-count analysis (FFT/dot counts per TNO variant) that
+//! backs the L2 §Perf claims in EXPERIMENTS.md.
+//!
+//! Run: `cargo bench --bench perf_breakdown [-- --steps N]`
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use ski_tnn::coordinator::{batch_for, to_literals, Prefetcher};
+use ski_tnn::data::{Corpus, Split};
+use ski_tnn::runtime::{Engine, ModelState};
+use ski_tnn::util::bench::Table;
+use ski_tnn::util::cli::Args;
+
+fn count_ops(path: &str, op: &str) -> usize {
+    std::fs::read_to_string(path)
+        .map(|s| s.matches(&format!(" {op}(")).count())
+        .unwrap_or(0)
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(false);
+    let steps = args.usize_or("steps", 20);
+    let config = args.str_or("config", "lm_fd_3l");
+
+    let engine = Engine::new("artifacts")?;
+    let corpus = Arc::new(Corpus::generate(0, 400_000).tokens());
+
+    let mut state = ModelState::init(&engine, &config, 0)?;
+    engine.load(&config, "step")?;
+
+    // ---- phase breakdown, synchronous (no prefetch) ----
+    let mut src = batch_for(&engine, &config, Split::Train, Some(corpus.clone()), 1)?;
+    let (mut t_gen, mut t_conv, mut t_exec) = (0.0f64, 0.0f64, 0.0f64);
+    // warmup
+    state.step(&to_literals(&src.next_batch())?)?;
+    let t_all = Instant::now();
+    for _ in 0..steps {
+        let t0 = Instant::now();
+        let host = src.next_batch();
+        let t1 = Instant::now();
+        let lits = to_literals(&host)?;
+        let t2 = Instant::now();
+        state.step(&lits)?; // execute + output pull/decompose
+        let t3 = Instant::now();
+        t_gen += (t1 - t0).as_secs_f64();
+        t_conv += (t2 - t1).as_secs_f64();
+        t_exec += (t3 - t2).as_secs_f64();
+    }
+    let total = t_all.elapsed().as_secs_f64();
+
+    let mut t = Table::new(
+        &format!("{config}: fused-step phase breakdown ({steps} steps, no prefetch)"),
+        &["phase", "ms/step", "% of step"],
+    );
+    for (name, secs) in
+        [("batch gen (host)", t_gen), ("literal conv", t_conv), ("execute+pull", t_exec)]
+    {
+        t.row(&[
+            name.to_string(),
+            format!("{:.2}", 1e3 * secs / steps as f64),
+            format!("{:.1}%", 100.0 * secs / total),
+        ]);
+    }
+    t.row(&["total".into(), format!("{:.2}", 1e3 * total / steps as f64), "100%".into()]);
+    t.print();
+
+    // ---- with prefetch (the production loop) ----
+    let src2 = batch_for(&engine, &config, Split::Train, Some(corpus), 2)?;
+    let prefetch = Prefetcher::spawn(src2, 4);
+    state.step(&to_literals(&prefetch.next()?)?)?; // warm
+    let t0 = Instant::now();
+    for _ in 0..steps {
+        state.step(&to_literals(&prefetch.next()?)?)?;
+    }
+    let with_pf = t0.elapsed().as_secs_f64();
+    println!(
+        "prefetch ON: {:.2} ms/step vs {:.2} sync ({:+.1}%)\n",
+        1e3 * with_pf / steps as f64,
+        1e3 * total / steps as f64,
+        100.0 * (with_pf / total - 1.0),
+    );
+
+    // ---- compile-time log ----
+    let mut t = Table::new("compile times (one-off per process)", &["entry", "seconds"]);
+    for (k, s) in engine.compile_log() {
+        t.row(&[k, format!("{s:.1}")]);
+    }
+    t.print();
+
+    // ---- L2 op-count analysis: FD saves kernel-side work ----
+    let mut t = Table::new(
+        "HLO op counts in the lowered fwd graphs (L2 analysis)",
+        &["config", "fft", "dot", "multiply", "bytes"],
+    );
+    for c in ["lm_base_3l", "lm_fd_3l", "lm_bidir_base_3l", "lm_bidir_fd_3l", "lm_bidir_ski"] {
+        let path = format!("artifacts/{c}.fwd.hlo.txt");
+        t.row(&[
+            c.to_string(),
+            count_ops(&path, "fft").to_string(),
+            count_ops(&path, "dot").to_string(),
+            count_ops(&path, "multiply").to_string(),
+            std::fs::metadata(&path).map(|m| m.len().to_string()).unwrap_or_default(),
+        ]);
+    }
+    t.print();
+    println!("(bidir FD lowers fewer FFTs than bidir base — the paper's 'one fewer FFT';");
+    println!(" SKI lowers none on the kernel side: conv + matmul only.)");
+    Ok(())
+}

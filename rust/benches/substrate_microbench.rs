@@ -1,0 +1,111 @@
+//! Pure-Rust substrate micro-benchmarks — the paper's asymptotic
+//! arguments measured directly, without XLA in the way:
+//!
+//! * Toeplitz apply: dense O(n²) vs circulant-FFT O(n log n) — the
+//!   baseline TNN's core trick and its crossover point.
+//! * SKI apply: the mathematically O(n + r log r) sparse path vs the
+//!   dense-matmul path the paper actually ships (§3.2.1's "sparse
+//!   tensors are slower than dense below n ≈ 512" observation).
+//! * Appendix B: the causal-SKI cumulative-sum scan vs the plain FFT
+//!   apply — the sequential dependency that makes causal SKI a loss,
+//!   motivating the paper's switch to frequency-domain causality.
+//!
+//! Run: `cargo bench --bench substrate_microbench [-- --full]`
+
+use ski_tnn::toeplitz::{causal_ski_scan, gaussian_kernel, Ski, ToeplitzKernel};
+use ski_tnn::util::bench::{fmt_secs, Bencher, Table};
+use ski_tnn::util::cli::Args;
+use ski_tnn::util::rng::Rng;
+
+fn main() {
+    let args = Args::parse(false);
+    let sizes: &[usize] =
+        if args.flag("full") { &[256, 1024, 4096, 16384, 65536] } else { &[256, 1024, 4096] };
+    let bench = Bencher::quick();
+    let mut rng = Rng::new(0);
+
+    // ---------------- Toeplitz dense vs FFT ----------------
+    let mut t = Table::new(
+        "Toeplitz apply: dense O(n²) vs circulant FFT O(n log n)",
+        &["n", "dense", "fft", "fft speedup"],
+    );
+    for &n in sizes {
+        let k = ToeplitzKernel::from_fn(n, |lag| gaussian_kernel(lag as f64, n as f64 / 16.0));
+        let x = rng.normals(n);
+        let dense = if n <= 4096 {
+            Some(bench.run(|| {
+                std::hint::black_box(k.apply_dense(&x));
+            }))
+        } else {
+            None // O(n²) beyond patience at 16k+
+        };
+        let fft = bench.run(|| {
+            std::hint::black_box(k.apply_fft(&x));
+        });
+        t.row(&[
+            n.to_string(),
+            dense.as_ref().map(|d| fmt_secs(d.mean_s)).unwrap_or_else(|| "—".into()),
+            fmt_secs(fft.mean_s),
+            dense
+                .as_ref()
+                .map(|d| format!("{:.1}×", d.mean_s / fft.mean_s))
+                .unwrap_or_else(|| "—".into()),
+        ]);
+    }
+    t.print();
+
+    // ---------------- SKI sparse vs dense path ----------------
+    let r = 64;
+    let mut t = Table::new(
+        "SKI apply (r = 64): O(n + r log r) sparse path vs dense-matmul path",
+        &["n", "sparse path", "dense path", "sparse speedup", "vs full FFT"],
+    );
+    for &n in sizes {
+        let ski = Ski::from_kernel(n, r, |t| gaussian_kernel(t, n as f64 / 16.0));
+        let full = ToeplitzKernel::from_fn(n, |lag| gaussian_kernel(lag as f64, n as f64 / 16.0));
+        let x = rng.normals(n);
+        let sp = bench.run(|| {
+            std::hint::black_box(ski.apply_sparse(&x));
+        });
+        let de = bench.run(|| {
+            std::hint::black_box(ski.apply_dense(&x));
+        });
+        let ff = bench.run(|| {
+            std::hint::black_box(full.apply_fft(&x));
+        });
+        t.row(&[
+            n.to_string(),
+            fmt_secs(sp.mean_s),
+            fmt_secs(de.mean_s),
+            format!("{:.1}×", de.mean_s / sp.mean_s),
+            format!("{:.1}× vs {}", ff.mean_s / sp.mean_s, fmt_secs(ff.mean_s)),
+        ]);
+    }
+    t.print();
+
+    // ---------------- Appendix B: causal SKI scan ----------------
+    let mut t = Table::new(
+        "Appendix B: causal-SKI cumulative scan vs (bidirectional) FFT apply",
+        &["n", "causal scan", "fft apply", "scan penalty"],
+    );
+    for &n in sizes {
+        let ski = Ski::from_kernel(n, r, |t| gaussian_kernel(t, n as f64 / 16.0));
+        let full = ToeplitzKernel::from_fn(n, |lag| gaussian_kernel(lag as f64, n as f64 / 16.0));
+        let x = rng.normals(n);
+        let scan = bench.run(|| {
+            std::hint::black_box(causal_ski_scan(&ski, &x));
+        });
+        let fft = bench.run(|| {
+            std::hint::black_box(full.apply_fft(&x));
+        });
+        t.row(&[
+            n.to_string(),
+            fmt_secs(scan.mean_s),
+            fmt_secs(fft.mean_s),
+            format!("{:.1}× slower", scan.mean_s / fft.mean_s),
+        ]);
+    }
+    t.print();
+    println!("paper shape: SKI ≫ FFT bidirectionally, but the causal scan loses to FFT —");
+    println!("exactly why §3.3 switches to Hilbert-transform causality in frequency domain.");
+}

@@ -1,0 +1,45 @@
+//! Table 1 (speed rows) — causal pre-training step time, TNN vs FD-TNN.
+//!
+//! The paper: "at sequence length 512 with a six layer RPE, FD-TNN is
+//! 15% faster than the baseline TNN; for a three layer RPE, 10%".
+//! This harness measures fused-train-step time for the causal configs
+//! at both RPE depths and prints the same comparison.  (The quality
+//! rows of Table 1 — perplexities — come from the end-to-end driver:
+//! `cargo run --release --example train_lm`; see EXPERIMENTS.md.)
+//!
+//! Run: `cargo bench --bench table1_wikitext [-- --steps N]`
+
+mod common;
+
+use ski_tnn::util::bench::Table;
+use ski_tnn::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    common::run_child_if_requested();
+    let args = Args::parse(false);
+    let steps = args.usize_or("steps", 8);
+
+    let pairs = [
+        ("3-layer RPE", "lm_base_3l", "lm_fd_3l"),
+        ("6-layer RPE", "lm_base_6l", "lm_fd_6l"),
+    ];
+    let mut t = Table::new(
+        "Table 1 (speed): causal LM fused step — TNN baseline vs FD-TNN",
+        &["RPE depth", "TNN ms/step", "FD ms/step", "FD speedup", "paper"],
+    );
+    for (label, base, fd) in pairs {
+        eprintln!("measuring {base} vs {fd} ({steps} steps each)...");
+        let mb = common::measure(base, steps)?;
+        let mf = common::measure(fd, steps)?;
+        t.row(&[
+            label.to_string(),
+            format!("{:.1}", mb.ms_per_step),
+            format!("{:.1}", mf.ms_per_step),
+            common::speedup_pct(mb.ms_per_step, mf.ms_per_step),
+            if label.starts_with('3') { "+10%" } else { "+15%" }.to_string(),
+        ]);
+    }
+    t.print();
+    println!("(perplexity rows: `cargo run --release --example train_lm -- --steps 300`)");
+    Ok(())
+}

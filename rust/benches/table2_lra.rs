@@ -1,0 +1,48 @@
+//! Table 2 (speed companion) — LRA per-task training-step speed for
+//! TNN vs SKI-TNN vs FD-TNN.
+//!
+//! The paper's Table 2 reports accuracy (regenerate with
+//! `cargo run --release --example train_lra`); the speed side of the
+//! same trade-off (their Fig 1a) is measured here: steps/sec and peak
+//! RSS per config at the LRA sequence length (n = 1024; 2-D tasks use
+//! the smaller r=32/m=16 SKI layers, as in the paper).
+//!
+//! Run: `cargo bench --bench table2_lra [-- --steps N --tasks text,image]`
+
+mod common;
+
+use ski_tnn::util::bench::Table;
+use ski_tnn::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    common::run_child_if_requested();
+    let args = Args::parse(false);
+    let steps = args.usize_or("steps", 6);
+    let tasks = args.list_or(
+        "tasks",
+        &["text", "listops", "retrieval", "pathfinder", "image"],
+    );
+
+    let mut t = Table::new(
+        "Table 2 / Fig 1a speed: LRA training steps/sec (n = 1024)",
+        &["task", "TNN it/s", "SKI it/s", "FD it/s", "SKI vs TNN", "FD vs TNN", "RSS T/S/F MB"],
+    );
+    for task in &tasks {
+        eprintln!("measuring lra_{task}_* ({steps} steps each)...");
+        let b = common::measure(&format!("lra_{task}_base"), steps)?;
+        let s = common::measure(&format!("lra_{task}_ski"), steps)?;
+        let f = common::measure(&format!("lra_{task}_fd"), steps)?;
+        t.row(&[
+            task.clone(),
+            format!("{:.2}", b.steps_per_sec),
+            format!("{:.2}", s.steps_per_sec),
+            format!("{:.2}", f.steps_per_sec),
+            common::speedup_pct(b.ms_per_step, s.ms_per_step),
+            common::speedup_pct(b.ms_per_step, f.ms_per_step),
+            format!("{:.0}/{:.0}/{:.0}", b.peak_rss_mb, s.peak_rss_mb, f.peak_rss_mb),
+        ]);
+    }
+    t.print();
+    println!("(accuracy grid: `cargo run --release --example train_lra -- --steps 200`)");
+    Ok(())
+}

@@ -1,0 +1,169 @@
+//! Typed run configuration: JSON config files + CLI overrides.
+//!
+//! Every binary (the `ski-tnn` CLI, the examples, the benches) shares
+//! this configuration surface.  Precedence is CLI flag > JSON config
+//! file (`--config-file run.json`) > built-in default, mirroring the
+//! launcher conventions of the big training frameworks.
+
+use std::path::PathBuf;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::cli::Args;
+use crate::util::json::{self, Json};
+
+/// Configuration of one training / evaluation run.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    /// Manifest config name (e.g. `lm_fd_3l`, `lra_text_ski`).
+    pub config: String,
+    /// Artifact directory (default `artifacts/`).
+    pub artifacts: PathBuf,
+    /// Number of optimizer steps.
+    pub steps: usize,
+    /// Validation cadence in steps (0 = only at end).
+    pub eval_every: usize,
+    /// Batches per validation pass.
+    pub eval_batches: usize,
+    /// Global seed (corpus, init, batchers fork from this).
+    pub seed: u64,
+    /// Synthetic corpus size in bytes (LM tasks).
+    pub corpus_bytes: usize,
+    /// Output directory for metrics CSV/JSON + checkpoints.
+    pub out_dir: Option<PathBuf>,
+    /// Checkpoint cadence in steps (0 = only at end, if out_dir set).
+    pub checkpoint_every: usize,
+    /// Resume from this checkpoint path.
+    pub resume: Option<PathBuf>,
+    /// Console log cadence in steps.
+    pub log_every: usize,
+    /// Prefetch queue depth (batches prepared ahead on the worker).
+    pub prefetch: usize,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            config: "lm_fd_3l".into(),
+            artifacts: PathBuf::from("artifacts"),
+            steps: 200,
+            eval_every: 50,
+            eval_batches: 8,
+            seed: 0,
+            corpus_bytes: 1 << 20,
+            out_dir: None,
+            checkpoint_every: 0,
+            resume: None,
+            log_every: 10,
+            prefetch: 4,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Merge a JSON object (from `--config-file`) into `self`.
+    pub fn apply_json(&mut self, v: &Json) -> Result<()> {
+        let obj = v.as_obj().ok_or_else(|| anyhow!("run config must be a JSON object"))?;
+        for (k, val) in obj {
+            match k.as_str() {
+                "config" => self.config = val.as_str().context("config")?.to_string(),
+                "artifacts" => self.artifacts = val.as_str().context("artifacts")?.into(),
+                "steps" => self.steps = val.as_usize().context("steps")?,
+                "eval_every" => self.eval_every = val.as_usize().context("eval_every")?,
+                "eval_batches" => self.eval_batches = val.as_usize().context("eval_batches")?,
+                "seed" => self.seed = val.as_f64().context("seed")? as u64,
+                "corpus_bytes" => self.corpus_bytes = val.as_usize().context("corpus_bytes")?,
+                "out_dir" => self.out_dir = Some(val.as_str().context("out_dir")?.into()),
+                "checkpoint_every" => {
+                    self.checkpoint_every = val.as_usize().context("checkpoint_every")?
+                }
+                "resume" => self.resume = Some(val.as_str().context("resume")?.into()),
+                "log_every" => self.log_every = val.as_usize().context("log_every")?,
+                "prefetch" => self.prefetch = val.as_usize().context("prefetch")?,
+                other => return Err(anyhow!("unknown run-config key {other:?}")),
+            }
+        }
+        Ok(())
+    }
+
+    /// Apply CLI flags on top (only the ones present).
+    pub fn apply_args(&mut self, a: &Args) {
+        if let Some(v) = a.get("config") {
+            self.config = v.to_string();
+        }
+        if let Some(v) = a.get("artifacts") {
+            self.artifacts = v.into();
+        }
+        if let Some(v) = a.get("steps") {
+            self.steps = v.parse().unwrap_or(self.steps);
+        }
+        if let Some(v) = a.get("eval-every") {
+            self.eval_every = v.parse().unwrap_or(self.eval_every);
+        }
+        if let Some(v) = a.get("eval-batches") {
+            self.eval_batches = v.parse().unwrap_or(self.eval_batches);
+        }
+        if let Some(v) = a.get("seed") {
+            self.seed = v.parse().unwrap_or(self.seed);
+        }
+        if let Some(v) = a.get("corpus-bytes") {
+            self.corpus_bytes = v.parse().unwrap_or(self.corpus_bytes);
+        }
+        if let Some(v) = a.get("out-dir") {
+            self.out_dir = Some(v.into());
+        }
+        if let Some(v) = a.get("checkpoint-every") {
+            self.checkpoint_every = v.parse().unwrap_or(self.checkpoint_every);
+        }
+        if let Some(v) = a.get("resume") {
+            self.resume = Some(v.into());
+        }
+        if let Some(v) = a.get("log-every") {
+            self.log_every = v.parse().unwrap_or(self.log_every);
+        }
+        if let Some(v) = a.get("prefetch") {
+            self.prefetch = v.parse().unwrap_or(self.prefetch);
+        }
+    }
+
+    /// Resolve from CLI: defaults ← `--config-file` ← flags.
+    pub fn from_args(a: &Args) -> Result<RunConfig> {
+        let mut rc = RunConfig::default();
+        if let Some(path) = a.get("config-file") {
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("reading config file {path}"))?;
+            let v = json::parse(&text).map_err(|e| anyhow!("{path}: {e}"))?;
+            rc.apply_json(&v)?;
+        }
+        rc.apply_args(a);
+        Ok(rc)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_then_cli_precedence() {
+        let mut rc = RunConfig::default();
+        let j = json::parse(r#"{"config": "lm_base_3l", "steps": 77, "seed": 5}"#).unwrap();
+        rc.apply_json(&j).unwrap();
+        assert_eq!(rc.config, "lm_base_3l");
+        assert_eq!(rc.steps, 77);
+        let args = Args::parse_from(
+            ["--steps".to_string(), "99".to_string()],
+            false,
+        );
+        rc.apply_args(&args);
+        assert_eq!(rc.steps, 99, "CLI overrides JSON");
+        assert_eq!(rc.seed, 5, "JSON survives where CLI silent");
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let mut rc = RunConfig::default();
+        let j = json::parse(r#"{"stesp": 1}"#).unwrap();
+        assert!(rc.apply_json(&j).is_err());
+    }
+}

@@ -1,0 +1,157 @@
+//! Run metrics: append-only log with CSV / JSON export.
+//!
+//! Each [`Record`] is one logged event (train step, eval pass).  The
+//! log keeps everything in memory (runs here are ≤ thousands of steps)
+//! and serializes on demand so examples and benches can emit both the
+//! human table and machine-readable files for EXPERIMENTS.md.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// One logged event: a step index, a kind tag and named values.
+#[derive(Debug, Clone)]
+pub struct Record {
+    pub step: usize,
+    pub kind: &'static str,
+    pub values: Vec<(String, f64)>,
+}
+
+/// Append-only metrics log for one run.
+#[derive(Debug, Default)]
+pub struct MetricsLog {
+    pub records: Vec<Record>,
+}
+
+impl MetricsLog {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn log(&mut self, step: usize, kind: &'static str, values: &[(&str, f64)]) {
+        self.records.push(Record {
+            step,
+            kind,
+            values: values.iter().map(|(k, v)| (k.to_string(), *v)).collect(),
+        });
+    }
+
+    /// Values of one key across records of one kind, in step order.
+    pub fn series(&self, kind: &str, key: &str) -> Vec<(usize, f64)> {
+        self.records
+            .iter()
+            .filter(|r| r.kind == kind)
+            .filter_map(|r| {
+                r.values.iter().find(|(k, _)| k == key).map(|(_, v)| (r.step, *v))
+            })
+            .collect()
+    }
+
+    /// Mean of one key over the last `k` records of a kind.
+    pub fn recent_mean(&self, kind: &str, key: &str, k: usize) -> Option<f64> {
+        let s = self.series(kind, key);
+        if s.is_empty() {
+            return None;
+        }
+        let tail = &s[s.len().saturating_sub(k)..];
+        Some(tail.iter().map(|(_, v)| v).sum::<f64>() / tail.len() as f64)
+    }
+
+    /// CSV with the union of all value keys as columns.
+    pub fn to_csv(&self) -> String {
+        let mut keys: Vec<&str> = Vec::new();
+        for r in &self.records {
+            for (k, _) in &r.values {
+                if !keys.contains(&k.as_str()) {
+                    keys.push(k);
+                }
+            }
+        }
+        let mut out = String::from("step,kind");
+        for k in &keys {
+            out.push(',');
+            out.push_str(k);
+        }
+        out.push('\n');
+        for r in &self.records {
+            out.push_str(&format!("{},{}", r.step, r.kind));
+            for k in &keys {
+                out.push(',');
+                if let Some((_, v)) = r.values.iter().find(|(rk, _)| rk == k) {
+                    out.push_str(&format!("{v}"));
+                }
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.records
+                .iter()
+                .map(|r| {
+                    let mut m = BTreeMap::new();
+                    m.insert("step".to_string(), Json::num(r.step as f64));
+                    m.insert("kind".to_string(), Json::str(r.kind));
+                    for (k, v) in &r.values {
+                        m.insert(k.clone(), Json::num(*v));
+                    }
+                    Json::Obj(m)
+                })
+                .collect(),
+        )
+    }
+
+    /// Write `<dir>/<stem>.csv` and `<dir>/<stem>.json`.
+    pub fn write(&self, dir: &Path, stem: &str) -> Result<()> {
+        std::fs::create_dir_all(dir).with_context(|| format!("mkdir {}", dir.display()))?;
+        std::fs::write(dir.join(format!("{stem}.csv")), self.to_csv())?;
+        std::fs::write(
+            dir.join(format!("{stem}.json")),
+            crate::util::json::write(&self.to_json()),
+        )?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn series_and_recent_mean() {
+        let mut m = MetricsLog::new();
+        for s in 0..10 {
+            m.log(s, "train", &[("loss", 10.0 - s as f64)]);
+        }
+        m.log(5, "eval", &[("val_loss", 3.0)]);
+        assert_eq!(m.series("train", "loss").len(), 10);
+        assert_eq!(m.series("eval", "val_loss"), vec![(5, 3.0)]);
+        assert_eq!(m.recent_mean("train", "loss", 2), Some((1.0 + 2.0) / 2.0));
+    }
+
+    #[test]
+    fn csv_has_union_header_and_blank_cells() {
+        let mut m = MetricsLog::new();
+        m.log(0, "train", &[("loss", 1.5)]);
+        m.log(1, "eval", &[("acc", 0.5)]);
+        let csv = m.to_csv();
+        let mut lines = csv.lines();
+        assert_eq!(lines.next(), Some("step,kind,loss,acc"));
+        assert_eq!(lines.next(), Some("0,train,1.5,"));
+        assert_eq!(lines.next(), Some("1,eval,,0.5"));
+    }
+
+    #[test]
+    fn json_roundtrips_through_parser() {
+        let mut m = MetricsLog::new();
+        m.log(3, "train", &[("loss", 0.25)]);
+        let text = crate::util::json::write(&m.to_json());
+        let v = crate::util::json::parse(&text).unwrap();
+        assert_eq!(v.idx(0).unwrap().get("loss").unwrap().as_f64(), Some(0.25));
+    }
+}

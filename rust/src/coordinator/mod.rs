@@ -1,0 +1,24 @@
+//! Coordinator — the Layer-3 training orchestrator.
+//!
+//! Drives the AOT `step`/`fwd` artifacts through the PJRT runtime:
+//!
+//! * [`Trainer`] — the step loop: prefetch-fed fused train steps,
+//!   periodic validation, console + CSV/JSON metrics, checkpoints.
+//! * [`Prefetcher`] — a worker thread producing [`HostTensor`] batches
+//!   ahead of the runtime thread through a bounded channel (the XLA
+//!   handles themselves never cross threads).
+//! * [`MetricsLog`] — append-only run log with CSV and JSON export.
+//! * [`batch_for`] / [`evaluate`] — helpers shared by examples and
+//!   benches: build the right [`BatchSource`] for a manifest config,
+//!   run a fixed validation pass.
+//!
+//! [`HostTensor`]: crate::runtime::HostTensor
+//! [`BatchSource`]: crate::data::BatchSource
+
+mod metrics;
+mod prefetch;
+mod trainer;
+
+pub use metrics::{MetricsLog, Record};
+pub use prefetch::Prefetcher;
+pub use trainer::{batch_for, evaluate, to_literals, EvalStats, Trainer};

@@ -1,0 +1,112 @@
+//! Batch prefetcher: overlap host-side data generation with device
+//! execution.
+//!
+//! The XLA FFI handles are not `Send`, so the split is: the worker
+//! thread runs the [`BatchSource`] (pure host work — corpus sampling,
+//! masking, raster generation) and ships [`HostTensor`]s through a
+//! bounded channel; the runtime thread converts them to literals right
+//! before `execute`.  The bound gives natural backpressure: the worker
+//! parks once `depth` batches are ready.
+
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use crate::data::BatchSource;
+use crate::runtime::HostTensor;
+
+/// Handle to a running prefetch thread.
+pub struct Prefetcher {
+    rx: Receiver<Vec<HostTensor>>,
+    handle: Option<JoinHandle<()>>,
+    desc: String,
+}
+
+impl Prefetcher {
+    /// Spawn a worker producing batches from `src`, keeping up to
+    /// `depth` ready.
+    pub fn spawn(mut src: Box<dyn BatchSource>, depth: usize) -> Prefetcher {
+        let desc = src.describe();
+        let (tx, rx) = sync_channel(depth.max(1));
+        let handle = std::thread::Builder::new()
+            .name(format!("prefetch:{desc}"))
+            .spawn(move || {
+                loop {
+                    let batch = src.next_batch();
+                    // Receiver dropped ⇒ trainer is done; exit quietly.
+                    if tx.send(batch).is_err() {
+                        return;
+                    }
+                }
+            })
+            .expect("spawn prefetch thread");
+        Prefetcher { rx, handle: Some(handle), desc }
+    }
+
+    /// Next batch (blocks until the worker catches up).
+    pub fn next(&self) -> Result<Vec<HostTensor>> {
+        // A generous timeout converts a hung generator into a
+        // diagnosable error instead of a silent stall.
+        match self.rx.recv_timeout(Duration::from_secs(120)) {
+            Ok(b) => Ok(b),
+            Err(RecvTimeoutError::Timeout) => {
+                Err(anyhow!("prefetcher {:?} stalled for 120s", self.desc))
+            }
+            Err(RecvTimeoutError::Disconnected) => {
+                Err(anyhow!("prefetcher {:?} worker died", self.desc))
+            }
+        }
+    }
+}
+
+impl Drop for Prefetcher {
+    fn drop(&mut self) {
+        // Drain the channel so a blocked sender wakes and sees the
+        // disconnect; then join.
+        while self.rx.try_recv().is_ok() {}
+        drop(std::mem::replace(&mut self.rx, {
+            let (_tx, rx) = sync_channel(1);
+            rx
+        }));
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct Counting {
+        i: i32,
+    }
+
+    impl BatchSource for Counting {
+        fn next_batch(&mut self) -> Vec<HostTensor> {
+            self.i += 1;
+            vec![HostTensor::i32(vec![1], vec![self.i])]
+        }
+        fn describe(&self) -> String {
+            "counting".into()
+        }
+    }
+
+    #[test]
+    fn delivers_batches_in_order() {
+        let p = Prefetcher::spawn(Box::new(Counting { i: 0 }), 2);
+        for want in 1..=10 {
+            let b = p.next().unwrap();
+            assert_eq!(b[0].as_i32().unwrap(), &[want]);
+        }
+    }
+
+    #[test]
+    fn drop_terminates_worker() {
+        let p = Prefetcher::spawn(Box::new(Counting { i: 0 }), 1);
+        let _ = p.next().unwrap();
+        drop(p); // must not hang
+    }
+}

@@ -1,0 +1,246 @@
+//! The training orchestrator: step loop over the fused AOT artifact.
+//!
+//! One [`Trainer`] owns the model state and runs the loop the paper's
+//! experiments need: prefetch-fed fused steps, periodic deterministic
+//! validation, perplexity/accuracy bookkeeping, checkpointing, and a
+//! metrics log whose series become the Fig 7b/8/9 curves.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+use xla::Literal;
+
+use crate::config::RunConfig;
+use crate::data::{
+    BatchSource, CausalLmStream, ClsStream, Corpus, LraTask, MaskedLmStream, Split,
+};
+use crate::runtime::{Engine, HostTensor, ModelState, Task};
+
+use super::metrics::MetricsLog;
+use super::prefetch::Prefetcher;
+
+/// Convert a host batch to XLA literals (runtime-thread only).
+pub fn to_literals(batch: &[HostTensor]) -> Result<Vec<Literal>> {
+    batch.iter().map(HostTensor::to_literal).collect()
+}
+
+/// Build the right batch source for a manifest config.
+///
+/// LM configs sample the synthetic grammar corpus; `cls` configs map
+/// the config name (`lra_<task>_<variant>`) back to its generator.
+pub fn batch_for(
+    engine: &Engine,
+    config: &str,
+    split: Split,
+    corpus: Option<Arc<Vec<i32>>>,
+    seed: u64,
+) -> Result<Box<dyn BatchSource>> {
+    let cfg = engine.config(config)?;
+    Ok(match cfg.task {
+        Task::LmCausal => {
+            let toks = corpus.context("causal LM needs a corpus")?;
+            Box::new(CausalLmStream::new(toks, split, cfg.batch, cfg.n, seed))
+        }
+        Task::LmBidir => {
+            let toks = corpus.context("masked LM needs a corpus")?;
+            Box::new(MaskedLmStream::new(toks, split, cfg.batch, cfg.n, seed))
+        }
+        Task::Cls => {
+            let task_name = config
+                .strip_prefix("lra_")
+                .and_then(|s| s.rsplit_once('_'))
+                .map(|(t, _)| t)
+                .with_context(|| format!("cannot infer LRA task from config {config:?}"))?;
+            let task = LraTask::parse(task_name)
+                .with_context(|| format!("unknown LRA task {task_name:?}"))?;
+            // keep val stream distinct from train by seed-space split
+            let s = match split {
+                Split::Train => seed,
+                Split::Val => seed ^ 0x5A5A_5A5A_5A5A_5A5A,
+            };
+            Box::new(ClsStream::new(task, cfg.batch, cfg.n, s))
+        }
+    })
+}
+
+/// Aggregated validation statistics.
+#[derive(Debug, Clone, Copy)]
+pub struct EvalStats {
+    pub loss: f64,
+    /// `exp(loss)` for LM tasks; `NaN` for cls.
+    pub ppl: f64,
+    /// Classification accuracy for cls tasks; `NaN` for LM.
+    pub acc: f64,
+}
+
+/// Run a fixed validation pass through an eval entry (`fwd` or
+/// `fwd_n{L}`), aggregating exactly (metric = token count for LM,
+/// correct count for cls — see `model.loss_fn`).
+pub fn evaluate(
+    engine: &Engine,
+    state: &ModelState,
+    entry: &str,
+    src: &mut dyn BatchSource,
+    batches: usize,
+) -> Result<EvalStats> {
+    let cfg = &state.config;
+    let mut loss_weighted = 0.0;
+    let mut weight = 0.0;
+    let mut correct = 0.0;
+    let mut examples = 0.0;
+    for _ in 0..batches {
+        let batch = to_literals(&src.next_batch())?;
+        let (loss, metric) = state.fwd(engine, entry, &batch)?;
+        match cfg.task {
+            Task::LmCausal | Task::LmBidir => {
+                // loss is per-token mean, metric the token count
+                loss_weighted += f64::from(loss) * f64::from(metric);
+                weight += f64::from(metric);
+            }
+            Task::Cls => {
+                loss_weighted += f64::from(loss) * cfg.batch as f64;
+                weight += cfg.batch as f64;
+                correct += f64::from(metric);
+                examples += cfg.batch as f64;
+            }
+        }
+    }
+    let loss = loss_weighted / weight.max(1.0);
+    Ok(EvalStats {
+        loss,
+        ppl: if cfg.task == Task::Cls { f64::NAN } else { loss.exp() },
+        acc: if cfg.task == Task::Cls { correct / examples.max(1.0) } else { f64::NAN },
+    })
+}
+
+/// The end-to-end training driver.
+pub struct Trainer<'e> {
+    pub engine: &'e Engine,
+    pub state: ModelState,
+    pub run: RunConfig,
+    pub metrics: MetricsLog,
+    corpus: Option<Arc<Vec<i32>>>,
+}
+
+impl<'e> Trainer<'e> {
+    /// Initialize (or resume) a run.  Generates the corpus if the
+    /// config is an LM task.
+    pub fn new(engine: &'e Engine, run: RunConfig) -> Result<Trainer<'e>> {
+        let cfg = engine.config(&run.config)?.clone();
+        let corpus = match cfg.task {
+            Task::Cls => None,
+            _ => Some(Arc::new(Corpus::generate(run.seed, run.corpus_bytes).tokens())),
+        };
+        let state = match &run.resume {
+            Some(path) => {
+                let st = ModelState::load(engine, path)?;
+                if st.config.name != run.config {
+                    bail!(
+                        "checkpoint {} is for config {}, run wants {}",
+                        path.display(),
+                        st.config.name,
+                        run.config
+                    );
+                }
+                st
+            }
+            None => ModelState::init(engine, &run.config, run.seed as u32)?,
+        };
+        Ok(Trainer { engine, state, run, metrics: MetricsLog::new(), corpus })
+    }
+
+    /// Validation pass with a fresh deterministic val stream.
+    pub fn eval(&mut self) -> Result<EvalStats> {
+        let mut src = batch_for(
+            self.engine,
+            &self.run.config,
+            Split::Val,
+            self.corpus.clone(),
+            self.run.seed + 1,
+        )?;
+        evaluate(self.engine, &self.state, "fwd", src.as_mut(), self.run.eval_batches)
+    }
+
+    /// Run the configured number of steps.  Returns final val stats.
+    pub fn train(&mut self) -> Result<EvalStats> {
+        let src = batch_for(
+            self.engine,
+            &self.run.config,
+            Split::Train,
+            self.corpus.clone(),
+            self.run.seed + 2,
+        )?;
+        let prefetch = Prefetcher::spawn(src, self.run.prefetch);
+
+        // warm the compile cache before the timed loop
+        let _ = self.engine.load(&self.run.config, "step")?;
+        let t_run = Instant::now();
+        let mut steps_done = 0usize;
+        for step in 1..=self.run.steps {
+            let batch = to_literals(&prefetch.next()?)?;
+            let t0 = Instant::now();
+            let loss = self.state.step(&batch)?;
+            let dt = t0.elapsed().as_secs_f64();
+            steps_done += 1;
+            if !loss.is_finite() {
+                bail!("loss diverged at step {step}: {loss}");
+            }
+            self.metrics.log(step, "train", &[("loss", f64::from(loss)), ("step_s", dt)]);
+            if self.run.log_every > 0 && step % self.run.log_every == 0 {
+                let mean = self
+                    .metrics
+                    .recent_mean("train", "loss", self.run.log_every)
+                    .unwrap_or(f64::from(loss));
+                println!(
+                    "[{}] step {step}/{} loss {mean:.4} ({:.0} ms/step)",
+                    self.run.config,
+                    self.run.steps,
+                    1e3 * dt
+                );
+            }
+            if self.run.eval_every > 0 && step % self.run.eval_every == 0 {
+                let stats = self.eval()?;
+                self.metrics.log(
+                    step,
+                    "eval",
+                    &[("val_loss", stats.loss), ("val_ppl", stats.ppl), ("val_acc", stats.acc)],
+                );
+                println!(
+                    "[{}] step {step}: val loss {:.4} ppl {:.2} acc {:.3}",
+                    self.run.config, stats.loss, stats.ppl, stats.acc
+                );
+            }
+            if self.run.checkpoint_every > 0 && step % self.run.checkpoint_every == 0 {
+                self.checkpoint(step)?;
+            }
+        }
+        let total = t_run.elapsed().as_secs_f64();
+        let stats = self.eval()?;
+        self.metrics.log(
+            self.run.steps,
+            "final",
+            &[
+                ("val_loss", stats.loss),
+                ("val_ppl", stats.ppl),
+                ("val_acc", stats.acc),
+                ("steps_per_sec", steps_done as f64 / total.max(1e-9)),
+            ],
+        );
+        if let Some(dir) = self.run.out_dir.clone() {
+            self.metrics.write(&dir, &format!("{}_metrics", self.run.config))?;
+            self.checkpoint(self.run.steps)?;
+        }
+        Ok(stats)
+    }
+
+    fn checkpoint(&self, step: usize) -> Result<()> {
+        if let Some(dir) = &self.run.out_dir {
+            std::fs::create_dir_all(dir)?;
+            let path = dir.join(format!("{}_step{step}.ckpt", self.run.config));
+            self.state.save(&path)?;
+            println!("[{}] wrote {}", self.run.config, path.display());
+        }
+        Ok(())
+    }
+}

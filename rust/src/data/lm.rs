@@ -1,0 +1,199 @@
+//! Language-model batchers over a token stream.
+//!
+//! * [`CausalLmStream`] — `(b, n+1)` windows for next-token prediction
+//!   (the `lm_causal` artifact's single batch input).
+//! * [`MaskedLmStream`] — `(ids, tgt, mask)` triples with BERT-style
+//!   token masking (the `lm_bidir` artifact's inputs), mirroring
+//!   `model.mask_batch_tokens` on the python side.
+//!
+//! Streams draw random windows from a disjoint train/val [`Split`] of
+//! the corpus; every stream is a pure function of `(corpus seed,
+//! stream seed)` so validation batches are identical across evals and
+//! across runs.
+
+use std::sync::Arc;
+
+use crate::runtime::HostTensor;
+use crate::util::rng::Rng;
+
+use super::{BatchSource, MASK};
+
+/// Which contiguous region of the corpus a stream samples from.
+/// The last 10% of tokens are validation; no window crosses the split.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Split {
+    Train,
+    Val,
+}
+
+fn split_bounds(len: usize, split: Split) -> (usize, usize) {
+    let cut = len - len / 10;
+    match split {
+        Split::Train => (0, cut),
+        Split::Val => (cut, len),
+    }
+}
+
+/// Random fixed-length windows for causal LM training.
+pub struct CausalLmStream {
+    tokens: Arc<Vec<i32>>,
+    lo: usize,
+    hi: usize,
+    batch: usize,
+    n: usize,
+    rng: Rng,
+    split: Split,
+}
+
+impl CausalLmStream {
+    /// `n` is the model context (the batch tensor is `(batch, n+1)`).
+    pub fn new(tokens: Arc<Vec<i32>>, split: Split, batch: usize, n: usize, seed: u64) -> Self {
+        let (lo, hi) = split_bounds(tokens.len(), split);
+        assert!(hi - lo > n + 1, "split too small for window {n}");
+        CausalLmStream { tokens, lo, hi, batch, n, rng: Rng::new(seed), split }
+    }
+}
+
+impl BatchSource for CausalLmStream {
+    fn next_batch(&mut self) -> Vec<HostTensor> {
+        let w = self.n + 1;
+        let mut data = Vec::with_capacity(self.batch * w);
+        for _ in 0..self.batch {
+            let start = self.lo + self.rng.below(self.hi - self.lo - w);
+            data.extend_from_slice(&self.tokens[start..start + w]);
+        }
+        vec![HostTensor::i32(vec![self.batch, w], data)]
+    }
+
+    fn describe(&self) -> String {
+        format!("causal-lm {:?} b={} n={}", self.split, self.batch, self.n)
+    }
+}
+
+/// Masking rate for the bidirectional objective (matches the python
+/// reference `mask_batch_tokens` default).
+pub const MASK_RATE: f64 = 0.15;
+
+/// BERT-style masked-LM batches: `(ids, tgt, mask)`.
+pub struct MaskedLmStream {
+    tokens: Arc<Vec<i32>>,
+    lo: usize,
+    hi: usize,
+    batch: usize,
+    n: usize,
+    rng: Rng,
+    split: Split,
+}
+
+impl MaskedLmStream {
+    pub fn new(tokens: Arc<Vec<i32>>, split: Split, batch: usize, n: usize, seed: u64) -> Self {
+        let (lo, hi) = split_bounds(tokens.len(), split);
+        assert!(hi - lo > n, "split too small for window {n}");
+        MaskedLmStream { tokens, lo, hi, batch, n, rng: Rng::new(seed), split }
+    }
+}
+
+impl BatchSource for MaskedLmStream {
+    fn next_batch(&mut self) -> Vec<HostTensor> {
+        let (b, n) = (self.batch, self.n);
+        let mut ids = Vec::with_capacity(b * n);
+        let mut tgt = Vec::with_capacity(b * n);
+        let mut mask = Vec::with_capacity(b * n);
+        for _ in 0..b {
+            let start = self.lo + self.rng.below(self.hi - self.lo - n);
+            let window = &self.tokens[start..start + n];
+            let mut any = false;
+            for &tok in window {
+                let m = self.rng.bool(MASK_RATE);
+                any |= m;
+                ids.push(if m { MASK } else { tok });
+                tgt.push(tok);
+                mask.push(if m { 1.0f32 } else { 0.0 });
+            }
+            // Guarantee ≥1 masked position per row so the loss
+            // denominator (sum of mask) is never saturated by the
+            // max(·, 1) guard.
+            if !any {
+                let j = ids.len() - n + self.rng.below(n);
+                ids[j] = MASK;
+                mask[j] = 1.0;
+            }
+        }
+        vec![
+            HostTensor::i32(vec![b, n], ids),
+            HostTensor::i32(vec![b, n], tgt),
+            HostTensor::f32(vec![b, n], mask),
+        ]
+    }
+
+    fn describe(&self) -> String {
+        format!("masked-lm {:?} b={} n={}", self.split, self.batch, self.n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Corpus;
+
+    fn toks() -> Arc<Vec<i32>> {
+        Arc::new(Corpus::generate(0, 50_000).tokens())
+    }
+
+    #[test]
+    fn causal_shapes_and_determinism() {
+        let t = toks();
+        let mut a = CausalLmStream::new(t.clone(), Split::Train, 4, 64, 9);
+        let mut b = CausalLmStream::new(t, Split::Train, 4, 64, 9);
+        let ba = a.next_batch();
+        let bb = b.next_batch();
+        assert_eq!(ba, bb, "same seed ⇒ same batches");
+        assert_eq!(ba[0].shape(), &[4, 65]);
+    }
+
+    #[test]
+    fn splits_are_disjoint() {
+        let t = toks();
+        let n = t.len();
+        let (tl, th) = split_bounds(n, Split::Train);
+        let (vl, vh) = split_bounds(n, Split::Val);
+        assert_eq!(th, vl);
+        assert_eq!(tl, 0);
+        assert_eq!(vh, n);
+        // windows stay inside their split
+        let mut s = CausalLmStream::new(t.clone(), Split::Val, 8, 32, 1);
+        for _ in 0..20 {
+            let b = s.next_batch();
+            let ids = b[0].as_i32().unwrap();
+            // all val windows must match some suffix slice of the corpus
+            assert!(ids.iter().all(|&x| (0..256).contains(&x)));
+        }
+    }
+
+    #[test]
+    fn masked_stream_invariants() {
+        let t = toks();
+        let mut s = MaskedLmStream::new(t, Split::Train, 4, 128, 3);
+        for _ in 0..10 {
+            let b = s.next_batch();
+            let (ids, tgt, mask) =
+                (b[0].as_i32().unwrap(), b[1].as_i32().unwrap(), b[2].as_f32().unwrap());
+            let mut frac = 0.0;
+            for i in 0..ids.len() {
+                if mask[i] > 0.5 {
+                    assert_eq!(ids[i], MASK, "masked position must carry MASK id");
+                } else {
+                    assert_eq!(ids[i], tgt[i], "unmasked position must be identity");
+                }
+                assert!((0..256).contains(&tgt[i]), "targets are raw bytes");
+                frac += f64::from(mask[i]);
+            }
+            frac /= ids.len() as f64;
+            assert!((0.05..0.3).contains(&frac), "mask rate {frac} out of band");
+            // every row has at least one masked position
+            for row in mask.chunks(128) {
+                assert!(row.iter().any(|&m| m > 0.5));
+            }
+        }
+    }
+}

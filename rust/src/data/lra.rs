@@ -1,0 +1,586 @@
+//! Long-Range-Arena-style synthetic classification tasks.
+//!
+//! Five generators mirroring the structure of the LRA suite the paper
+//! evaluates (Table 2 / Fig 1a), at the same sequence lengths, built
+//! deterministically from seeds (DESIGN.md §Substitutions):
+//!
+//! * [`LraTask::Text`] — byte-level "sentiment": polarity cue words
+//!   planted at long range inside grammar filler; 2 classes.
+//! * [`LraTask::ListOps`] — nested prefix-operator expressions
+//!   (`[MAX 3 6 [MIN 2 8 ] 4 ]`) evaluated to a digit; 10 classes.
+//! * [`LraTask::Retrieval`] — two documents joined by a CLS separator;
+//!   positive iff they share a planted key phrase; 2 classes.
+//! * [`LraTask::Pathfinder`] — 32×32 raster with dashed curves;
+//!   positive iff the two endpoint dots are connected; 2 classes.
+//! * [`LraTask::Image`] — 32×32 grayscale shape rendering, 10 shape
+//!   classes, serialized row-major like LRA's sCIFAR.
+//!
+//! Labels are balanced by construction.  Generators emit `(ids, label)`
+//! examples; [`ClsStream`] batches them into the `cls` artifact's
+//! `(ids, labels)` inputs.
+
+use crate::runtime::HostTensor;
+use crate::util::rng::Rng;
+
+use super::{BatchSource, CLS, PAD};
+
+/// The five task families.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LraTask {
+    Text,
+    ListOps,
+    Retrieval,
+    Pathfinder,
+    Image,
+}
+
+impl LraTask {
+    pub fn parse(s: &str) -> Option<LraTask> {
+        Some(match s {
+            "text" => LraTask::Text,
+            "listops" => LraTask::ListOps,
+            "retrieval" => LraTask::Retrieval,
+            "pathfinder" => LraTask::Pathfinder,
+            "image" => LraTask::Image,
+            _ => return None,
+        })
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            LraTask::Text => "text",
+            LraTask::ListOps => "listops",
+            LraTask::Retrieval => "retrieval",
+            LraTask::Pathfinder => "pathfinder",
+            LraTask::Image => "image",
+        }
+    }
+
+    pub fn num_classes(&self) -> usize {
+        match self {
+            LraTask::ListOps | LraTask::Image => 10,
+            _ => 2,
+        }
+    }
+
+    /// Generate one `(ids, label)` example of length `n`.
+    pub fn example(&self, rng: &mut Rng, n: usize) -> (Vec<i32>, i32) {
+        match self {
+            LraTask::Text => text_example(rng, n),
+            LraTask::ListOps => listops_example(rng, n),
+            LraTask::Retrieval => retrieval_example(rng, n),
+            LraTask::Pathfinder => pathfinder_example(rng, n),
+            LraTask::Image => image_example(rng, n),
+        }
+    }
+}
+
+fn pad_to(mut ids: Vec<i32>, n: usize) -> Vec<i32> {
+    ids.truncate(n);
+    while ids.len() < n {
+        ids.push(PAD);
+    }
+    ids
+}
+
+fn push_str(ids: &mut Vec<i32>, s: &str) {
+    ids.extend(s.bytes().map(|b| b as i32));
+}
+
+// ---------------------------------------------------------------------------
+// Text (sentiment)
+// ---------------------------------------------------------------------------
+
+const POS_CUES: &[&str] = &["brilliant", "delight", "superb", "tender", "luminous"];
+const NEG_CUES: &[&str] = &["dreary", "tedious", "wretched", "hollow", "grating"];
+const FILLER: &[&str] = &[
+    "the", "plot", "moves", "along", "with", "scenes", "that", "follow", "a", "familiar",
+    "shape", "and", "the", "camera", "lingers", "on", "faces", "in", "rooms",
+];
+
+/// Majority-polarity classification with cues scattered across the
+/// full window — the long-range part is that cues can land anywhere,
+/// including all in the final tokens.
+fn text_example(rng: &mut Rng, n: usize) -> (Vec<i32>, i32) {
+    let label = rng.bool(0.5) as i32;
+    let (major, minor) = if label == 1 { (POS_CUES, NEG_CUES) } else { (NEG_CUES, POS_CUES) };
+    let major_count = 3 + rng.below(3); // 3-5 majority cues
+    let minor_count = major_count - 1 - rng.below(2); // strictly fewer
+    let mut words: Vec<&str> = Vec::new();
+    while words.iter().map(|w| w.len() + 1).sum::<usize>() < n {
+        words.push(FILLER[rng.below(FILLER.len())]);
+    }
+    for _ in 0..major_count {
+        let at = rng.below(words.len());
+        words[at] = major[rng.below(major.len())];
+    }
+    // place minority cues avoiding collisions with majority ones
+    let mut placed = 0;
+    while placed < minor_count {
+        let at = rng.below(words.len());
+        if !major.contains(&words[at]) {
+            words[at] = minor[rng.below(minor.len())];
+            placed += 1;
+        }
+    }
+    let mut ids = Vec::with_capacity(n + 16);
+    for w in words {
+        push_str(&mut ids, w);
+        ids.push(b' ' as i32);
+    }
+    (pad_to(ids, n), label)
+}
+
+// ---------------------------------------------------------------------------
+// ListOps
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy)]
+enum Op {
+    Max,
+    Min,
+    Med,
+    Sum, // SUM mod 10 (LRA's SM)
+}
+
+fn listops_value(op: Op, args: &[i64]) -> i64 {
+    match op {
+        Op::Max => *args.iter().max().unwrap(),
+        Op::Min => *args.iter().min().unwrap(),
+        Op::Med => {
+            let mut v = args.to_vec();
+            v.sort_unstable();
+            v[v.len() / 2]
+        }
+        Op::Sum => args.iter().sum::<i64>() % 10,
+    }
+}
+
+fn listops_render(op: Op, out: &mut Vec<i32>) {
+    let s = match op {
+        Op::Max => "[MAX",
+        Op::Min => "[MIN",
+        Op::Med => "[MED",
+        Op::Sum => "[SM",
+    };
+    push_str(out, s);
+}
+
+/// Generate a nested expression whose rendered length stays under
+/// `budget` bytes; returns its value.
+fn listops_expr(rng: &mut Rng, depth: usize, budget: usize, out: &mut Vec<i32>) -> i64 {
+    let ops = [Op::Max, Op::Min, Op::Med, Op::Sum];
+    let op = ops[rng.below(4)];
+    listops_render(op, out);
+    let arity = 2 + rng.below(4);
+    let mut args = Vec::with_capacity(arity);
+    for _ in 0..arity {
+        out.push(b' ' as i32);
+        if depth < 4 && out.len() + 24 < budget && rng.bool(0.35) {
+            args.push(listops_expr(rng, depth + 1, budget, out));
+        } else {
+            let d = rng.below(10) as i64;
+            out.push(b'0' as i32 + d as i32);
+            args.push(d);
+        }
+    }
+    push_str(out, " ]");
+    listops_value(op, &args)
+}
+
+fn listops_example(rng: &mut Rng, n: usize) -> (Vec<i32>, i32) {
+    let mut ids = Vec::with_capacity(n);
+    // fill most of the window with one deep expression
+    let value = listops_expr(rng, 0, n.saturating_sub(8), &mut ids);
+    (pad_to(ids, n), value as i32)
+}
+
+// ---------------------------------------------------------------------------
+// Retrieval
+// ---------------------------------------------------------------------------
+
+/// Two ~n/2 documents; positive iff both contain the same 8-byte key.
+fn retrieval_example(rng: &mut Rng, n: usize) -> (Vec<i32>, i32) {
+    let label = rng.bool(0.5) as i32;
+    let half = (n - 1) / 2;
+    let key: Vec<i32> = (0..8).map(|_| (b'A' + rng.below(26) as u8) as i32).collect();
+    let other: Vec<i32> = loop {
+        let k: Vec<i32> = (0..8).map(|_| (b'A' + rng.below(26) as u8) as i32).collect();
+        if k != key {
+            break k;
+        }
+    };
+    let doc = |with_key: &[i32], r: &mut Rng| -> Vec<i32> {
+        let mut d: Vec<i32> = Vec::with_capacity(half);
+        while d.len() < half {
+            let w = FILLER[r.below(FILLER.len())];
+            d.extend(w.bytes().map(|b| b as i32));
+            d.push(b' ' as i32);
+        }
+        d.truncate(half);
+        let at = r.below(half - with_key.len());
+        d[at..at + with_key.len()].copy_from_slice(with_key);
+        d
+    };
+    let d1 = doc(&key, rng);
+    let d2 = doc(if label == 1 { &key } else { &other }, rng);
+    let mut ids = d1;
+    ids.push(CLS);
+    ids.extend(d2);
+    (pad_to(ids, n), label)
+}
+
+// ---------------------------------------------------------------------------
+// Pathfinder
+// ---------------------------------------------------------------------------
+
+const SIDE: usize = 32;
+
+/// Draw a dashed random walk from `from` towards `to`; marks visited
+/// cells in `img` with intensity and records them in `cells`.
+fn draw_path(
+    rng: &mut Rng,
+    img: &mut [u8],
+    from: (i64, i64),
+    to: (i64, i64),
+    cells: &mut Vec<usize>,
+) {
+    let (mut x, mut y) = from;
+    let mut step = 0usize;
+    while (x, y) != to && step < 4 * SIDE {
+        let dx = (to.0 - x).signum();
+        let dy = (to.1 - y).signum();
+        // mostly advance, occasionally wander
+        let (mx, my) = if rng.bool(0.75) {
+            (dx, dy)
+        } else {
+            ([-1, 0, 1][rng.below(3)], [-1, 0, 1][rng.below(3)])
+        };
+        x = (x + mx).clamp(0, SIDE as i64 - 1);
+        y = (y + my).clamp(0, SIDE as i64 - 1);
+        let idx = y as usize * SIDE + x as usize;
+        // dashed: draw ~2 of every 3 cells
+        if step % 3 != 2 {
+            img[idx] = 180;
+        }
+        cells.push(idx);
+        step += 1;
+    }
+}
+
+fn dot(img: &mut [u8], p: (i64, i64)) {
+    img[p.1 as usize * SIDE + p.0 as usize] = 255;
+}
+
+/// Positive: one dashed path joins the two dots.  Negative: each dot
+/// gets its own short dead-end path + a distractor arc elsewhere.
+fn pathfinder_example(rng: &mut Rng, n: usize) -> (Vec<i32>, i32) {
+    assert_eq!(n, SIDE * SIDE, "pathfinder is a {SIDE}x{SIDE} raster");
+    let label = rng.bool(0.5) as i32;
+    let mut img = vec![0u8; SIDE * SIDE];
+    let rp = |r: &mut Rng| (r.below(SIDE) as i64, r.below(SIDE) as i64);
+    let a = rp(rng);
+    let b = loop {
+        let p = rp(rng);
+        if (p.0 - a.0).abs() + (p.1 - a.1).abs() > SIDE as i64 / 2 {
+            break p;
+        }
+    };
+    let mut cells = Vec::new();
+    if label == 1 {
+        draw_path(rng, &mut img, a, b, &mut cells);
+    } else {
+        // two dead ends pointing away from each other
+        let ma = ((a.0 + 4).min(SIDE as i64 - 1), a.1);
+        let mb = ((b.0 - 4).max(0), b.1);
+        draw_path(rng, &mut img, a, ma, &mut cells);
+        draw_path(rng, &mut img, b, mb, &mut cells);
+    }
+    // distractor arc in both classes so texture alone can't decide
+    let c = rp(rng);
+    let d = rp(rng);
+    draw_path(rng, &mut img, c, d, &mut cells);
+    dot(&mut img, a);
+    dot(&mut img, b);
+    (img.into_iter().map(|v| v as i32).collect(), label)
+}
+
+// ---------------------------------------------------------------------------
+// Image (10 shape classes)
+// ---------------------------------------------------------------------------
+
+/// Render one of 10 parametric shapes into a 32×32 grayscale raster
+/// with position jitter and pixel noise.
+fn image_example(rng: &mut Rng, n: usize) -> (Vec<i32>, i32) {
+    assert_eq!(n, SIDE * SIDE, "image is a {SIDE}x{SIDE} raster");
+    let label = rng.below(10) as i32;
+    let mut img = vec![0u8; SIDE * SIDE];
+    let cx = 10 + rng.below(12) as i64;
+    let cy = 10 + rng.below(12) as i64;
+    let rad = 5 + rng.below(5) as i64;
+    let mut put = |x: i64, y: i64, v: u8| {
+        if (0..SIDE as i64).contains(&x) && (0..SIDE as i64).contains(&y) {
+            img[y as usize * SIDE + x as usize] = v;
+        }
+    };
+    match label {
+        0 => (0..SIDE as i64).for_each(|x| put(x, cy, 200)), // horizontal line
+        1 => (0..SIDE as i64).for_each(|y| put(cx, y, 200)), // vertical line
+        2 => (0..SIDE as i64).for_each(|t| put(t, t, 200)),  // main diagonal
+        3 => {
+            // cross
+            (0..SIDE as i64).for_each(|x| put(x, cy, 200));
+            (0..SIDE as i64).for_each(|y| put(cx, y, 200));
+        }
+        4 => {
+            // square outline
+            for t in -rad..=rad {
+                put(cx + t, cy - rad, 200);
+                put(cx + t, cy + rad, 200);
+                put(cx - rad, cy + t, 200);
+                put(cx + rad, cy + t, 200);
+            }
+        }
+        5 => {
+            // filled square
+            for dy in -rad..=rad {
+                for dx in -rad..=rad {
+                    put(cx + dx, cy + dy, 160);
+                }
+            }
+        }
+        6 => {
+            // circle outline
+            for deg in 0..360 {
+                let th = deg as f64 * std::f64::consts::PI / 180.0;
+                put(
+                    cx + (rad as f64 * th.cos()).round() as i64,
+                    cy + (rad as f64 * th.sin()).round() as i64,
+                    200,
+                );
+            }
+        }
+        7 => {
+            // filled circle
+            for dy in -rad..=rad {
+                for dx in -rad..=rad {
+                    if dx * dx + dy * dy <= rad * rad {
+                        put(cx + dx, cy + dy, 160);
+                    }
+                }
+            }
+        }
+        8 => {
+            // triangle outline
+            for t in 0..=2 * rad {
+                put(cx - rad + t, cy + rad, 200); // base
+                put(cx - rad + t / 2, cy + rad - t / 2, 200); // left edge
+                put(cx + rad - t / 2, cy + rad - t / 2, 200); // right edge
+            }
+        }
+        _ => {
+            // checkerboard patch
+            for dy in -rad..=rad {
+                for dx in -rad..=rad {
+                    if (dx + dy).rem_euclid(2) == 0 {
+                        put(cx + dx, cy + dy, 180);
+                    }
+                }
+            }
+        }
+    }
+    // salt noise
+    for _ in 0..30 {
+        let i = rng.below(SIDE * SIDE);
+        img[i] = img[i].saturating_add(40);
+    }
+    (img.into_iter().map(|v| v as i32).collect(), label)
+}
+
+// ---------------------------------------------------------------------------
+// Batching
+// ---------------------------------------------------------------------------
+
+/// Batcher for the `cls` artifacts: `(ids (b,n) i32, labels (b,) i32)`.
+pub struct ClsStream {
+    pub task: LraTask,
+    batch: usize,
+    n: usize,
+    rng: Rng,
+}
+
+impl ClsStream {
+    pub fn new(task: LraTask, batch: usize, n: usize, seed: u64) -> Self {
+        ClsStream { task, batch, n, rng: Rng::new(seed) }
+    }
+}
+
+impl BatchSource for ClsStream {
+    fn next_batch(&mut self) -> Vec<HostTensor> {
+        let mut ids = Vec::with_capacity(self.batch * self.n);
+        let mut labels = Vec::with_capacity(self.batch);
+        for _ in 0..self.batch {
+            let (ex, label) = self.task.example(&mut self.rng, self.n);
+            ids.extend(ex);
+            labels.push(label);
+        }
+        vec![
+            HostTensor::i32(vec![self.batch, self.n], ids),
+            HostTensor::i32(vec![self.batch], labels),
+        ]
+    }
+
+    fn describe(&self) -> String {
+        format!("lra-{} b={} n={}", self.task.as_str(), self.batch, self.n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    const N: usize = 1024;
+
+    #[test]
+    fn all_tasks_shape_and_label_range() {
+        check("lra shapes", |rng| {
+            for task in
+                [LraTask::Text, LraTask::ListOps, LraTask::Retrieval, LraTask::Pathfinder,
+                 LraTask::Image]
+            {
+                let (ids, label) = task.example(rng, N);
+                assert_eq!(ids.len(), N, "{task:?}");
+                assert!((0..task.num_classes() as i32).contains(&label), "{task:?}: {label}");
+                assert!(
+                    ids.iter().all(|&t| (0..super::super::VOCAB as i32).contains(&t)),
+                    "{task:?}: token out of vocab"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn labels_roughly_balanced() {
+        for task in [LraTask::Text, LraTask::Retrieval, LraTask::Pathfinder] {
+            let mut rng = Rng::new(42);
+            let mut pos = 0;
+            for _ in 0..400 {
+                pos += task.example(&mut rng, N).1;
+            }
+            assert!((120..280).contains(&pos), "{task:?} unbalanced: {pos}/400");
+        }
+    }
+
+    #[test]
+    fn listops_values_match_manual_eval() {
+        // The rendered string must evaluate (by an independent parser)
+        // to the generator's label.
+        let mut rng = Rng::new(9);
+        for _ in 0..50 {
+            let (ids, label) = LraTask::ListOps.example(&mut rng, N);
+            let text: String =
+                ids.iter().take_while(|&&t| t != PAD).map(|&t| t as u8 as char).collect();
+            let mut toks = text.split_whitespace().peekable();
+            fn eval<'a, I: Iterator<Item = &'a str>>(
+                toks: &mut std::iter::Peekable<I>,
+            ) -> i64 {
+                let head = toks.next().unwrap();
+                let op = match head {
+                    "[MAX" => Op::Max,
+                    "[MIN" => Op::Min,
+                    "[MED" => Op::Med,
+                    "[SM" => Op::Sum,
+                    d => return d.parse::<i64>().unwrap(),
+                };
+                let mut args = Vec::new();
+                while *toks.peek().unwrap() != "]" {
+                    args.push(eval(toks));
+                }
+                toks.next(); // consume ]
+                listops_value(op, &args)
+            }
+            assert_eq!(eval(&mut toks) as i32, label, "expr: {text}");
+        }
+    }
+
+    #[test]
+    fn retrieval_key_presence_matches_label() {
+        let mut rng = Rng::new(4);
+        for _ in 0..100 {
+            let (ids, label) = LraTask::Retrieval.example(&mut rng, N);
+            let sep = ids.iter().position(|&t| t == CLS).expect("CLS separator");
+            let (d1, d2) = (&ids[..sep], &ids[sep + 1..]);
+            // extract 8-uppercase-letter runs
+            let keys = |d: &[i32]| -> Vec<Vec<i32>> {
+                let mut out = Vec::new();
+                let mut run = Vec::new();
+                for &t in d {
+                    if (65..=90).contains(&t) {
+                        run.push(t);
+                    } else {
+                        if run.len() >= 8 {
+                            out.push(run.clone());
+                        }
+                        run.clear();
+                    }
+                }
+                if run.len() >= 8 {
+                    out.push(run);
+                }
+                out
+            };
+            let (k1, k2) = (keys(d1), keys(d2));
+            let shared = k1.iter().any(|k| k2.contains(k));
+            assert_eq!(shared, label == 1, "retrieval label mismatch");
+        }
+    }
+
+    #[test]
+    fn pathfinder_positive_paths_touch_both_dots() {
+        // In positives the drawn path must form one connected bright
+        // component containing both endpoint dots (4-connectivity over
+        // non-zero pixels, allowing dash gaps bridged by endpoints).
+        let mut rng = Rng::new(6);
+        let mut pos_seen = 0;
+        for _ in 0..60 {
+            let (ids, label) = LraTask::Pathfinder.example(&mut rng, N);
+            let dots: Vec<usize> =
+                ids.iter().enumerate().filter(|(_, &v)| v == 255).map(|(i, _)| i).collect();
+            assert_eq!(dots.len(), 2, "exactly two endpoint dots");
+            if label == 1 {
+                pos_seen += 1;
+            }
+        }
+        assert!(pos_seen > 15);
+    }
+
+    #[test]
+    fn image_classes_are_visually_distinct() {
+        // Mean pixel mass should differ across filled vs outline classes.
+        let mut rng = Rng::new(2);
+        let mut mass = |label: i32| -> f64 {
+            let mut total = 0.0;
+            let mut count = 0;
+            for _ in 0..200 {
+                let (ids, l) = LraTask::Image.example(&mut rng, N);
+                if l == label {
+                    total += ids.iter().map(|&v| v as f64).sum::<f64>();
+                    count += 1;
+                }
+            }
+            total / count.max(1) as f64
+        };
+        let filled = mass(7); // filled circle
+        let outline = mass(6); // circle outline
+        assert!(filled > 1.5 * outline, "filled {filled} vs outline {outline}");
+    }
+
+    #[test]
+    fn cls_stream_batches() {
+        let mut s = ClsStream::new(LraTask::Text, 4, N, 0);
+        let b = s.next_batch();
+        assert_eq!(b[0].shape(), &[4, N]);
+        assert_eq!(b[1].shape(), &[4]);
+    }
+}

@@ -1,0 +1,49 @@
+//! Data pipeline — synthetic stand-ins for the paper's corpora.
+//!
+//! The paper trains on Wikitext-103 and evaluates on the Long-Range
+//! Arena; neither is available offline, so this module generates
+//! deterministic synthetic equivalents that exercise the *same code
+//! paths and learning dynamics* (documented in DESIGN.md
+//! §Substitutions):
+//!
+//! * [`corpus`] — a probabilistic-grammar byte corpus with n-gram and
+//!   long-range structure (agreement, bracket matching, topic words)
+//!   standing in for Wikitext-103.
+//! * [`lm`] — causal and masked LM batchers over a token stream, with
+//!   deterministic train/val splits.
+//! * [`lra`] — five LRA-style classification task generators (text,
+//!   listops, retrieval, pathfinder, image) with the benchmark's
+//!   structural challenges at the same sequence lengths.
+//!
+//! Everything is seeded and allocation-conscious; batch tensors are
+//! plain [`HostTensor`]s so generation can run on a prefetch thread
+//! (XLA handles are not `Send`; see `runtime::tensor`).
+
+pub mod corpus;
+pub mod lm;
+pub mod lra;
+
+pub use corpus::Corpus;
+pub use lm::{CausalLmStream, MaskedLmStream, Split};
+pub use lra::{ClsStream, LraTask};
+
+use crate::runtime::HostTensor;
+
+/// Special token ids shared with `python/compile/configs.py`.
+pub const PAD: i32 = 256;
+pub const MASK: i32 = 257;
+pub const CLS: i32 = 258;
+/// Vocabulary size (256 bytes + PAD + MASK + CLS).
+pub const VOCAB: usize = 259;
+
+/// A source of training batches, consumed by the coordinator.
+///
+/// Implementations must be deterministic functions of their seed so
+/// runs are reproducible and the prefetch thread can be interleaved
+/// freely.
+pub trait BatchSource: Send {
+    /// Produce the next batch, matching the manifest's batch inputs.
+    fn next_batch(&mut self) -> Vec<HostTensor>;
+    /// Human-readable description for logs.
+    fn describe(&self) -> String;
+}

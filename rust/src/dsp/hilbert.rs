@@ -1,0 +1,102 @@
+//! Discrete Hilbert transform and causal-spectrum construction.
+//!
+//! The frequency-domain causality machinery of FD-TNO (paper §3.3.1,
+//! Algorithm 2), mirrored in Rust so the substrate tests can verify the
+//! AOT'd HLO numerics and so the decay-analysis example runs without
+//! Python: given real (even) frequency-response samples on the rFFT
+//! grid `ω_m = mπ/n`, produce the causal spectrum `k̂ - i·H{k̂}` whose
+//! inverse transform is supported on `t ∈ [0, n]`.
+
+use super::fft::{irfft, rfft, Complex};
+
+/// The one-sided "analytic" window over the 2n-point time axis:
+/// `[1, 2, …, 2, 1, 0, …, 0]` — keeps t = 0 and t = n once, doubles
+/// strictly-positive lags, zeroes the negative-lag half.
+pub fn analytic_window(n: usize) -> Vec<f32> {
+    let mut w = vec![0.0f32; 2 * n];
+    w[0] = 1.0;
+    for v in w.iter_mut().take(n).skip(1) {
+        *v = 2.0;
+    }
+    w[n] = 1.0;
+    w
+}
+
+/// Causal spectrum from real (even) response samples.
+///
+/// `khat_r` holds n+1 real samples at `ω_m = mπ/n`; the result is the
+/// complex causal spectrum (n+1 bins), real part equal to the input
+/// and imaginary part `-H{k̂}`.
+pub fn causal_spectrum(khat_r: &[f32]) -> Vec<Complex> {
+    let n = khat_r.len() - 1;
+    assert!(n.is_power_of_two(), "grid size n={n} must be a power of two");
+    // Real even response ⇒ real even time kernel.
+    let spec: Vec<Complex> = khat_r.iter().map(|&v| Complex::new(v as f64, 0.0)).collect();
+    let kt = irfft(&spec, 2 * n);
+    let w = analytic_window(n);
+    let kc: Vec<f32> = kt.iter().zip(w.iter()).map(|(a, b)| a * b).collect();
+    rfft(&kc)
+}
+
+/// Discrete Hilbert transform of real (even) frequency samples:
+/// returns `H{k̂}` on the same n+1 grid (the negated imaginary part of
+/// `causal_spectrum`).
+pub fn hilbert_of_real(khat_r: &[f32]) -> Vec<f32> {
+    causal_spectrum(khat_r).iter().map(|c| -c.im as f32).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, size, vecf};
+
+    #[test]
+    fn window_shape() {
+        let w = analytic_window(4);
+        assert_eq!(w, vec![1.0, 2.0, 2.0, 2.0, 1.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn prop_causal_spectrum_is_causal() {
+        check("causal spectrum causality", |rng| {
+            let n = 1 << size(rng, 2, 9);
+            let khat = vecf(rng, n + 1);
+            let spec = causal_spectrum(&khat);
+            let kt = irfft(&spec, 2 * n);
+            let peak = kt.iter().map(|v| v.abs()).fold(0.0f32, f32::max).max(1e-3);
+            for (t, v) in kt.iter().enumerate().skip(n + 1) {
+                assert!(
+                    v.abs() < 1e-4 * peak.max(1.0),
+                    "acausal energy at t={t}: {v} (peak {peak})"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn prop_real_part_preserved() {
+        check("causal spectrum keeps real part", |rng| {
+            let n = 1 << size(rng, 2, 9);
+            let khat = vecf(rng, n + 1);
+            let spec = causal_spectrum(&khat);
+            for (a, c) in khat.iter().zip(spec.iter()) {
+                assert!((*a as f64 - c.re).abs() < 1e-4, "{a} vs {}", c.re);
+            }
+        });
+    }
+
+    #[test]
+    fn hilbert_of_cosine_is_sine() {
+        // k̂(ω) = cos(ω) on the grid ⇒ time kernel is a unit lag-1 impulse
+        // pair; its causal one-siding gives spectrum e^{-iω} whose
+        // imaginary part is -sin(ω) ⇒ H{cos} = sin.
+        let n = 64usize;
+        let khat: Vec<f32> =
+            (0..=n).map(|m| (std::f64::consts::PI * m as f64 / n as f64).cos() as f32).collect();
+        let h = hilbert_of_real(&khat);
+        for (m, v) in h.iter().enumerate() {
+            let want = (std::f64::consts::PI * m as f64 / n as f64).sin() as f32;
+            assert!((v - want).abs() < 1e-4, "bin {m}: {v} vs {want}");
+        }
+    }
+}

@@ -1,0 +1,12 @@
+//! Signal-processing substrate: complex FFT, real FFT, Hilbert transform.
+//!
+//! A from-scratch iterative radix-2 Cooley–Tukey FFT (no external
+//! crates are resolvable offline).  This powers the pure-Rust Toeplitz
+//! oracle (`crate::toeplitz`), the decay-analysis example (paper Figs
+//! 4–6) and the property tests that cross-check the AOT'd HLO numerics.
+
+mod fft;
+mod hilbert;
+
+pub use fft::{fft, ifft, irfft, rfft, Complex};
+pub use hilbert::{analytic_window, causal_spectrum, hilbert_of_real};

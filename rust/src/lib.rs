@@ -1,0 +1,46 @@
+//! # ski-tnn — "SKI to go Faster" full-system reproduction
+//!
+//! A three-layer reproduction of Moreno, Mei & Walters (2023),
+//! *SKI to go Faster: Accelerating Toeplitz Neural Networks via
+//! Asymmetric Kernels*:
+//!
+//! * **Layer 3 (this crate)** — the coordinator: config, CLI, data
+//!   pipeline, training orchestrator, serving batcher, metrics,
+//!   checkpoints, plus a pure-Rust Toeplitz/FFT/SKI substrate used for
+//!   baselines, property tests and the paper's micro-benchmarks.
+//! * **Layer 2 (`python/compile/`)** — the JAX TNN model (GTU/GLU
+//!   blocks around four TNO variants), lowered once at build time to
+//!   HLO-text artifacts by `python/compile/aot.py`.
+//! * **Layer 1 (`python/compile/kernels/`)** — Pallas kernels
+//!   (interpret mode) for the TNO hot-spots: depthwise conv (sparse
+//!   branch), fused `W A Wᵀ` SKI apply, inducing Toeplitz matvec, and
+//!   frequency-domain complex modulation.
+//!
+//! Python never runs on the request path: [`runtime`] loads the AOT
+//! artifacts through the PJRT CPU client (`xla` crate) and everything
+//! downstream — training loops, evaluation, serving — is Rust.
+//!
+//! ## Module map
+//!
+//! | module | role |
+//! |---|---|
+//! | [`runtime`] | PJRT client, artifact manifest, executable cache, device buffers |
+//! | [`coordinator`] | training orchestrator: step loop, prefetch, eval, checkpoints |
+//! | [`server`] | dynamic batcher + request router for serving |
+//! | [`data`] | synthetic corpus + LRA-style task generators, batchers |
+//! | [`toeplitz`] | pure-Rust Toeplitz/SKI substrate (oracles, baselines, App. B scan) |
+//! | [`dsp`] | from-scratch FFT/rFFT + discrete Hilbert transform |
+//! | [`linalg`] | dense f64 matrix helpers, Jacobi SVD, pseudo-inverse (Theorem 1 checks) |
+//! | [`config`] | typed run configuration parsed from JSON + CLI overrides |
+//! | [`util`] | JSON, RNG, CLI, mini-bench, property-test driver |
+
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod dsp;
+pub mod linalg;
+pub mod nn;
+pub mod runtime;
+pub mod server;
+pub mod toeplitz;
+pub mod util;

@@ -1,0 +1,336 @@
+//! Dense linear-algebra substrate: matrices, one-sided Jacobi SVD,
+//! pseudo-inverse, spectral norms.
+//!
+//! Built from scratch (no BLAS/LAPACK offline) to support the paper's
+//! Theorem 1 verification: computing the *optimal* rank-r approximation
+//! `T_{r,opt}`, the Nyström error `‖F A⁻¹ B − T_{r,opt}‖₂` and the SKI
+//! error `‖W A Wᵀ − T_{r,opt}‖₂` requires full SVDs of the (small)
+//! Gram matrices involved.  One-sided Jacobi is slow but numerically
+//! robust and exact enough at the n ≤ 256 sizes the tests use.
+
+/// Dense row-major f64 matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Self {
+        let mut m = Mat::zeros(rows, cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                m[(i, j)] = f(i, j);
+            }
+        }
+        m
+    }
+
+    pub fn t(&self) -> Mat {
+        Mat::from_fn(self.cols, self.rows, |i, j| self[(j, i)])
+    }
+
+    pub fn matmul(&self, o: &Mat) -> Mat {
+        assert_eq!(self.cols, o.rows, "matmul dim mismatch");
+        let mut out = Mat::zeros(self.rows, o.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self[(i, k)];
+                if a == 0.0 {
+                    continue;
+                }
+                for j in 0..o.cols {
+                    out[(i, j)] += a * o[(k, j)];
+                }
+            }
+        }
+        out
+    }
+
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(self.cols, x.len());
+        (0..self.rows)
+            .map(|i| (0..self.cols).map(|j| self[(i, j)] * x[j]).sum())
+            .collect()
+    }
+
+    pub fn sub(&self, o: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (o.rows, o.cols));
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().zip(o.data.iter()).map(|(a, b)| a - b).collect(),
+        }
+    }
+
+    pub fn scale(&self, s: f64) -> Mat {
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|v| v * s).collect(),
+        }
+    }
+
+    pub fn frobenius(&self) -> f64 {
+        self.data.iter().map(|v| v * v).sum::<f64>().sqrt()
+    }
+
+    fn col(&self, j: usize) -> Vec<f64> {
+        (0..self.rows).map(|i| self[(i, j)]).collect()
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f64;
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+/// Thin SVD `A = U diag(s) Vᵀ`, singular values descending.
+pub struct Svd {
+    pub u: Mat,
+    pub s: Vec<f64>,
+    pub vt: Mat,
+}
+
+/// One-sided Jacobi SVD.  Orthogonalises the columns of A by plane
+/// rotations on the right; converges quadratically.  For rows < cols we
+/// decompose the transpose and swap factors.
+pub fn svd(a: &Mat) -> Svd {
+    if a.rows < a.cols {
+        let s = svd(&a.t());
+        return Svd { u: s.vt.t(), s: s.s, vt: s.u.t() };
+    }
+    let m = a.rows;
+    let n = a.cols;
+    let mut u = a.clone(); // working copy; columns become U*s
+    let mut v = Mat::eye(n);
+    let eps = 1e-13;
+    for _sweep in 0..60 {
+        let mut off = 0.0f64;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let mut alpha = 0.0;
+                let mut beta = 0.0;
+                let mut gamma = 0.0;
+                for i in 0..m {
+                    let up = u[(i, p)];
+                    let uq = u[(i, q)];
+                    alpha += up * up;
+                    beta += uq * uq;
+                    gamma += up * uq;
+                }
+                off = off.max(gamma.abs() / (alpha * beta).sqrt().max(1e-300));
+                if gamma.abs() <= eps * (alpha * beta).sqrt() {
+                    continue;
+                }
+                let zeta = (beta - alpha) / (2.0 * gamma);
+                let t = zeta.signum() / (zeta.abs() + (1.0 + zeta * zeta).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                for i in 0..m {
+                    let up = u[(i, p)];
+                    let uq = u[(i, q)];
+                    u[(i, p)] = c * up - s * uq;
+                    u[(i, q)] = s * up + c * uq;
+                }
+                for i in 0..n {
+                    let vp = v[(i, p)];
+                    let vq = v[(i, q)];
+                    v[(i, p)] = c * vp - s * vq;
+                    v[(i, q)] = s * vp + c * vq;
+                }
+            }
+        }
+        if off < eps {
+            break;
+        }
+    }
+    // Column norms are the singular values.
+    let mut order: Vec<usize> = (0..n).collect();
+    let norms: Vec<f64> =
+        (0..n).map(|j| u.col(j).iter().map(|x| x * x).sum::<f64>().sqrt()).collect();
+    order.sort_by(|&i, &j| norms[j].partial_cmp(&norms[i]).unwrap());
+    let mut uu = Mat::zeros(m, n);
+    let mut vt = Mat::zeros(n, n);
+    let mut s = vec![0.0; n];
+    for (dst, &src) in order.iter().enumerate() {
+        s[dst] = norms[src];
+        let inv = if norms[src] > 1e-300 { 1.0 / norms[src] } else { 0.0 };
+        for i in 0..m {
+            uu[(i, dst)] = u[(i, src)] * inv;
+        }
+        for i in 0..n {
+            vt[(dst, i)] = v[(i, src)];
+        }
+    }
+    Svd { u: uu, s, vt }
+}
+
+/// Moore–Penrose pseudo-inverse via SVD with relative tolerance.
+pub fn pinv(a: &Mat) -> Mat {
+    let d = svd(a);
+    let tol = 1e-12 * d.s.first().copied().unwrap_or(0.0).max(1e-300);
+    let k = d.s.len();
+    let mut si = Mat::zeros(k, k);
+    for i in 0..k {
+        if d.s[i] > tol {
+            si[(i, i)] = 1.0 / d.s[i];
+        }
+    }
+    d.vt.t().matmul(&si).matmul(&d.u.t())
+}
+
+/// Best rank-r approximation (Eckart–Young).
+pub fn rank_r_approx(a: &Mat, r: usize) -> Mat {
+    let d = svd(a);
+    let k = r.min(d.s.len());
+    let mut out = Mat::zeros(a.rows, a.cols);
+    for t in 0..k {
+        for i in 0..a.rows {
+            for j in 0..a.cols {
+                out[(i, j)] += d.s[t] * d.u[(i, t)] * d.vt[(t, j)];
+            }
+        }
+    }
+    out
+}
+
+/// Spectral norm (largest singular value) via power iteration on AᵀA.
+pub fn spectral_norm(a: &Mat) -> f64 {
+    let n = a.cols;
+    if n == 0 || a.rows == 0 {
+        return 0.0;
+    }
+    let mut x: Vec<f64> = (0..n).map(|i| 1.0 + (i as f64 * 0.7).sin()).collect();
+    let norm = |v: &[f64]| v.iter().map(|x| x * x).sum::<f64>().sqrt();
+    let mut sigma = 0.0;
+    for _ in 0..200 {
+        let ax = a.matvec(&x);
+        let atax = a.t().matvec(&ax);
+        let nn = norm(&atax);
+        if nn < 1e-300 {
+            return 0.0;
+        }
+        let next_sigma = norm(&ax);
+        x = atax.iter().map(|v| v / nn).collect();
+        if (next_sigma - sigma).abs() <= 1e-10 * next_sigma.max(1e-300) {
+            return next_sigma;
+        }
+        sigma = next_sigma;
+    }
+    sigma
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, size};
+    use crate::util::rng::Rng;
+
+    fn randmat(rng: &mut Rng, r: usize, c: usize) -> Mat {
+        Mat::from_fn(r, c, |_, _| rng.normal() as f64)
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let mut rng = Rng::new(1);
+        let a = randmat(&mut rng, 4, 6);
+        assert_eq!(Mat::eye(4).matmul(&a).data, a.data);
+    }
+
+    #[test]
+    fn prop_svd_reconstructs() {
+        check("svd reconstruction", |rng| {
+            let m = size(rng, 2, 24);
+            let n = size(rng, 2, 24);
+            let a = randmat(rng, m, n);
+            let d = svd(&a);
+            let k = d.s.len();
+            let mut smat = Mat::zeros(k, k);
+            for i in 0..k {
+                smat[(i, i)] = d.s[i];
+            }
+            let rec = d.u.matmul(&smat).matmul(&d.vt);
+            assert!(rec.sub(&a).frobenius() < 1e-8 * a.frobenius().max(1.0));
+        });
+    }
+
+    #[test]
+    fn prop_svd_orthogonal() {
+        check("svd orthogonality", |rng| {
+            let m = size(rng, 3, 20);
+            let n = size(rng, 2, m);
+            let a = randmat(rng, m, n);
+            let d = svd(&a);
+            let utu = d.u.t().matmul(&d.u);
+            let vvt = d.vt.matmul(&d.vt.t());
+            assert!(utu.sub(&Mat::eye(n)).frobenius() < 1e-8);
+            assert!(vvt.sub(&Mat::eye(n)).frobenius() < 1e-8);
+        });
+    }
+
+    #[test]
+    fn prop_pinv_property() {
+        check("A A+ A = A", |rng| {
+            let m = size(rng, 2, 16);
+            let n = size(rng, 2, 16);
+            let a = randmat(rng, m, n);
+            let ap = pinv(&a);
+            let aaa = a.matmul(&ap).matmul(&a);
+            assert!(aaa.sub(&a).frobenius() < 1e-7 * a.frobenius().max(1.0));
+        });
+    }
+
+    #[test]
+    fn spectral_matches_svd() {
+        let mut rng = Rng::new(5);
+        for _ in 0..5 {
+            let a = randmat(&mut rng, 12, 9);
+            let s1 = spectral_norm(&a);
+            let s2 = svd(&a).s[0];
+            assert!((s1 - s2).abs() < 1e-6 * s2, "{s1} vs {s2}");
+        }
+    }
+
+    #[test]
+    fn rank_r_is_eckart_young() {
+        let mut rng = Rng::new(6);
+        let a = randmat(&mut rng, 10, 10);
+        let d = svd(&a);
+        for r in [1usize, 3, 7] {
+            let approx = rank_r_approx(&a, r);
+            let err = spectral_norm(&a.sub(&approx));
+            // Spectral error of best rank-r approx is σ_{r+1}.
+            assert!((err - d.s[r]).abs() < 1e-6 * d.s[0], "r={r}: {err} vs {}", d.s[r]);
+        }
+    }
+
+    #[test]
+    fn pinv_of_singular() {
+        // Rank-1 matrix: pinv well-defined, A A+ A = A.
+        let a = Mat::from_fn(4, 4, |i, j| ((i + 1) * (j + 1)) as f64);
+        let ap = pinv(&a);
+        assert!(a.matmul(&ap).matmul(&a).sub(&a).frobenius() < 1e-8);
+    }
+}

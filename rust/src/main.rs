@@ -1,0 +1,172 @@
+//! `ski-tnn` — the launcher CLI.
+//!
+//! Subcommands:
+//!
+//! * `list`  — show every artifact config in the manifest.
+//! * `train` — run the training orchestrator on one config.
+//! * `eval`  — evaluate a checkpoint (or fresh init) on the val split.
+//! * `serve` — start the dynamic batcher on a config and drive it with
+//!   synthetic client load, reporting latency percentiles.
+//!
+//! Shared flags come from [`ski_tnn::config::RunConfig`]
+//! (`--config-file run.json` plus per-flag overrides).  Examples:
+//!
+//! ```text
+//! ski-tnn list
+//! ski-tnn train --config lm_fd_3l --steps 300 --out-dir runs/fd
+//! ski-tnn eval  --config lm_fd_3l --resume runs/fd/lm_fd_3l_step300.ckpt
+//! ski-tnn serve --config lra_text_fd --requests 200 --clients 4
+//! ```
+
+use anyhow::{bail, Result};
+
+use ski_tnn::config::RunConfig;
+use ski_tnn::coordinator::Trainer;
+use ski_tnn::runtime::{Engine, ModelState};
+use ski_tnn::server::{serve_model, Batcher, ServerConfig};
+use ski_tnn::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::parse(true);
+    match args.subcommand.as_deref() {
+        Some("list") => cmd_list(&args),
+        Some("corpus") => cmd_corpus(&args),
+        Some("train") => cmd_train(&args),
+        Some("eval") => cmd_eval(&args),
+        Some("serve") => cmd_serve(&args),
+        Some(other) => bail!("unknown subcommand {other:?} (try list|train|eval|serve)"),
+        None => {
+            eprintln!("usage: ski-tnn <list|train|eval|serve> [flags]");
+            eprintln!("see `cargo doc` or README.md for the full flag set");
+            Ok(())
+        }
+    }
+}
+
+/// Dump the synthetic corpus to a file (debugging / cross-language
+/// experiments: the python side can train on the exact same bytes).
+fn cmd_corpus(args: &Args) -> Result<()> {
+    let bytes = args.usize_or("bytes", 1 << 20);
+    let seed = args.u64_or("seed", 0);
+    let out = args.str_or("out", "corpus.bin");
+    let c = ski_tnn::data::Corpus::generate(seed, bytes);
+    std::fs::write(&out, &c.bytes)?;
+    println!("wrote {bytes} bytes (seed {seed}) to {out}");
+    Ok(())
+}
+
+fn cmd_list(args: &Args) -> Result<()> {
+    let rc = RunConfig::from_args(args)?;
+    let engine = Engine::new(&rc.artifacts)?;
+    println!("{:<22} {:>9} {:>7} {:>5} {:>6} {:>7}  entries", "config", "task", "variant", "n", "d", "params");
+    for (name, cfg) in &engine.manifest().configs {
+        println!(
+            "{:<22} {:>9} {:>7} {:>5} {:>6} {:>6}k  {}",
+            name,
+            cfg.task.as_str(),
+            cfg.variant.as_str(),
+            cfg.n,
+            cfg.d,
+            cfg.param_count / 1000,
+            cfg.entries.keys().cloned().collect::<Vec<_>>().join(",")
+        );
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let rc = RunConfig::from_args(args)?;
+    let engine = Engine::new(&rc.artifacts)?;
+    println!("platform: {}", engine.platform());
+    let mut trainer = Trainer::new(&engine, rc)?;
+    let stats = trainer.train()?;
+    println!(
+        "final: loss {:.4} ppl {:.2} acc {:.3}",
+        stats.loss, stats.ppl, stats.acc
+    );
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let rc = RunConfig::from_args(args)?;
+    let engine = Engine::new(&rc.artifacts)?;
+    let mut trainer = Trainer::new(&engine, rc)?;
+    let stats = trainer.eval()?;
+    println!(
+        "val: loss {:.4} ppl {:.2} acc {:.3}",
+        stats.loss, stats.ppl, stats.acc
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let rc = RunConfig::from_args(args)?;
+    let requests = args.usize_or("requests", 200);
+    let clients = args.usize_or("clients", 4);
+    let engine = Engine::new(&rc.artifacts)?;
+    let cfg = engine.config(&rc.config)?.clone();
+    let state = match &rc.resume {
+        Some(p) => ModelState::load(&engine, p)?,
+        None => ModelState::init(&engine, &rc.config, rc.seed as u32)?,
+    };
+    // warm the logits compile before load arrives
+    engine.load(&rc.config, "logits")?;
+
+    let server_cfg = ServerConfig {
+        max_batch: cfg.batch,
+        n: cfg.n,
+        max_wait: std::time::Duration::from_millis(args.u64_or("max-wait-ms", 2)),
+        queue_depth: args.usize_or("queue-depth", 64),
+    };
+    println!(
+        "serving {} (batch {}, n {}) with {clients} clients × {} requests",
+        rc.config,
+        cfg.batch,
+        cfg.n,
+        requests / clients
+    );
+    let batcher = Batcher::new(server_cfg);
+    let handle = batcher.handle();
+    let per_client = requests / clients;
+    let n = cfg.n;
+    let seed = rc.seed;
+    let workers: Vec<_> = (0..clients)
+        .map(|c| {
+            let h = handle.clone();
+            std::thread::spawn(move || -> Vec<f64> {
+                let mut rng = ski_tnn::util::rng::Rng::new(seed + c as u64);
+                let mut lat = Vec::with_capacity(per_client);
+                for _ in 0..per_client {
+                    let len = 8 + rng.below(n - 8);
+                    let ids: Vec<i32> = (0..len).map(|_| rng.below(256) as i32).collect();
+                    let t0 = std::time::Instant::now();
+                    let _ = h.infer(ids).expect("infer");
+                    lat.push(t0.elapsed().as_secs_f64());
+                }
+                lat
+            })
+        })
+        .collect();
+    drop(handle);
+    let t0 = std::time::Instant::now();
+    let stats = batcher.run(serve_model(&engine, &state))?;
+    let total = t0.elapsed().as_secs_f64();
+    let mut lats: Vec<f64> = workers.into_iter().flat_map(|w| w.join().unwrap()).collect();
+    lats.sort_by(|a, b| a.total_cmp(b));
+    let pct = |p: f64| lats[((lats.len() as f64 - 1.0) * p) as usize];
+    println!(
+        "served {} requests in {} batches ({:.1}% fill), {:.1} req/s",
+        stats.requests,
+        stats.batches,
+        100.0 * stats.mean_batch_fill(cfg.batch),
+        stats.requests as f64 / total
+    );
+    println!(
+        "latency p50 {:.1} ms  p95 {:.1} ms  p99 {:.1} ms  (exec {:.1}% of wall)",
+        1e3 * pct(0.50),
+        1e3 * pct(0.95),
+        1e3 * pct(0.99),
+        100.0 * stats.exec_seconds / total
+    );
+    Ok(())
+}

@@ -1,0 +1,224 @@
+//! Minimal host-side MLP — the analysis twin of `python/compile/rpe.py`.
+//!
+//! Used where the *paper's theory* is checked from Rust without going
+//! through XLA: Proposition 1 (a scalar ReLU MLP with layer norm is
+//! piecewise linear) and Theorems 2–4 (GeLU/SiLU/ReLU smoothness of the
+//! frequency-response MLP implies super-exponential / super-polynomial
+//! / square-summable time-domain decay — the `decay_analysis` example
+//! reproducing Figs 4–6).  Structure matches the python RPE exactly:
+//! hidden layers are `act(LayerNorm(W h + b))`, linear output.
+
+use crate::util::rng::Rng;
+
+/// Activation functions with the smoothness ladder from §4.2.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Act {
+    /// Entire (holomorphic everywhere) ⇒ super-exponential decay (Thm 2).
+    Gelu,
+    /// C^∞ ⇒ super-polynomial decay (Thm 3).
+    Silu,
+    /// C⁰ piecewise linear ⇒ square-summable signal (Thm 4 / Prop 1).
+    Relu,
+}
+
+impl Act {
+    pub fn parse(s: &str) -> Option<Act> {
+        Some(match s {
+            "gelu" => Act::Gelu,
+            "silu" => Act::Silu,
+            "relu" => Act::Relu,
+            _ => return None,
+        })
+    }
+
+    pub fn apply(&self, x: f64) -> f64 {
+        match self {
+            Act::Relu => x.max(0.0),
+            Act::Silu => x / (1.0 + (-x).exp()),
+            Act::Gelu => 0.5 * x * (1.0 + erf(x / std::f64::consts::SQRT_2)),
+        }
+    }
+}
+
+/// Abramowitz–Stegun 7.1.26 rational approximation of erf (|err| < 1.5e-7
+/// — far below every tolerance in the analyses using it).
+fn erf(x: f64) -> f64 {
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.3275911 * x);
+    let y = 1.0
+        - (((((1.061405429 * t - 1.453152027) * t) + 1.421413741) * t - 0.284496736) * t
+            + 0.254829592)
+            * t
+            * (-x * x).exp();
+    sign * y
+}
+
+/// One dense layer.
+#[derive(Debug, Clone)]
+struct Layer {
+    w: Vec<f64>, // (fan_in, fan_out) row-major
+    b: Vec<f64>,
+    fan_out: usize,
+    /// LayerNorm gain/bias (hidden layers only).
+    ln: Option<(Vec<f64>, Vec<f64>)>,
+}
+
+/// A scalar-input MLP `R → R^out` matching `rpe.mlp_apply`.
+#[derive(Debug, Clone)]
+pub struct Mlp {
+    layers: Vec<Layer>,
+    pub act: Act,
+}
+
+impl Mlp {
+    /// Random init mirroring `rpe.mlp_init` (1/√fan_in scaling,
+    /// `out_scale` on the final layer).
+    pub fn init(rng: &mut Rng, sizes: &[usize], act: Act, out_scale: f64) -> Mlp {
+        assert!(sizes.len() >= 2 && sizes[0] == 1, "scalar-input MLP");
+        let nl = sizes.len() - 1;
+        let layers = (0..nl)
+            .map(|i| {
+                let (fi, fo) = (sizes[i], sizes[i + 1]);
+                let mut scale = (1.0 / fi.max(1) as f64).sqrt();
+                if i == nl - 1 {
+                    scale *= out_scale;
+                }
+                // Random bias (PyTorch-style U(-1/√fan_in, 1/√fan_in)):
+                // zero bias + LayerNorm makes the first hidden layer a
+                // sign-like function of the scalar input with a
+                // sqrt(eps)-wide kink at 0 — a spectral spike that
+                // masks the smoothness⇒decay behaviour under test.
+                let bscale = (1.0 / fi.max(1) as f64).sqrt();
+                Layer {
+                    w: (0..fi * fo).map(|_| scale * rng.normal() as f64).collect(),
+                    b: (0..fo).map(|_| bscale * (2.0 * rng.f64() - 1.0)).collect(),
+                    fan_out: fo,
+                    ln: (i < nl - 1).then(|| (vec![1.0; fo], vec![0.0; fo])),
+                }
+            })
+            .collect();
+        Mlp { layers, act }
+    }
+
+    /// Forward one scalar input.
+    pub fn forward(&self, x: f64) -> Vec<f64> {
+        let mut h = vec![x];
+        for (li, layer) in self.layers.iter().enumerate() {
+            let mut out = layer.b.clone();
+            for (j, o) in out.iter_mut().enumerate() {
+                for (i, &hi) in h.iter().enumerate() {
+                    *o += hi * layer.w[i * layer.fan_out + j];
+                }
+            }
+            if let Some((g, b)) = &layer.ln {
+                layer_norm(&mut out, g, b);
+            }
+            if li < self.layers.len() - 1 {
+                for o in out.iter_mut() {
+                    *o = self.act.apply(*o);
+                }
+            }
+            h = out;
+        }
+        h
+    }
+
+    /// Forward a grid of scalar inputs; returns `(len(grid), out)` rows.
+    pub fn forward_grid(&self, grid: &[f64]) -> Vec<Vec<f64>> {
+        grid.iter().map(|&x| self.forward(x)).collect()
+    }
+
+    pub fn out_dim(&self) -> usize {
+        self.layers.last().map(|l| l.fan_out).unwrap_or(0)
+    }
+}
+
+fn layer_norm(x: &mut [f64], g: &[f64], b: &[f64]) {
+    let n = x.len() as f64;
+    let mu = x.iter().sum::<f64>() / n;
+    let var = x.iter().map(|v| (v - mu) * (v - mu)).sum::<f64>() / n;
+    let inv = 1.0 / (var + 1e-5).sqrt();
+    for (i, v) in x.iter_mut().enumerate() {
+        *v = (*v - mu) * inv * g[i] + b[i];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    #[test]
+    fn erf_reference_values() {
+        for (x, want) in [(0.0, 0.0), (1.0, 0.8427007929), (-1.0, -0.8427007929), (2.0, 0.9953222650)] {
+            assert!((erf(x) - want).abs() < 2e-7, "erf({x})");
+        }
+    }
+
+    #[test]
+    fn prop1_relu_mlp_is_piecewise_linear() {
+        // Proposition 1: on a fine grid, the second difference of a
+        // ReLU+LN MLP is zero except at finitely many kink points.
+        // Threshold: h²·f'' curvature from LayerNorm's input-dependent
+        // statistics sits near 1e-6 relative at h = 1e-3 (LN of
+        // piecewise-linear inputs is piecewise *rational*; Prop 1's
+        // proof treats the normalisation as affine).  Genuine ReLU
+        // slope changes are h·Δslope ≈ 1e-3 — two orders above the
+        // 1e-4 cut used here; a piecewise-linear function triggers at
+        // isolated points only.
+        check("prop1 piecewise linear", |rng| {
+            let mlp = Mlp::init(rng, &[1, 16, 16, 4], Act::Relu, 1.0);
+            let grid: Vec<f64> = (0..2001).map(|i| -1.0 + i as f64 * 1e-3).collect();
+            let rows = mlp.forward_grid(&grid);
+            for d in 0..4 {
+                let y: Vec<f64> = rows.iter().map(|r| r[d]).collect();
+                let scale =
+                    y.iter().map(|v| v.abs()).fold(1.0f64, f64::max);
+                let mut kinks = 0;
+                for w in y.windows(3) {
+                    let dd = (w[2] - 2.0 * w[1] + w[0]).abs() / scale;
+                    if dd > 1e-4 {
+                        kinks += 1;
+                    }
+                }
+                // far fewer kinks than grid points ⇒ piecewise linear
+                assert!(kinks < 150, "too many kinks: {kinks}");
+            }
+        });
+    }
+
+    #[test]
+    fn gelu_silu_are_smooth_on_grid() {
+        // The activation functions themselves: a ReLU's worst second
+        // difference on an h-grid is O(h) at its kink, a C² function's
+        // is O(h²) — orders of magnitude smaller at h = 1e-3.  (Full
+        // MLP smoothness is exercised through *decay rates* in the
+        // decay_analysis example — LayerNorm keeps every activation
+        // C^k-preserving but can inflate the constants arbitrarily, so
+        // grid second-differences of whole nets are not a stable test.)
+        let grid: Vec<f64> = (0..2001).map(|i| -1.0 + i as f64 * 1e-3).collect();
+        let max_dd = |act: Act| -> f64 {
+            let y: Vec<f64> = grid.iter().map(|&x| act.apply(x)).collect();
+            y.windows(3)
+                .map(|w| (w[2] - 2.0 * w[1] + w[0]).abs())
+                .fold(0.0f64, f64::max)
+        };
+        let relu = max_dd(Act::Relu);
+        for act in [Act::Gelu, Act::Silu] {
+            let smooth = max_dd(act);
+            assert!(
+                smooth < relu / 100.0,
+                "{act:?} max dd {smooth:.2e} not ≪ relu {relu:.2e}"
+            );
+        }
+    }
+
+    #[test]
+    fn forward_is_deterministic() {
+        let mut rng = Rng::new(1);
+        let mlp = Mlp::init(&mut rng, &[1, 8, 3], Act::Silu, 0.3);
+        assert_eq!(mlp.forward(0.25), mlp.forward(0.25));
+        assert_eq!(mlp.out_dim(), 3);
+    }
+}

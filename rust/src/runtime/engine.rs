@@ -1,0 +1,173 @@
+//! PJRT engine: compile-once executable cache over the artifact dir.
+//!
+//! One [`Engine`] per process wraps the PJRT CPU client.  Artifacts are
+//! HLO text (`HloModuleProto::from_text_file` reassigns instruction
+//! ids, sidestepping the 64-bit-id protos jax ≥ 0.5 emits that
+//! xla_extension 0.5.1 rejects).  Compiles are cached by
+//! `(config, entry)` so a training run pays exactly one compile per
+//! entrypoint regardless of step count.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+use xla::{Literal, PjRtClient, PjRtLoadedExecutable};
+
+use super::manifest::{Entry, Manifest, ModelConfig};
+
+/// A compiled entrypoint plus its manifest signature.
+pub struct Executable {
+    pub exe: PjRtLoadedExecutable,
+    pub entry: Entry,
+    pub key: (String, String),
+}
+
+impl Executable {
+    /// Execute with host literals; returns the flattened output tuple.
+    ///
+    /// All artifacts are lowered with `return_tuple=True`, so PJRT
+    /// hands back a single tuple buffer which we pull to host and
+    /// decompose into one literal per declared output.
+    pub fn run(&self, args: &[Literal]) -> Result<Vec<Literal>> {
+        if args.len() != self.entry.inputs.len() {
+            bail!(
+                "{}/{}: got {} args, entry wants {}",
+                self.key.0,
+                self.key.1,
+                args.len(),
+                self.entry.inputs.len()
+            );
+        }
+        let bufs = self.exe.execute::<Literal>(args)?;
+        let mut tuple = bufs[0][0].to_literal_sync()?;
+        let outs = tuple.decompose_tuple()?;
+        if outs.len() != self.entry.outputs.len() {
+            bail!(
+                "{}/{}: executable returned {} outputs, manifest declares {}",
+                self.key.0,
+                self.key.1,
+                outs.len(),
+                self.entry.outputs.len()
+            );
+        }
+        Ok(outs)
+    }
+}
+
+/// PJRT client + artifact manifest + executable cache.
+pub struct Engine {
+    client: PjRtClient,
+    dir: PathBuf,
+    manifest: Manifest,
+    cache: RefCell<HashMap<(String, String), Rc<Executable>>>,
+    /// (key, compile seconds) log — surfaced by `stats()` for EXPERIMENTS.md.
+    compile_log: RefCell<Vec<(String, f64)>>,
+}
+
+impl Engine {
+    /// Create a CPU PJRT client and load `<dir>/manifest.json`.
+    pub fn new(artifact_dir: impl AsRef<Path>) -> Result<Engine> {
+        let dir = artifact_dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir)?;
+        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine {
+            client,
+            dir,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+            compile_log: RefCell::new(Vec::new()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn config(&self, name: &str) -> Result<&ModelConfig> {
+        self.manifest.config(name)
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load (compile-once) an entrypoint of a config.
+    pub fn load(&self, config: &str, entry: &str) -> Result<Rc<Executable>> {
+        let key = (config.to_string(), entry.to_string());
+        if let Some(exe) = self.cache.borrow().get(&key) {
+            return Ok(exe.clone());
+        }
+        let cfg = self.manifest.config(config)?;
+        let ent = cfg.entry(entry)?.clone();
+        let path = self.dir.join(&ent.file);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        let secs = t0.elapsed().as_secs_f64();
+        self.compile_log.borrow_mut().push((format!("{config}.{entry}"), secs));
+        let exe = Rc::new(Executable { exe, entry: ent, key: key.clone() });
+        self.cache.borrow_mut().insert(key, exe.clone());
+        Ok(exe)
+    }
+
+    /// (entry, seconds) for every compile done so far.
+    pub fn compile_log(&self) -> Vec<(String, f64)> {
+        self.compile_log.borrow().clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::HostTensor;
+
+    fn engine() -> Engine {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        Engine::new(dir).expect("engine")
+    }
+
+    #[test]
+    fn init_produces_declared_params() {
+        let eng = engine();
+        let name = "lm_fd_3l";
+        let cfg = eng.config(name).unwrap().clone();
+        let init = eng.load(name, "init").unwrap();
+        let seed = HostTensor::scalar_u32(0).to_literal().unwrap();
+        let outs = init.run(&[seed]).unwrap();
+        assert_eq!(outs.len(), cfg.params.len());
+        for (lit, desc) in outs.iter().zip(cfg.params.iter()) {
+            let t = HostTensor::from_literal(lit).unwrap();
+            t.check(desc).unwrap();
+            // init'd params must be finite
+            if let Ok(v) = t.as_f32() {
+                assert!(v.iter().all(|x| x.is_finite()), "{}: non-finite init", desc.name);
+            }
+        }
+    }
+
+    #[test]
+    fn executable_cache_hits() {
+        let eng = engine();
+        let a = eng.load("lm_fd_3l", "init").unwrap();
+        let b = eng.load("lm_fd_3l", "init").unwrap();
+        assert!(Rc::ptr_eq(&a, &b), "cache must return the same executable");
+        assert_eq!(eng.compile_log().len(), 1);
+    }
+
+    #[test]
+    fn run_rejects_wrong_arity() {
+        let eng = engine();
+        let init = eng.load("lm_fd_3l", "init").unwrap();
+        assert!(init.run(&[]).is_err());
+    }
+}

@@ -1,0 +1,338 @@
+//! Typed view of `artifacts/manifest.json` — the AOT contract.
+//!
+//! The manifest is written by `python/compile/aot.py` and is the single
+//! source of truth for every shape the coordinator touches: flat
+//! parameter order (jax tree order), entrypoint I/O signatures, and the
+//! model hyper-parameters the Rust side needs (batch, n, vocab, …).
+//! Nothing here is re-derived — if python and rust disagree the loader
+//! fails loudly at startup rather than silently mis-addressing buffers.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::{self, Json};
+
+/// Element dtype of one artifact input/output.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+    U32,
+}
+
+impl Dtype {
+    fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "f32" => Dtype::F32,
+            "i32" => Dtype::I32,
+            "u32" => Dtype::U32,
+            other => bail!("unknown dtype {other:?} in manifest"),
+        })
+    }
+}
+
+/// One named input/output of an artifact entrypoint.
+#[derive(Debug, Clone)]
+pub struct IoDesc {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl IoDesc {
+    pub fn elem_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn parse(v: &Json) -> Result<Self> {
+        let name = v
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("io desc missing name"))?
+            .to_string();
+        let shape = v
+            .get("shape")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("io desc {name}: missing shape"))?
+            .iter()
+            .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim in {name}")))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = Dtype::parse(
+            v.get("dtype")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("io desc {name}: missing dtype"))?,
+        )?;
+        Ok(IoDesc { name, shape, dtype })
+    }
+}
+
+/// One lowered entrypoint (`init` / `step` / `fwd` / `logits` / `fwd_n*`).
+#[derive(Debug, Clone)]
+pub struct Entry {
+    pub file: String,
+    pub inputs: Vec<IoDesc>,
+    pub outputs: Vec<IoDesc>,
+}
+
+/// Training objective of a config (mirrors `configs.py` `task`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Task {
+    /// Causal next-token LM (Wikitext-style pre-training, Table 1).
+    LmCausal,
+    /// Masked/bidirectional LM (RoBERTa-style pre-training, Figs 8–9).
+    LmBidir,
+    /// Sequence classification (LRA, Table 2).
+    Cls,
+}
+
+impl Task {
+    fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "lm_causal" => Task::LmCausal,
+            "lm_bidir" => Task::LmBidir,
+            "cls" => Task::Cls,
+            other => bail!("unknown task {other:?}"),
+        })
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Task::LmCausal => "lm_causal",
+            Task::LmBidir => "lm_bidir",
+            Task::Cls => "cls",
+        }
+    }
+}
+
+/// TNO variant of a config (the paper's comparison axis).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Variant {
+    /// Baseline TNN (Qin et al. 2023): MLP RPE × decay bias, FFT apply.
+    Base,
+    /// Paper §3.2: sparse conv + asymmetric-SKI low rank + time warp.
+    Ski,
+    /// Paper §3.3: frequency-domain RPE (Hilbert-causal or complex).
+    Fd,
+}
+
+impl Variant {
+    fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "base" => Variant::Base,
+            "ski" => Variant::Ski,
+            "fd" => Variant::Fd,
+            other => bail!("unknown variant {other:?}"),
+        })
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Variant::Base => "base",
+            Variant::Ski => "ski",
+            Variant::Fd => "fd",
+        }
+    }
+}
+
+/// One model configuration and its artifact family.
+#[derive(Debug, Clone)]
+pub struct ModelConfig {
+    pub name: String,
+    pub task: Task,
+    pub variant: Variant,
+    pub vocab: usize,
+    pub n: usize,
+    pub d: usize,
+    pub blocks: usize,
+    pub batch: usize,
+    pub rpe_layers: usize,
+    pub num_classes: usize,
+    pub r: usize,
+    pub m: usize,
+    pub lam: f64,
+    pub lr: f64,
+    pub warmup: usize,
+    pub param_count: usize,
+    /// Flat parameter descriptors in jax tree order — buffer addressing.
+    pub params: Vec<IoDesc>,
+    pub entries: BTreeMap<String, Entry>,
+    /// Extra `fwd_n{L}` eval lengths lowered for Fig 7a.
+    pub eval_lens: Vec<usize>,
+}
+
+impl ModelConfig {
+    pub fn entry(&self, name: &str) -> Result<&Entry> {
+        self.entries
+            .get(name)
+            .ok_or_else(|| anyhow!("config {} has no entry {name:?}", self.name))
+    }
+
+    /// Batch input descriptors of the `step` entry (everything after
+    /// params, m, v, t in its signature).
+    pub fn batch_inputs(&self) -> Result<Vec<IoDesc>> {
+        let step = self.entry("step")?;
+        let skip = 3 * self.params.len() + 1;
+        Ok(step.inputs[skip..].to_vec())
+    }
+}
+
+/// The whole `manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub configs: BTreeMap<String, ModelConfig>,
+}
+
+impl Manifest {
+    /// Load and validate `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts` first)", path.display()))?;
+        let root = json::parse(&text).map_err(|e| anyhow!("{}: {e}", path.display()))?;
+        let configs = root
+            .get("configs")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("manifest missing configs object"))?;
+        let mut out = BTreeMap::new();
+        for (name, cfg) in configs {
+            out.insert(name.clone(), Self::parse_config(name, cfg)?);
+        }
+        Ok(Manifest { configs: out })
+    }
+
+    pub fn config(&self, name: &str) -> Result<&ModelConfig> {
+        self.configs
+            .get(name)
+            .ok_or_else(|| anyhow!("no config {name:?} in manifest (have: {:?})",
+                self.configs.keys().collect::<Vec<_>>()))
+    }
+
+    fn parse_config(name: &str, v: &Json) -> Result<ModelConfig> {
+        let us =
+            |k: &str| v.get(k).and_then(Json::as_usize).ok_or_else(|| anyhow!("{name}: bad {k}"));
+        let fl =
+            |k: &str| v.get(k).and_then(Json::as_f64).ok_or_else(|| anyhow!("{name}: bad {k}"));
+        let st =
+            |k: &str| v.get(k).and_then(Json::as_str).ok_or_else(|| anyhow!("{name}: bad {k}"));
+
+        let params = v
+            .get("params")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("{name}: missing params"))?
+            .iter()
+            .map(IoDesc::parse)
+            .collect::<Result<Vec<_>>>()?;
+
+        let mut entries = BTreeMap::new();
+        for (ename, ev) in v
+            .get("entries")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("{name}: missing entries"))?
+        {
+            let file = ev
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("{name}.{ename}: missing file"))?
+                .to_string();
+            let parse_ios = |key: &str| -> Result<Vec<IoDesc>> {
+                ev.get(key)
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("{name}.{ename}: missing {key}"))?
+                    .iter()
+                    .map(IoDesc::parse)
+                    .collect()
+            };
+            entries.insert(
+                ename.clone(),
+                Entry { file, inputs: parse_ios("inputs")?, outputs: parse_ios("outputs")? },
+            );
+        }
+
+        let eval_lens = v
+            .get("eval_lens")
+            .and_then(Json::as_arr)
+            .map(|a| a.iter().filter_map(Json::as_usize).collect())
+            .unwrap_or_default();
+
+        Ok(ModelConfig {
+            name: name.to_string(),
+            task: Task::parse(st("task")?)?,
+            variant: Variant::parse(st("variant")?)?,
+            vocab: us("vocab")?,
+            n: us("n")?,
+            d: us("d")?,
+            blocks: us("blocks")?,
+            batch: us("batch")?,
+            rpe_layers: us("rpe_layers")?,
+            num_classes: us("num_classes")?,
+            r: us("r")?,
+            m: us("m")?,
+            lam: fl("lam")?,
+            lr: fl("lr")?,
+            warmup: us("warmup")?,
+            param_count: us("param_count")?,
+            params,
+            entries,
+            eval_lens,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> std::path::PathBuf {
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn manifest_loads_and_is_consistent() {
+        let m = Manifest::load(&artifacts_dir()).expect("manifest");
+        assert!(m.configs.len() >= 4, "expected many configs");
+        for (name, cfg) in &m.configs {
+            // step signature = params + m + v + t + batch → params' m' v' t' loss
+            let step = cfg.entry("step").unwrap();
+            let p = cfg.params.len();
+            assert!(step.inputs.len() > 3 * p + 1, "{name}: step inputs");
+            assert_eq!(step.outputs.len(), 3 * p + 2, "{name}: step outputs");
+            // init: seed → params, same shapes in same order
+            let init = cfg.entry("init").unwrap();
+            assert_eq!(init.outputs.len(), p, "{name}: init outputs");
+            for (a, b) in init.outputs.iter().zip(cfg.params.iter()) {
+                assert_eq!(a.shape, b.shape, "{name}: param shape mismatch {}", a.name);
+            }
+            // declared param_count matches the descriptors
+            let total: usize = cfg.params.iter().map(IoDesc::elem_count).sum();
+            assert_eq!(total, cfg.param_count, "{name}: param_count");
+            // every artifact file exists
+            for e in cfg.entries.values() {
+                assert!(artifacts_dir().join(&e.file).exists(), "{name}: missing {}", e.file);
+            }
+        }
+    }
+
+    #[test]
+    fn batch_inputs_match_task() {
+        let m = Manifest::load(&artifacts_dir()).expect("manifest");
+        for cfg in m.configs.values() {
+            let bi = cfg.batch_inputs().unwrap();
+            match cfg.task {
+                Task::LmCausal => {
+                    assert_eq!(bi.len(), 1);
+                    assert_eq!(bi[0].shape, vec![cfg.batch, cfg.n + 1]);
+                }
+                Task::LmBidir => {
+                    assert_eq!(bi.len(), 3);
+                    assert_eq!(bi[0].shape, vec![cfg.batch, cfg.n]);
+                }
+                Task::Cls => {
+                    assert_eq!(bi.len(), 2);
+                    assert_eq!(bi[1].shape, vec![cfg.batch]);
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,28 @@
+//! Runtime — the Rust ⇄ XLA bridge (PJRT CPU client).
+//!
+//! Loads the HLO-text artifacts produced by `python/compile/aot.py`
+//! (see `artifacts/manifest.json`), compiles them once per process on
+//! the PJRT client, and exposes typed execution:
+//!
+//! * [`Manifest`] / [`ModelConfig`] — the artifact contract: per-config
+//!   shapes, flat parameter order, and entrypoints.
+//! * [`Engine`] — PJRT client + executable cache keyed by
+//!   `(config, entry)`; all compiles happen through here.
+//! * [`ModelState`] — the device-facing training state (`params`, Adam
+//!   `m`/`v`, step counter) driven by the fused `step` artifact.
+//! * [`HostTensor`] — dtype-tagged host arrays for batches and outputs.
+//!
+//! HLO **text** is the interchange format: jax ≥ 0.5 serializes
+//! HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1
+//! rejects; `HloModuleProto::from_text_file` re-parses and reassigns
+//! ids (see /opt/xla-example/README.md).  Python never runs here.
+
+mod engine;
+mod manifest;
+mod state;
+mod tensor;
+
+pub use engine::Engine;
+pub use manifest::{Dtype, Entry, IoDesc, Manifest, ModelConfig, Task, Variant};
+pub use state::ModelState;
+pub use tensor::HostTensor;

@@ -1,0 +1,221 @@
+//! Model training state driven by the fused AOT `step` artifact.
+//!
+//! Holds the flat parameter vector plus Adam moments and the step
+//! counter as XLA literals, in the manifest's jax-tree order.  One
+//! [`ModelState::step`] call is one fused fwd+bwd+Adam execution — the
+//! whole optimizer lives inside the artifact, Rust only shuttles
+//! buffers.  Checkpoints serialize the full state (params, m, v, t) so
+//! training resumes bit-exactly.
+
+use std::io::{Read, Write};
+use std::path::Path;
+use std::rc::Rc;
+
+use anyhow::{anyhow, bail, Context, Result};
+use xla::Literal;
+
+use super::engine::{Engine, Executable};
+use super::manifest::{Dtype, ModelConfig};
+use super::tensor::HostTensor;
+
+/// Checkpoint file magic + version.
+const CKPT_MAGIC: &[u8; 8] = b"SKITNN\x01\n";
+
+/// Flat training state of one model config.
+pub struct ModelState {
+    pub config: ModelConfig,
+    pub params: Vec<Literal>,
+    pub m: Vec<Literal>,
+    pub v: Vec<Literal>,
+    /// f32 scalar step counter (the artifact's `t`).
+    pub t: Literal,
+    step_exe: Rc<Executable>,
+}
+
+impl ModelState {
+    /// Initialize from the `init` artifact with the given seed; Adam
+    /// moments start at zero, matching `train.adam_init`.
+    pub fn init(engine: &Engine, config: &str, seed: u32) -> Result<ModelState> {
+        let cfg = engine.config(config)?.clone();
+        let init = engine.load(config, "init")?;
+        let seed_lit = HostTensor::scalar_u32(seed).to_literal()?;
+        let params = init.run(&[seed_lit])?;
+        let zeros = |descs: &[super::manifest::IoDesc]| -> Result<Vec<Literal>> {
+            descs
+                .iter()
+                .map(|d| {
+                    if d.dtype != Dtype::F32 {
+                        bail!("param {} is not f32", d.name);
+                    }
+                    HostTensor::f32(d.shape.clone(), vec![0.0; d.elem_count()]).to_literal()
+                })
+                .collect()
+        };
+        let m = zeros(&cfg.params)?;
+        let v = zeros(&cfg.params)?;
+        let t = HostTensor::scalar_f32(0.0).to_literal()?;
+        let step_exe = engine.load(config, "step")?;
+        Ok(ModelState { config: cfg, params, m, v, t, step_exe })
+    }
+
+    /// Current step count (reads the scalar back from the literal).
+    pub fn step_count(&self) -> Result<f32> {
+        self.t.get_first_element::<f32>().map_err(|e| anyhow!("{e:?}"))
+    }
+
+    /// One fused train step; `batch` literals must match
+    /// [`ModelConfig::batch_inputs`].  Returns the loss.
+    pub fn step(&mut self, batch: &[Literal]) -> Result<f32> {
+        let p = self.params.len();
+        let mut args: Vec<&Literal> = Vec::with_capacity(3 * p + 1 + batch.len());
+        args.extend(self.params.iter());
+        args.extend(self.m.iter());
+        args.extend(self.v.iter());
+        args.push(&self.t);
+        args.extend(batch.iter());
+        let mut outs = self.step_exe.run_refs(&args)?;
+        // outputs: params' m' v' t' loss
+        let loss = outs
+            .pop()
+            .ok_or_else(|| anyhow!("step returned no loss"))?
+            .get_first_element::<f32>()?;
+        self.t = outs.pop().ok_or_else(|| anyhow!("step returned no t"))?;
+        let vs: Vec<Literal> = outs.drain(2 * p..).collect();
+        let ms: Vec<Literal> = outs.drain(p..).collect();
+        self.params = outs;
+        self.m = ms;
+        self.v = vs;
+        Ok(loss)
+    }
+
+    /// Run an eval-only entry (`fwd` or `fwd_n{L}`): returns `(loss, metric)`.
+    pub fn fwd(&self, engine: &Engine, entry: &str, batch: &[Literal]) -> Result<(f32, f32)> {
+        let exe = engine.load(&self.config.name, entry)?;
+        let mut args: Vec<&Literal> = self.params.iter().collect();
+        args.extend(batch.iter());
+        let outs = exe.run_refs(&args)?;
+        if outs.len() != 2 {
+            bail!("{entry}: expected (loss, metric), got {} outputs", outs.len());
+        }
+        Ok((outs[0].get_first_element::<f32>()?, outs[1].get_first_element::<f32>()?))
+    }
+
+    /// Serving entry: class logits / last-position LM logits.
+    pub fn logits(&self, engine: &Engine, ids: &Literal) -> Result<HostTensor> {
+        let exe = engine.load(&self.config.name, "logits")?;
+        let mut args: Vec<&Literal> = self.params.iter().collect();
+        args.push(ids);
+        let outs = exe.run_refs(&args)?;
+        HostTensor::from_literal(&outs[0])
+    }
+
+    // ---------------------------------------------------------------
+    // Checkpointing
+    // ---------------------------------------------------------------
+
+    /// Serialize full state (params, m, v, t) to `path`.
+    ///
+    /// Format: magic, u32 config-name length + bytes, f32 t, then for
+    /// each of params/m/v in manifest order: raw little-endian f32.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut f = std::io::BufWriter::new(
+            std::fs::File::create(path).with_context(|| format!("create {}", path.display()))?,
+        );
+        f.write_all(CKPT_MAGIC)?;
+        let name = self.config.name.as_bytes();
+        f.write_all(&(name.len() as u32).to_le_bytes())?;
+        f.write_all(name)?;
+        f.write_all(&self.step_count()?.to_le_bytes())?;
+        for group in [&self.params, &self.m, &self.v] {
+            for (lit, desc) in group.iter().zip(self.config.params.iter()) {
+                let data: Vec<f32> = lit.to_vec()?;
+                if data.len() != desc.elem_count() {
+                    bail!("checkpoint: {} has {} elems, want {}", desc.name, data.len(),
+                        desc.elem_count());
+                }
+                for x in &data {
+                    f.write_all(&x.to_le_bytes())?;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Restore state saved by [`ModelState::save`]; the checkpoint's
+    /// config name must match.
+    pub fn load(engine: &Engine, path: &Path) -> Result<ModelState> {
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?,
+        );
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        if &magic != CKPT_MAGIC {
+            bail!("{}: not a ski-tnn checkpoint", path.display());
+        }
+        let mut len4 = [0u8; 4];
+        f.read_exact(&mut len4)?;
+        let mut name = vec![0u8; u32::from_le_bytes(len4) as usize];
+        f.read_exact(&mut name)?;
+        let name = String::from_utf8(name)?;
+        let cfg = engine.config(&name)?.clone();
+        let mut t4 = [0u8; 4];
+        f.read_exact(&mut t4)?;
+        let t = f32::from_le_bytes(t4);
+
+        let mut read_group = || -> Result<Vec<Literal>> {
+            cfg.params
+                .iter()
+                .map(|desc| {
+                    let mut buf = vec![0u8; 4 * desc.elem_count()];
+                    f.read_exact(&mut buf)?;
+                    let data: Vec<f32> = buf
+                        .chunks_exact(4)
+                        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                        .collect();
+                    HostTensor::f32(desc.shape.clone(), data).to_literal()
+                })
+                .collect()
+        };
+        let params = read_group()?;
+        let m = read_group()?;
+        let v = read_group()?;
+        let step_exe = engine.load(&name, "step")?;
+        Ok(ModelState {
+            config: cfg,
+            params,
+            m,
+            v,
+            t: HostTensor::scalar_f32(t).to_literal()?,
+            step_exe,
+        })
+    }
+}
+
+impl Executable {
+    /// Like [`Executable::run`] but over borrowed literals (avoids
+    /// cloning the parameter vector every step).
+    pub fn run_refs(&self, args: &[&Literal]) -> Result<Vec<Literal>> {
+        if args.len() != self.entry.inputs.len() {
+            bail!(
+                "{}/{}: got {} args, entry wants {}",
+                self.key.0,
+                self.key.1,
+                args.len(),
+                self.entry.inputs.len()
+            );
+        }
+        let bufs = self.exe.execute::<&Literal>(args)?;
+        let mut tuple = bufs[0][0].to_literal_sync()?;
+        let outs = tuple.decompose_tuple()?;
+        if outs.len() != self.entry.outputs.len() {
+            bail!(
+                "{}/{}: executable returned {} outputs, manifest declares {}",
+                self.key.0,
+                self.key.1,
+                outs.len(),
+                self.entry.outputs.len()
+            );
+        }
+        Ok(outs)
+    }
+}

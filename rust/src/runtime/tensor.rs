@@ -1,0 +1,148 @@
+//! Dtype-tagged host tensors — the batch/output currency of the system.
+//!
+//! Batches are produced on worker threads (`data::*`, the coordinator's
+//! prefetcher) as plain `HostTensor`s and converted to XLA [`Literal`]s
+//! only on the runtime thread, right before execution — the `xla` FFI
+//! handles are not `Send`, so nothing device-facing ever crosses a
+//! thread boundary.
+
+use anyhow::{bail, Result};
+use xla::Literal;
+
+use super::manifest::{Dtype, IoDesc};
+
+/// A host-resident tensor: shape + flat data in row-major order.
+#[derive(Debug, Clone, PartialEq)]
+pub enum HostTensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+    U32 { shape: Vec<usize>, data: Vec<u32> },
+}
+
+impl HostTensor {
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "f32 tensor shape/data");
+        HostTensor::F32 { shape, data }
+    }
+
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "i32 tensor shape/data");
+        HostTensor::I32 { shape, data }
+    }
+
+    pub fn u32(shape: Vec<usize>, data: Vec<u32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "u32 tensor shape/data");
+        HostTensor::U32 { shape, data }
+    }
+
+    pub fn scalar_f32(v: f32) -> Self {
+        HostTensor::F32 { shape: vec![], data: vec![v] }
+    }
+
+    pub fn scalar_u32(v: u32) -> Self {
+        HostTensor::U32 { shape: vec![], data: vec![v] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32 { shape, .. }
+            | HostTensor::I32 { shape, .. }
+            | HostTensor::U32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn dtype(&self) -> Dtype {
+        match self {
+            HostTensor::F32 { .. } => Dtype::F32,
+            HostTensor::I32 { .. } => Dtype::I32,
+            HostTensor::U32 { .. } => Dtype::U32,
+        }
+    }
+
+    pub fn elem_count(&self) -> usize {
+        self.shape().iter().product()
+    }
+
+    /// Check this tensor against a manifest I/O descriptor.
+    pub fn check(&self, desc: &IoDesc) -> Result<()> {
+        if self.shape() != desc.shape.as_slice() || self.dtype() != desc.dtype {
+            bail!(
+                "tensor mismatch for {}: have {:?} {:?}, manifest wants {:?} {:?}",
+                desc.name,
+                self.dtype(),
+                self.shape(),
+                desc.dtype,
+                desc.shape
+            );
+        }
+        Ok(())
+    }
+
+    /// Convert into an XLA literal (host→host copy).
+    pub fn to_literal(&self) -> Result<Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            HostTensor::F32 { data, .. } => Literal::vec1(data).reshape(&dims)?,
+            HostTensor::I32 { data, .. } => Literal::vec1(data).reshape(&dims)?,
+            HostTensor::U32 { data, .. } => Literal::vec1(data).reshape(&dims)?,
+        };
+        Ok(lit)
+    }
+
+    /// Read a literal back into a host tensor.
+    pub fn from_literal(lit: &Literal) -> Result<Self> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        Ok(match shape.ty() {
+            xla::ElementType::F32 => HostTensor::F32 { shape: dims, data: lit.to_vec()? },
+            xla::ElementType::S32 => HostTensor::I32 { shape: dims, data: lit.to_vec()? },
+            xla::ElementType::U32 => HostTensor::U32 { shape: dims, data: lit.to_vec()? },
+            other => bail!("unsupported literal element type {other:?}"),
+        })
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data),
+            other => bail!("expected f32 tensor, have {:?}", other.dtype()),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            HostTensor::I32 { data, .. } => Ok(data),
+            other => bail!("expected i32 tensor, have {:?}", other.dtype()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let t = HostTensor::f32(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let lit = t.to_literal().unwrap();
+        let back = HostTensor::from_literal(&lit).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn literal_roundtrip_i32_scalar_shapes() {
+        let t = HostTensor::i32(vec![4], vec![-1, 0, 7, 1 << 20]);
+        let back = HostTensor::from_literal(&t.to_literal().unwrap()).unwrap();
+        assert_eq!(t, back);
+        let s = HostTensor::scalar_u32(42);
+        let back = HostTensor::from_literal(&s.to_literal().unwrap()).unwrap();
+        assert_eq!(s, back);
+    }
+
+    #[test]
+    fn check_rejects_wrong_shape() {
+        let t = HostTensor::f32(vec![2, 2], vec![0.0; 4]);
+        let desc =
+            IoDesc { name: "x".into(), shape: vec![2, 3], dtype: Dtype::F32 };
+        assert!(t.check(&desc).is_err());
+    }
+}

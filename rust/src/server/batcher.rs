@@ -1,0 +1,293 @@
+//! Dynamic batching policy and request plumbing.
+//!
+//! Policy: block for the first request, then keep admitting until
+//! either the model batch is full or `max_wait` has elapsed since the
+//! first admit — the standard latency/throughput knob.  Short rows are
+//! padded with PAD to the model context; surplus capacity is padded
+//! with zero rows and the corresponding logits discarded.
+
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::data::PAD;
+use crate::runtime::{Engine, HostTensor, ModelState};
+
+/// Server tuning knobs.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// Rows per model execution (must equal the artifact batch dim).
+    pub max_batch: usize,
+    /// Model context length (rows are padded/truncated to this).
+    pub n: usize,
+    /// How long to hold an open batch hoping for more requests.
+    pub max_wait: Duration,
+    /// Bounded queue depth — overflow is backpressure, not OOM.
+    pub queue_depth: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            max_batch: 8,
+            n: 256,
+            max_wait: Duration::from_millis(2),
+            queue_depth: 64,
+        }
+    }
+}
+
+/// One inference request: token ids in, logits out.
+pub struct Request {
+    pub ids: Vec<i32>,
+    pub resp: SyncSender<Response>,
+    pub submitted: Instant,
+}
+
+/// One inference response.
+#[derive(Debug, Clone)]
+pub struct Response {
+    /// Logits row for this request (num_classes or vocab wide).
+    pub logits: Vec<f32>,
+    /// Time spent queued before execution started.
+    pub queued: Duration,
+    /// Size of the batch this request rode in (diagnostics).
+    pub batch_rows: usize,
+}
+
+/// Aggregate server-side counters.
+#[derive(Debug, Default, Clone)]
+pub struct BatcherStats {
+    pub requests: usize,
+    pub batches: usize,
+    pub padded_rows: usize,
+    pub exec_seconds: f64,
+}
+
+impl BatcherStats {
+    pub fn mean_batch_fill(&self, max_batch: usize) -> f64 {
+        if self.batches == 0 {
+            return 0.0;
+        }
+        self.requests as f64 / (self.batches * max_batch) as f64
+    }
+}
+
+/// Client handle: submit sequences, receive logits.
+#[derive(Clone)]
+pub struct ClientHandle {
+    tx: SyncSender<Request>,
+}
+
+impl ClientHandle {
+    /// Blocking round-trip: submit and wait for the response.
+    pub fn infer(&self, ids: Vec<i32>) -> Result<Response> {
+        let (rtx, rrx) = sync_channel(1);
+        self.tx
+            .send(Request { ids, resp: rtx, submitted: Instant::now() })
+            .map_err(|_| anyhow!("server stopped"))?;
+        rrx.recv().map_err(|_| anyhow!("server dropped request"))
+    }
+
+    /// Non-blocking submit; `Err` means the queue is full (backpressure).
+    pub fn try_submit(&self, ids: Vec<i32>) -> Result<Receiver<Response>> {
+        let (rtx, rrx) = sync_channel(1);
+        match self.tx.try_send(Request { ids, resp: rtx, submitted: Instant::now() }) {
+            Ok(()) => Ok(rrx),
+            Err(TrySendError::Full(_)) => Err(anyhow!("queue full")),
+            Err(TrySendError::Disconnected(_)) => Err(anyhow!("server stopped")),
+        }
+    }
+}
+
+/// The dynamic batcher. Owns the request queue; `run` drives an
+/// executor closure until all client handles are dropped.
+pub struct Batcher {
+    pub cfg: ServerConfig,
+    rx: Receiver<Request>,
+    tx: Option<SyncSender<Request>>,
+}
+
+impl Batcher {
+    pub fn new(cfg: ServerConfig) -> Batcher {
+        let (tx, rx) = sync_channel(cfg.queue_depth);
+        Batcher { cfg, rx, tx: Some(tx) }
+    }
+
+    /// A cloneable client handle (hand to worker threads).
+    pub fn handle(&self) -> ClientHandle {
+        ClientHandle { tx: self.tx.clone().expect("server already running") }
+    }
+
+    /// Drain one batch according to the policy. `None` = all senders
+    /// gone and queue empty (shutdown).
+    fn gather(&self) -> Option<Vec<Request>> {
+        let first = match self.rx.recv() {
+            Ok(r) => r,
+            Err(_) => return None,
+        };
+        let mut reqs = vec![first];
+        let deadline = Instant::now() + self.cfg.max_wait;
+        while reqs.len() < self.cfg.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match self.rx.recv_timeout(deadline - now) {
+                Ok(r) => reqs.push(r),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        Some(reqs)
+    }
+
+    /// Run the serve loop with an arbitrary executor.
+    ///
+    /// `exec` maps a padded `(max_batch, n)` i32 tensor to per-row
+    /// logits.  Drop the `Batcher`'s own sender first so the loop ends
+    /// when every [`ClientHandle`] is gone.
+    pub fn run<F>(mut self, mut exec: F) -> Result<BatcherStats>
+    where
+        F: FnMut(&HostTensor) -> Result<Vec<Vec<f32>>>,
+    {
+        drop(self.tx.take()); // only client handles keep the queue alive
+        let (bcap, n) = (self.cfg.max_batch, self.cfg.n);
+        let mut stats = BatcherStats::default();
+        while let Some(reqs) = self.gather() {
+            let started = Instant::now();
+            let mut ids = vec![PAD; bcap * n];
+            for (row, req) in reqs.iter().enumerate() {
+                let take = req.ids.len().min(n);
+                ids[row * n..row * n + take].copy_from_slice(&req.ids[..take]);
+            }
+            let batch = HostTensor::i32(vec![bcap, n], ids);
+            let t0 = Instant::now();
+            let rows = exec(&batch)?;
+            stats.exec_seconds += t0.elapsed().as_secs_f64();
+            if rows.len() < reqs.len() {
+                return Err(anyhow!("executor returned {} rows for {} requests",
+                    rows.len(), reqs.len()));
+            }
+            stats.requests += reqs.len();
+            stats.batches += 1;
+            stats.padded_rows += bcap - reqs.len();
+            for (req, logits) in reqs.into_iter().zip(rows) {
+                let _ = req.resp.send(Response {
+                    logits,
+                    queued: started.duration_since(req.submitted),
+                    batch_rows: bcap,
+                });
+            }
+        }
+        Ok(stats)
+    }
+}
+
+/// Adapt a real model into a [`Batcher::run`] executor.
+pub fn serve_model<'a>(
+    engine: &'a Engine,
+    state: &'a ModelState,
+) -> impl FnMut(&HostTensor) -> Result<Vec<Vec<f32>>> + 'a {
+    move |batch: &HostTensor| {
+        let ids = batch.to_literal()?;
+        let out = state.logits(engine, &ids)?;
+        let shape = out.shape().to_vec();
+        let data = out.as_f32()?;
+        let width = shape[1];
+        Ok(data.chunks(width).map(|c| c.to_vec()).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Echo executor: logits[row] = [sum of that row's non-PAD ids].
+    fn echo(batch: &HostTensor) -> Result<Vec<Vec<f32>>> {
+        let shape = batch.shape().to_vec();
+        let ids = batch.as_i32()?;
+        Ok(ids
+            .chunks(shape[1])
+            .map(|row| {
+                vec![row.iter().filter(|&&t| t != PAD).map(|&t| t as f32).sum::<f32>()]
+            })
+            .collect())
+    }
+
+    fn small_cfg() -> ServerConfig {
+        ServerConfig { max_batch: 4, n: 8, max_wait: Duration::from_millis(5), queue_depth: 16 }
+    }
+
+    #[test]
+    fn roundtrip_many_clients() {
+        let b = Batcher::new(small_cfg());
+        let h = b.handle();
+        let clients: Vec<_> = (0..3)
+            .map(|c| {
+                let h = h.clone();
+                std::thread::spawn(move || {
+                    for i in 0..20 {
+                        let ids = vec![c as i32 + 1; (i % 8) + 1];
+                        let want: f32 = ids.iter().map(|&t| t as f32).sum();
+                        let resp = h.infer(ids).unwrap();
+                        assert_eq!(resp.logits, vec![want]);
+                        assert_eq!(resp.batch_rows, 4);
+                    }
+                })
+            })
+            .collect();
+        drop(h);
+        let stats = b.run(echo).unwrap();
+        for c in clients {
+            c.join().unwrap();
+        }
+        assert_eq!(stats.requests, 60);
+        assert!(stats.batches <= 60);
+        assert!(stats.batches >= 15, "batching should coalesce: {}", stats.batches);
+    }
+
+    #[test]
+    fn batches_coalesce_under_burst() {
+        let b = Batcher::new(ServerConfig {
+            max_wait: Duration::from_millis(50),
+            ..small_cfg()
+        });
+        let h = b.handle();
+        let t = std::thread::spawn(move || {
+            let pending: Vec<_> =
+                (0..8).map(|i| h.try_submit(vec![i as i32 + 1]).unwrap()).collect();
+            let resps: Vec<Response> =
+                pending.into_iter().map(|rx| rx.recv().unwrap()).collect();
+            resps
+        });
+        let stats = b.run(echo).unwrap();
+        let resps = t.join().unwrap();
+        assert_eq!(resps.len(), 8);
+        // 8 requests at max_batch 4 must ride exactly 2 full batches
+        assert_eq!(stats.batches, 2, "burst should fill batches");
+        assert_eq!(stats.padded_rows, 0);
+    }
+
+    #[test]
+    fn truncates_overlong_rows() {
+        let b = Batcher::new(small_cfg());
+        let h = b.handle();
+        let t = std::thread::spawn(move || h.infer(vec![1; 100]).unwrap());
+        let stats = b.run(echo).unwrap();
+        let resp = t.join().unwrap();
+        assert_eq!(resp.logits, vec![8.0], "row must be truncated to n=8");
+        assert_eq!(stats.requests, 1);
+        assert_eq!(stats.padded_rows, 3);
+    }
+
+    #[test]
+    fn shutdown_when_handles_dropped() {
+        let b = Batcher::new(small_cfg());
+        let h = b.handle();
+        drop(h);
+        let stats = b.run(echo).unwrap(); // must return immediately
+        assert_eq!(stats.requests, 0);
+    }
+}

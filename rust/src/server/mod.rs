@@ -1,0 +1,17 @@
+//! Serving — dynamic batcher + request router over the `logits` entry.
+//!
+//! The inference-side counterpart of the coordinator (vLLM-router
+//! shaped, scaled to this paper's needs): client threads submit token
+//! sequences through a bounded queue; the single runtime thread drains
+//! the queue with a batch-size/timeout policy, pads to the artifact's
+//! fixed batch, executes once, and routes each row of logits back to
+//! its caller with queueing/latency metadata.
+//!
+//! The model executor is abstracted as a closure so the batching policy
+//! is unit-testable without XLA; [`serve_model`] adapts a
+//! [`ModelState`](crate::runtime::ModelState) + engine into that
+//! closure for the real thing.
+
+mod batcher;
+
+pub use batcher::{serve_model, Batcher, BatcherStats, Request, Response, ServerConfig};

@@ -1,0 +1,122 @@
+//! Stationary (non-SPD) kernels and the SKI RPE machinery:
+//! inverse time warp, learned-table lookup, decay bias.
+//!
+//! Mirrors `python/compile/rpe.py` exactly — the substrate tests assert
+//! parity between this code and the lowered HLO.
+
+/// Exponential decay bias `λ^{|t|}` (the baseline TNN's explicit bias).
+pub fn decay_bias(t: i64, lam: f32) -> f32 {
+    lam.powf(t.abs() as f32)
+}
+
+/// Inverse time warp `x(t) = sign(t) λ^{|t|}` — maps R onto [-1, 1]
+/// with long lags compressed towards zero (paper §3.2.2).
+pub fn warp(t: f64, lam: f64) -> f64 {
+    t.signum() * lam.powf(t.abs())
+}
+
+/// Smooth analytic test kernel: Gaussian bump with asymmetric tilt.
+/// (Infinitely differentiable — used where Theorem 1 assumes N+1
+/// continuous derivatives.)
+pub fn gaussian_kernel(t: f64, scale: f64) -> f32 {
+    let z = t / scale;
+    ((-0.5 * z * z).exp() * (1.0 + 0.3 * z)) as f32
+}
+
+/// Rational decay kernel 1/(1+|t|/s) with sign asymmetry; C⁰ at 0.
+pub fn rational_kernel(t: f64, scale: f64) -> f32 {
+    let a = 1.0 / (1.0 + t.abs() / scale);
+    (if t < 0.0 { 0.7 * a } else { a }) as f32
+}
+
+/// The SKI RPE: a learned piecewise-linear function on [-1, 1] (the
+/// warped axis), represented by an odd-sized value table whose centre
+/// is pinned to zero so `k(0) = 0` and `k(±∞) → 0`.
+#[derive(Debug, Clone)]
+pub struct TableKernel {
+    pub values: Vec<f32>, // odd length; centre forced 0 at eval
+    pub lam: f64,
+}
+
+impl TableKernel {
+    pub fn new(values: Vec<f32>, lam: f64) -> Self {
+        assert!(values.len() % 2 == 1, "table must be odd-sized");
+        TableKernel { values, lam }
+    }
+
+    /// Evaluate the kernel at (real-valued) lag `t`.
+    pub fn eval(&self, t: f64) -> f32 {
+        self.lookup(warp(t, self.lam))
+    }
+
+    /// Linear interpolation of the table on [-1, 1], centre pinned to 0.
+    pub fn lookup(&self, x: f64) -> f32 {
+        let tbl = self.values.len();
+        let centre = tbl / 2;
+        let val = |i: usize| if i == centre { 0.0 } else { self.values[i] };
+        let g = (x + 1.0) * 0.5 * (tbl as f64 - 1.0);
+        let lo = (g.floor() as i64).clamp(0, tbl as i64 - 2) as usize;
+        let frac = (g - lo as f64) as f32;
+        (1.0 - frac) * val(lo) + frac * val(lo + 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, size};
+
+    #[test]
+    fn warp_bounds_and_signs() {
+        check("warp in [-1,1], odd", |rng| {
+            let lam = 0.9 + 0.099 * rng.f64();
+            let t = rng.normal() as f64 * 100.0;
+            let w = warp(t, lam);
+            assert!((-1.0..=1.0).contains(&w), "warp({t})={w}");
+            assert!((warp(-t, lam) + w).abs() < 1e-12, "odd symmetry");
+        });
+    }
+
+    #[test]
+    fn warp_monotone_decay() {
+        // |warp| decreases with |t| — long lags compress to the centre.
+        let lam = 0.97;
+        let mut prev = warp(0.5, lam).abs();
+        for t in 1..200 {
+            let cur = warp(t as f64, lam).abs();
+            assert!(cur < prev, "not decaying at t={t}");
+            prev = cur;
+        }
+    }
+
+    #[test]
+    fn table_centre_pinned() {
+        check("table centre zero", |rng| {
+            let tbl = 2 * size(rng, 2, 32) + 1;
+            let k = TableKernel::new(rng.normals(tbl), 0.99);
+            assert_eq!(k.lookup(0.0), 0.0);
+            // eval at huge lags → warp ~0 → value ~0
+            assert!(k.eval(5000.0).abs() < 1e-3);
+            assert!(k.eval(-5000.0).abs() < 1e-3);
+        });
+    }
+
+    #[test]
+    fn table_interp_hits_grid_points() {
+        let vals = vec![1.0, -2.0, 0.0, 3.0, 4.0]; // centre index 2 pinned
+        let k = TableKernel::new(vals.clone(), 0.99);
+        let tbl = 5;
+        for (i, &v) in vals.iter().enumerate() {
+            let x = -1.0 + 2.0 * i as f64 / (tbl as f64 - 1.0);
+            let want = if i == 2 { 0.0 } else { v };
+            assert!((k.lookup(x) - want).abs() < 1e-6, "grid point {i}");
+        }
+    }
+
+    #[test]
+    fn decay_bias_basic() {
+        assert_eq!(decay_bias(0, 0.9), 1.0);
+        assert!((decay_bias(2, 0.9) - 0.81).abs() < 1e-6);
+        assert_eq!(decay_bias(-2, 0.9), decay_bias(2, 0.9));
+    }
+}

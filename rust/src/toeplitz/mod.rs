@@ -1,0 +1,165 @@
+//! Pure-Rust Toeplitz substrate: the paper's operators as CPU oracles.
+//!
+//! Everything the JAX/Pallas layer computes on the request path exists
+//! here too, independently implemented: dense and FFT Toeplitz matvec,
+//! the asymmetric-SKI factorisation (both the mathematically
+//! O(n + r log r) sparse path and the practically-faster dense-matmul
+//! path the paper ships), the inverse time warp, decay bias, and the
+//! Appendix-B causal-SKI cumulative-sum scan.  Uses:
+//!
+//! * cross-checking the AOT artifacts' numerics from Rust,
+//! * the Theorem 1 error-bound property tests (with `crate::linalg`),
+//! * the fig10/fig11/App-B micro-benchmarks where the paper's
+//!   asymptotic arguments are measured directly.
+
+mod kernels;
+mod ski;
+
+pub use kernels::{decay_bias, gaussian_kernel, rational_kernel, warp, TableKernel};
+pub use ski::{causal_ski_scan, inducing_grid, interp_weights, Ski};
+
+use crate::dsp::{irfft, rfft, Complex};
+
+/// Lags representation of one Toeplitz matrix `T_ij = k[i-j]`:
+/// `lags[t + n - 1] = k[t]` for `t in -(n-1)..=(n-1)`.
+#[derive(Debug, Clone)]
+pub struct ToeplitzKernel {
+    pub n: usize,
+    pub lags: Vec<f32>,
+}
+
+impl ToeplitzKernel {
+    pub fn from_fn(n: usize, f: impl Fn(i64) -> f32) -> Self {
+        let lags = (-(n as i64 - 1)..=(n as i64 - 1)).map(f).collect();
+        ToeplitzKernel { n, lags }
+    }
+
+    pub fn at(&self, lag: i64) -> f32 {
+        self.lags[(lag + self.n as i64 - 1) as usize]
+    }
+
+    /// Zero all negative lags (causal masking).
+    pub fn causal(mut self) -> Self {
+        for t in 0..self.n - 1 {
+            self.lags[t] = 0.0;
+        }
+        self
+    }
+
+    /// Dense O(n²) action `y = T x`.
+    pub fn apply_dense(&self, x: &[f32]) -> Vec<f32> {
+        let n = self.n;
+        assert_eq!(x.len(), n);
+        (0..n)
+            .map(|i| {
+                (0..n)
+                    .map(|j| self.at(i as i64 - j as i64) * x[j])
+                    .sum()
+            })
+            .collect()
+    }
+
+    /// O(n log n) action via the 2n circulant embedding (requires n a
+    /// power of two — all model sequence lengths are).
+    pub fn apply_fft(&self, x: &[f32]) -> Vec<f32> {
+        let n = self.n;
+        assert_eq!(x.len(), n);
+        assert!(n.is_power_of_two(), "apply_fft needs power-of-two n");
+        // circulant first column: [k_0..k_{n-1}, 0, k_{-(n-1)}..k_{-1}]
+        let mut c = vec![0.0f32; 2 * n];
+        for t in 0..n {
+            c[t] = self.at(t as i64);
+        }
+        for t in 1..n {
+            c[n + t] = self.at(t as i64 - n as i64);
+        }
+        let ch = rfft(&c);
+        let mut xp = vec![0.0f32; 2 * n];
+        xp[..n].copy_from_slice(x);
+        let xh = rfft(&xp);
+        let yh: Vec<Complex> = ch.iter().zip(xh.iter()).map(|(a, b)| a.mul(*b)).collect();
+        let y = irfft(&yh, 2 * n);
+        y[..n].to_vec()
+    }
+
+    /// Dense matrix form (for the linalg-based error analyses).
+    pub fn dense(&self) -> crate::linalg::Mat {
+        crate::linalg::Mat::from_fn(self.n, self.n, |i, j| {
+            self.at(i as i64 - j as i64) as f64
+        })
+    }
+}
+
+/// Depthwise 1-D convolution — the sparse component's action.
+/// `causal`: taps cover lags `0..m-1`; otherwise centred (lag `t-m/2`).
+pub fn conv1d(x: &[f32], w: &[f32], causal: bool) -> Vec<f32> {
+    let n = x.len();
+    let m = w.len();
+    let c = if causal { 0 } else { (m / 2) as i64 };
+    (0..n as i64)
+        .map(|i| {
+            let mut acc = 0.0;
+            for (t, &wt) in w.iter().enumerate() {
+                let j = i - (t as i64 - c);
+                if (0..n as i64).contains(&j) {
+                    acc += wt * x[j as usize];
+                }
+            }
+            acc
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{assert_close, check, size, vecf};
+
+    #[test]
+    fn prop_fft_matches_dense() {
+        check("toeplitz fft == dense", |rng| {
+            let n = 1 << size(rng, 1, 8);
+            let k = ToeplitzKernel { n, lags: vecf(rng, 2 * n - 1) };
+            let x = vecf(rng, n);
+            assert_close(&k.apply_fft(&x), &k.apply_dense(&x), 1e-4, "fft vs dense");
+        });
+    }
+
+    #[test]
+    fn prop_causal_masks_future() {
+        check("causal toeplitz ignores future", |rng| {
+            let n = 1 << size(rng, 2, 7);
+            let k = ToeplitzKernel { n, lags: vecf(rng, 2 * n - 1) }.causal();
+            let mut x = vecf(rng, n);
+            let y0 = k.apply_dense(&x);
+            let cut = n / 2;
+            for v in x.iter_mut().skip(cut) {
+                *v = 1e3;
+            }
+            let y1 = k.apply_dense(&x);
+            assert_close(&y0[..cut], &y1[..cut], 1e-5, "prefix changed");
+        });
+    }
+
+    #[test]
+    fn conv_matches_toeplitz_band() {
+        check("conv1d == banded toeplitz", |rng| {
+            let n = 1 << size(rng, 2, 7);
+            let m = size(rng, 1, 9).min(n);
+            let w = vecf(rng, m);
+            let causal = rng.bool(0.5);
+            let c = if causal { 0 } else { (m / 2) as i64 };
+            let k = ToeplitzKernel::from_fn(n, |lag| {
+                // y[i] += w[t] x[i - (t - c)] => lag t - c carries w[t]
+                let t = lag + c;
+                if (0..m as i64).contains(&t) {
+                    w[t as usize]
+                } else {
+                    0.0
+                }
+            });
+            let x = vecf(rng, n);
+            assert_close(&conv1d(&x, &w, causal), &k.apply_dense(&x), 1e-4, "conv");
+        });
+    }
+}

@@ -1,0 +1,256 @@
+//! Asymmetric structured kernel interpolation (SKI) — paper §3.2.1.
+//!
+//! `T ≈ W A Wᵀ` with `W` the sparse hat-function interpolation matrix
+//! onto `r` uniform inducing points and `A` the (Toeplitz) inducing
+//! Gram matrix.  Two apply paths are implemented:
+//!
+//! * [`Ski::apply_sparse`] — the mathematically `O(n + r log r)` path:
+//!   sparse `Wᵀx` scatter, FFT Toeplitz matvec for `A`, sparse gather.
+//! * [`Ski::apply_dense`]  — the paper's practical path: dense `(n,r)`
+//!   matmuls (their observation that sparse-tensor data movement loses
+//!   to dense matmul below n ≈ 512 is re-measured in
+//!   `benches/fig11_sparse_vs_lowrank`).
+//!
+//! Plus [`causal_ski_scan`] — Appendix B's causally-masked SKI via the
+//! sequential cumulative sum `s_i = Σ_{j≤i} w_j x_j`,
+//! `x'_i = [W A]_i ᵀ s_i`, which is what shows that causal masking
+//! negates SKI's speedup.
+
+use super::ToeplitzKernel;
+
+/// `r` uniform inducing points covering `[0, n-1]`.
+pub fn inducing_grid(n: usize, r: usize) -> Vec<f64> {
+    let h = (n as f64 - 1.0) / (r as f64 - 1.0);
+    (0..r).map(|j| j as f64 * h).collect()
+}
+
+/// Sparse interpolation weights for observation point `i`:
+/// returns (left inducing index, weight of left, weight of right).
+pub fn interp_weights(i: usize, n: usize, r: usize) -> (usize, f32, f32) {
+    let h = (n as f64 - 1.0) / (r as f64 - 1.0);
+    let g = i as f64 / h;
+    let lo = (g.floor() as usize).min(r - 2);
+    let frac = (g - lo as f64) as f32;
+    (lo, 1.0 - frac, frac)
+}
+
+/// The SKI factorisation of one Toeplitz operator.
+#[derive(Debug, Clone)]
+pub struct Ski {
+    pub n: usize,
+    pub r: usize,
+    /// Inducing Gram taps: `A_ij = taps[i-j+r-1]` (lag -(r-1)..=(r-1)).
+    pub a: ToeplitzKernel,
+}
+
+impl Ski {
+    /// Build from a kernel function over real-valued lags: the Gram
+    /// matrix of the kernel at inducing-point differences `(i-j)·h`.
+    pub fn from_kernel(n: usize, r: usize, k: impl Fn(f64) -> f32) -> Self {
+        let h = (n as f64 - 1.0) / (r as f64 - 1.0);
+        let a = ToeplitzKernel::from_fn(r, |lag| k(lag as f64 * h));
+        Ski { n, r, a }
+    }
+
+    /// `u = Wᵀ x` — sparse scatter, O(n).
+    pub fn wt_apply(&self, x: &[f32]) -> Vec<f32> {
+        let mut u = vec![0.0f32; self.r];
+        for (i, &xi) in x.iter().enumerate() {
+            let (lo, wl, wr) = interp_weights(i, self.n, self.r);
+            u[lo] += wl * xi;
+            u[lo + 1] += wr * xi;
+        }
+        u
+    }
+
+    /// `y = W v` — sparse gather, O(n).
+    pub fn w_apply(&self, v: &[f32]) -> Vec<f32> {
+        (0..self.n)
+            .map(|i| {
+                let (lo, wl, wr) = interp_weights(i, self.n, self.r);
+                wl * v[lo] + wr * v[lo + 1]
+            })
+            .collect()
+    }
+
+    /// O(n + r log r) apply (FFT for A when r is a power of two,
+    /// dense r² matvec otherwise — r is tiny either way).
+    pub fn apply_sparse(&self, x: &[f32]) -> Vec<f32> {
+        let u = self.wt_apply(x);
+        let v = if self.r.is_power_of_two() {
+            self.a.apply_fft(&u)
+        } else {
+            self.a.apply_dense(&u)
+        };
+        self.w_apply(&v)
+    }
+
+    /// The paper's practical path: materialised dense `W` matmuls
+    /// (O(n·r) matvec here; O(n r²)-style batched matmul on GPU).
+    pub fn apply_dense(&self, x: &[f32]) -> Vec<f32> {
+        let wd = self.w_dense();
+        // u = Wᵀ x
+        let mut u = vec![0.0f32; self.r];
+        for i in 0..self.n {
+            for j in 0..self.r {
+                u[j] += wd[i * self.r + j] * x[i];
+            }
+        }
+        let v = self.a.apply_dense(&u);
+        let mut y = vec![0.0f32; self.n];
+        for i in 0..self.n {
+            for j in 0..self.r {
+                y[i] += wd[i * self.r + j] * v[j];
+            }
+        }
+        y
+    }
+
+    /// Dense `W` (row-major n×r) — hat-function rows.
+    pub fn w_dense(&self) -> Vec<f32> {
+        let mut wd = vec![0.0f32; self.n * self.r];
+        for i in 0..self.n {
+            let (lo, wl, wr) = interp_weights(i, self.n, self.r);
+            wd[i * self.r + lo] = wl;
+            wd[i * self.r + lo + 1] = wr;
+        }
+        wd
+    }
+
+    /// Dense `W A Wᵀ` as a matrix (error analyses).
+    pub fn dense(&self) -> crate::linalg::Mat {
+        let wd = self.w_dense();
+        let w = crate::linalg::Mat::from_fn(self.n, self.r, |i, j| {
+            wd[i * self.r + j] as f64
+        });
+        w.matmul(&self.a.dense()).matmul(&w.t())
+    }
+}
+
+/// Appendix B: causally-masked SKI action via the sequential scan.
+///
+/// `x'_i = Σ_{j≤i} wᵢᵀ A wⱼ xⱼ = [W A]ᵢᵀ sᵢ`, `sᵢ = s_{i-1} + wᵢ xᵢ`.
+/// O(n·r) work but strictly sequential in `i` — the data dependency
+/// that makes causal SKI slower than the baseline FFT in practice.
+pub fn causal_ski_scan(ski: &Ski, x: &[f32]) -> Vec<f32> {
+    let n = ski.n;
+    let r = ski.r;
+    // Precompute WA rows: wa[i] = (W A)_i  (n×r).
+    let a = &ski.a;
+    let mut wa = vec![0.0f32; n * r];
+    for i in 0..n {
+        let (lo, wl, wr) = interp_weights(i, n, r);
+        for j in 0..r {
+            wa[i * r + j] = wl * a.at(lo as i64 - j as i64) + wr * a.at(lo as i64 + 1 - j as i64);
+        }
+    }
+    let mut s = vec![0.0f32; r];
+    let mut out = vec![0.0f32; n];
+    for i in 0..n {
+        let (lo, wl, wr) = interp_weights(i, n, r);
+        s[lo] += wl * x[i];
+        s[lo + 1] += wr * x[i];
+        let row = &wa[i * r..(i + 1) * r];
+        out[i] = row.iter().zip(s.iter()).map(|(a, b)| a * b).sum();
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::toeplitz::kernels::gaussian_kernel;
+    use crate::util::prop::{assert_close, check, size, vecf};
+
+    #[test]
+    fn weights_partition_unity() {
+        check("hat weights sum to 1", |rng| {
+            let n = size(rng, 8, 512);
+            let r = size(rng, 2, 32).min(n);
+            for i in 0..n {
+                let (lo, wl, wr) = interp_weights(i, n, r);
+                assert!(lo + 1 < r);
+                assert!((wl + wr - 1.0).abs() < 1e-5);
+                assert!(wl >= -1e-6 && wr >= -1e-6);
+            }
+        });
+    }
+
+    #[test]
+    fn grid_endpoints() {
+        let g = inducing_grid(100, 5);
+        assert!((g[0] - 0.0).abs() < 1e-12);
+        assert!((g[4] - 99.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn prop_sparse_matches_dense_path() {
+        check("ski sparse == dense path", |rng| {
+            let n = size(rng, 8, 256);
+            let r = size(rng, 3, 24).min(n);
+            let ski = Ski { n, r, a: ToeplitzKernel { n: r, lags: vecf(rng, 2 * r - 1) } };
+            let x = vecf(rng, n);
+            assert_close(&ski.apply_sparse(&x), &ski.apply_dense(&x), 1e-4, "paths");
+        });
+    }
+
+    #[test]
+    fn ski_exact_for_affine_kernel() {
+        // Linear interpolation reproduces affine functions exactly, so
+        // for k(t) = a·t + b the SKI approximation equals T exactly.
+        check("ski exact on affine kernels", |rng| {
+            let n = size(rng, 8, 128);
+            let r = size(rng, 2, 16).min(n);
+            let (a, b) = (rng.normal() as f64 * 0.1, rng.normal() as f64);
+            let k = |t: f64| (a * t + b) as f32;
+            let ski = Ski::from_kernel(n, r, k);
+            let t = ToeplitzKernel::from_fn(n, |lag| k(lag as f64));
+            let x = vecf(rng, n);
+            assert_close(&ski.apply_dense(&x), &t.apply_dense(&x), 2e-3, "affine");
+        });
+    }
+
+    #[test]
+    fn ski_error_shrinks_with_rank() {
+        let n = 128;
+        let x: Vec<f32> = (0..n).map(|i| ((i * 37 % 17) as f32 - 8.0) / 8.0).collect();
+        let k = |t: f64| gaussian_kernel(t, 24.0);
+        let t = ToeplitzKernel::from_fn(n, |lag| k(lag as f64));
+        let exact = t.apply_dense(&x);
+        let errs: Vec<f64> = [5usize, 9, 17, 33, 65]
+            .iter()
+            .map(|&r| {
+                let approx = Ski::from_kernel(n, r, k).apply_dense(&x);
+                exact
+                    .iter()
+                    .zip(approx.iter())
+                    .map(|(a, b)| ((a - b) as f64).powi(2))
+                    .sum::<f64>()
+                    .sqrt()
+            })
+            .collect();
+        for w in errs.windows(2) {
+            assert!(w[1] <= w[0] * 1.05, "error not shrinking: {errs:?}");
+        }
+        assert!(errs.last().unwrap() < &(errs[0] * 0.05), "{errs:?}");
+    }
+
+    #[test]
+    fn prop_causal_scan_matches_masked_dense() {
+        check("causal ski scan == lower-tri(W A Wt)", |rng| {
+            let n = size(rng, 4, 96);
+            let r = size(rng, 3, 12).min(n);
+            let ski = Ski { n, r, a: ToeplitzKernel { n: r, lags: vecf(rng, 2 * r - 1) } };
+            let x = vecf(rng, n);
+            let got = causal_ski_scan(&ski, &x);
+            // reference: dense W A Wᵀ, lower-triangular masked
+            let dense = ski.dense();
+            let want: Vec<f32> = (0..n)
+                .map(|i| {
+                    (0..=i).map(|j| dense[(i, j)] * x[j] as f64).sum::<f64>() as f32
+                })
+                .collect();
+            assert_close(&got, &want, 1e-3, "causal scan");
+        });
+    }
+}

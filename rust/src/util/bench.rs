@@ -1,0 +1,181 @@
+//! Mini benchmark harness (criterion is not resolvable offline).
+//!
+//! Provides warmup + timed iterations with mean / p50 / p95 / stddev
+//! reporting, wall-clock budgets for expensive end-to-end benches, and
+//! a tabular reporter used by every `rust/benches/*` target to print
+//! the paper's tables/figures as aligned rows.
+
+use std::time::{Duration, Instant};
+
+/// Statistics over per-iteration wall-clock samples.
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub iters: usize,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub std_s: f64,
+    pub total_s: f64,
+}
+
+impl Stats {
+    pub fn per_sec(&self) -> f64 {
+        if self.mean_s > 0.0 {
+            1.0 / self.mean_s
+        } else {
+            f64::INFINITY
+        }
+    }
+}
+
+/// Benchmark runner with per-measurement budgets.
+pub struct Bencher {
+    pub warmup_iters: usize,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    pub budget: Duration,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup_iters: 2,
+            min_iters: 5,
+            max_iters: 50,
+            budget: Duration::from_secs(10),
+        }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Bencher {
+            warmup_iters: 1,
+            min_iters: 3,
+            max_iters: 20,
+            budget: Duration::from_secs(5),
+        }
+    }
+
+    /// Run `f` repeatedly and collect timing statistics.
+    pub fn run<F: FnMut()>(&self, mut f: F) -> Stats {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let mut samples = Vec::new();
+        let start = Instant::now();
+        while samples.len() < self.max_iters
+            && (samples.len() < self.min_iters || start.elapsed() < self.budget)
+        {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        stats_of(&samples)
+    }
+}
+
+pub fn stats_of(samples: &[f64]) -> Stats {
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = sorted.len().max(1);
+    let total: f64 = sorted.iter().sum();
+    let mean = total / n as f64;
+    let var = sorted.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+    let pct = |p: f64| sorted[((p * (n - 1) as f64).round() as usize).min(n - 1)];
+    Stats {
+        iters: sorted.len(),
+        mean_s: mean,
+        p50_s: if sorted.is_empty() { 0.0 } else { pct(0.50) },
+        p95_s: if sorted.is_empty() { 0.0 } else { pct(0.95) },
+        std_s: var.sqrt(),
+        total_s: total,
+    }
+}
+
+/// Fixed-width table reporter: prints rows that mirror the paper's
+/// tables so bench output can be pasted into EXPERIMENTS.md directly.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+    title: String,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: vec![],
+            title: title.to_string(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        println!("\n== {} ==", self.title);
+        let fmt_row = |cells: &[String]| {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:<w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        println!("{}", fmt_row(&self.headers));
+        println!("{}", widths.iter().map(|w| "-".repeat(*w)).collect::<Vec<_>>().join("  "));
+        for row in &self.rows {
+            println!("{}", fmt_row(row));
+        }
+    }
+}
+
+/// Format seconds human-readably (ms below 1s).
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-3 {
+        format!("{:.1}us", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.3}s", s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_basic() {
+        let s = stats_of(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.iters, 5);
+        assert!((s.mean_s - 3.0).abs() < 1e-12);
+        assert!((s.p50_s - 3.0).abs() < 1e-12);
+        assert!(s.p95_s >= 4.0);
+    }
+
+    #[test]
+    fn bencher_runs_min_iters() {
+        let b = Bencher { warmup_iters: 0, min_iters: 4, max_iters: 8, budget: Duration::ZERO };
+        let mut count = 0;
+        let s = b.run(|| count += 1);
+        assert!(s.iters >= 4);
+        assert_eq!(count, s.iters);
+    }
+
+    #[test]
+    fn table_rows() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(&["1".into(), "2".into()]);
+        t.print(); // should not panic
+    }
+}

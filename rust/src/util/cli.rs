@@ -1,0 +1,120 @@
+//! Tiny CLI argument parser (clap is not resolvable offline).
+//!
+//! Supports subcommands, `--flag`, `--key value` / `--key=value`, and
+//! positional arguments, with typed accessors and a generated usage
+//! string.  Used by the `ski-tnn` binary, the examples and the bench
+//! harnesses.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (post-argv0).
+    pub fn parse_from<I: IntoIterator<Item = String>>(it: I, expect_subcommand: bool) -> Args {
+        let mut out = Args::default();
+        let mut iter = it.into_iter().peekable();
+        if expect_subcommand {
+            if let Some(first) = iter.peek() {
+                if !first.starts_with('-') {
+                    out.subcommand = iter.next();
+                }
+            }
+        }
+        while let Some(a) = iter.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if iter.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    out.options.insert(body.to_string(), iter.next().unwrap());
+                } else {
+                    out.flags.push(body.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn parse(expect_subcommand: bool) -> Args {
+        Args::parse_from(std::env::args().skip(1), expect_subcommand)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> usize {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> u64 {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> f64 {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    /// Comma-separated list option.
+    pub fn list_or(&self, name: &str, default: &[&str]) -> Vec<String> {
+        match self.get(name) {
+            Some(v) => v.split(',').map(|s| s.trim().to_string()).filter(|s| !s.is_empty()).collect(),
+            None => default.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(v: &[&str], sub: bool) -> Args {
+        Args::parse_from(v.iter().map(|s| s.to_string()), sub)
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = args(&["train", "--config", "lm_fd_3l", "--steps=100", "--verbose"], true);
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.get("config"), Some("lm_fd_3l"));
+        assert_eq!(a.usize_or("steps", 0), 100);
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn positional() {
+        let a = args(&["eval", "ckpt.bin", "--n", "64"], true);
+        assert_eq!(a.positional, vec!["ckpt.bin"]);
+        assert_eq!(a.usize_or("n", 0), 64);
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = args(&["--quick", "--deep"], false);
+        assert!(a.flag("quick") && a.flag("deep"));
+        assert!(a.subcommand.is_none());
+    }
+
+    #[test]
+    fn list_parsing() {
+        let a = args(&["--variants", "tnn, fd ,ski"], false);
+        assert_eq!(a.list_or("variants", &[]), vec!["tnn", "fd", "ski"]);
+        assert_eq!(a.list_or("missing", &["x"]), vec!["x"]);
+    }
+}

@@ -1,0 +1,21 @@
+//! Offline substrate utilities.
+//!
+//! The offline cargo registry carries only the `xla` crate closure and
+//! `anyhow`, so the usual ecosystem crates are hand-rolled here and
+//! tested like any other module:
+//!
+//! * [`json`]  — full-grammar JSON parser/writer (serde stand-in) for
+//!   the artifact manifest and metrics output.
+//! * [`rng`]   — splittable xoshiro-style PRNG (rand stand-in) used by
+//!   every data generator and property test; fully deterministic.
+//! * [`cli`]   — flag/option argument parser (clap stand-in).
+//! * [`bench`] — warmup+iters micro-benchmark harness with mean/p50/p95
+//!   stats and aligned-table output (criterion stand-in).
+//! * [`prop`]  — property-test driver: seeded case generation, failure
+//!   reporting with the reproducing seed (proptest stand-in).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;

@@ -1,0 +1,103 @@
+//! Property-test driver (proptest is not resolvable offline).
+//!
+//! A small randomized-testing harness: generate `CASES` random inputs
+//! from explicit generators, run the property, and on failure report
+//! the failing seed so the case is exactly reproducible with
+//! `PROP_SEED=<n> cargo test`.  No shrinking — generators are kept
+//! small-biased instead (sizes drawn log-uniformly) which in practice
+//! yields near-minimal counterexamples for the invariants we check
+//! (FFT round-trips, Toeplitz algebra, SKI error bounds, batcher
+//! invariants).
+
+use super::rng::Rng;
+
+/// Number of random cases per property (override with PROP_CASES).
+pub fn cases() -> usize {
+    std::env::var("PROP_CASES").ok().and_then(|v| v.parse().ok()).unwrap_or(32)
+}
+
+fn base_seed() -> u64 {
+    std::env::var("PROP_SEED").ok().and_then(|v| v.parse().ok()).unwrap_or(0xC0FFEE)
+}
+
+/// Run `prop` over `cases()` randomized cases. The closure receives a
+/// per-case RNG; panic (assert) inside to fail. The failing case's seed
+/// is printed before the panic propagates.
+pub fn check<F: Fn(&mut Rng) + std::panic::RefUnwindSafe>(name: &str, prop: F) {
+    let n = cases();
+    for case in 0..n {
+        let seed = base_seed().wrapping_add((case as u64).wrapping_mul(0x9E3779B97F4A7C15));
+        let result = std::panic::catch_unwind(|| {
+            let mut rng = Rng::new(seed);
+            prop(&mut rng);
+        });
+        if let Err(e) = result {
+            eprintln!(
+                "property {name:?} failed on case {case}/{n} (PROP_SEED={seed} reproduces)"
+            );
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// Log-uniform size in [lo, hi] — biases towards small structures.
+pub fn size(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+    debug_assert!(lo >= 1 && hi >= lo);
+    let (llo, lhi) = ((lo as f64).ln(), (hi as f64 + 1.0).ln());
+    ((llo + rng.f64() * (lhi - llo)).exp() as usize).clamp(lo, hi)
+}
+
+/// Random f32 vector with entries ~ N(0, 1).
+pub fn vecf(rng: &mut Rng, n: usize) -> Vec<f32> {
+    rng.normals(n)
+}
+
+/// Assert element-wise closeness with a combined abs/rel tolerance.
+pub fn assert_close(a: &[f32], b: &[f32], tol: f32, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        let scale = 1.0_f32.max(x.abs()).max(y.abs());
+        assert!(
+            (x - y).abs() <= tol * scale,
+            "{what}: mismatch at {i}: {x} vs {y} (tol {tol})"
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sizes_in_range() {
+        let mut r = Rng::new(1);
+        for _ in 0..200 {
+            let s = size(&mut r, 2, 64);
+            assert!((2..=64).contains(&s));
+        }
+    }
+
+    #[test]
+    fn check_runs_all_cases() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        static COUNT: AtomicUsize = AtomicUsize::new(0);
+        check("count", |_rng| {
+            COUNT.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(COUNT.load(Ordering::SeqCst), cases());
+    }
+
+    #[test]
+    #[should_panic]
+    fn check_propagates_failure() {
+        check("fail", |rng| {
+            assert!(rng.f32() < 2.0); // always true...
+            panic!("boom");
+        });
+    }
+
+    #[test]
+    fn assert_close_accepts_equal() {
+        assert_close(&[1.0, 2.0], &[1.0, 2.0 + 1e-7], 1e-5, "eq");
+    }
+}
