@@ -1,0 +1,297 @@
+//! Streaming autoregressive decode — constant-time-per-token inference
+//! for causal Toeplitz operators.
+//!
+//! The training story of this repo (paper §3.2/§3.3) keeps a full
+//! O(n log n) FFT per forward; this subsystem is the inference-time
+//! complement: following Qin & Zhong (2023, PAPERS.md), every causal
+//! Toeplitz kernel converts to a recurrence with per-token cost
+//! independent of sequence position, so generation does **not** pay a
+//! full-context recompute per emitted token.
+//!
+//! | module | role |
+//! |---|---|
+//! | [`ssm`] | causal-Toeplitz → rank-m diagonal SSM fit (`h = Λh + x`) |
+//! | [`sample`] | greedy / temperature / top-k sampling, seeded |
+//! | [`model`] | pure-Rust streaming TNN LM + full-context oracle |
+//! | [`session`] | per-session recurrent state, prefill + step |
+//!
+//! [`KernelDecoder`] is the per-kernel decision: long, decaying
+//! kernels stream through the fitted SSM in O(m); short kernels (or
+//! kernels the dictionary fits poorly) use an exact sliding-window
+//! recurrence in O(window).  Either way the scheduler in
+//! `server::generate` sees one `step(state, x) -> y` interface.
+
+pub mod model;
+pub mod sample;
+pub mod session;
+pub mod ssm;
+
+pub use model::{DecodeModel, DecodeModelConfig};
+pub use sample::Sampler;
+pub use session::Session;
+pub use ssm::{pole_grid, DiagonalSsm};
+
+use crate::toeplitz::ToeplitzKernel;
+
+/// Policy knobs for planning a kernel's streaming decoder.
+#[derive(Debug, Clone, Copy)]
+pub struct DecodePolicy {
+    /// SSM state size to fit for long kernels.
+    pub rank: usize,
+    /// Fall back to the exact sliding window when the fit's relative
+    /// ℓ₁ residual exceeds this (exactness beats speed on kernels the
+    /// decay dictionary cannot represent).
+    pub max_rel_residual: f64,
+}
+
+impl Default for DecodePolicy {
+    fn default() -> Self {
+        DecodePolicy { rank: 16, max_rel_residual: 0.05 }
+    }
+}
+
+/// Exact sliding-window recurrence: keeps the last `taps.len()` inputs
+/// in a ring buffer and convolves directly.  O(window) per token —
+/// constant in sequence *position*, exact for any kernel.
+#[derive(Debug, Clone)]
+pub struct SlidingWindow {
+    pub taps: Vec<f32>,
+}
+
+impl SlidingWindow {
+    pub fn step(&self, buf: &mut [f32], pos: &mut usize, x: f32) -> f32 {
+        let cap = self.taps.len();
+        debug_assert_eq!(buf.len(), cap);
+        buf[*pos] = x;
+        let mut y = 0.0f32;
+        for (tau, &k) in self.taps.iter().enumerate() {
+            // Input at position t-τ lives τ slots behind the cursor.
+            let idx = (*pos + cap - tau) % cap;
+            y += k * buf[idx];
+        }
+        *pos = (*pos + 1) % cap;
+        y
+    }
+}
+
+/// Per-kernel streaming decoder: fitted SSM or exact window.
+#[derive(Debug, Clone)]
+pub enum KernelDecoder {
+    Ssm(DiagonalSsm),
+    Window(SlidingWindow),
+}
+
+/// Mutable per-session state for one [`KernelDecoder`].
+#[derive(Debug, Clone)]
+pub enum DecoderState {
+    Ssm(Vec<f32>),
+    Window { buf: Vec<f32>, pos: usize },
+}
+
+impl KernelDecoder {
+    /// Plan a decoder for a causal kernel under `policy`.
+    ///
+    /// Kernels no longer than the SSM rank stream exactly through the
+    /// window (same cost, zero error); longer kernels get the rank-m
+    /// SSM fit unless the fit is poor, in which case the full-length
+    /// window preserves exactness.
+    pub fn plan(kernel: &ToeplitzKernel, policy: DecodePolicy) -> KernelDecoder {
+        assert!(
+            kernel.is_causal(),
+            "streaming decode needs a causal kernel (call .causal() first)"
+        );
+        let taps = kernel.causal_taps();
+        Self::plan_taps(&taps, policy)
+    }
+
+    /// Plan from raw causal taps (`taps[τ] = k[τ]`).
+    pub fn plan_taps(taps: &[f32], policy: DecodePolicy) -> KernelDecoder {
+        assert!(!taps.is_empty());
+        assert!(policy.rank >= 1);
+        if taps.len() - 1 <= policy.rank {
+            return KernelDecoder::Window(SlidingWindow { taps: taps.to_vec() });
+        }
+        let ssm = DiagonalSsm::fit(taps, policy.rank);
+        if ssm.rel_l1_residual(taps) > policy.max_rel_residual {
+            return KernelDecoder::Window(SlidingWindow { taps: taps.to_vec() });
+        }
+        KernelDecoder::Ssm(ssm)
+    }
+
+    /// Force the exact sliding-window decoder (oracle / fallback).
+    pub fn window(taps: &[f32]) -> KernelDecoder {
+        KernelDecoder::Window(SlidingWindow { taps: taps.to_vec() })
+    }
+
+    pub fn init_state(&self) -> DecoderState {
+        match self {
+            KernelDecoder::Ssm(s) => DecoderState::Ssm(s.init_state()),
+            KernelDecoder::Window(w) => {
+                DecoderState::Window { buf: vec![0.0; w.taps.len()], pos: 0 }
+            }
+        }
+    }
+
+    /// One decode step: consume `x_t`, emit `y_t`.
+    pub fn step(&self, state: &mut DecoderState, x: f32) -> f32 {
+        match (self, state) {
+            (KernelDecoder::Ssm(s), DecoderState::Ssm(h)) => s.step(h, x),
+            (KernelDecoder::Window(w), DecoderState::Window { buf, pos }) => {
+                w.step(buf, pos, x)
+            }
+            _ => panic!("decoder/state variant mismatch"),
+        }
+    }
+
+    /// Sound per-token output error bound per unit of `max|x|`
+    /// (0 for the exact window).
+    pub fn l1_error(&self) -> f64 {
+        match self {
+            KernelDecoder::Ssm(s) => s.l1_residual,
+            KernelDecoder::Window(_) => 0.0,
+        }
+    }
+
+    /// Multiply-adds per decoded token (the O(1) story in numbers).
+    pub fn cost_per_token(&self) -> usize {
+        match self {
+            KernelDecoder::Ssm(s) => 2 * s.m + 1,
+            KernelDecoder::Window(w) => w.taps.len(),
+        }
+    }
+
+    pub fn is_ssm(&self) -> bool {
+        matches!(self, KernelDecoder::Ssm(_))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{assert_close, check, size, vecf};
+
+    /// Random causal kernel via the public masking path.
+    fn random_causal(rng: &mut crate::util::rng::Rng, n: usize) -> ToeplitzKernel {
+        ToeplitzKernel { n, lags: vecf(rng, 2 * n - 1) }.causal()
+    }
+
+    #[test]
+    fn prop_window_decode_matches_causal_dense_oracle() {
+        // Satellite contract: recurrent decode == causal dense apply,
+        // token for token.  The window path must be (f32-)exact.
+        check("window decode == causal dense", |rng| {
+            let n = size(rng, 2, 128);
+            let k = random_causal(rng, n);
+            let x = vecf(rng, n);
+            let want = k.apply_dense(&x);
+            let dec = KernelDecoder::window(&k.causal_taps());
+            let mut st = dec.init_state();
+            let got: Vec<f32> = x.iter().map(|&xi| dec.step(&mut st, xi)).collect();
+            assert_close(&got, &want, 1e-4, "window decode");
+        });
+    }
+
+    #[test]
+    fn prop_ssm_decode_matches_oracle_within_fit_residual() {
+        // Satellite contract, SSM path: tolerance tied to the fitted
+        // rank m through the recorded ℓ₁ residual (plus f32 roundoff
+        // scaled by the fit's weight norm).
+        check("ssm decode ≤ residual from causal dense", |rng| {
+            let n = size(rng, 8, 128);
+            let m = size(rng, 2, 16);
+            let k = random_causal(rng, n);
+            let x = vecf(rng, n);
+            let want = k.apply_dense(&x);
+            let ssm = DiagonalSsm::fit(&k.causal_taps(), m);
+            let xmax = x.iter().fold(0.0f32, |a, &b| a.max(b.abs())) as f64;
+            let w_l1: f64 = ssm.w.iter().map(|&v| (v as f64).abs()).sum();
+            let bound = ssm.l1_residual * xmax + (1e-3 + 1e-5 * w_l1) * (1.0 + xmax);
+            let mut h = ssm.init_state();
+            for (t, (&xi, &wi)) in x.iter().zip(want.iter()).enumerate() {
+                let y = ssm.step(&mut h, xi);
+                assert!(
+                    ((y - wi) as f64).abs() <= bound,
+                    "t={t}: |{y} - {wi}| > {bound} (m={m}, n={n})"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn prop_planned_decoder_tracks_oracle() {
+        // Whatever the policy picks (SSM or fallback window), the
+        // end-to-end guarantee holds: error ≤ planned l1_error bound.
+        check("planned decoder ≤ declared error", |rng| {
+            let n = size(rng, 2, 192);
+            let k = random_causal(rng, n);
+            let x = vecf(rng, n);
+            let want = k.apply_dense(&x);
+            let dec = KernelDecoder::plan(&k, DecodePolicy::default());
+            let xmax = x.iter().fold(0.0f32, |a, &b| a.max(b.abs())) as f64;
+            let w_l1 = match &dec {
+                KernelDecoder::Ssm(s) => s.w.iter().map(|&v| (v as f64).abs()).sum(),
+                KernelDecoder::Window(_) => 0.0,
+            };
+            let bound = dec.l1_error() * xmax + (2e-3 + 1e-5 * w_l1) * (1.0 + xmax);
+            let mut st = dec.init_state();
+            for (t, (&xi, &wi)) in x.iter().zip(want.iter()).enumerate() {
+                let y = dec.step(&mut st, xi);
+                assert!(
+                    ((y - wi) as f64).abs() <= bound,
+                    "t={t}: |{y} - {wi}| > {bound} (n={n}, ssm={})",
+                    dec.is_ssm()
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn plan_prefers_window_for_short_kernels() {
+        let mut rng = crate::util::rng::Rng::new(1);
+        let short = random_causal(&mut rng, 8);
+        let dec = KernelDecoder::plan(&short, DecodePolicy { rank: 16, max_rel_residual: 0.05 });
+        assert!(!dec.is_ssm(), "short kernel must use the exact window");
+        assert_eq!(dec.cost_per_token(), 8);
+    }
+
+    #[test]
+    fn plan_uses_ssm_for_long_decaying_kernels() {
+        // Smooth exponentially-decaying kernel (the TNN regime after
+        // the decay bias): the SSM fit is tight and the plan must take
+        // the O(m) path.
+        let n = 1024;
+        let k = ToeplitzKernel::from_fn(n, |lag| {
+            if lag < 0 {
+                0.0
+            } else {
+                0.97f32.powi(lag as i32) + 0.5 * 0.80f32.powi(lag as i32)
+            }
+        });
+        let policy = DecodePolicy { rank: 32, max_rel_residual: 0.05 };
+        let dec = KernelDecoder::plan(&k, policy);
+        assert!(dec.is_ssm(), "decaying kernel must stream through the SSM");
+        assert!(
+            dec.cost_per_token() < n / 4,
+            "O(m) cost {} should beat the O(n) window",
+            dec.cost_per_token()
+        );
+    }
+
+    #[test]
+    fn plan_falls_back_on_bad_fits() {
+        // White-noise taps are maximally far from the decay
+        // dictionary: the policy must refuse the lossy SSM.
+        let mut rng = crate::util::rng::Rng::new(7);
+        let k = random_causal(&mut rng, 256);
+        let dec = KernelDecoder::plan(&k, DecodePolicy { rank: 8, max_rel_residual: 0.05 });
+        assert!(!dec.is_ssm(), "noise kernel must fall back to the exact window");
+    }
+
+    #[test]
+    #[should_panic]
+    fn plan_rejects_noncausal_kernels() {
+        let mut rng = crate::util::rng::Rng::new(3);
+        let k = ToeplitzKernel { n: 16, lags: vecf(&mut rng, 31) };
+        let _ = KernelDecoder::plan(&k, DecodePolicy::default());
+    }
+}

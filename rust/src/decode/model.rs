@@ -1,0 +1,416 @@
+//! A pure-Rust streaming TNN language model.
+//!
+//! The byte-level analysis twin of the AOT-compiled model: GTU-style
+//! blocks — per-channel *causal Toeplitz* token mixing, a sigmoid
+//! channel gate, a dense channel mix, residual — over the shared
+//! 256-byte + specials vocabulary (`data::VOCAB`).  Two execution
+//! modes compute the same function:
+//!
+//! * [`DecodeModel::step`] — streaming: each kernel runs through its
+//!   planned [`KernelDecoder`] (SSM or window), so one token costs
+//!   O(blocks·d·m + blocks·d²) **independent of position** — no
+//!   prefix recompute, no KV-cache analogue growing with context.
+//! * [`DecodeModel::forward_full`] — the full-context oracle: the same
+//!   blocks evaluated by dense causal convolution over the whole
+//!   prefix, used by the equivalence tests and as the "recompute per
+//!   token" baseline the decode bench compares against.
+//!
+//! Weights are seeded-random (this repo trains through the AOT path;
+//! the decode subsystem is about *serving mechanics*), but the layout
+//! mirrors the paper model so a converter from trained checkpoints
+//! only has to fill the same arrays.
+
+use crate::data::VOCAB;
+use crate::toeplitz::ToeplitzKernel;
+use crate::util::rng::Rng;
+
+use super::{DecodePolicy, DecoderState, KernelDecoder};
+
+/// Hyper-parameters of a streaming decode model.
+#[derive(Debug, Clone, Copy)]
+pub struct DecodeModelConfig {
+    pub vocab: usize,
+    /// Channel width.
+    pub d: usize,
+    /// Number of GTU blocks.
+    pub blocks: usize,
+    /// Kernel length = model context window.
+    pub n: usize,
+    /// Per-kernel streaming plan policy.
+    pub policy: DecodePolicy,
+    pub seed: u64,
+}
+
+impl Default for DecodeModelConfig {
+    fn default() -> Self {
+        DecodeModelConfig {
+            vocab: VOCAB,
+            d: 32,
+            blocks: 2,
+            n: 512,
+            policy: DecodePolicy::default(),
+            seed: 0,
+        }
+    }
+}
+
+/// One GTU block: d causal kernels + gate/mix projections.
+struct Block {
+    /// Original causal taps per channel (oracle + re-planning).
+    taps: Vec<Vec<f32>>,
+    decoders: Vec<KernelDecoder>,
+    /// (d, d) row-major gate projection.
+    gate: Vec<f32>,
+    /// (d, d) row-major channel mix.
+    mix: Vec<f32>,
+}
+
+/// The model: embedding, blocks, output projection.
+pub struct DecodeModel {
+    pub cfg: DecodeModelConfig,
+    /// (vocab, d) row-major.
+    embed: Vec<f32>,
+    blocks: Vec<Block>,
+    /// (d, vocab) row-major.
+    out_w: Vec<f32>,
+}
+
+/// Per-session recurrent state: one [`DecoderState`] per block/channel.
+#[derive(Clone)]
+pub struct StreamState {
+    blocks: Vec<Vec<DecoderState>>,
+}
+
+impl StreamState {
+    /// Total f32s held — the whole per-session memory footprint.
+    pub fn size(&self) -> usize {
+        self.blocks
+            .iter()
+            .flat_map(|b| b.iter())
+            .map(|s| match s {
+                DecoderState::Ssm(h) => h.len(),
+                DecoderState::Window { buf, .. } => buf.len() + 1,
+            })
+            .sum()
+    }
+}
+
+fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+/// y = M x for row-major (d, d) M.
+fn matvec(m: &[f32], x: &[f32], d: usize) -> Vec<f32> {
+    (0..d).map(|i| (0..d).map(|j| m[i * d + j] * x[j]).sum()).collect()
+}
+
+impl DecodeModel {
+    /// Seeded-random init: decaying causal kernels (ℓ₁-normalised so
+    /// every Toeplitz operator has gain ≤ 1), 1/√d projections.
+    pub fn new(cfg: DecodeModelConfig) -> DecodeModel {
+        assert!(cfg.d >= 1 && cfg.blocks >= 1 && cfg.n >= 2 && cfg.vocab >= 2);
+        let mut rng = Rng::new(cfg.seed ^ 0xDEC0DE);
+        let scale = 1.0 / (cfg.d as f32).sqrt();
+        let embed: Vec<f32> = (0..cfg.vocab * cfg.d).map(|_| 0.5 * rng.normal()).collect();
+        let out_w: Vec<f32> = (0..cfg.d * cfg.vocab).map(|_| scale * rng.normal()).collect();
+        let blocks = (0..cfg.blocks)
+            .map(|_| {
+                let taps: Vec<Vec<f32>> = (0..cfg.d)
+                    .map(|_| {
+                        // Smoothed decaying taps — the regime the
+                        // paper's decay bias enforces (§4.2), which is
+                        // also where the SSM fit is tight.
+                        let lam = 0.90 + 0.095 * rng.f32();
+                        let mut prev = 0.0f32;
+                        let mut t: Vec<f32> = (0..cfg.n)
+                            .map(|i| {
+                                // AR(1)-correlated noise under a λ^t envelope.
+                                prev = 0.7 * prev + 0.3 * rng.normal();
+                                prev * lam.powi(i as i32)
+                            })
+                            .collect();
+                        let l1: f32 = t.iter().map(|v| v.abs()).sum();
+                        if l1 > 0.0 {
+                            for v in t.iter_mut() {
+                                *v /= l1;
+                            }
+                        }
+                        t
+                    })
+                    .collect();
+                let decoders =
+                    taps.iter().map(|t| KernelDecoder::plan_taps(t, cfg.policy)).collect();
+                Block {
+                    taps,
+                    decoders,
+                    gate: (0..cfg.d * cfg.d).map(|_| scale * rng.normal()).collect(),
+                    mix: (0..cfg.d * cfg.d).map(|_| scale * rng.normal()).collect(),
+                }
+            })
+            .collect();
+        DecodeModel { cfg, embed, blocks, out_w }
+    }
+
+    /// Fresh per-session state (all zeros — position 0).
+    pub fn init_state(&self) -> StreamState {
+        StreamState {
+            blocks: self
+                .blocks
+                .iter()
+                .map(|b| b.decoders.iter().map(KernelDecoder::init_state).collect())
+                .collect(),
+        }
+    }
+
+    /// One streaming step: consume `token`, return next-token logits.
+    /// O(1) in sequence position.
+    pub fn step(&self, state: &mut StreamState, token: i32) -> Vec<f32> {
+        let d = self.cfg.d;
+        let tok = (token.max(0) as usize).min(self.cfg.vocab - 1);
+        let mut x: Vec<f32> = self.embed[tok * d..(tok + 1) * d].to_vec();
+        for (block, states) in self.blocks.iter().zip(state.blocks.iter_mut()) {
+            let u: Vec<f32> = block
+                .decoders
+                .iter()
+                .zip(states.iter_mut())
+                .enumerate()
+                .map(|(c, (dec, st))| dec.step(st, x[c]))
+                .collect();
+            let g = matvec(&block.gate, &x, d);
+            let v: Vec<f32> = u.iter().zip(g.iter()).map(|(&ui, &gi)| ui * sigmoid(gi)).collect();
+            let h = matvec(&block.mix, &v, d);
+            for c in 0..d {
+                x[c] += h[c].tanh();
+            }
+        }
+        let mut logits = vec![0.0f32; self.cfg.vocab];
+        for c in 0..d {
+            let xc = x[c];
+            let row = &self.out_w[c * self.cfg.vocab..(c + 1) * self.cfg.vocab];
+            for (l, &w) in logits.iter_mut().zip(row.iter()) {
+                *l += xc * w;
+            }
+        }
+        logits
+    }
+
+    /// Full-context oracle: logits at every position, computed by
+    /// dense causal convolution over the whole prefix (O(T·n) per
+    /// channel — what a server WITHOUT this subsystem would pay every
+    /// emitted token, modulo FFT log factors).
+    pub fn forward_full(&self, tokens: &[i32]) -> Vec<Vec<f32>> {
+        let d = self.cfg.d;
+        let t_len = tokens.len();
+        // xs[t] = residual stream at position t.
+        let mut xs: Vec<Vec<f32>> = tokens
+            .iter()
+            .map(|&tk| {
+                let tok = (tk.max(0) as usize).min(self.cfg.vocab - 1);
+                self.embed[tok * d..(tok + 1) * d].to_vec()
+            })
+            .collect();
+        for block in &self.blocks {
+            // Per-channel causal convolution with the ORIGINAL taps.
+            let mut us = vec![vec![0.0f32; d]; t_len];
+            for (c, taps) in block.taps.iter().enumerate() {
+                for t in 0..t_len {
+                    let mut acc = 0.0f32;
+                    for (tau, &k) in taps.iter().enumerate().take(t + 1) {
+                        acc += k * xs[t - tau][c];
+                    }
+                    us[t][c] = acc;
+                }
+            }
+            for t in 0..t_len {
+                let g = matvec(&block.gate, &xs[t], d);
+                let v: Vec<f32> =
+                    us[t].iter().zip(g.iter()).map(|(&ui, &gi)| ui * sigmoid(gi)).collect();
+                let h = matvec(&block.mix, &v, d);
+                for c in 0..d {
+                    xs[t][c] += h[c].tanh();
+                }
+            }
+        }
+        xs.iter()
+            .map(|x| {
+                let mut logits = vec![0.0f32; self.cfg.vocab];
+                for c in 0..d {
+                    let xc = x[c];
+                    let row = &self.out_w[c * self.cfg.vocab..(c + 1) * self.cfg.vocab];
+                    for (l, &w) in logits.iter_mut().zip(row.iter()) {
+                        *l += xc * w;
+                    }
+                }
+                logits
+            })
+            .collect()
+    }
+
+    /// How many kernels stream through the O(m) SSM path vs the
+    /// window fallback: `(ssm, window)`.
+    pub fn decoder_mix(&self) -> (usize, usize) {
+        let ssm = self
+            .blocks
+            .iter()
+            .flat_map(|b| b.decoders.iter())
+            .filter(|d| d.is_ssm())
+            .count();
+        let total: usize = self.blocks.iter().map(|b| b.decoders.len()).sum();
+        (ssm, total - ssm)
+    }
+
+    /// Worst-case per-token multiply-adds through the token-mixing
+    /// decoders (the position-independent cost).
+    pub fn decode_cost_per_token(&self) -> usize {
+        self.blocks
+            .iter()
+            .flat_map(|b| b.decoders.iter())
+            .map(KernelDecoder::cost_per_token)
+            .sum()
+    }
+
+    /// The model's kernels as [`ToeplitzKernel`]s (benches/analyses).
+    pub fn kernel(&self, block: usize, channel: usize) -> ToeplitzKernel {
+        ToeplitzKernel::from_causal_taps(&self.blocks[block].taps[channel])
+    }
+}
+
+/// Bytes → token ids (the shared byte vocabulary).
+pub fn tokenize(text: &str) -> Vec<i32> {
+    text.bytes().map(|b| b as i32).collect()
+}
+
+/// Token ids → printable text (non-byte specials render as '·').
+pub fn detokenize(tokens: &[i32]) -> String {
+    tokens
+        .iter()
+        .map(|&t| {
+            if (0..256).contains(&t) {
+                let b = t as u8;
+                if b.is_ascii_graphic() || b == b' ' || b == b'\n' {
+                    b as char
+                } else {
+                    '·'
+                }
+            } else {
+                '·'
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    fn tiny_cfg(seed: u64) -> DecodeModelConfig {
+        DecodeModelConfig {
+            d: 8,
+            blocks: 2,
+            n: 48,
+            policy: DecodePolicy { rank: 8, max_rel_residual: 0.05 },
+            seed,
+            ..DecodeModelConfig::default()
+        }
+    }
+
+    #[test]
+    fn prop_streaming_matches_full_context_forward() {
+        // The tentpole equivalence at model level: token-for-token,
+        // streaming decode == full-context recompute.  Exact-window
+        // policy removes SSM fit error so tolerance is pure f32 noise.
+        check("stream == full forward (exact windows)", |rng| {
+            let mut cfg = tiny_cfg(rng.next_u64());
+            cfg.policy = DecodePolicy { rank: 8, max_rel_residual: 0.0 };
+            cfg.n = 24;
+            let model = DecodeModel::new(cfg);
+            let toks: Vec<i32> = (0..20).map(|_| rng.below(256) as i32).collect();
+            let want = model.forward_full(&toks);
+            let mut st = model.init_state();
+            for (t, &tk) in toks.iter().enumerate() {
+                let got = model.step(&mut st, tk);
+                for (v, (a, b)) in got.iter().zip(want[t].iter()).enumerate() {
+                    assert!(
+                        (a - b).abs() < 1e-4 * (1.0 + b.abs()),
+                        "t={t} vocab={v}: {a} vs {b}"
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn streaming_with_ssm_tracks_full_forward() {
+        // Default policy (SSM where the fit is tight): logits drift is
+        // bounded — enough that greedy decode stays sensible.
+        let model = DecodeModel::new(tiny_cfg(3));
+        let toks: Vec<i32> = (0..40).map(|i| (i * 17 % 256) as i32).collect();
+        let want = model.forward_full(&toks);
+        let mut st = model.init_state();
+        let mut worst = 0.0f32;
+        for (t, &tk) in toks.iter().enumerate() {
+            let got = model.step(&mut st, tk);
+            for (a, b) in got.iter().zip(want[t].iter()) {
+                worst = worst.max((a - b).abs());
+            }
+        }
+        // Kernels are ℓ₁-normalised and the policy caps the fit's
+        // relative residual at 5%, so drift stays well under the
+        // logits' O(1) scale.
+        assert!(worst < 1.0, "ssm logits drift {worst} too large");
+    }
+
+    #[test]
+    fn state_is_per_session() {
+        // Two sessions with different prefixes must not interfere.
+        let model = DecodeModel::new(tiny_cfg(5));
+        let mut a = model.init_state();
+        let mut b = model.init_state();
+        let la1 = model.step(&mut a, 10);
+        let _ = model.step(&mut b, 200);
+        let mut a2 = model.init_state();
+        let la2 = model.step(&mut a2, 10);
+        assert_eq!(la1, la2, "fresh sessions with same input must agree");
+        let lb = model.step(&mut b, 10);
+        assert_ne!(la1, lb, "different histories must give different logits");
+    }
+
+    #[test]
+    fn logits_are_finite_and_vocab_sized() {
+        let model = DecodeModel::new(tiny_cfg(7));
+        let mut st = model.init_state();
+        for t in 0..64 {
+            let logits = model.step(&mut st, (t % 259) as i32);
+            assert_eq!(logits.len(), model.cfg.vocab);
+            assert!(logits.iter().all(|v| v.is_finite()));
+        }
+    }
+
+    #[test]
+    fn decoder_mix_reports_ssm_usage() {
+        // With the default policy on decaying kernels most channels
+        // should stream through the SSM path.
+        let cfg = DecodeModelConfig {
+            d: 8,
+            blocks: 1,
+            n: 256,
+            policy: DecodePolicy { rank: 16, max_rel_residual: 0.10 },
+            seed: 11,
+            ..DecodeModelConfig::default()
+        };
+        let model = DecodeModel::new(cfg);
+        let (ssm, win) = model.decoder_mix();
+        assert_eq!(ssm + win, 8);
+        assert!(
+            model.decode_cost_per_token() <= 8 * 256,
+            "decode cost must not exceed the all-window worst case"
+        );
+    }
+
+    #[test]
+    fn tokenize_roundtrip() {
+        let s = "SKI to go faster!";
+        assert_eq!(detokenize(&tokenize(s)), s);
+    }
+}

@@ -26,7 +26,8 @@
 //! |---|---|
 //! | [`runtime`] | PJRT client, artifact manifest, executable cache, device buffers |
 //! | [`coordinator`] | training orchestrator: step loop, prefetch, eval, checkpoints |
-//! | [`server`] | dynamic batcher + request router for serving |
+//! | [`server`] | dynamic batcher + request router, generation scheduler |
+//! | [`decode`] | streaming decode: causal-Toeplitz→SSM, sessions, sampling |
 //! | [`data`] | synthetic corpus + LRA-style task generators, batchers |
 //! | [`toeplitz`] | pure-Rust Toeplitz/SKI substrate (oracles, baselines, App. B scan) |
 //! | [`dsp`] | from-scratch FFT/rFFT + discrete Hilbert transform |
@@ -37,6 +38,7 @@
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod decode;
 pub mod dsp;
 pub mod linalg;
 pub mod nn;

@@ -6,7 +6,10 @@
 //! * `train` — run the training orchestrator on one config.
 //! * `eval`  — evaluate a checkpoint (or fresh init) on the val split.
 //! * `serve` — start the dynamic batcher on a config and drive it with
-//!   synthetic client load, reporting latency percentiles.
+//!   synthetic client load, reporting server-side latency percentiles.
+//! * `generate` — streaming autoregressive generation through the
+//!   decode subsystem (causal-Toeplitz→SSM, O(1) per token): one-shot
+//!   text generation or a continuous-batching load test.
 //!
 //! Shared flags come from [`ski_tnn::config::RunConfig`]
 //! (`--config-file run.json` plus per-flag overrides).  Examples:
@@ -16,6 +19,8 @@
 //! ski-tnn train --config lm_fd_3l --steps 300 --out-dir runs/fd
 //! ski-tnn eval  --config lm_fd_3l --resume runs/fd/lm_fd_3l_step300.ckpt
 //! ski-tnn serve --config lra_text_fd --requests 200 --clients 4
+//! ski-tnn generate --prompt "ski to go " --tokens 120 --temperature 0.8
+//! ski-tnn generate --sessions 8 --requests 64 --tokens 96 --slots 8
 //! ```
 
 use anyhow::{bail, Result};
@@ -34,9 +39,10 @@ fn main() -> Result<()> {
         Some("train") => cmd_train(&args),
         Some("eval") => cmd_eval(&args),
         Some("serve") => cmd_serve(&args),
-        Some(other) => bail!("unknown subcommand {other:?} (try list|train|eval|serve)"),
+        Some("generate") => cmd_generate(&args),
+        Some(other) => bail!("unknown subcommand {other:?} (try list|train|eval|serve|generate)"),
         None => {
-            eprintln!("usage: ski-tnn <list|train|eval|serve> [flags]");
+            eprintln!("usage: ski-tnn <list|train|eval|serve|generate> [flags]");
             eprintln!("see `cargo doc` or README.md for the full flag set");
             Ok(())
         }
@@ -133,17 +139,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let workers: Vec<_> = (0..clients)
         .map(|c| {
             let h = handle.clone();
-            std::thread::spawn(move || -> Vec<f64> {
+            std::thread::spawn(move || {
                 let mut rng = ski_tnn::util::rng::Rng::new(seed + c as u64);
-                let mut lat = Vec::with_capacity(per_client);
                 for _ in 0..per_client {
                     let len = 8 + rng.below(n - 8);
                     let ids: Vec<i32> = (0..len).map(|_| rng.below(256) as i32).collect();
-                    let t0 = std::time::Instant::now();
                     let _ = h.infer(ids).expect("infer");
-                    lat.push(t0.elapsed().as_secs_f64());
                 }
-                lat
             })
         })
         .collect();
@@ -151,9 +153,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let t0 = std::time::Instant::now();
     let stats = batcher.run(serve_model(&engine, &state))?;
     let total = t0.elapsed().as_secs_f64();
-    let mut lats: Vec<f64> = workers.into_iter().flat_map(|w| w.join().unwrap()).collect();
-    lats.sort_by(|a, b| a.total_cmp(b));
-    let pct = |p: f64| lats[((lats.len() as f64 - 1.0) * p) as usize];
+    for w in workers {
+        w.join().unwrap();
+    }
     println!(
         "served {} requests in {} batches ({:.1}% fill), {:.1} req/s",
         stats.requests,
@@ -161,12 +163,125 @@ fn cmd_serve(args: &Args) -> Result<()> {
         100.0 * stats.mean_batch_fill(cfg.batch),
         stats.requests as f64 / total
     );
+    // Queue latency straight from the batcher — no client-side timing.
+    let (p50, p95, p99) = stats.queue_percentiles();
     println!(
-        "latency p50 {:.1} ms  p95 {:.1} ms  p99 {:.1} ms  (exec {:.1}% of wall)",
-        1e3 * pct(0.50),
-        1e3 * pct(0.95),
-        1e3 * pct(0.99),
+        "queue wait p50 {:.1} ms  p95 {:.1} ms  p99 {:.1} ms  (exec {:.1}% of wall)",
+        1e3 * p50,
+        1e3 * p95,
+        1e3 * p99,
         100.0 * stats.exec_seconds / total
+    );
+    Ok(())
+}
+
+fn cmd_generate(args: &Args) -> Result<()> {
+    use ski_tnn::decode::model::{detokenize, tokenize};
+    use ski_tnn::decode::{DecodeModel, DecodeModelConfig, DecodePolicy};
+    use ski_tnn::server::{GenConfig, GenParams, GenScheduler};
+
+    let seed = args.u64_or("seed", 0);
+    let cfg = DecodeModelConfig {
+        d: args.usize_or("d", 32),
+        blocks: args.usize_or("blocks", 2),
+        n: args.usize_or("n", 1024),
+        policy: DecodePolicy {
+            rank: args.usize_or("rank", 16),
+            max_rel_residual: args.f64_or("max-rel-residual", 0.05),
+        },
+        seed,
+        ..DecodeModelConfig::default()
+    };
+    let t0 = std::time::Instant::now();
+    let model = DecodeModel::new(cfg);
+    let (ssm, win) = model.decoder_mix();
+    println!(
+        "decode model d={} blocks={} n={} rank={}: {} SSM / {} window decoders, \
+         ~{} token-mix madds/token (planned in {:.2}s)",
+        cfg.d,
+        cfg.blocks,
+        cfg.n,
+        cfg.policy.rank,
+        ssm,
+        win,
+        model.decode_cost_per_token(),
+        t0.elapsed().as_secs_f64()
+    );
+
+    let params = GenParams {
+        max_new: args.usize_or("tokens", 64),
+        temperature: args.f64_or("temperature", 0.0) as f32,
+        top_k: args.usize_or("top-k", 0),
+        seed,
+    };
+    let sched = GenScheduler::new(GenConfig {
+        max_sessions: args.usize_or("slots", 8),
+        queue_depth: args.usize_or("queue-depth", 64),
+        max_new_cap: args.usize_or("max-new-cap", 512),
+    });
+    let handle = sched.handle();
+    let sessions = args.usize_or("sessions", 1);
+
+    if sessions <= 1 {
+        // One-shot generation: print the continuation.
+        let prompt_text = args.str_or("prompt", "the toeplitz operator ");
+        let prompt = tokenize(&prompt_text);
+        let t = std::thread::spawn(move || handle.generate(prompt, params));
+        let stats = sched.run(&model)?;
+        let resp = t.join().expect("client thread")?;
+        println!("prompt : {prompt_text:?}");
+        println!("output : {:?}", detokenize(&resp.tokens));
+        println!(
+            "{} tokens, {:.2} ms prefill, {:.3} ms/token decode ({:.0} tok/s)",
+            resp.tokens.len(),
+            1e3 * stats.prefill_seconds,
+            1e3 * stats.decode_seconds / resp.tokens.len().max(1) as f64,
+            stats.tokens_per_sec()
+        );
+        return Ok(());
+    }
+
+    // Load test: many client threads against the continuous-batching
+    // scheduler, stats reported from the server side.
+    let requests = args.usize_or("requests", sessions * 4);
+    let per_client = (requests / sessions).max(1);
+    let workers: Vec<_> = (0..sessions)
+        .map(|c| {
+            let h = handle.clone();
+            std::thread::spawn(move || {
+                let mut rng = ski_tnn::util::rng::Rng::new(seed ^ (c as u64 + 1));
+                for _ in 0..per_client {
+                    let len = 4 + rng.below(28);
+                    let prompt: Vec<i32> = (0..len).map(|_| rng.below(256) as i32).collect();
+                    let p = GenParams { seed: rng.next_u64(), ..params };
+                    let _ = h.generate(prompt, p).expect("generate");
+                }
+            })
+        })
+        .collect();
+    drop(handle);
+    let t0 = std::time::Instant::now();
+    let stats = sched.run(&model)?;
+    let wall = t0.elapsed().as_secs_f64();
+    for w in workers {
+        w.join().unwrap();
+    }
+    let (p50, p95, p99) = stats.queue_percentiles();
+    println!(
+        "{} sessions, {} tokens in {} ticks (mean concurrency {:.2})",
+        stats.sessions,
+        stats.tokens,
+        stats.ticks,
+        stats.mean_concurrency()
+    );
+    println!(
+        "throughput {:.0} tok/s aggregate ({:.0} tok/s wall), queue wait p50 {:.1} ms  \
+         p95 {:.1} ms  p99 {:.1} ms",
+        stats.tokens_per_sec(),
+        stats.tokens as f64 / wall.max(1e-9),
+        1e3 * p50,
+        1e3 * p95,
+        1e3 * p99
     );
     Ok(())
 }

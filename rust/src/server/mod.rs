@@ -1,4 +1,5 @@
-//! Serving — dynamic batcher + request router over the `logits` entry.
+//! Serving — dynamic batcher + request router over the `logits` entry,
+//! and the session-aware generation scheduler.
 //!
 //! The inference-side counterpart of the coordinator (vLLM-router
 //! shaped, scaled to this paper's needs): client threads submit token
@@ -11,7 +12,15 @@
 //! is unit-testable without XLA; [`serve_model`] adapts a
 //! [`ModelState`](crate::runtime::ModelState) + engine into that
 //! closure for the real thing.
+//!
+//! [`GenScheduler`] is the autoregressive sibling: a continuous-
+//! batching loop over live [`crate::decode::Session`]s that interleaves
+//! one O(1) decode step per session per tick (see `server::generate`).
 
 mod batcher;
+mod generate;
 
 pub use batcher::{serve_model, Batcher, BatcherStats, Request, Response, ServerConfig};
+pub use generate::{
+    GenClient, GenConfig, GenParams, GenRequest, GenResponse, GenScheduler, GenStats,
+};

@@ -46,6 +46,29 @@ impl ToeplitzKernel {
         self
     }
 
+    /// Build a causal kernel from its non-negative lags
+    /// (`taps[t] = k[t]`, all negative lags zero).
+    pub fn from_causal_taps(taps: &[f32]) -> Self {
+        let n = taps.len();
+        assert!(n >= 1, "causal kernel needs at least the lag-0 tap");
+        let mut lags = vec![0.0f32; 2 * n - 1];
+        lags[n - 1..].copy_from_slice(taps);
+        ToeplitzKernel { n, lags }
+    }
+
+    /// Non-negative lags `k[0..n-1]` — the taps a causal (streaming)
+    /// decoder needs.  Lag order matches [`ToeplitzKernel::at`]:
+    /// `causal_taps()[t] == at(t)`.
+    pub fn causal_taps(&self) -> Vec<f32> {
+        self.lags[self.n - 1..].to_vec()
+    }
+
+    /// True when every strictly-negative lag is zero, i.e. the operator
+    /// is lower-triangular and can be decoded autoregressively.
+    pub fn is_causal(&self) -> bool {
+        self.lags[..self.n - 1].iter().all(|&v| v == 0.0)
+    }
+
     /// Dense O(n²) action `y = T x`.
     pub fn apply_dense(&self, x: &[f32]) -> Vec<f32> {
         let n = self.n;
@@ -138,6 +161,32 @@ mod tests {
             }
             let y1 = k.apply_dense(&x);
             assert_close(&y0[..cut], &y1[..cut], 1e-5, "prefix changed");
+        });
+    }
+
+    #[test]
+    fn prop_causal_taps_roundtrip() {
+        check("causal taps roundtrip", |rng| {
+            let n = size(rng, 1, 128);
+            let taps = vecf(rng, n);
+            let k = ToeplitzKernel::from_causal_taps(&taps);
+            assert!(k.is_causal());
+            assert_eq!(k.causal_taps(), taps);
+            for (t, &v) in taps.iter().enumerate() {
+                assert_eq!(k.at(t as i64), v);
+            }
+        });
+    }
+
+    #[test]
+    fn prop_causal_masking_reaches_taps() {
+        check("causal() then causal_taps == positive lags", |rng| {
+            let n = size(rng, 2, 64);
+            let k = ToeplitzKernel { n, lags: vecf(rng, 2 * n - 1) };
+            let taps: Vec<f32> = (0..n as i64).map(|t| k.at(t)).collect();
+            let masked = k.causal();
+            assert!(masked.is_causal());
+            assert_eq!(masked.causal_taps(), taps);
         });
     }
 

@@ -19,7 +19,14 @@
 use super::ToeplitzKernel;
 
 /// `r` uniform inducing points covering `[0, n-1]`.
+///
+/// The hat-function interpolation needs at least two inducing points
+/// (every observation sits between a left and a right neighbour); the
+/// spacing `h = (n-1)/(r-1)` is degenerate below that, so `r < 2` is a
+/// caller bug and asserts rather than returning NaN/∞ grids.
 pub fn inducing_grid(n: usize, r: usize) -> Vec<f64> {
+    assert!(r >= 2, "SKI needs at least 2 inducing points, got r={r}");
+    assert!(n >= 1, "inducing grid over an empty axis");
     let h = (n as f64 - 1.0) / (r as f64 - 1.0);
     (0..r).map(|j| j as f64 * h).collect()
 }
@@ -27,8 +34,10 @@ pub fn inducing_grid(n: usize, r: usize) -> Vec<f64> {
 /// Sparse interpolation weights for observation point `i`:
 /// returns (left inducing index, weight of left, weight of right).
 pub fn interp_weights(i: usize, n: usize, r: usize) -> (usize, f32, f32) {
+    assert!(r >= 2, "SKI needs at least 2 inducing points, got r={r}");
+    assert!(i < n, "observation index {i} out of range (n={n})");
     let h = (n as f64 - 1.0) / (r as f64 - 1.0);
-    let g = i as f64 / h;
+    let g = if h > 0.0 { i as f64 / h } else { 0.0 };
     let lo = (g.floor() as usize).min(r - 2);
     let frac = (g - lo as f64) as f32;
     (lo, 1.0 - frac, frac)
@@ -47,6 +56,7 @@ impl Ski {
     /// Build from a kernel function over real-valued lags: the Gram
     /// matrix of the kernel at inducing-point differences `(i-j)·h`.
     pub fn from_kernel(n: usize, r: usize, k: impl Fn(f64) -> f32) -> Self {
+        assert!(r >= 2, "SKI needs at least 2 inducing points, got r={r}");
         let h = (n as f64 - 1.0) / (r as f64 - 1.0);
         let a = ToeplitzKernel::from_fn(r, |lag| k(lag as f64 * h));
         Ski { n, r, a }
@@ -181,6 +191,44 @@ mod tests {
         let g = inducing_grid(100, 5);
         assert!((g[0] - 0.0).abs() < 1e-12);
         assert!((g[4] - 99.0).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic(expected = "at least 2 inducing points")]
+    fn grid_rejects_rank_one() {
+        let _ = inducing_grid(100, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "at least 2 inducing points")]
+    fn weights_reject_rank_one() {
+        let _ = interp_weights(0, 100, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "at least 2 inducing points")]
+    fn from_kernel_rejects_rank_zero() {
+        let _ = Ski::from_kernel(64, 0, |_| 1.0);
+    }
+
+    #[test]
+    fn minimum_rank_two_works_end_to_end() {
+        // The r = 2 floor previously divided by r-1 = 1 (fine) but the
+        // guard also protects lo+1 indexing; make sure the minimum
+        // rank actually runs every apply path.
+        let ski = Ski::from_kernel(16, 2, |t| gaussian_kernel(t, 8.0));
+        let x: Vec<f32> = (0..16).map(|i| (i as f32 * 0.3).sin()).collect();
+        let a = ski.apply_sparse(&x);
+        let b = ski.apply_dense(&x);
+        assert_close(&a, &b, 1e-4, "r=2 sparse vs dense");
+        for i in 0..16 {
+            let (lo, wl, wr) = interp_weights(i, 16, 2);
+            assert_eq!(lo, 0);
+            assert!((wl + wr - 1.0).abs() < 1e-6);
+        }
+        // Degenerate-but-legal n = 1 observation axis.
+        let (lo, wl, _) = interp_weights(0, 1, 2);
+        assert_eq!((lo, wl), (0, 1.0));
     }
 
     #[test]

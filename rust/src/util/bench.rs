@@ -139,6 +139,37 @@ impl Table {
     }
 }
 
+/// Percentile of an ascending-sorted sample set (nearest-rank on the
+/// inclusive scale; 0.0 for an empty set).
+pub fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((p.clamp(0.0, 1.0) * (sorted.len() - 1) as f64).round() as usize)
+        .min(sorted.len() - 1);
+    sorted[idx]
+}
+
+/// Percentiles of an unsorted sample set: sorts one copy, then reads
+/// every requested point (shared by the server-side latency reports).
+pub fn percentiles_of(samples: &[f64], ps: &[f64]) -> Vec<f64> {
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(|a, b| a.total_cmp(b));
+    ps.iter().map(|&p| percentile(&sorted, p)).collect()
+}
+
+/// Append to a bounded sample window: grows to `cap`, then overwrites
+/// in arrival order so the window always holds the most recent `cap`
+/// samples.  Keeps long-lived servers' latency accounting O(1) in
+/// request count; `seen` is the total ever recorded.
+pub fn push_sample(samples: &mut Vec<f64>, cap: usize, seen: usize, v: f64) {
+    if samples.len() < cap {
+        samples.push(v);
+    } else {
+        samples[seen % cap] = v;
+    }
+}
+
 /// Format seconds human-readably (ms below 1s).
 pub fn fmt_secs(s: f64) -> String {
     if s < 1e-3 {
@@ -170,6 +201,26 @@ mod tests {
         let s = b.run(|| count += 1);
         assert!(s.iters >= 4);
         assert_eq!(count, s.iters);
+    }
+
+    #[test]
+    fn percentiles_of_unsorted() {
+        let ps = percentiles_of(&[5.0, 1.0, 3.0, 2.0, 4.0], &[0.0, 0.5, 1.0]);
+        assert_eq!(ps, vec![1.0, 3.0, 5.0]);
+        assert_eq!(percentiles_of(&[], &[0.5]), vec![0.0]);
+    }
+
+    #[test]
+    fn push_sample_caps_and_wraps() {
+        let mut v = Vec::new();
+        for i in 0..10 {
+            push_sample(&mut v, 4, i, i as f64);
+        }
+        assert_eq!(v.len(), 4, "window must stay at cap");
+        // Most recent 4 samples survive (ring order, not sorted).
+        let mut got = v.clone();
+        got.sort_by(|a, b| a.total_cmp(b));
+        assert_eq!(got, vec![6.0, 7.0, 8.0, 9.0]);
     }
 
     #[test]

@@ -20,6 +20,23 @@ fn artifacts() -> std::path::PathBuf {
     Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
 }
 
+/// Engine over built artifacts with a native PJRT backend, else `None`
+/// and the test self-skips (artifacts come from `make artifacts`; the
+/// offline build ships an xla shim that cannot execute HLO).
+fn engine() -> Option<Engine> {
+    let dir = artifacts();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping artifact-gated test: {} missing", dir.display());
+        return None;
+    }
+    let eng = Engine::new(&dir).unwrap();
+    if eng.platform().contains("shim") {
+        eprintln!("skipping artifact-gated test: no native PJRT backend");
+        return None;
+    }
+    Some(eng)
+}
+
 fn quick_run(config: &str, steps: usize) -> RunConfig {
     RunConfig {
         config: config.into(),
@@ -35,7 +52,7 @@ fn quick_run(config: &str, steps: usize) -> RunConfig {
 
 #[test]
 fn train_smoke_fd_causal_loss_decreases() {
-    let engine = Engine::new(artifacts()).unwrap();
+    let Some(engine) = engine() else { return };
     let mut trainer = Trainer::new(&engine, quick_run("lm_fd_3l", 12)).unwrap();
     let stats = trainer.train().unwrap();
     assert!(stats.loss.is_finite());
@@ -51,7 +68,7 @@ fn train_smoke_fd_causal_loss_decreases() {
 
 #[test]
 fn train_smoke_ski_bidirectional() {
-    let engine = Engine::new(artifacts()).unwrap();
+    let Some(engine) = engine() else { return };
     let mut trainer = Trainer::new(&engine, quick_run("lm_bidir_ski", 6)).unwrap();
     let stats = trainer.train().unwrap();
     assert!(stats.loss.is_finite() && stats.ppl.is_finite());
@@ -62,7 +79,7 @@ fn train_smoke_ski_bidirectional() {
 
 #[test]
 fn train_smoke_base_variant() {
-    let engine = Engine::new(artifacts()).unwrap();
+    let Some(engine) = engine() else { return };
     let mut trainer = Trainer::new(&engine, quick_run("lm_base_3l", 4)).unwrap();
     let stats = trainer.train().unwrap();
     assert!(stats.loss.is_finite());
@@ -70,7 +87,7 @@ fn train_smoke_base_variant() {
 
 #[test]
 fn eval_is_deterministic() {
-    let engine = Engine::new(artifacts()).unwrap();
+    let Some(engine) = engine() else { return };
     let mut trainer = Trainer::new(&engine, quick_run("lm_fd_3l", 0)).unwrap();
     let a = trainer.eval().unwrap();
     let b = trainer.eval().unwrap();
@@ -79,7 +96,7 @@ fn eval_is_deterministic() {
 
 #[test]
 fn checkpoint_roundtrip_resumes_bit_exact() {
-    let engine = Engine::new(artifacts()).unwrap();
+    let Some(engine) = engine() else { return };
     let dir = std::env::temp_dir().join(format!("ski_tnn_ckpt_{}", std::process::id()));
     std::fs::create_dir_all(&dir).unwrap();
 
@@ -114,7 +131,7 @@ fn checkpoint_roundtrip_resumes_bit_exact() {
 
 #[test]
 fn checkpoint_rejects_wrong_magic() {
-    let engine = Engine::new(artifacts()).unwrap();
+    let Some(engine) = engine() else { return };
     let path = std::env::temp_dir().join(format!("ski_tnn_bad_{}.ckpt", std::process::id()));
     std::fs::write(&path, b"not a checkpoint at all").unwrap();
     assert!(ModelState::load(&engine, &path).is_err());
@@ -124,7 +141,7 @@ fn checkpoint_rejects_wrong_magic() {
 #[test]
 fn fig7_eval_lengths_run() {
     // fwd_n64 evaluates the n=256-trained model at n=64 via the warp.
-    let engine = Engine::new(artifacts()).unwrap();
+    let Some(engine) = engine() else { return };
     let state = ModelState::init(&engine, "lm_fd_3l", 0).unwrap();
     let corpus = Arc::new(Corpus::generate(0, 60_000).tokens());
     let mut src: Box<dyn BatchSource> =
@@ -137,7 +154,7 @@ fn fig7_eval_lengths_run() {
 
 #[test]
 fn logits_entry_serves_through_batcher() {
-    let engine = Engine::new(artifacts()).unwrap();
+    let Some(engine) = engine() else { return };
     let state = ModelState::init(&engine, "lm_fd_3l", 3).unwrap();
     let cfg = state.config.clone();
     engine.load(&cfg.name, "logits").unwrap();
@@ -169,7 +186,7 @@ fn logits_entry_serves_through_batcher() {
 
 #[test]
 fn batch_for_builds_every_task_kind() {
-    let engine = Engine::new(artifacts()).unwrap();
+    let Some(engine) = engine() else { return };
     let corpus = Arc::new(Corpus::generate(0, 60_000).tokens());
     for (config, needs_corpus) in [
         ("lm_fd_3l", true),
@@ -191,7 +208,7 @@ fn batch_for_builds_every_task_kind() {
 
 #[test]
 fn trainer_rejects_mismatched_resume() {
-    let engine = Engine::new(artifacts()).unwrap();
+    let Some(engine) = engine() else { return };
     let dir = std::env::temp_dir().join(format!("ski_tnn_mm_{}", std::process::id()));
     std::fs::create_dir_all(&dir).unwrap();
     let state = ModelState::init(&engine, "lm_base_3l", 0).unwrap();
@@ -210,7 +227,7 @@ fn divergent_loss_is_reported() {
     // in), so simulate divergence detection at the metric level: the
     // trainer bails on non-finite loss — exercised here through the
     // public API by checking finite losses on a real run instead.
-    let engine = Engine::new(artifacts()).unwrap();
+    let Some(engine) = engine() else { return };
     let mut trainer = Trainer::new(&engine, quick_run("lm_fd_3l", 2)).unwrap();
     trainer.train().unwrap();
     for (_, loss) in trainer.metrics.series("train", "loss") {
@@ -220,7 +237,7 @@ fn divergent_loss_is_reported() {
 
 #[test]
 fn host_tensor_checks_against_manifest() {
-    let engine = Engine::new(artifacts()).unwrap();
+    let Some(engine) = engine() else { return };
     let cfg = engine.config("lm_fd_3l").unwrap();
     let bi = cfg.batch_inputs().unwrap();
     let wrong = HostTensor::i32(vec![1, 2], vec![0, 0]);

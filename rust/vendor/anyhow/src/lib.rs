@@ -1,0 +1,178 @@
+//! Offline stand-in for the `anyhow` crate.
+//!
+//! The real registry is not reachable from the build environment, so
+//! this vendored shim provides the exact subset ski-tnn uses: the
+//! [`Error`] type with context chaining, [`Result`], the [`anyhow!`] /
+//! [`bail!`] macros, and the [`Context`] extension trait over both
+//! `Result` and `Option`.  Semantics match upstream for that subset
+//! (`{:#}` prints the full context chain, `?` converts any
+//! `std::error::Error + Send + Sync + 'static`).
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// Error type: a context chain, most recent context first.
+pub struct Error {
+    /// `chain[0]` is the outermost context / message.
+    chain: Vec<String>,
+}
+
+impl Error {
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { chain: vec![m.to_string()] }
+    }
+
+    /// Wrap with an outer context message (what `.context()` does).
+    pub fn context<C: fmt::Display>(mut self, ctx: C) -> Error {
+        self.chain.insert(0, ctx.to_string());
+        self
+    }
+
+    /// The context chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+
+    /// Outermost message only.
+    pub fn root_message(&self) -> &str {
+        self.chain.first().map(|s| s.as_str()).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}`: full chain, anyhow-style.
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.root_message())
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.root_message())?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for (i, c) in self.chain[1..].iter().enumerate() {
+                write!(f, "\n    {i}: {c}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(..)` / `.with_context(..)`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: StdError + Send + Sync + 'static> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        let e = std::io::Error::new(std::io::ErrorKind::Other, "disk on fire");
+        Err(e).context("writing checkpoint")?;
+        Ok(())
+    }
+
+    #[test]
+    fn context_chains() {
+        let err = io_fail().unwrap_err();
+        assert_eq!(format!("{err}"), "writing checkpoint");
+        let full = format!("{err:#}");
+        assert!(full.contains("writing checkpoint") && full.contains("disk on fire"), "{full}");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let err = v.context("missing key").unwrap_err();
+        assert_eq!(err.to_string(), "missing key");
+    }
+
+    #[test]
+    fn macros_format() {
+        let e = anyhow!("bad value {}", 42);
+        assert_eq!(e.to_string(), "bad value 42");
+        fn bails() -> Result<()> {
+            bail!("nope: {}", "reason");
+        }
+        assert_eq!(bails().unwrap_err().to_string(), "nope: reason");
+    }
+
+    #[test]
+    fn question_mark_converts() {
+        fn f() -> Result<String> {
+            let s = String::from_utf8(vec![0xff])?;
+            Ok(s)
+        }
+        assert!(f().is_err());
+    }
+}
