@@ -1,0 +1,171 @@
+//! Backend matrix — every [`ToeplitzOp`] backend timed on every size,
+//! against the dispatcher's predictions.
+//!
+//! One cell per (n, backend): median + p90 apply wall time, relative
+//! error vs the exact oracle, and whether the cost-model [`Dispatch`]
+//! picks the measured winner for that shape.  The bidirectional cells
+//! compare dense / fft / ski (r = n/16, the paper's §3.2 regime); the
+//! causal cells compare dense / freq (Hilbert-built spectrum, §3.3).
+//! Emits `BENCH_backend_matrix.json` (median + p90 ns/op per cell) so
+//! the perf trajectory — and the calibrated crossovers quoted in the
+//! README — are tracked across PRs.
+//!
+//! Run: `cargo bench --bench backend_matrix [-- --sizes 512,1024,4096,8192]`
+
+use std::time::Duration;
+
+use ski_tnn::toeplitz::{
+    build_op, gaussian_kernel, BackendKind, Dispatch, DispatchQuery, ToeplitzKernel, ToeplitzOp,
+};
+use ski_tnn::util::bench::{fmt_secs, write_bench_json, Bencher, Table};
+use ski_tnn::util::cli::Args;
+use ski_tnn::util::json::Json;
+use ski_tnn::util::rng::Rng;
+
+fn rel_err(got: &[f32], want: &[f32]) -> f64 {
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    for (g, w) in got.iter().zip(want.iter()) {
+        num += ((g - w) as f64).powi(2);
+        den += (*w as f64).powi(2);
+    }
+    (num / den.max(1e-30)).sqrt()
+}
+
+fn main() {
+    let args = Args::parse(false);
+    let sizes: Vec<usize> = args
+        .list_or("sizes", &["512", "1024", "4096", "8192"])
+        .iter()
+        .map(|s| s.parse().expect("--sizes wants integers"))
+        .collect();
+    let bench = Bencher {
+        warmup_iters: 1,
+        min_iters: 3,
+        max_iters: 15,
+        budget: Duration::from_secs(2),
+    };
+    let dispatch = Dispatch::default();
+    let mut rng = Rng::new(0);
+    let mut rows: Vec<Json> = Vec::new();
+    let mut agree = 0usize;
+    let mut cells = 0usize;
+
+    let mut t = Table::new(
+        "backend matrix: median apply time (r = n/16, w = 9)",
+        &[
+            "n",
+            "dense",
+            "fft",
+            "ski",
+            "ski vs fft",
+            "winner",
+            "dispatch",
+            "freq(causal)",
+            "causal pick",
+        ],
+    );
+    for &n in &sizes {
+        assert!(n.is_power_of_two(), "sizes must be powers of two, got {n}");
+        let r = (n / 16).max(2);
+        let w = 9usize;
+        let scale = n as f64 / 8.0;
+        let kernel = ToeplitzKernel::from_fn(n, |lag| gaussian_kernel(lag as f64, scale));
+        let x = rng.normals(n);
+        // Exact oracle: always the dense matvec (one O(n²) pass per
+        // size is affordable, and an FFT-based "oracle" would make the
+        // fft backend's rel_err a self-comparison).
+        let exact = kernel.apply_dense(&x);
+
+        let dense = build_op(&kernel, BackendKind::Dense, r, w);
+        let fftop = build_op(&kernel, BackendKind::Fft, r, w);
+        let ski = build_op(&kernel, BackendKind::Ski, r, w);
+        let causal_kernel = kernel.clone().causal();
+        let freq = build_op(&causal_kernel, BackendKind::Freq, r, w);
+        let causal_exact = causal_kernel.apply_dense(&x);
+
+        let time = |op: &dyn ToeplitzOp| {
+            bench.run(|| {
+                std::hint::black_box(op.apply(&x));
+            })
+        };
+        let s_dense = time(dense.as_ref());
+        let s_fft = time(fftop.as_ref());
+        let s_ski = time(ski.as_ref());
+        let s_freq = time(freq.as_ref());
+
+        // Bidirectional cell: measured winner vs dispatcher pick.
+        let mut measured = [
+            (BackendKind::Dense, s_dense.p50_s),
+            (BackendKind::Fft, s_fft.p50_s),
+            (BackendKind::Ski, s_ski.p50_s),
+        ];
+        measured.sort_by(|a, b| a.1.total_cmp(&b.1));
+        let winner = measured[0].0;
+        let picked =
+            dispatch.select(&DispatchQuery { n, r, w, causal: false, batch: 1 });
+        cells += 1;
+        if winner == picked {
+            agree += 1;
+        }
+        // Causal cell: dense loop vs the Hilbert spectral path.
+        let causal_winner =
+            if s_dense.p50_s <= s_freq.p50_s { BackendKind::Dense } else { BackendKind::Freq };
+        let causal_picked =
+            dispatch.select(&DispatchQuery { n, r, w, causal: true, batch: 1 });
+        cells += 1;
+        if causal_winner == causal_picked {
+            agree += 1;
+        }
+
+        t.row(&[
+            n.to_string(),
+            fmt_secs(s_dense.p50_s),
+            fmt_secs(s_fft.p50_s),
+            fmt_secs(s_ski.p50_s),
+            format!("{:.1}×", s_fft.p50_s / s_ski.p50_s),
+            winner.name().to_string(),
+            picked.name().to_string(),
+            fmt_secs(s_freq.p50_s),
+            causal_picked.name().to_string(),
+        ]);
+
+        for (name, stats, err) in [
+            ("dense", &s_dense, rel_err(&dense.apply(&x), &exact)),
+            ("fft", &s_fft, rel_err(&fftop.apply(&x), &exact)),
+            ("ski", &s_ski, rel_err(&ski.apply(&x), &exact)),
+            ("freq", &s_freq, rel_err(&freq.apply(&x), &causal_exact)),
+        ] {
+            rows.push(Json::obj(vec![
+                ("n", Json::num(n as f64)),
+                ("r", Json::num(r as f64)),
+                ("w", Json::num(w as f64)),
+                ("backend", Json::str(name)),
+                ("med_ns", Json::num(1e9 * stats.p50_s)),
+                ("p90_ns", Json::num(1e9 * stats.p90_s)),
+                ("rel_err", Json::num(err)),
+                ("winner", Json::str(winner.name())),
+                ("dispatch", Json::str(picked.name())),
+                ("causal_dispatch", Json::str(causal_picked.name())),
+            ]));
+        }
+        eprintln!(
+            "n={n}: ski {} vs fft {} ({:.1}× {}), dispatch {} / winner {}",
+            fmt_secs(s_ski.p50_s),
+            fmt_secs(s_fft.p50_s),
+            s_fft.p50_s / s_ski.p50_s,
+            if s_ski.p50_s < s_fft.p50_s { "ski ahead" } else { "fft ahead" },
+            picked.name(),
+            winner.name()
+        );
+    }
+    t.print();
+    println!(
+        "\ndispatch agreement: {agree}/{cells} cells picked the measured winner \
+         (constants: toeplitz::CostModel::default())"
+    );
+    match write_bench_json("backend_matrix", rows) {
+        Ok(path) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write BENCH_backend_matrix.json: {e}"),
+    }
+}

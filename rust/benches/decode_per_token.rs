@@ -20,7 +20,8 @@ use std::time::Instant;
 
 use ski_tnn::decode::{DiagonalSsm, KernelDecoder};
 use ski_tnn::toeplitz::ToeplitzKernel;
-use ski_tnn::util::bench::{fmt_secs, Bencher, Table};
+use ski_tnn::util::bench::{fmt_secs, write_bench_json, Bencher, Table};
+use ski_tnn::util::json::Json;
 use ski_tnn::util::rng::Rng;
 
 /// Smooth exponentially-decaying causal taps (the TNN regime — see
@@ -43,6 +44,7 @@ fn main() {
     );
     let mut first_ssm = 0.0f64;
     let mut last_ssm = 0.0f64;
+    let mut rows: Vec<Json> = Vec::new();
     for &n in &sizes {
         let taps = decay_taps(n);
         let kernel = ToeplitzKernel::from_causal_taps(&taps);
@@ -88,8 +90,27 @@ fn main() {
             fmt_secs(fft_tok),
             format!("{:.0}×", fft_tok / ssm_tok),
         ]);
+        // Per-size machine-readable rows (median + p90 ns/op) — the
+        // per-token medians divide the whole-stream medians by n.
+        for (mode, stats, per_tok) in [
+            ("ssm", &s_ssm, 1.0 / n as f64),
+            ("window", &s_win, 1.0 / n as f64),
+            ("fft_recompute", &s_fft, 1.0),
+        ] {
+            rows.push(Json::obj(vec![
+                ("n", Json::num(n as f64)),
+                ("rank", Json::num(rank as f64)),
+                ("mode", Json::str(mode)),
+                ("med_ns_per_token", Json::num(1e9 * stats.p50_s * per_tok)),
+                ("p90_ns_per_token", Json::num(1e9 * stats.p90_s * per_tok)),
+            ]));
+        }
     }
     t.print();
+    match write_bench_json("decode_per_token", rows) {
+        Ok(path) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write BENCH_decode_per_token.json: {e}"),
+    }
     println!(
         "ssm per-token at n=4096 vs n=256: {:.2}× (flat ⇒ O(1) in context; \
          fft-recompute grows with n)",

@@ -39,6 +39,13 @@ pub struct RunConfig {
     pub log_every: usize,
     /// Prefetch queue depth (batches prepared ahead on the worker).
     pub prefetch: usize,
+    /// Toeplitz backend override: `auto|dense|fft|ski|freq`
+    /// (see `toeplitz::BackendKind`).  `None` keeps each subsystem's
+    /// default.  `generate` reads it (JSON or CLI) for the
+    /// full-context oracle; `serve` switches to artifact-free
+    /// substrate serving only on the explicit CLI flag, never from a
+    /// config file.
+    pub backend: Option<String>,
 }
 
 impl Default for RunConfig {
@@ -56,6 +63,7 @@ impl Default for RunConfig {
             resume: None,
             log_every: 10,
             prefetch: 4,
+            backend: None,
         }
     }
 }
@@ -80,6 +88,12 @@ impl RunConfig {
                 "resume" => self.resume = Some(val.as_str().context("resume")?.into()),
                 "log_every" => self.log_every = val.as_usize().context("log_every")?,
                 "prefetch" => self.prefetch = val.as_usize().context("prefetch")?,
+                "backend" => {
+                    let s = val.as_str().context("backend")?;
+                    crate::toeplitz::BackendKind::parse(s)
+                        .ok_or_else(|| anyhow!("unknown backend {s:?} (auto|dense|fft|ski|freq)"))?;
+                    self.backend = Some(s.to_string());
+                }
                 other => return Err(anyhow!("unknown run-config key {other:?}")),
             }
         }
@@ -124,6 +138,9 @@ impl RunConfig {
         if let Some(v) = a.get("prefetch") {
             self.prefetch = v.parse().unwrap_or(self.prefetch);
         }
+        if let Some(v) = a.get("backend") {
+            self.backend = Some(v.to_string());
+        }
     }
 
     /// Resolve from CLI: defaults ← `--config-file` ← flags.
@@ -158,6 +175,20 @@ mod tests {
         rc.apply_args(&args);
         assert_eq!(rc.steps, 99, "CLI overrides JSON");
         assert_eq!(rc.seed, 5, "JSON survives where CLI silent");
+    }
+
+    #[test]
+    fn backend_parsed_and_validated() {
+        let mut rc = RunConfig::default();
+        assert!(rc.backend.is_none());
+        let j = json::parse(r#"{"backend": "ski"}"#).unwrap();
+        rc.apply_json(&j).unwrap();
+        assert_eq!(rc.backend.as_deref(), Some("ski"));
+        let bad = json::parse(r#"{"backend": "simd"}"#).unwrap();
+        assert!(rc.apply_json(&bad).is_err(), "unknown backend must be rejected");
+        let args = Args::parse_from(["--backend".to_string(), "freq".to_string()], false);
+        rc.apply_args(&args);
+        assert_eq!(rc.backend.as_deref(), Some("freq"), "CLI overrides JSON");
     }
 
     #[test]

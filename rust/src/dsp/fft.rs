@@ -151,6 +151,11 @@ thread_local! {
 /// Real-input FFT: returns the n/2+1 non-redundant bins.
 pub fn rfft(x: &[f32]) -> Vec<Complex> {
     let n = x.len();
+    assert!(
+        n.is_power_of_two(),
+        "rfft size {n} is not a power of two — pad the signal to {} first",
+        n.next_power_of_two()
+    );
     let mut buf: Vec<Complex> =
         x.iter().map(|&v| Complex::new(v as f64, 0.0)).collect();
     fft(&mut buf);
@@ -161,6 +166,11 @@ pub fn rfft(x: &[f32]) -> Vec<Complex> {
 /// Inverse of `rfft`: reconstructs the length-n real signal from the
 /// n/2+1 spectrum bins (Hermitian symmetry implied).
 pub fn irfft(spec: &[Complex], n: usize) -> Vec<f32> {
+    assert!(
+        n.is_power_of_two(),
+        "irfft size {n} is not a power of two — pad the signal to {} first",
+        n.next_power_of_two()
+    );
     assert_eq!(spec.len(), n / 2 + 1, "irfft: spectrum/size mismatch");
     let mut buf = vec![Complex::ZERO; n];
     buf[..spec.len()].copy_from_slice(spec);
@@ -262,5 +272,25 @@ mod tests {
     fn rejects_non_power_of_two() {
         let mut buf = vec![Complex::ZERO; 12];
         fft(&mut buf);
+    }
+
+    #[test]
+    #[should_panic(expected = "rfft size 12 is not a power of two")]
+    fn rfft_rejects_non_power_of_two_cleanly() {
+        // The guard must fire at the rfft entry with the offending
+        // size, not surface as garbage output or an index panic.
+        let _ = rfft(&[0.0f32; 12]);
+    }
+
+    #[test]
+    #[should_panic(expected = "irfft size 12 is not a power of two")]
+    fn irfft_rejects_non_power_of_two_cleanly() {
+        let _ = irfft(&[Complex::ZERO; 7], 12);
+    }
+
+    #[test]
+    #[should_panic(expected = "spectrum/size mismatch")]
+    fn irfft_rejects_wrong_bin_count() {
+        let _ = irfft(&[Complex::ZERO; 5], 16);
     }
 }

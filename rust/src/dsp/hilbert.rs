@@ -86,6 +86,41 @@ mod tests {
     }
 
     #[test]
+    fn causal_spectrum_matches_geometric_minimum_phase_reference() {
+        // Analytic minimum-phase reference: the causal kernel
+        // k[t] = a^t (t ≥ 0) has DTFT 1/(1 - a e^{-iω}) with
+        //   Re = (1 - a cos ω)/den,  Im = -a sin ω/den,
+        //   den = 1 - 2a cos ω + a².
+        // Feeding only the real part through the Hilbert construction
+        // must recover the full complex spectrum (round-trip), up to
+        // the a^n truncation tail (≈ 1e-77 at a = 0.5, n = 256).
+        let n = 256usize;
+        let a = 0.5f64;
+        let re: Vec<f32> = (0..=n)
+            .map(|m| {
+                let w = std::f64::consts::PI * m as f64 / n as f64;
+                let den = 1.0 - 2.0 * a * w.cos() + a * a;
+                ((1.0 - a * w.cos()) / den) as f32
+            })
+            .collect();
+        let spec = causal_spectrum(&re);
+        for (m, c) in spec.iter().enumerate() {
+            let w = std::f64::consts::PI * m as f64 / n as f64;
+            let den = 1.0 - 2.0 * a * w.cos() + a * a;
+            let want_re = (1.0 - a * w.cos()) / den;
+            let want_im = -a * w.sin() / den;
+            assert!((c.re - want_re).abs() < 1e-4, "bin {m}: re {} vs {want_re}", c.re);
+            assert!((c.im - want_im).abs() < 1e-4, "bin {m}: im {} vs {want_im}", c.im);
+        }
+        // And the recovered time kernel is the geometric sequence.
+        let kt = irfft(&spec, 2 * n);
+        for (t, v) in kt.iter().enumerate().take(12) {
+            let want = a.powi(t as i32) as f32;
+            assert!((v - want).abs() < 1e-4, "tap {t}: {v} vs {want}");
+        }
+    }
+
+    #[test]
     fn hilbert_of_cosine_is_sine() {
         // k̂(ω) = cos(ω) on the grid ⇒ time kernel is a unit lag-1 impulse
         // pair; its causal one-siding gives spectrum e^{-iω} whose

@@ -35,6 +35,14 @@
 //! | [`config`] | typed run configuration parsed from JSON + CLI overrides |
 //! | [`util`] | JSON, RNG, CLI, mini-bench, property-test driver |
 
+// Clippy policy (CI runs `cargo clippy -- -D warnings`): two style
+// lints are allowed crate-wide because the "fix" fights the numeric-
+// kernel idiom used throughout — indexed loops over several coupled
+// buffers, and `Complex::{mul,add,sub}` as plain methods (the
+// operator traits would add a reference/value impl matrix for no
+// call-site gain in the FFT inner loops).
+#![allow(clippy::needless_range_loop, clippy::should_implement_trait)]
+
 pub mod config;
 pub mod coordinator;
 pub mod data;

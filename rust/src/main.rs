@@ -19,15 +19,22 @@
 //! ski-tnn train --config lm_fd_3l --steps 300 --out-dir runs/fd
 //! ski-tnn eval  --config lm_fd_3l --resume runs/fd/lm_fd_3l_step300.ckpt
 //! ski-tnn serve --config lra_text_fd --requests 200 --clients 4
+//! ski-tnn serve --backend auto --n 4096 --requests 500   # artifact-free substrate serving
 //! ski-tnn generate --prompt "ski to go " --tokens 120 --temperature 0.8
 //! ski-tnn generate --sessions 8 --requests 64 --tokens 96 --slots 8
 //! ```
+//!
+//! `--backend auto|dense|fft|ski|freq` selects the Toeplitz operator
+//! backend (`toeplitz::ToeplitzOp`): `serve` runs it behind the
+//! dynamic batcher with no artifacts needed, `generate` forces the
+//! full-context oracle's path; `auto` defers to the cost-model
+//! dispatcher (`toeplitz::Dispatch`).
 
 use anyhow::{bail, Result};
 
 use ski_tnn::config::RunConfig;
 use ski_tnn::coordinator::Trainer;
-use ski_tnn::runtime::{Engine, ModelState};
+use ski_tnn::runtime::{Engine, HostTensor, ModelState};
 use ski_tnn::server::{serve_model, Batcher, ServerConfig};
 use ski_tnn::util::cli::Args;
 
@@ -105,7 +112,71 @@ fn cmd_eval(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Drive a batcher with synthetic client load (random byte rows of
+/// random length below `n`) and print the shared serving report —
+/// the one load/report path both serve modes go through.
+fn run_synthetic_load<F>(
+    batcher: Batcher,
+    exec: F,
+    clients: usize,
+    per_client: usize,
+    n: usize,
+    seed: u64,
+    max_batch: usize,
+) -> Result<()>
+where
+    F: FnMut(&HostTensor) -> Result<Vec<Vec<f32>>>,
+{
+    let handle = batcher.handle();
+    let workers: Vec<_> = (0..clients)
+        .map(|c| {
+            let h = handle.clone();
+            std::thread::spawn(move || {
+                let mut rng = ski_tnn::util::rng::Rng::new(seed + c as u64);
+                for _ in 0..per_client {
+                    let len = 8 + rng.below(n - 8);
+                    let ids: Vec<i32> = (0..len).map(|_| rng.below(256) as i32).collect();
+                    let _ = h.infer(ids).expect("infer");
+                }
+            })
+        })
+        .collect();
+    drop(handle);
+    let t0 = std::time::Instant::now();
+    let stats = batcher.run(exec)?;
+    let total = t0.elapsed().as_secs_f64();
+    for w in workers {
+        w.join().unwrap();
+    }
+    println!(
+        "served {} requests in {} batches ({:.1}% fill), {:.1} req/s",
+        stats.requests,
+        stats.batches,
+        100.0 * stats.mean_batch_fill(max_batch),
+        stats.requests as f64 / total
+    );
+    // Queue latency straight from the batcher — no client-side timing.
+    let (p50, p95, p99) = stats.queue_percentiles();
+    println!(
+        "queue wait p50 {:.1} ms  p95 {:.1} ms  p99 {:.1} ms  (exec {:.1}% of wall)",
+        1e3 * p50,
+        1e3 * p95,
+        1e3 * p99,
+        100.0 * stats.exec_seconds / total
+    );
+    Ok(())
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
+    if let Some(backend) = args.get("backend") {
+        // Explicit `--backend auto|dense|fft|ski|freq`: serve the
+        // pure-Rust Toeplitz substrate through the same batcher — no
+        // artifacts or PJRT needed, the backend dispatcher under real
+        // load.  (CLI flag only, so a run-config JSON meant for the
+        // oracle never silently abandons the XLA model path.)
+        let backend = backend.to_string();
+        return cmd_serve_substrate(args, &backend);
+    }
     let rc = RunConfig::from_args(args)?;
     let requests = args.usize_or("requests", 200);
     let clients = args.usize_or("clients", 4);
@@ -132,55 +203,88 @@ fn cmd_serve(args: &Args) -> Result<()> {
         requests / clients
     );
     let batcher = Batcher::new(server_cfg);
-    let handle = batcher.handle();
-    let per_client = requests / clients;
-    let n = cfg.n;
-    let seed = rc.seed;
-    let workers: Vec<_> = (0..clients)
-        .map(|c| {
-            let h = handle.clone();
-            std::thread::spawn(move || {
-                let mut rng = ski_tnn::util::rng::Rng::new(seed + c as u64);
-                for _ in 0..per_client {
-                    let len = 8 + rng.below(n - 8);
-                    let ids: Vec<i32> = (0..len).map(|_| rng.below(256) as i32).collect();
-                    let _ = h.infer(ids).expect("infer");
-                }
-            })
-        })
-        .collect();
-    drop(handle);
-    let t0 = std::time::Instant::now();
-    let stats = batcher.run(serve_model(&engine, &state))?;
-    let total = t0.elapsed().as_secs_f64();
-    for w in workers {
-        w.join().unwrap();
-    }
+    run_synthetic_load(
+        batcher,
+        serve_model(&engine, &state),
+        clients,
+        requests / clients,
+        cfg.n,
+        rc.seed,
+        cfg.batch,
+    )
+}
+
+/// Artifact-free serving: client rows are interpreted as f32 signals
+/// and answered by one [`ToeplitzOp`](ski_tnn::toeplitz::ToeplitzOp)
+/// backend — requested explicitly or chosen by the cost-model
+/// dispatcher — with the same queueing/latency report as model serving.
+fn cmd_serve_substrate(args: &Args, backend: &str) -> Result<()> {
+    use ski_tnn::server::serve_toeplitz;
+    use ski_tnn::toeplitz::{
+        build_op, gaussian_kernel, BackendKind, Dispatch, DispatchQuery, ToeplitzKernel,
+        ToeplitzOp,
+    };
+
+    let n = args.usize_or("n", 256);
+    anyhow::ensure!(n.is_power_of_two(), "--n must be a power of two for the spectral backends");
+    anyhow::ensure!(n >= 16, "--n must be at least 16, got {n}");
+    let requests = args.usize_or("requests", 200);
+    let clients = args.usize_or("clients", 4).max(1);
+    let r = args.usize_or("rank", (n / 16).max(2));
+    let w = args.usize_or("band", 9);
+    let requested = BackendKind::parse(backend)
+        .ok_or_else(|| anyhow::anyhow!("unknown backend {backend:?} (auto|dense|fft|ski|freq)"))?;
+    let server_cfg = ServerConfig {
+        max_batch: args.usize_or("max-batch", 8),
+        n,
+        max_wait: std::time::Duration::from_millis(args.u64_or("max-wait-ms", 2)),
+        queue_depth: args.usize_or("queue-depth", 64),
+    };
+    let kind = match requested {
+        BackendKind::Auto => Dispatch::default().select(&DispatchQuery {
+            n,
+            r,
+            w,
+            causal: false,
+            batch: server_cfg.max_batch,
+        }),
+        k => k,
+    };
+    let kernel = ToeplitzKernel::from_fn(n, |lag| gaussian_kernel(lag as f64, n as f64 / 8.0));
+    let kernel = if kind == BackendKind::Freq { kernel.causal() } else { kernel };
+    let op: std::sync::Arc<dyn ToeplitzOp> = std::sync::Arc::from(build_op(&kernel, kind, r, w));
     println!(
-        "served {} requests in {} batches ({:.1}% fill), {:.1} req/s",
-        stats.requests,
-        stats.batches,
-        100.0 * stats.mean_batch_fill(cfg.batch),
-        stats.requests as f64 / total
+        "serving substrate backend {} (requested {requested:?} → dispatched), n={n}, \
+         ~{:.0} flops/apply, batch {}",
+        op.name(),
+        op.flops_estimate(),
+        server_cfg.max_batch
     );
-    // Queue latency straight from the batcher — no client-side timing.
-    let (p50, p95, p99) = stats.queue_percentiles();
-    println!(
-        "queue wait p50 {:.1} ms  p95 {:.1} ms  p99 {:.1} ms  (exec {:.1}% of wall)",
-        1e3 * p50,
-        1e3 * p95,
-        1e3 * p99,
-        100.0 * stats.exec_seconds / total
-    );
-    Ok(())
+    let max_batch = server_cfg.max_batch;
+    let batcher = Batcher::new(server_cfg);
+    run_synthetic_load(
+        batcher,
+        serve_toeplitz(op),
+        clients,
+        (requests / clients).max(1),
+        n,
+        args.u64_or("seed", 0),
+        max_batch,
+    )
 }
 
 fn cmd_generate(args: &Args) -> Result<()> {
     use ski_tnn::decode::model::{detokenize, tokenize};
     use ski_tnn::decode::{DecodeModel, DecodeModelConfig, DecodePolicy};
     use ski_tnn::server::{GenConfig, GenParams, GenScheduler};
+    use ski_tnn::toeplitz::{BackendKind, Dispatch, DispatchQuery};
 
     let seed = args.u64_or("seed", 0);
+    // Backend for the full-context oracle: run-config JSON or CLI
+    // (`RunConfig::apply_args` gives the CLI flag precedence).
+    let backend_flag = RunConfig::from_args(args)?.backend.unwrap_or_else(|| "auto".to_string());
+    let oracle_backend = BackendKind::parse(&backend_flag)
+        .ok_or_else(|| anyhow::anyhow!("unknown backend {backend_flag:?} (auto|dense|fft|ski|freq)"))?;
     let cfg = DecodeModelConfig {
         d: args.usize_or("d", 32),
         blocks: args.usize_or("blocks", 2),
@@ -189,9 +293,23 @@ fn cmd_generate(args: &Args) -> Result<()> {
             rank: args.usize_or("rank", 16),
             max_rel_residual: args.f64_or("max-rel-residual", 0.05),
         },
+        oracle_backend,
         seed,
         ..DecodeModelConfig::default()
     };
+    let dispatched = Dispatch::default().select(&DispatchQuery {
+        n: cfg.n.next_power_of_two(),
+        r: 0,
+        w: 0,
+        causal: true,
+        batch: 1,
+    });
+    println!(
+        "full-context oracle backend: {} (dispatcher would pick {} at n={})",
+        oracle_backend.name(),
+        dispatched.name(),
+        cfg.n
+    );
     let t0 = std::time::Instant::now();
     let model = DecodeModel::new(cfg);
     let (ssm, win) = model.decoder_mix();

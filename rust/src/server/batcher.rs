@@ -7,12 +7,14 @@
 //! with zero rows and the corresponding logits discarded.
 
 use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, ensure, Result};
 
 use crate::data::PAD;
 use crate::runtime::{Engine, HostTensor, ModelState};
+use crate::toeplitz::ToeplitzOp;
 
 /// Server tuning knobs.
 #[derive(Debug, Clone)]
@@ -225,6 +227,35 @@ pub fn serve_model<'a>(
     }
 }
 
+/// Map one batcher row of token ids to an f32 signal on [-1, 1)
+/// (PAD → 0, so padded tail positions are silent).
+fn ids_to_signal(row: &[i32]) -> Vec<f32> {
+    row.iter().map(|&t| if t == PAD { 0.0 } else { t as f32 / 128.0 - 1.0 }).collect()
+}
+
+/// Adapt a [`ToeplitzOp`] backend into a [`Batcher::run`] executor:
+/// each row's ids become an f32 signal and the response row is the
+/// operator applied to it.  This is how the backend dispatcher rides
+/// the same queueing/batching policy as the XLA model path — and the
+/// artifact-free load-test target of `ski-tnn serve --backend …`.
+pub fn serve_toeplitz(
+    op: Arc<dyn ToeplitzOp>,
+) -> impl FnMut(&HostTensor) -> Result<Vec<Vec<f32>>> {
+    move |batch: &HostTensor| {
+        let shape = batch.shape().to_vec();
+        ensure!(shape.len() == 2, "expected a (batch, n) ids tensor, got {shape:?}");
+        ensure!(
+            shape[1] == op.n(),
+            "row width {} does not match operator n {}",
+            shape[1],
+            op.n()
+        );
+        let ids = batch.as_i32()?;
+        let rows: Vec<Vec<f32>> = ids.chunks(shape[1]).map(ids_to_signal).collect();
+        Ok(op.apply_batch(&rows))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -323,6 +354,40 @@ mod tests {
         assert!(p50 <= p95 && p95 <= p99, "{p50} {p95} {p99}");
         assert!(p99 >= 0.0 && p99 < 5.0, "queue p99 {p99}s out of range");
         assert_eq!(stats.queue_pct(0.99), p99);
+    }
+
+    #[test]
+    fn toeplitz_executor_serves_backend_applies() {
+        use crate::toeplitz::{build_op, BackendKind, ToeplitzKernel};
+        let n = 8;
+        let kernel = ToeplitzKernel::from_fn(n, |lag| 1.0 / (1.0 + lag.abs() as f32));
+        let op: Arc<dyn ToeplitzOp> = Arc::from(build_op(&kernel, BackendKind::Fft, 0, 0));
+        let b = Batcher::new(small_cfg());
+        let h = b.handle();
+        let ids: Vec<i32> = (0..n as i32).collect();
+        let t = {
+            let ids = ids.clone();
+            std::thread::spawn(move || h.infer(ids).unwrap())
+        };
+        let stats = b.run(serve_toeplitz(op)).unwrap();
+        let resp = t.join().unwrap();
+        // Oracle: the same signal through the dense apply.
+        let want = kernel.apply_dense(&ids_to_signal(&ids));
+        assert_eq!(resp.logits.len(), n);
+        for (i, (a, b)) in resp.logits.iter().zip(want.iter()).enumerate() {
+            assert!((a - b).abs() < 1e-4, "row value {i}: {a} vs {b}");
+        }
+        assert_eq!(stats.requests, 1);
+    }
+
+    #[test]
+    fn toeplitz_executor_rejects_width_mismatch() {
+        use crate::toeplitz::{build_op, BackendKind, ToeplitzKernel};
+        let kernel = ToeplitzKernel::from_fn(4, |_| 1.0);
+        let op: Arc<dyn ToeplitzOp> = Arc::from(build_op(&kernel, BackendKind::Dense, 0, 0));
+        let mut exec = serve_toeplitz(op);
+        let batch = HostTensor::i32(vec![1, 8], vec![0; 8]);
+        assert!(exec(&batch).is_err(), "width mismatch must surface as an executor error");
     }
 
     #[test]

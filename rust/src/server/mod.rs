@@ -20,7 +20,9 @@
 mod batcher;
 mod generate;
 
-pub use batcher::{serve_model, Batcher, BatcherStats, Request, Response, ServerConfig};
+pub use batcher::{
+    serve_model, serve_toeplitz, Batcher, BatcherStats, Request, Response, ServerConfig,
+};
 pub use generate::{
     GenClient, GenConfig, GenParams, GenRequest, GenResponse, GenScheduler, GenStats,
 };

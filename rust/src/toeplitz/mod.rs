@@ -13,9 +13,14 @@
 //!   asymptotic arguments are measured directly.
 
 mod kernels;
+mod op;
 mod ski;
 
 pub use kernels::{decay_bias, gaussian_kernel, rational_kernel, warp, TableKernel};
+pub use op::{
+    apply_causal_plan, apply_causal_taps, build_op, BackendKind, CostModel, DenseOp, Dispatch,
+    DispatchQuery, FftOp, FreqCausalOp, SparseLowRankOp, ToeplitzOp,
+};
 pub use ski::{causal_ski_scan, inducing_grid, interp_weights, Ski};
 
 use crate::dsp::{irfft, rfft, Complex};
@@ -36,6 +41,22 @@ impl ToeplitzKernel {
 
     pub fn at(&self, lag: i64) -> f32 {
         self.lags[(lag + self.n as i64 - 1) as usize]
+    }
+
+    /// Kernel value at a real-valued lag by linear interpolation of
+    /// the stored integer lags (clamped at the ends) — how a kernel
+    /// known only as a lag table is evaluated at SKI inducing-point
+    /// differences (§3.2.1).
+    pub fn at_real(&self, lag: f64) -> f32 {
+        let max = (self.n - 1) as f64;
+        let t = lag.clamp(-max, max);
+        let lo = t.floor();
+        let frac = (t - lo) as f32;
+        let lo_i = lo as i64;
+        if frac == 0.0 {
+            return self.at(lo_i);
+        }
+        (1.0 - frac) * self.at(lo_i) + frac * self.at(lo_i + 1)
     }
 
     /// Zero all negative lags (causal masking).
@@ -187,6 +208,27 @@ mod tests {
             let masked = k.causal();
             assert!(masked.is_causal());
             assert_eq!(masked.causal_taps(), taps);
+        });
+    }
+
+    #[test]
+    fn prop_at_real_interpolates_lags() {
+        check("at_real hits and interpolates integer lags", |rng| {
+            let n = size(rng, 2, 64);
+            let k = ToeplitzKernel { n, lags: vecf(rng, 2 * n - 1) };
+            for lag in -(n as i64 - 1)..=(n as i64 - 1) {
+                assert_eq!(k.at_real(lag as f64), k.at(lag), "grid point {lag}");
+            }
+            let max = (n - 1) as f64;
+            // Clamped beyond the stored range.
+            assert_eq!(k.at_real(max + 5.0), k.at(n as i64 - 1));
+            assert_eq!(k.at_real(-max - 5.0), k.at(-(n as i64 - 1)));
+            // Midpoints are the average of the neighbours.
+            for lag in -(n as i64 - 1)..(n as i64 - 1) {
+                let mid = k.at_real(lag as f64 + 0.5);
+                let want = 0.5 * (k.at(lag) + k.at(lag + 1));
+                assert!((mid - want).abs() < 1e-5, "midpoint {lag}: {mid} vs {want}");
+            }
         });
     }
 

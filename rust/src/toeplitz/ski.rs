@@ -187,6 +187,51 @@ mod tests {
     }
 
     #[test]
+    fn prop_weights_partition_unity_randomized_ranks() {
+        // Satellite contract over fully randomized (i, n, r): the hat
+        // weights are a partition of unity, non-negative, and the left
+        // index always leaves room for its right neighbour — including
+        // at the r = 2 floor, r = n (grid on every lag), r > n, and
+        // the endpoints i = 0 / i = n-1.
+        check("hat weights partition of unity (randomized)", |rng| {
+            let n = size(rng, 1, 1024);
+            let r = size(rng, 2, 2 * n.max(2));
+            for _ in 0..16 {
+                let i = rng.below(n);
+                let (lo, wl, wr) = interp_weights(i, n, r);
+                assert!(lo + 1 < r, "lo={lo} leaves no right neighbour (n={n}, r={r})");
+                assert!((wl + wr - 1.0).abs() < 1e-5, "i={i}: {wl} + {wr} != 1");
+                assert!(wl >= -1e-6 && wr >= -1e-6, "negative weight at i={i}");
+            }
+            for i in [0, n - 1] {
+                let (lo, wl, wr) = interp_weights(i, n, r);
+                assert!(lo + 1 < r);
+                assert!((wl + wr - 1.0).abs() < 1e-5, "endpoint i={i}");
+            }
+        });
+    }
+
+    #[test]
+    fn prop_sparse_matches_dense_pinned_1e5() {
+        // Satellite contract: the O(n + r log r) sparse path and the
+        // dense-matmul path are the same operator to 1e-5 — tighter
+        // than the generic 1e-4 substrate tolerance, pinning down the
+        // f64-FFT + f32-accumulate numerics.
+        check("ski sparse == dense @1e-5", |rng| {
+            let n = size(rng, 4, 128);
+            let r = size(rng, 2, 16).min(n);
+            // Unit-scale data: the contract pins the *path* difference
+            // (f64-FFT vs f32 matvec summation order), so keep the
+            // accumulation magnitudes O(1) rather than letting the
+            // generic N(0,1)·√(n/r) growth eat the tolerance.
+            let lags: Vec<f32> = vecf(rng, 2 * r - 1).iter().map(|v| 0.5 * v).collect();
+            let ski = Ski { n, r, a: ToeplitzKernel { n: r, lags } };
+            let x: Vec<f32> = vecf(rng, n).iter().map(|v| 0.25 * v).collect();
+            assert_close(&ski.apply_sparse(&x), &ski.apply_dense(&x), 1e-5, "pinned paths");
+        });
+    }
+
+    #[test]
     fn grid_endpoints() {
         let g = inducing_grid(100, 5);
         assert!((g[0] - 0.0).abs() < 1e-12);

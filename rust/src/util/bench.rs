@@ -7,12 +7,15 @@
 
 use std::time::{Duration, Instant};
 
+use crate::util::json::{self, Json};
+
 /// Statistics over per-iteration wall-clock samples.
 #[derive(Debug, Clone)]
 pub struct Stats {
     pub iters: usize,
     pub mean_s: f64,
     pub p50_s: f64,
+    pub p90_s: f64,
     pub p95_s: f64,
     pub std_s: f64,
     pub total_s: f64,
@@ -87,6 +90,7 @@ pub fn stats_of(samples: &[f64]) -> Stats {
         iters: sorted.len(),
         mean_s: mean,
         p50_s: if sorted.is_empty() { 0.0 } else { pct(0.50) },
+        p90_s: if sorted.is_empty() { 0.0 } else { pct(0.90) },
         p95_s: if sorted.is_empty() { 0.0 } else { pct(0.95) },
         std_s: var.sqrt(),
         total_s: total,
@@ -170,6 +174,17 @@ pub fn push_sample(samples: &mut Vec<f64>, cap: usize, seen: usize, v: f64) {
     }
 }
 
+/// Write a machine-readable `BENCH_<name>.json` artifact in the
+/// current directory (`{"bench": name, "rows": [...]}`), so the perf
+/// trajectory is tracked across PRs instead of living only in table
+/// stdout.  Returns the path written.
+pub fn write_bench_json(name: &str, rows: Vec<Json>) -> std::io::Result<String> {
+    let path = format!("BENCH_{name}.json");
+    let doc = Json::obj(vec![("bench", Json::str(name)), ("rows", Json::arr(rows))]);
+    std::fs::write(&path, json::write(&doc))?;
+    Ok(path)
+}
+
 /// Format seconds human-readably (ms below 1s).
 pub fn fmt_secs(s: f64) -> String {
     if s < 1e-3 {
@@ -191,7 +206,20 @@ mod tests {
         assert_eq!(s.iters, 5);
         assert!((s.mean_s - 3.0).abs() < 1e-12);
         assert!((s.p50_s - 3.0).abs() < 1e-12);
+        assert!(s.p90_s >= s.p50_s && s.p95_s >= s.p90_s);
         assert!(s.p95_s >= 4.0);
+    }
+
+    #[test]
+    fn bench_json_roundtrips() {
+        let rows = vec![Json::obj(vec![("n", Json::num(256.0)), ("med_ns", Json::num(12.5))])];
+        let path = write_bench_json("unit_test_tmp", rows).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        let v = crate::util::json::parse(&text).unwrap();
+        assert_eq!(v.get("bench").and_then(Json::as_str), Some("unit_test_tmp"));
+        let row = v.get("rows").and_then(|r| r.idx(0)).unwrap();
+        assert_eq!(row.get("n").and_then(Json::as_usize), Some(256));
     }
 
     #[test]

@@ -243,3 +243,107 @@ fn host_tensor_checks_against_manifest() {
     let wrong = HostTensor::i32(vec![1, 2], vec![0, 0]);
     assert!(wrong.check(&bi[0]).is_err());
 }
+
+// ---------------------------------------------------------------------
+// Backend-stack acceptance (pure substrate — no artifacts needed):
+// every ToeplitzOp backend vs the dense oracle at the acceptance sizes,
+// plus the batcher executor end-to-end over a dispatched backend.
+// ---------------------------------------------------------------------
+
+#[test]
+fn backend_stack_agrees_with_dense_oracle() {
+    use ski_tnn::toeplitz::{
+        build_op, gaussian_kernel, BackendKind, SparseLowRankOp, ToeplitzKernel, ToeplitzOp,
+    };
+    use ski_tnn::util::rng::Rng;
+
+    let close = |got: &[f32], want: &[f32], tol: f32, what: &str| {
+        assert_eq!(got.len(), want.len(), "{what}: length");
+        for (i, (g, w)) in got.iter().zip(want.iter()).enumerate() {
+            let scale = 1.0f32.max(w.abs());
+            assert!((g - w).abs() <= tol * scale, "{what} at {i}: {g} vs {w}");
+        }
+    };
+
+    for &n in &[64usize, 256, 1024] {
+        let mut rng = Rng::new(n as u64);
+        let kernel = ToeplitzKernel { n, lags: rng.normals(2 * n - 1) };
+        let x = rng.normals(n);
+        let want = kernel.apply_dense(&x);
+        // Exact backends: 1e-4 relative on fully random kernels.
+        for kind in [BackendKind::Dense, BackendKind::Fft] {
+            let op = build_op(&kernel, kind, 0, 0);
+            close(&op.apply(&x), &want, 1e-4, op.name());
+        }
+        let causal = kernel.clone().causal();
+        let op = build_op(&causal, BackendKind::Freq, 0, 0);
+        close(&op.apply(&x), &causal.apply_dense(&x), 1e-4, "freq");
+
+        // SKI backend: judged within its Theorem-1 regime — a smooth
+        // kernel, error shrinking as the rank grows, near-exact at
+        // r = n (inducing grid on every lag).
+        let smooth = ToeplitzKernel::from_fn(n, |lag| gaussian_kernel(lag as f64, n as f64 / 8.0));
+        let want_s = smooth.apply_dense(&x);
+        let l2 = |r: usize| {
+            let op = SparseLowRankOp::from_kernel(&smooth, r, 9);
+            op.apply(&x)
+                .iter()
+                .zip(want_s.iter())
+                .map(|(a, b)| ((a - b) as f64).powi(2))
+                .sum::<f64>()
+                .sqrt()
+        };
+        let coarse = l2((n / 16).max(2));
+        let fine = l2(n);
+        let scale = want_s.iter().map(|v| (*v as f64).powi(2)).sum::<f64>().sqrt();
+        assert!(fine <= 1e-3 * scale.max(1.0), "ski full-rank residual {fine} (scale {scale})");
+        assert!(
+            fine <= coarse * 1.05,
+            "ski error must not grow with rank: r={} {coarse} vs r=n {fine}",
+            (n / 16).max(2)
+        );
+    }
+}
+
+#[test]
+fn batcher_serves_dispatched_backend_end_to_end() {
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    use ski_tnn::server::serve_toeplitz;
+    use ski_tnn::toeplitz::{build_op, gaussian_kernel, BackendKind, ToeplitzKernel, ToeplitzOp};
+
+    let n = 64usize;
+    let kernel = ToeplitzKernel::from_fn(n, |lag| gaussian_kernel(lag as f64, 16.0));
+    // Auto-dispatch with a usable SKI rank; whatever wins must serve.
+    let op: Arc<dyn ToeplitzOp> = Arc::from(build_op(&kernel, BackendKind::Auto, 8, 5));
+    let cfg = ServerConfig {
+        max_batch: 4,
+        n,
+        max_wait: Duration::from_millis(2),
+        queue_depth: 16,
+    };
+    let batcher = Batcher::new(cfg);
+    let handle = batcher.handle();
+    let workers: Vec<_> = (0..3)
+        .map(|c| {
+            let h = handle.clone();
+            std::thread::spawn(move || {
+                for i in 0..5usize {
+                    let len = 4 + (c * 7 + i * 3) % 60;
+                    let ids: Vec<i32> = (0..len as i32).map(|v| (v * 5 + c as i32) % 256).collect();
+                    let resp = h.infer(ids).expect("infer");
+                    assert_eq!(resp.logits.len(), 64);
+                    assert!(resp.logits.iter().all(|v| v.is_finite()));
+                }
+            })
+        })
+        .collect();
+    drop(handle);
+    let stats = batcher.run(serve_toeplitz(op)).unwrap();
+    for w in workers {
+        w.join().unwrap();
+    }
+    assert_eq!(stats.requests, 15);
+    assert!(stats.batches <= 15);
+}
