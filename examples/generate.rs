@@ -82,6 +82,7 @@ fn main() -> Result<()> {
         max_sessions: args.usize_or("slots", 8),
         queue_depth: args.usize_or("queue-depth", 64),
         max_new_cap: 512,
+        threads: args.usize_or("threads", 0),
     });
     let handle = sched.handle();
     let params = GenParams {

@@ -6,18 +6,27 @@
 //! picks the measured winner for that shape.  The bidirectional cells
 //! compare dense / fft / ski (r = n/16, the paper's §3.2 regime); the
 //! causal cells compare dense / freq (Hilbert-built spectrum, §3.3).
+//! A second table sweeps the **sharded** `apply_batch` at the largest
+//! size across worker counts (`--threads 1,2,4`): every cell's output
+//! is asserted bitwise identical to the serial reference before being
+//! timed, so the speedup column is the tentpole claim — parallel rows,
+//! identical bits.
+//!
 //! Emits `BENCH_backend_matrix.json` (median + p90 ns/op per cell) so
 //! the perf trajectory — and the calibrated crossovers quoted in the
-//! README — are tracked across PRs.
+//! README — are tracked across PRs.  `SKI_TNN_BENCH_QUICK=1` shrinks
+//! sizes and iteration budgets to CI-smoke scale.
 //!
-//! Run: `cargo bench --bench backend_matrix [-- --sizes 512,1024,4096,8192]`
+//! Run: `cargo bench --bench backend_matrix [-- --sizes 512,1024,4096,8192 --batch 8 --threads 1,2,4]`
 
 use std::time::Duration;
 
+use ski_tnn::runtime::ThreadPool;
 use ski_tnn::toeplitz::{
-    build_op, gaussian_kernel, BackendKind, Dispatch, DispatchQuery, ToeplitzKernel, ToeplitzOp,
+    apply_batch_sharded, build_op, gaussian_kernel, BackendKind, Dispatch, DispatchQuery,
+    ToeplitzKernel, ToeplitzOp,
 };
-use ski_tnn::util::bench::{fmt_secs, write_bench_json, Bencher, Table};
+use ski_tnn::util::bench::{fmt_secs, quick_mode, write_bench_json, Bencher, Table};
 use ski_tnn::util::cli::Args;
 use ski_tnn::util::json::Json;
 use ski_tnn::util::rng::Rng;
@@ -34,16 +43,19 @@ fn rel_err(got: &[f32], want: &[f32]) -> f64 {
 
 fn main() {
     let args = Args::parse(false);
+    let quick = quick_mode();
+    let default_sizes: &[&str] =
+        if quick { &["256", "512", "1024"] } else { &["512", "1024", "4096", "8192"] };
     let sizes: Vec<usize> = args
-        .list_or("sizes", &["512", "1024", "4096", "8192"])
+        .list_or("sizes", default_sizes)
         .iter()
         .map(|s| s.parse().expect("--sizes wants integers"))
         .collect();
     let bench = Bencher {
         warmup_iters: 1,
         min_iters: 3,
-        max_iters: 15,
-        budget: Duration::from_secs(2),
+        max_iters: if quick { 8 } else { 15 },
+        budget: Duration::from_millis(if quick { 400 } else { 2000 }),
     };
     let dispatch = Dispatch::default();
     let mut rng = Rng::new(0);
@@ -103,7 +115,7 @@ fn main() {
         measured.sort_by(|a, b| a.1.total_cmp(&b.1));
         let winner = measured[0].0;
         let picked =
-            dispatch.select(&DispatchQuery { n, r, w, causal: false, batch: 1 });
+            dispatch.select(&DispatchQuery { n, r, w, causal: false, batch: 1, threads: 1 });
         cells += 1;
         if winner == picked {
             agree += 1;
@@ -112,7 +124,7 @@ fn main() {
         let causal_winner =
             if s_dense.p50_s <= s_freq.p50_s { BackendKind::Dense } else { BackendKind::Freq };
         let causal_picked =
-            dispatch.select(&DispatchQuery { n, r, w, causal: true, batch: 1 });
+            dispatch.select(&DispatchQuery { n, r, w, causal: true, batch: 1, threads: 1 });
         cells += 1;
         if causal_winner == causal_picked {
             agree += 1;
@@ -164,6 +176,86 @@ fn main() {
         "\ndispatch agreement: {agree}/{cells} cells picked the measured winner \
          (constants: toeplitz::CostModel::default())"
     );
+
+    // ---- sharded apply_batch: worker sweep at the largest size ----
+    // Outputs are asserted bitwise identical to the serial reference
+    // before timing — speedup with identical bits is the claim.
+    let bn = *sizes.last().unwrap();
+    let batch_rows = args.usize_or("batch", 8);
+    let threads_list: Vec<usize> = args
+        .list_or("threads", &["1", "2", "4"])
+        .iter()
+        .map(|s| s.parse().expect("--threads wants integers"))
+        .collect();
+    assert!(!threads_list.is_empty(), "--threads wants at least one worker count");
+    let r = (bn / 16).max(2);
+    let w = 9usize;
+    let scale = bn as f64 / 8.0;
+    let kernel = ToeplitzKernel::from_fn(bn, |lag| gaussian_kernel(lag as f64, scale));
+    let causal_kernel = kernel.clone().causal();
+    let xs: Vec<Vec<f32>> = (0..batch_rows).map(|_| rng.normals(bn)).collect();
+    let mut headers: Vec<String> = vec!["backend".into()];
+    for &threads in &threads_list {
+        headers.push(format!("threads={threads}"));
+    }
+    headers.push("speedup".into());
+    let header_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut bt = Table::new(
+        &format!("sharded apply_batch: median batch time (n = {bn}, batch = {batch_rows})"),
+        &header_refs,
+    );
+    for kind in [BackendKind::Dense, BackendKind::Fft, BackendKind::Ski, BackendKind::Freq] {
+        let k = if kind == BackendKind::Freq { &causal_kernel } else { &kernel };
+        let op = build_op(k, kind, r, w);
+        let reference = op.apply_batch(&xs);
+        let mut cells = vec![op.name().to_string()];
+        let mut meds: Vec<(usize, f64)> = Vec::new();
+        for &threads in &threads_list {
+            let pool = ThreadPool::new(threads);
+            let got = apply_batch_sharded(op.as_ref(), &xs, &pool);
+            assert_eq!(
+                got,
+                reference,
+                "{} sharded output diverged from serial at {threads} threads",
+                op.name()
+            );
+            let s = bench.run(|| {
+                std::hint::black_box(apply_batch_sharded(op.as_ref(), &xs, &pool));
+            });
+            meds.push((threads, s.p50_s));
+            cells.push(fmt_secs(s.p50_s));
+            rows.push(Json::obj(vec![
+                ("n", Json::num(bn as f64)),
+                ("r", Json::num(r as f64)),
+                ("w", Json::num(w as f64)),
+                ("backend", Json::str(op.name())),
+                ("batch", Json::num(batch_rows as f64)),
+                ("threads", Json::num(threads as f64)),
+                ("med_ns", Json::num(1e9 * s.p50_s)),
+                ("p90_ns", Json::num(1e9 * s.p90_s)),
+            ]));
+        }
+        // Speedup = fewest-threads median over most-threads median,
+        // independent of the order --threads was given in.
+        let lo = meds.iter().min_by_key(|(t, _)| *t).expect("at least one thread count");
+        let hi = meds.iter().max_by_key(|(t, _)| *t).expect("at least one thread count");
+        cells.push(format!("{:.2}×", lo.1 / hi.1.max(1e-12)));
+        bt.row(&cells);
+    }
+    bt.print();
+    println!(
+        "(bitwise identity across worker counts asserted per cell; dispatch plan at this shape: \
+         {:?})",
+        dispatch.plan(&DispatchQuery {
+            n: bn,
+            r,
+            w,
+            causal: false,
+            batch: batch_rows,
+            threads: *threads_list.last().unwrap(),
+        })
+    );
+
     match write_bench_json("backend_matrix", rows) {
         Ok(path) => println!("wrote {path}"),
         Err(e) => eprintln!("could not write BENCH_backend_matrix.json: {e}"),

@@ -17,16 +17,37 @@ use anyhow::{anyhow, Context, Result};
 use ski_tnn::coordinator::{batch_for, to_literals};
 use ski_tnn::data::{Corpus, Split};
 use ski_tnn::runtime::{Engine, ModelState, Task};
+use ski_tnn::util::bench::{stats_of, Stats};
 use ski_tnn::util::json::{self, Json};
 
-/// One config's measured step performance.
+/// One config's measured step performance.  Timing is collected
+/// per-step and reduced through [`ski_tnn::util::bench::stats_of`], so
+/// every bench in the crate reports the same `Stats` shape (median +
+/// p90) instead of hand-rolled means.
 #[derive(Debug, Clone)]
 pub struct Measured {
     pub config: String,
+    /// Per-step wall-clock statistics, seconds.
+    pub stats: Stats,
+    /// Median step time, ms (`1e3 * stats.p50_s`).
     pub ms_per_step: f64,
     pub steps_per_sec: f64,
     pub peak_rss_mb: f64,
     pub compile_s: f64,
+}
+
+impl Measured {
+    fn from_stats(config: &str, stats: Stats, peak_rss_mb: f64, compile_s: f64) -> Measured {
+        let ms = 1e3 * stats.p50_s;
+        Measured {
+            config: config.to_string(),
+            stats,
+            ms_per_step: ms,
+            steps_per_sec: if ms > 0.0 { 1e3 / ms } else { f64::INFINITY },
+            peak_rss_mb,
+            compile_s,
+        }
+    }
 }
 
 /// Peak resident set (VmHWM) of this process, in MiB.
@@ -62,9 +83,18 @@ pub fn run_child_if_requested() {
         .unwrap_or(5);
     match child_measure(&config, steps) {
         Ok(m) => {
+            // The same med/p90 JSON shape as the BENCH_*.json rows.
             println!(
-                "RESULT {{\"ms_per_step\": {}, \"peak_rss_mb\": {}, \"compile_s\": {}}}",
-                m.ms_per_step, m.peak_rss_mb, m.compile_s
+                "RESULT {{\"iters\": {}, \"mean_ms\": {}, \"med_ms\": {}, \"p90_ms\": {}, \
+                 \"p95_ms\": {}, \"std_ms\": {}, \"peak_rss_mb\": {}, \"compile_s\": {}}}",
+                m.stats.iters,
+                1e3 * m.stats.mean_s,
+                1e3 * m.stats.p50_s,
+                1e3 * m.stats.p90_s,
+                1e3 * m.stats.p95_s,
+                1e3 * m.stats.std_s,
+                m.peak_rss_mb,
+                m.compile_s
             );
             std::process::exit(0);
         }
@@ -93,18 +123,13 @@ fn child_measure(config: &str, steps: usize) -> Result<Measured> {
     let batch = to_literals(&src.next_batch())?;
     // warmup (first execution pays one-off allocs)
     state.step(&batch)?;
-    let t1 = Instant::now();
+    let mut samples = Vec::with_capacity(steps);
     for _ in 0..steps {
+        let t1 = Instant::now();
         state.step(&batch)?;
+        samples.push(t1.elapsed().as_secs_f64());
     }
-    let ms = 1e3 * t1.elapsed().as_secs_f64() / steps as f64;
-    Ok(Measured {
-        config: config.to_string(),
-        ms_per_step: ms,
-        steps_per_sec: 1e3 / ms,
-        peak_rss_mb: peak_rss_mb(),
-        compile_s,
-    })
+    Ok(Measured::from_stats(config, stats_of(&samples), peak_rss_mb(), compile_s))
 }
 
 /// Measure one config in a fresh subprocess.
@@ -128,14 +153,17 @@ pub fn measure(config: &str, steps: usize) -> Result<Measured> {
         .ok_or_else(|| anyhow!("no RESULT line from child for {config}"))?;
     let v = json::parse(line).map_err(|e| anyhow!("bad child json: {e}"))?;
     let f = |k: &str| v.get(k).and_then(Json::as_f64).unwrap_or(f64::NAN);
-    let ms = f("ms_per_step");
-    Ok(Measured {
-        config: config.to_string(),
-        ms_per_step: ms,
-        steps_per_sec: 1e3 / ms,
-        peak_rss_mb: f("peak_rss_mb"),
-        compile_s: f("compile_s"),
-    })
+    let iters = v.get("iters").and_then(Json::as_usize).unwrap_or(steps);
+    let stats = Stats {
+        iters,
+        mean_s: f("mean_ms") / 1e3,
+        p50_s: f("med_ms") / 1e3,
+        p90_s: f("p90_ms") / 1e3,
+        p95_s: f("p95_ms") / 1e3,
+        std_s: f("std_ms") / 1e3,
+        total_s: f("mean_ms") / 1e3 * iters as f64,
+    };
+    Ok(Measured::from_stats(config, stats, f("peak_rss_mb"), f("compile_s")))
 }
 
 /// Format a relative speedup of `new` over `base` as `+NN.N%`.

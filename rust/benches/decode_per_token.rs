@@ -20,7 +20,7 @@ use std::time::Instant;
 
 use ski_tnn::decode::{DiagonalSsm, KernelDecoder};
 use ski_tnn::toeplitz::ToeplitzKernel;
-use ski_tnn::util::bench::{fmt_secs, write_bench_json, Bencher, Table};
+use ski_tnn::util::bench::{fmt_secs, quick_mode, write_bench_json, Bencher, Table};
 use ski_tnn::util::json::Json;
 use ski_tnn::util::rng::Rng;
 
@@ -34,8 +34,20 @@ fn decay_taps(n: usize) -> Vec<f32> {
 
 fn main() {
     let rank = 16usize;
-    let sizes = [256usize, 512, 1024, 2048, 4096];
-    let bench = Bencher::quick();
+    // Quick (CI smoke) mode: fewer sizes, tighter iteration budget —
+    // the same keys `bench/baseline.json` is recorded with.
+    let quick = quick_mode();
+    let sizes: &[usize] = if quick { &[256, 512, 1024] } else { &[256, 512, 1024, 2048, 4096] };
+    let bench = if quick {
+        Bencher {
+            warmup_iters: 1,
+            min_iters: 3,
+            max_iters: 10,
+            budget: std::time::Duration::from_millis(500),
+        }
+    } else {
+        Bencher::quick()
+    };
     let mut rng = Rng::new(0);
 
     let mut t = Table::new(
@@ -45,7 +57,7 @@ fn main() {
     let mut first_ssm = 0.0f64;
     let mut last_ssm = 0.0f64;
     let mut rows: Vec<Json> = Vec::new();
-    for &n in &sizes {
+    for &n in sizes {
         let taps = decay_taps(n);
         let kernel = ToeplitzKernel::from_causal_taps(&taps);
         let ssm = DiagonalSsm::fit(&taps, rank);
@@ -112,19 +124,21 @@ fn main() {
         Err(e) => eprintln!("could not write BENCH_decode_per_token.json: {e}"),
     }
     println!(
-        "ssm per-token at n=4096 vs n=256: {:.2}× (flat ⇒ O(1) in context; \
+        "ssm per-token at n={} vs n={}: {:.2}× (flat ⇒ O(1) in context; \
          fft-recompute grows with n)",
+        sizes.last().unwrap(),
+        sizes[0],
         last_ssm / first_ssm
     );
 
     // ---------------- flatness in sequence position ----------------
-    let n = 4096;
+    let n = if quick { 1024 } else { 4096 };
     let taps = decay_taps(n);
     let ssm = DiagonalSsm::fit(&taps, rank);
     let x = rng.normals(n);
     let buckets = 4;
     let chunk = n / buckets;
-    let reps = 50;
+    let reps = if quick { 20 } else { 50 };
     let mut secs = vec![0.0f64; buckets];
     let mut sink = 0.0f32;
     for _ in 0..reps {
@@ -139,7 +153,7 @@ fn main() {
     }
     std::hint::black_box(sink);
     let mut t = Table::new(
-        "SSM per-token cost by stream position (n = 4096)",
+        &format!("SSM per-token cost by stream position (n = {n})"),
         &["positions", "per token"],
     );
     for (b, s) in secs.iter().enumerate() {

@@ -46,6 +46,12 @@ pub struct RunConfig {
     /// substrate serving only on the explicit CLI flag, never from a
     /// config file.
     pub backend: Option<String>,
+    /// Worker threads for the shard runtime (`runtime::pool`): batched
+    /// Toeplitz applies and scheduler ticks shard across this many
+    /// threads.  `0` = auto (`SKI_TNN_THREADS` env, else available
+    /// parallelism); `1` = the serial reference.  Results are bitwise
+    /// identical for every value.
+    pub threads: usize,
 }
 
 impl Default for RunConfig {
@@ -64,6 +70,7 @@ impl Default for RunConfig {
             log_every: 10,
             prefetch: 4,
             backend: None,
+            threads: 0,
         }
     }
 }
@@ -94,6 +101,7 @@ impl RunConfig {
                         .ok_or_else(|| anyhow!("unknown backend {s:?} (auto|dense|fft|ski|freq)"))?;
                     self.backend = Some(s.to_string());
                 }
+                "threads" => self.threads = val.as_usize().context("threads")?,
                 other => return Err(anyhow!("unknown run-config key {other:?}")),
             }
         }
@@ -140,6 +148,9 @@ impl RunConfig {
         }
         if let Some(v) = a.get("backend") {
             self.backend = Some(v.to_string());
+        }
+        if let Some(v) = a.get("threads") {
+            self.threads = v.parse().unwrap_or(self.threads);
         }
     }
 
@@ -189,6 +200,18 @@ mod tests {
         let args = Args::parse_from(["--backend".to_string(), "freq".to_string()], false);
         rc.apply_args(&args);
         assert_eq!(rc.backend.as_deref(), Some("freq"), "CLI overrides JSON");
+    }
+
+    #[test]
+    fn threads_parsed_from_json_and_cli() {
+        let mut rc = RunConfig::default();
+        assert_eq!(rc.threads, 0, "default is auto");
+        let j = json::parse(r#"{"threads": 2}"#).unwrap();
+        rc.apply_json(&j).unwrap();
+        assert_eq!(rc.threads, 2);
+        let args = Args::parse_from(["--threads".to_string(), "8".to_string()], false);
+        rc.apply_args(&args);
+        assert_eq!(rc.threads, 8, "CLI overrides JSON");
     }
 
     #[test]

@@ -21,8 +21,10 @@
 //! only has to fill the same arrays.
 
 use crate::data::VOCAB;
+use crate::runtime::pool::{global_pool, ThreadPool};
 use crate::toeplitz::{
-    apply_causal_plan, apply_causal_taps, BackendKind, CostModel, FftOp, ToeplitzKernel,
+    apply_causal_plan_with, apply_causal_taps, with_scratch, BackendKind, CostModel, SpectralPlan,
+    ToeplitzKernel,
 };
 use crate::util::rng::Rng;
 
@@ -44,6 +46,11 @@ pub struct DecodeModelConfig {
     /// convolution (`Auto` = cost-model dispatch: dense below the
     /// crossover, spectral above).
     pub oracle_backend: BackendKind,
+    /// Worker threads the oracle shards channels across: `0` = the
+    /// process-global pool (`SKI_TNN_THREADS` / machine parallelism),
+    /// `1` = serial, `N` = a model-owned pool of N.  Output is bitwise
+    /// identical for every value.
+    pub threads: usize,
     pub seed: u64,
 }
 
@@ -56,6 +63,7 @@ impl Default for DecodeModelConfig {
             n: 512,
             policy: DecodePolicy::default(),
             oracle_backend: BackendKind::Auto,
+            threads: 0,
             seed: 0,
         }
     }
@@ -68,8 +76,10 @@ struct Block {
     decoders: Vec<KernelDecoder>,
     /// Per-channel spectral oracle plan: kernel spectrum cached once
     /// at the padded context length, so full-context forwards never
-    /// re-FFT the (fixed) taps.
-    spectral: Vec<FftOp>,
+    /// re-FFT the (fixed) taps.  Plans are lock-free
+    /// [`SpectralPlan`]s — transform scratch lives in the shard
+    /// runtime's per-worker arenas ([`with_scratch`]), not here.
+    spectral: Vec<SpectralPlan>,
     /// (d, d) row-major gate projection.
     gate: Vec<f32>,
     /// (d, d) row-major channel mix.
@@ -84,6 +94,11 @@ pub struct DecodeModel {
     blocks: Vec<Block>,
     /// (d, vocab) row-major.
     out_w: Vec<f32>,
+    /// Oracle shard pool when `cfg.threads >= 1`, spawned lazily on
+    /// the first `forward_full` — streaming-only workloads (`generate`
+    /// serving) never pay for idle workers.  Empty = the
+    /// process-global pool.
+    pool: std::sync::OnceLock<ThreadPool>,
 }
 
 /// Per-session recurrent state: one [`DecoderState`] per block/channel.
@@ -132,6 +147,43 @@ fn matvec(m: &[f32], x: &[f32], d: usize) -> Vec<f32> {
     (0..d).map(|i| (0..d).map(|j| m[i * d + j] * x[j]).sum()).collect()
 }
 
+/// Per-channel causal token-mix columns of the full-context oracle:
+/// `cols[c][t]` = channel `c`'s convolution output at position `t`.
+/// Channels are independent, so they shard across `pool` (the model's
+/// own when `cfg.threads >= 1`, else the process-global one) —
+/// spectral applies run on each worker's own scratch arena
+/// ([`with_scratch`]); short prefixes stay serial (the per-shard
+/// dispatch overhead would dominate).  Either way every channel runs
+/// exactly the same code, so the result is bitwise identical for any
+/// worker count.
+fn oracle_cols(
+    block: &Block,
+    xs: &[Vec<f32>],
+    use_spectral: bool,
+    pool: &ThreadPool,
+) -> Vec<Vec<f32>> {
+    let d = block.taps.len();
+    let t_len = xs.len();
+    let col_for = |c: usize| -> Vec<f32> {
+        let series: Vec<f32> = xs.iter().map(|row| row[c]).collect();
+        if use_spectral {
+            with_scratch(|s| apply_causal_plan_with(&block.spectral[c], &series, s))
+        } else {
+            apply_causal_taps(&block.taps[c], &series, BackendKind::Dense)
+        }
+    };
+    if pool.threads().min(d) <= 1 || t_len < 32 {
+        return (0..d).map(col_for).collect();
+    }
+    let mut cols: Vec<Vec<f32>> = vec![Vec::new(); d];
+    pool.shard_mut(&mut cols, |start, shard_out| {
+        for (j, slot) in shard_out.iter_mut().enumerate() {
+            *slot = col_for(start + j);
+        }
+    });
+    cols
+}
+
 impl DecodeModel {
     /// Seeded-random init: decaying causal kernels (ℓ₁-normalised so
     /// every Toeplitz operator has gain ≤ 1), 1/√d projections.
@@ -173,12 +225,12 @@ impl DecodeModel {
                 // below-crossover model skips blocks·d kernel FFTs
                 // and their spectrum/scratch buffers entirely.
                 let p = cfg.n.next_power_of_two();
-                let spectral: Vec<FftOp> = if spectral_oracle_possible(&cfg) {
+                let spectral: Vec<SpectralPlan> = if spectral_oracle_possible(&cfg) {
                     taps.iter()
                         .map(|t| {
                             let mut padded = vec![0.0f32; p];
                             padded[..t.len()].copy_from_slice(t);
-                            FftOp::new(&ToeplitzKernel::from_causal_taps(&padded))
+                            SpectralPlan::new(&ToeplitzKernel::from_causal_taps(&padded))
                         })
                         .collect()
                 } else {
@@ -193,7 +245,17 @@ impl DecodeModel {
                 }
             })
             .collect();
-        DecodeModel { cfg, embed, blocks, out_w }
+        DecodeModel { cfg, embed, blocks, out_w, pool: std::sync::OnceLock::new() }
+    }
+
+    /// The pool `forward_full` shards channels across (see
+    /// `DecodeModelConfig::threads`).
+    fn oracle_pool(&self) -> &ThreadPool {
+        if self.cfg.threads >= 1 {
+            self.pool.get_or_init(|| ThreadPool::new(self.cfg.threads))
+        } else {
+            global_pool()
+        }
     }
 
     /// Fresh per-session state (all zeros — position 0).
@@ -254,7 +316,6 @@ impl DecodeModel {
                 self.embed[tok * d..(tok + 1) * d].to_vec()
             })
             .collect();
-        let mut series = vec![0.0f32; t_len];
         // Backend choice for the per-channel causal convolutions: the
         // direct loop at t_len vs the per-channel spectral plans whose
         // kernel spectra were cached once at the padded context length
@@ -272,25 +333,15 @@ impl DecodeModel {
                     cost.fft_cost(p) < cost.dense_cost(t_len)
                 }
             };
+        let pool = self.oracle_pool();
         for block in &self.blocks {
-            let mut us = vec![vec![0.0f32; d]; t_len];
-            for (c, taps) in block.taps.iter().enumerate() {
-                for (t, row) in xs.iter().enumerate() {
-                    series[t] = row[c];
-                }
-                let col = if use_spectral {
-                    apply_causal_plan(&block.spectral[c], &series)
-                } else {
-                    apply_causal_taps(taps, &series, BackendKind::Dense)
-                };
-                for (t, &v) in col.iter().enumerate() {
-                    us[t][c] = v;
-                }
-            }
+            // cols[c][t]: channel c's token-mix output — channels are
+            // independent, so they shard across the pool (bitwise
+            // identical to the serial loop for any worker count).
+            let cols = oracle_cols(block, &xs, use_spectral, pool);
             for t in 0..t_len {
                 let g = matvec(&block.gate, &xs[t], d);
-                let v: Vec<f32> =
-                    us[t].iter().zip(g.iter()).map(|(&ui, &gi)| ui * sigmoid(gi)).collect();
+                let v: Vec<f32> = (0..d).map(|c| cols[c][t] * sigmoid(g[c])).collect();
                 let h = matvec(&block.mix, &v, d);
                 for c in 0..d {
                     xs[t][c] += h[c].tanh();
@@ -449,6 +500,21 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn oracle_threads_are_bitwise_equivalent() {
+        // cfg.threads only changes scheduling: the sharded channel
+        // loop must reproduce the serial oracle bit-for-bit.
+        let mut serial_cfg = tiny_cfg(17);
+        serial_cfg.threads = 1;
+        let mut par_cfg = tiny_cfg(17);
+        par_cfg.threads = 4;
+        // t_len >= 32 so the parallel path actually engages.
+        let toks: Vec<i32> = (0..40).map(|i| (i * 13 % 256) as i32).collect();
+        let a = DecodeModel::new(serial_cfg).forward_full(&toks);
+        let b = DecodeModel::new(par_cfg).forward_full(&toks);
+        assert_eq!(a, b, "oracle must be bitwise identical across worker counts");
     }
 
     #[test]

@@ -10,6 +10,10 @@
 //! * `generate` — streaming autoregressive generation through the
 //!   decode subsystem (causal-Toeplitz→SSM, O(1) per token): one-shot
 //!   text generation or a continuous-batching load test.
+//! * `bench-check` — offline perf gate: compare the `BENCH_*.json`
+//!   artifacts emitted by the benches against `bench/baseline.json`
+//!   and fail on median regressions (CI's `bench-smoke` job; see
+//!   README "Threading & benchmarking in CI").
 //!
 //! Shared flags come from [`ski_tnn::config::RunConfig`]
 //! (`--config-file run.json` plus per-flag overrides).  Examples:
@@ -29,6 +33,11 @@
 //! dynamic batcher with no artifacts needed, `generate` forces the
 //! full-context oracle's path; `auto` defers to the cost-model
 //! dispatcher (`toeplitz::Dispatch`).
+//!
+//! `--threads N` sizes the shard runtime (`runtime::pool`): batched
+//! applies and scheduler ticks run across N threads, bitwise identical
+//! to `--threads 1`.  Default 0 = auto (`SKI_TNN_THREADS`, else the
+//! machine's parallelism).
 
 use anyhow::{bail, Result};
 
@@ -47,9 +56,12 @@ fn main() -> Result<()> {
         Some("eval") => cmd_eval(&args),
         Some("serve") => cmd_serve(&args),
         Some("generate") => cmd_generate(&args),
-        Some(other) => bail!("unknown subcommand {other:?} (try list|train|eval|serve|generate)"),
+        Some("bench-check") => cmd_bench_check(&args),
+        Some(other) => {
+            bail!("unknown subcommand {other:?} (try list|train|eval|serve|generate|bench-check)")
+        }
         None => {
-            eprintln!("usage: ski-tnn <list|train|eval|serve|generate> [flags]");
+            eprintln!("usage: ski-tnn <list|train|eval|serve|generate|bench-check> [flags]");
             eprintln!("see `cargo doc` or README.md for the full flag set");
             Ok(())
         }
@@ -219,7 +231,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
 /// backend — requested explicitly or chosen by the cost-model
 /// dispatcher — with the same queueing/latency report as model serving.
 fn cmd_serve_substrate(args: &Args, backend: &str) -> Result<()> {
-    use ski_tnn::server::serve_toeplitz;
+    use ski_tnn::runtime::{resolve_threads, ThreadPool};
+    use ski_tnn::server::serve_toeplitz_on;
     use ski_tnn::toeplitz::{
         build_op, gaussian_kernel, BackendKind, Dispatch, DispatchQuery, ToeplitzKernel,
         ToeplitzOp,
@@ -232,6 +245,9 @@ fn cmd_serve_substrate(args: &Args, backend: &str) -> Result<()> {
     let clients = args.usize_or("clients", 4).max(1);
     let r = args.usize_or("rank", (n / 16).max(2));
     let w = args.usize_or("band", 9);
+    // Thread count via RunConfig so `"threads"` in a --config-file is
+    // honoured here exactly as in `generate` (CLI flag still wins).
+    let threads = resolve_threads(RunConfig::from_args(args)?.threads);
     let requested = BackendKind::parse(backend)
         .ok_or_else(|| anyhow::anyhow!("unknown backend {backend:?} (auto|dense|fft|ski|freq)"))?;
     let server_cfg = ServerConfig {
@@ -240,37 +256,56 @@ fn cmd_serve_substrate(args: &Args, backend: &str) -> Result<()> {
         max_wait: std::time::Duration::from_millis(args.u64_or("max-wait-ms", 2)),
         queue_depth: args.usize_or("queue-depth", 64),
     };
-    let kind = match requested {
-        BackendKind::Auto => Dispatch::default().select(&DispatchQuery {
-            n,
-            r,
-            w,
-            causal: false,
-            batch: server_cfg.max_batch,
-        }),
-        k => k,
+    let dispatch = Dispatch::default();
+    let query = DispatchQuery { n, r, w, causal: false, batch: server_cfg.max_batch, threads };
+    // `plan` decides backend AND whether sharding pays at this shape;
+    // for a forced backend the same model still gates the sharding
+    // (tiny shapes run serially instead of paying shard overhead).
+    let (kind, parallelize) = match requested {
+        BackendKind::Auto => dispatch.plan(&query),
+        k => {
+            let q = DispatchQuery { causal: k == BackendKind::Freq, ..query };
+            (k, dispatch.should_shard(k, &q))
+        }
     };
     let kernel = ToeplitzKernel::from_fn(n, |lag| gaussian_kernel(lag as f64, n as f64 / 8.0));
     let kernel = if kind == BackendKind::Freq { kernel.causal() } else { kernel };
     let op: std::sync::Arc<dyn ToeplitzOp> = std::sync::Arc::from(build_op(&kernel, kind, r, w));
+    let pool_threads = if parallelize { threads } else { 1 };
     println!(
         "serving substrate backend {} (requested {requested:?} → dispatched), n={n}, \
-         ~{:.0} flops/apply, batch {}",
+         ~{:.0} flops/apply, batch {} sharded over {pool_threads} threads",
         op.name(),
         op.flops_estimate(),
         server_cfg.max_batch
     );
     let max_batch = server_cfg.max_batch;
+    let pool = std::sync::Arc::new(ThreadPool::new(pool_threads));
     let batcher = Batcher::new(server_cfg);
     run_synthetic_load(
         batcher,
-        serve_toeplitz(op),
+        serve_toeplitz_on(op, pool),
         clients,
         (requests / clients).max(1),
         n,
         args.u64_or("seed", 0),
         max_batch,
     )
+}
+
+/// Offline perf gate: compare emitted `BENCH_*.json` medians against
+/// `bench/baseline.json` (calibration-scaled), failing the process on
+/// regressions beyond the baseline threshold.  `--update` rewrites the
+/// baseline from the current artifacts instead.
+fn cmd_bench_check(args: &Args) -> Result<()> {
+    let baseline = args.str_or("baseline", "bench/baseline.json");
+    let dir = args.str_or("dir", ".");
+    let update = args.flag("update");
+    let allow_missing = args.flag("allow-missing");
+    let threshold = args.get("threshold").and_then(|v| v.parse::<f64>().ok());
+    let ok = ski_tnn::util::benchcheck::run(&baseline, &dir, update, threshold, allow_missing)?;
+    anyhow::ensure!(ok, "bench-check: median regression beyond threshold (see report above)");
+    Ok(())
 }
 
 fn cmd_generate(args: &Args) -> Result<()> {
@@ -280,9 +315,11 @@ fn cmd_generate(args: &Args) -> Result<()> {
     use ski_tnn::toeplitz::{BackendKind, Dispatch, DispatchQuery};
 
     let seed = args.u64_or("seed", 0);
-    // Backend for the full-context oracle: run-config JSON or CLI
-    // (`RunConfig::apply_args` gives the CLI flag precedence).
-    let backend_flag = RunConfig::from_args(args)?.backend.unwrap_or_else(|| "auto".to_string());
+    // Backend for the full-context oracle and thread count for the
+    // scheduler: run-config JSON or CLI (`RunConfig::apply_args` gives
+    // the CLI flag precedence).
+    let rc = RunConfig::from_args(args)?;
+    let backend_flag = rc.backend.unwrap_or_else(|| "auto".to_string());
     let oracle_backend = BackendKind::parse(&backend_flag)
         .ok_or_else(|| anyhow::anyhow!("unknown backend {backend_flag:?} (auto|dense|fft|ski|freq)"))?;
     let cfg = DecodeModelConfig {
@@ -294,6 +331,7 @@ fn cmd_generate(args: &Args) -> Result<()> {
             max_rel_residual: args.f64_or("max-rel-residual", 0.05),
         },
         oracle_backend,
+        threads: rc.threads,
         seed,
         ..DecodeModelConfig::default()
     };
@@ -303,6 +341,7 @@ fn cmd_generate(args: &Args) -> Result<()> {
         w: 0,
         causal: true,
         batch: 1,
+        threads: 1,
     });
     println!(
         "full-context oracle backend: {} (dispatcher would pick {} at n={})",
@@ -336,6 +375,7 @@ fn cmd_generate(args: &Args) -> Result<()> {
         max_sessions: args.usize_or("slots", 8),
         queue_depth: args.usize_or("queue-depth", 64),
         max_new_cap: args.usize_or("max-new-cap", 512),
+        threads: rc.threads,
     });
     let handle = sched.handle();
     let sessions = args.usize_or("sessions", 1);

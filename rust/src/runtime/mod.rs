@@ -11,6 +11,9 @@
 //! * [`ModelState`] — the device-facing training state (`params`, Adam
 //!   `m`/`v`, step counter) driven by the fused `step` artifact.
 //! * [`HostTensor`] — dtype-tagged host arrays for batches and outputs.
+//! * [`pool`] — the std-only shard thread pool every parallel path in
+//!   the crate (batched Toeplitz applies, scheduler ticks) runs on;
+//!   sized by `SKI_TNN_THREADS` / `RunConfig.threads`.
 //!
 //! HLO **text** is the interchange format: jax ≥ 0.5 serializes
 //! HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1
@@ -19,10 +22,12 @@
 
 mod engine;
 mod manifest;
+pub mod pool;
 mod state;
 mod tensor;
 
 pub use engine::Engine;
 pub use manifest::{Dtype, Entry, IoDesc, Manifest, ModelConfig, Task, Variant};
+pub use pool::{default_threads, global_pool, resolve_threads, ThreadPool};
 pub use state::ModelState;
 pub use tensor::HostTensor;

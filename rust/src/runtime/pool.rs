@@ -1,0 +1,362 @@
+//! Fixed-size shard thread pool — the parallel substrate of the crate.
+//!
+//! Std-only (threads + channels-free: one shared injector deque behind
+//! a `Mutex`/`Condvar` pair).  Design goals, in order:
+//!
+//! 1. **Determinism**: the pool never reorders *data*.  Callers submit
+//!    a batch of shard tasks via [`ThreadPool::scope`]; each task
+//!    writes to its own disjoint output, so results are bitwise
+//!    identical for any worker count.  Scheduling order is free.
+//! 2. **No idle caller**: the submitting thread drains the injector
+//!    while it waits (it "steals" shards back), so a pool of size `t`
+//!    really applies `t` threads — `t-1` workers plus the caller.
+//! 3. **Panic containment**: a panicking task never takes a worker
+//!    down or hangs the latch; the first payload is re-thrown on the
+//!    submitting thread after every task of the batch has finished.
+//!
+//! Sizing comes from `SKI_TNN_THREADS` (env) or the machine's
+//! available parallelism — see [`default_threads`] — with
+//! `RunConfig.threads` / `--threads` overriding per run.  `threads: 1`
+//! spawns no workers at all and runs shards inline on the caller: the
+//! serial reference every determinism test compares against.
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
+
+/// A borrowed shard task, alive only for the duration of one
+/// [`ThreadPool::scope`] call.
+pub type Task<'a> = Box<dyn FnOnce() + Send + 'a>;
+
+/// An owned job as stored in the injector (lifetime erased — sound
+/// because `scope` blocks until its jobs have all run).
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Shared {
+    queue: Mutex<VecDeque<Job>>,
+    work: Condvar,
+    shutdown: AtomicBool,
+}
+
+/// Completion latch for one `scope` batch.
+struct Latch {
+    remaining: Mutex<usize>,
+    done: Condvar,
+    panic: Mutex<Option<Box<dyn std::any::Any + Send + 'static>>>,
+}
+
+/// The fixed worker pool.  Dropping it joins every worker (pending
+/// jobs finish first); the process-wide instance from [`global_pool`]
+/// simply lives forever.
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+    threads: usize,
+}
+
+impl ThreadPool {
+    /// A pool applying `threads` threads of parallelism: `threads - 1`
+    /// spawned workers plus the calling thread (which participates in
+    /// every `scope`).  `threads <= 1` spawns nothing and makes
+    /// `scope` a plain serial loop.
+    pub fn new(threads: usize) -> ThreadPool {
+        let threads = threads.max(1);
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(VecDeque::new()),
+            work: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+        });
+        let workers = (1..threads)
+            .map(|i| {
+                let s = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("ski-tnn-pool-{i}"))
+                    .spawn(move || worker_loop(&s))
+                    .expect("spawning pool worker")
+            })
+            .collect();
+        ThreadPool { shared, workers, threads }
+    }
+
+    /// Configured parallelism (spawned workers + the caller).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run every task to completion, using the workers *and* the
+    /// calling thread.  Returns once all tasks have finished.  If any
+    /// task panicked, the first payload is re-thrown here — after the
+    /// whole batch has drained, so no borrow escapes the scope.
+    pub fn scope<'a>(&self, tasks: Vec<Task<'a>>) {
+        if tasks.is_empty() {
+            return;
+        }
+        if self.threads == 1 || tasks.len() == 1 {
+            // Serial reference path: in order, on the caller.
+            for t in tasks {
+                t();
+            }
+            return;
+        }
+        let latch = Arc::new(Latch {
+            remaining: Mutex::new(tasks.len()),
+            done: Condvar::new(),
+            panic: Mutex::new(None),
+        });
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            for task in tasks {
+                let l = Arc::clone(&latch);
+                let job: Task<'a> = Box::new(move || {
+                    if let Err(p) = catch_unwind(AssertUnwindSafe(task)) {
+                        let mut slot = l.panic.lock().unwrap();
+                        if slot.is_none() {
+                            *slot = Some(p);
+                        }
+                    }
+                    let mut rem = l.remaining.lock().unwrap();
+                    *rem -= 1;
+                    if *rem == 0 {
+                        l.done.notify_all();
+                    }
+                });
+                // SAFETY: the job's borrows (inside `task`) outlive the
+                // injector's hold on it because this function does not
+                // return until `remaining` hits zero, and the wrapper
+                // only decrements after the task has been consumed.
+                let job: Job = unsafe { std::mem::transmute::<Task<'a>, Task<'static>>(job) };
+                q.push_back(job);
+            }
+            self.shared.work.notify_all();
+        }
+        // The caller works too: drain whatever is queued (usually its
+        // own shards) instead of blocking immediately.
+        loop {
+            let job = self.shared.queue.lock().unwrap().pop_front();
+            match job {
+                Some(j) => j(),
+                None => break,
+            }
+        }
+        let mut rem = latch.remaining.lock().unwrap();
+        while *rem > 0 {
+            rem = latch.done.wait(rem).unwrap();
+        }
+        drop(rem);
+        if let Some(p) = latch.panic.lock().unwrap().take() {
+            resume_unwind(p);
+        }
+    }
+}
+
+impl ThreadPool {
+    /// Shard `items` into fixed contiguous chunks of
+    /// `ceil(len / threads)` and run `f(start_index, chunk)` for each
+    /// on the pool — the one chunking policy every parallel path in
+    /// the crate shares (batched applies, scheduler ticks, oracle
+    /// channels).  With one thread (or one item) `f` runs once, inline
+    /// on the caller, over the whole slice; either way each element is
+    /// visited exactly once, so callers are bitwise worker-count-
+    /// independent as long as `f` is element-wise.
+    pub fn shard_mut<T, F>(&self, items: &mut [T], f: F)
+    where
+        T: Send,
+        F: Fn(usize, &mut [T]) + Sync,
+    {
+        let rows = items.len();
+        if rows == 0 {
+            return;
+        }
+        let shards = self.threads().min(rows);
+        if shards <= 1 {
+            f(0, items);
+            return;
+        }
+        let chunk = rows.div_ceil(shards);
+        let f = &f;
+        let tasks: Vec<Task> = items
+            .chunks_mut(chunk)
+            .enumerate()
+            .map(|(s, c)| {
+                let task: Task = Box::new(move || f(s * chunk, c));
+                task
+            })
+            .collect();
+        self.scope(tasks);
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        {
+            // The store + notify must happen under the queue mutex:
+            // a worker checks `shutdown` while holding it, and an
+            // unlocked store could land in the window between that
+            // check and its `wait()`, losing the wakeup and hanging
+            // the join below forever.
+            let _q = self.shared.queue.lock().unwrap();
+            self.shared.shutdown.store(true, Ordering::Release);
+            self.shared.work.notify_all();
+        }
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    loop {
+        let job = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(j) = q.pop_front() {
+                    break j;
+                }
+                if shared.shutdown.load(Ordering::Acquire) {
+                    return;
+                }
+                q = shared.work.wait(q).unwrap();
+            }
+        };
+        // Scope wrappers already catch panics; this is defence so a
+        // worker can never die and strand a latch.
+        let _ = catch_unwind(AssertUnwindSafe(job));
+    }
+}
+
+/// Parallelism the pool defaults to: `SKI_TNN_THREADS` when set to a
+/// positive integer, else the machine's available parallelism, else 1.
+pub fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("SKI_TNN_THREADS") {
+        if let Ok(t) = v.trim().parse::<usize>() {
+            if t >= 1 {
+                return t;
+            }
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Resolve a configured thread count: explicit values pass through,
+/// `0` means "auto" ([`default_threads`]).
+pub fn resolve_threads(configured: usize) -> usize {
+    if configured >= 1 {
+        configured
+    } else {
+        default_threads()
+    }
+}
+
+/// The process-wide pool (sized once from [`default_threads`]); used
+/// by call sites with no per-run thread configuration.
+pub fn global_pool() -> &'static ThreadPool {
+    static POOL: OnceLock<ThreadPool> = OnceLock::new();
+    POOL.get_or_init(|| ThreadPool::new(default_threads()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shards_write_disjoint_slots() {
+        let pool = ThreadPool::new(4);
+        let mut out = vec![0usize; 32];
+        let tasks: Vec<Task> = out
+            .chunks_mut(5)
+            .enumerate()
+            .map(|(s, chunk)| {
+                let task: Task = Box::new(move || {
+                    for (i, v) in chunk.iter_mut().enumerate() {
+                        *v = s * 100 + i;
+                    }
+                });
+                task
+            })
+            .collect();
+        pool.scope(tasks);
+        for (j, &v) in out.iter().enumerate() {
+            assert_eq!(v, (j / 5) * 100 + j % 5, "slot {j}");
+        }
+    }
+
+    #[test]
+    fn single_thread_pool_runs_inline_in_order() {
+        let pool = ThreadPool::new(1);
+        assert_eq!(pool.threads(), 1);
+        let seen = Mutex::new(Vec::new());
+        let tasks: Vec<Task> = (0..4)
+            .map(|i| {
+                let seen = &seen;
+                let task: Task = Box::new(move || seen.lock().unwrap().push(i));
+                task
+            })
+            .collect();
+        pool.scope(tasks);
+        assert_eq!(*seen.lock().unwrap(), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn panic_in_task_propagates_and_pool_survives() {
+        let pool = ThreadPool::new(3);
+        let caught = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            let tasks: Vec<Task> = (0..6)
+                .map(|i| {
+                    let task: Task = Box::new(move || {
+                        if i == 2 {
+                            panic!("task {i} exploded");
+                        }
+                    });
+                    task
+                })
+                .collect();
+            pool.scope(tasks);
+        }));
+        assert!(caught.is_err(), "scope must re-throw the task panic");
+        // Every worker must still be alive and working.
+        let mut out = vec![0u32; 8];
+        let tasks: Vec<Task> = out
+            .chunks_mut(2)
+            .enumerate()
+            .map(|(s, c)| {
+                let task: Task = Box::new(move || c.iter_mut().for_each(|v| *v = s as u32 + 1));
+                task
+            })
+            .collect();
+        pool.scope(tasks);
+        assert!(out.iter().all(|&v| v > 0), "pool dead after panic: {out:?}");
+        // And drop must join cleanly (a hang here times the suite out).
+        drop(pool);
+    }
+
+    #[test]
+    fn drop_with_no_work_is_clean() {
+        drop(ThreadPool::new(8));
+    }
+
+    #[test]
+    fn shard_mut_visits_every_element_once() {
+        for threads in [1usize, 3, 8] {
+            let pool = ThreadPool::new(threads);
+            for rows in [0usize, 1, 7, 24] {
+                let mut v = vec![0usize; rows];
+                pool.shard_mut(&mut v, |start, chunk| {
+                    for (j, slot) in chunk.iter_mut().enumerate() {
+                        *slot += start + j + 1; // global index, exactly once
+                    }
+                });
+                for (i, &x) in v.iter().enumerate() {
+                    assert_eq!(x, i + 1, "rows={rows} threads={threads} slot {i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn resolve_threads_zero_is_auto() {
+        assert!(resolve_threads(0) >= 1);
+        assert_eq!(resolve_threads(3), 3);
+    }
+}

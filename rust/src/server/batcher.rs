@@ -13,8 +13,8 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, ensure, Result};
 
 use crate::data::PAD;
-use crate::runtime::{Engine, HostTensor, ModelState};
-use crate::toeplitz::ToeplitzOp;
+use crate::runtime::{global_pool, Engine, HostTensor, ModelState, ThreadPool};
+use crate::toeplitz::{apply_batch_sharded, ToeplitzOp};
 
 /// Server tuning knobs.
 #[derive(Debug, Clone)]
@@ -235,25 +235,36 @@ fn ids_to_signal(row: &[i32]) -> Vec<f32> {
 
 /// Adapt a [`ToeplitzOp`] backend into a [`Batcher::run`] executor:
 /// each row's ids become an f32 signal and the response row is the
-/// operator applied to it.  This is how the backend dispatcher rides
-/// the same queueing/batching policy as the XLA model path — and the
+/// operator applied to it, with the batch **sharded across the global
+/// thread pool** (`SKI_TNN_THREADS`-sized) instead of looped serially.
+/// This is how the backend dispatcher rides the same
+/// queueing/batching policy as the XLA model path — and the
 /// artifact-free load-test target of `ski-tnn serve --backend …`.
 pub fn serve_toeplitz(
     op: Arc<dyn ToeplitzOp>,
 ) -> impl FnMut(&HostTensor) -> Result<Vec<Vec<f32>>> {
-    move |batch: &HostTensor| {
-        let shape = batch.shape().to_vec();
-        ensure!(shape.len() == 2, "expected a (batch, n) ids tensor, got {shape:?}");
-        ensure!(
-            shape[1] == op.n(),
-            "row width {} does not match operator n {}",
-            shape[1],
-            op.n()
-        );
-        let ids = batch.as_i32()?;
-        let rows: Vec<Vec<f32>> = ids.chunks(shape[1]).map(ids_to_signal).collect();
-        Ok(op.apply_batch(&rows))
-    }
+    move |batch: &HostTensor| exec_toeplitz(op.as_ref(), global_pool(), batch)
+}
+
+/// [`serve_toeplitz`] on an explicit pool (per-run `--threads`).
+pub fn serve_toeplitz_on(
+    op: Arc<dyn ToeplitzOp>,
+    pool: Arc<ThreadPool>,
+) -> impl FnMut(&HostTensor) -> Result<Vec<Vec<f32>>> {
+    move |batch: &HostTensor| exec_toeplitz(op.as_ref(), &pool, batch)
+}
+
+fn exec_toeplitz(
+    op: &dyn ToeplitzOp,
+    pool: &ThreadPool,
+    batch: &HostTensor,
+) -> Result<Vec<Vec<f32>>> {
+    let shape = batch.shape().to_vec();
+    ensure!(shape.len() == 2, "expected a (batch, n) ids tensor, got {shape:?}");
+    ensure!(shape[1] == op.n(), "row width {} does not match operator n {}", shape[1], op.n());
+    let ids = batch.as_i32()?;
+    let rows: Vec<Vec<f32>> = ids.chunks(shape[1]).map(ids_to_signal).collect();
+    Ok(apply_batch_sharded(op, &rows, pool))
 }
 
 #[cfg(test)]
@@ -378,6 +389,21 @@ mod tests {
             assert!((a - b).abs() < 1e-4, "row value {i}: {a} vs {b}");
         }
         assert_eq!(stats.requests, 1);
+    }
+
+    #[test]
+    fn toeplitz_executor_pooled_matches_serial() {
+        // The sharded executor must answer bit-for-bit what a
+        // single-thread pool answers, whatever the worker count.
+        use crate::toeplitz::{build_op, BackendKind, ToeplitzKernel};
+        let n = 16;
+        let kernel = ToeplitzKernel::from_fn(n, |lag| 1.0 / (1.0 + lag.abs() as f32));
+        let op: Arc<dyn ToeplitzOp> = Arc::from(build_op(&kernel, BackendKind::Fft, 0, 0));
+        let ids: Vec<i32> = (0..4 * n as i32).collect();
+        let batch = HostTensor::i32(vec![4, n], ids);
+        let mut serial = serve_toeplitz_on(op.clone(), Arc::new(ThreadPool::new(1)));
+        let mut pooled = serve_toeplitz_on(op, Arc::new(ThreadPool::new(4)));
+        assert_eq!(serial(&batch).unwrap(), pooled(&batch).unwrap());
     }
 
     #[test]

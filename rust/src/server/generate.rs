@@ -22,6 +22,7 @@ use anyhow::{anyhow, Result};
 
 use super::batcher::QUEUE_SAMPLE_CAP;
 use crate::decode::{DecodeModel, Sampler, Session};
+use crate::runtime::pool::{resolve_threads, ThreadPool};
 use crate::util::bench::{percentiles_of, push_sample};
 
 /// Scheduler tuning knobs.
@@ -33,11 +34,16 @@ pub struct GenConfig {
     pub queue_depth: usize,
     /// Server-side cap on tokens per request.
     pub max_new_cap: usize,
+    /// Worker threads the tick loop shards live sessions across
+    /// (0 = auto: `SKI_TNN_THREADS` / available parallelism; 1 =
+    /// serial reference).  Sessions are independent, so generated
+    /// tokens are bitwise identical for any value.
+    pub threads: usize,
 }
 
 impl Default for GenConfig {
     fn default() -> Self {
-        GenConfig { max_sessions: 8, queue_depth: 64, max_new_cap: 512 }
+        GenConfig { max_sessions: 8, queue_depth: 64, max_new_cap: 512, threads: 0 }
     }
 }
 
@@ -212,6 +218,7 @@ impl GenScheduler {
     /// dropped and all admitted sessions have finished.
     pub fn run(mut self, model: &DecodeModel) -> Result<GenStats> {
         drop(self.tx.take()); // only client handles keep the queue alive
+        let pool = ThreadPool::new(resolve_threads(self.cfg.threads));
         let mut stats = GenStats::default();
         let mut active: Vec<Live> = Vec::new();
         let mut disconnected = false;
@@ -242,15 +249,12 @@ impl GenScheduler {
                     }
                 }
             }
-            // One tick: a decode step for every live session.
+            // One tick: a decode step for every live session, sharded
+            // across the pool (sessions are independent — each owns
+            // its state and sampler — so this is bitwise identical to
+            // the serial loop for any worker count).
             let t0 = Instant::now();
-            let mut stepped = 0usize;
-            for live in active.iter_mut() {
-                if !live.session.done() {
-                    live.session.step(model);
-                    stepped += 1;
-                }
-            }
+            let stepped = step_sessions(&pool, model, &mut active);
             stats.decode_seconds += t0.elapsed().as_secs_f64();
             stats.ticks += 1;
             stats.active_session_ticks += active.len();
@@ -267,6 +271,26 @@ impl GenScheduler {
         }
         Ok(stats)
     }
+}
+
+/// One decode step for every unfinished live session, sharded across
+/// `pool` in fixed contiguous chunks.  Returns how many sessions
+/// actually stepped (a commutative sum, so the count is deterministic
+/// too).
+fn step_sessions(pool: &ThreadPool, model: &DecodeModel, active: &mut [Live]) -> usize {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    let stepped = AtomicUsize::new(0);
+    pool.shard_mut(active, |_, shard| {
+        let mut local = 0usize;
+        for live in shard.iter_mut() {
+            if !live.session.done() {
+                live.session.step(model);
+                local += 1;
+            }
+        }
+        stepped.fetch_add(local, Ordering::Relaxed);
+    });
+    stepped.into_inner()
 }
 
 #[cfg(test)]
@@ -293,6 +317,7 @@ mod tests {
             max_sessions: 4,
             queue_depth: 16,
             max_new_cap: 64,
+            threads: 4,
         });
         let h = sched.handle();
         let clients: Vec<_> = (0..3)
@@ -328,6 +353,7 @@ mod tests {
             max_sessions: 6,
             queue_depth: 16,
             max_new_cap: 64,
+            threads: 2,
         });
         let h = sched.handle();
         let t = std::thread::spawn(move || {
@@ -375,6 +401,42 @@ mod tests {
     }
 
     #[test]
+    fn parallel_ticks_match_serial_token_for_token() {
+        // The sharded tick loop is a pure scheduling change: the same
+        // (prompt, seed) set must yield byte-identical generations at
+        // any worker count.
+        let model = tiny_model();
+        let run = |threads: usize| -> Vec<Vec<i32>> {
+            let sched = GenScheduler::new(GenConfig {
+                max_sessions: 8,
+                queue_depth: 16,
+                max_new_cap: 64,
+                threads,
+            });
+            let h = sched.handle();
+            let t = std::thread::spawn(move || {
+                let pending: Vec<_> = (0..8)
+                    .map(|i| {
+                        let params = GenParams {
+                            max_new: 10,
+                            temperature: 1.1,
+                            top_k: 12,
+                            seed: 1000 + i as u64,
+                        };
+                        h.try_submit(vec![i as i32 + 1, 2 * i as i32], params).unwrap()
+                    })
+                    .collect();
+                pending.into_iter().map(|rx| rx.recv().unwrap().tokens).collect::<Vec<_>>()
+            });
+            sched.run(&model).unwrap();
+            t.join().unwrap()
+        };
+        let serial = run(1);
+        assert_eq!(serial, run(2), "2 workers diverged from serial");
+        assert_eq!(serial, run(8), "8 workers diverged from serial");
+    }
+
+    #[test]
     fn zero_token_requests_complete() {
         let model = tiny_model();
         let sched = GenScheduler::new(GenConfig::default());
@@ -395,6 +457,7 @@ mod tests {
             max_sessions: 2,
             queue_depth: 1,
             max_new_cap: 8,
+            ..GenConfig::default()
         });
         let h = sched.handle();
         // Scheduler not running: the bounded queue must reject the

@@ -14,13 +14,16 @@
 
 mod kernels;
 mod op;
+pub mod parallel;
 mod ski;
 
 pub use kernels::{decay_bias, gaussian_kernel, rational_kernel, warp, TableKernel};
 pub use op::{
-    apply_causal_plan, apply_causal_taps, build_op, BackendKind, CostModel, DenseOp, Dispatch,
-    DispatchQuery, FftOp, FreqCausalOp, SparseLowRankOp, ToeplitzOp,
+    apply_causal_plan, apply_causal_plan_with, apply_causal_taps, build_op, BackendKind,
+    CostModel, DenseOp, Dispatch, DispatchQuery, FftOp, FreqCausalOp, OpScratch, SparseLowRankOp,
+    SpectralPlan, ToeplitzOp,
 };
+pub use parallel::{apply_batch_sharded, with_scratch};
 pub use ski::{causal_ski_scan, inducing_grid, interp_weights, Ski};
 
 use crate::dsp::{irfft, rfft, Complex};

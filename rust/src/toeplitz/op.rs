@@ -24,6 +24,16 @@ use crate::dsp::{causal_spectrum, fft, ifft, irfft, Complex};
 
 use super::{conv1d, Ski, ToeplitzKernel};
 
+/// Reusable scratch for lock-free spectral applies.  The shard runtime
+/// ([`super::parallel`]) keeps one per worker thread, so the hot path
+/// of [`FftOp`] / [`FreqCausalOp`] never touches their shared fallback
+/// `Mutex` scratch.  Buffers grow on demand and are kept.
+#[derive(Debug, Default)]
+pub struct OpScratch {
+    /// 2n-point complex transform buffer.
+    pub cbuf: Vec<Complex>,
+}
+
 /// One Toeplitz operator action `y = T x`, backend-agnostic.
 ///
 /// `Send + Sync` so trait objects ride the server executor closures
@@ -42,7 +52,17 @@ pub trait ToeplitzOp: Send + Sync {
     /// `y = T x` for one length-n signal.
     fn apply(&self, x: &[f32]) -> Vec<f32>;
 
+    /// `y = T x` through caller-owned scratch.  Bitwise identical to
+    /// [`apply`](Self::apply); backends whose `apply` locks internal
+    /// shared scratch override this so the shard runtime's per-worker
+    /// arenas keep the hot path lock-free.
+    fn apply_with_scratch(&self, x: &[f32], _scratch: &mut OpScratch) -> Vec<f32> {
+        self.apply(x)
+    }
+
     /// Apply to every row; backends override to amortise plan/scratch.
+    /// (The parallel counterpart is
+    /// [`apply_batch_sharded`](super::apply_batch_sharded).)
     fn apply_batch(&self, xs: &[Vec<f32>]) -> Vec<Vec<f32>> {
         xs.iter().map(|x| self.apply(x)).collect()
     }
@@ -73,23 +93,22 @@ impl ToeplitzOp for DenseOp {
     }
 }
 
-/// O(n log n) circulant-embedding apply with the kernel's 2n-point
-/// spectrum computed **once** at construction and a reusable complex
-/// scratch buffer, so repeated applies pay two FFTs and zero
-/// allocations beyond the output (the old `apply_fft` re-FFT'd the
-/// kernel and allocated four temporaries per call).
-pub struct FftOp {
+/// An immutable circulant-multiply plan: the 2n-point kernel spectrum
+/// with **no attached scratch**, so one plan is shared lock-free by
+/// any number of workers, each supplying its own [`OpScratch`].  The
+/// decode oracle keeps one plan per channel; [`FftOp`] wraps one plan
+/// with a `Mutex` scratch for plain single-caller use.
+#[derive(Debug, Clone)]
+pub struct SpectralPlan {
     n: usize,
     /// Full 2n-point spectrum of the circulant first column.
     spec: Vec<Complex>,
-    /// Reusable 2n-point transform buffer (one apply at a time).
-    scratch: Mutex<Vec<Complex>>,
 }
 
-impl FftOp {
-    pub fn new(kernel: &ToeplitzKernel) -> FftOp {
+impl SpectralPlan {
+    pub fn new(kernel: &ToeplitzKernel) -> SpectralPlan {
         let n = kernel.n;
-        assert!(n.is_power_of_two(), "FftOp needs power-of-two n, got {n}");
+        assert!(n.is_power_of_two(), "SpectralPlan needs power-of-two n, got {n}");
         let mut c = vec![Complex::ZERO; 2 * n];
         for (t, v) in c.iter_mut().enumerate().take(n) {
             v.re = kernel.at(t as i64) as f64;
@@ -98,27 +117,36 @@ impl FftOp {
             c[n + t].re = kernel.at(t as i64 - n as i64) as f64;
         }
         fft(&mut c);
-        FftOp { n, spec: c, scratch: Mutex::new(vec![Complex::ZERO; 2 * n]) }
+        SpectralPlan { n, spec: c }
     }
 
     /// Build from the n+1 non-redundant rFFT bins of a 2n circulant
     /// column (Hermitian completion).  This is how [`FreqCausalOp`]
     /// consumes the Hilbert-completed causal spectrum directly —
     /// no time-domain kernel materialisation, no kernel FFT.
-    pub fn from_rfft_bins(n: usize, bins: &[Complex]) -> FftOp {
-        assert!(n.is_power_of_two(), "FftOp needs power-of-two n, got {n}");
+    pub fn from_rfft_bins(n: usize, bins: &[Complex]) -> SpectralPlan {
+        assert!(n.is_power_of_two(), "SpectralPlan needs power-of-two n, got {n}");
         assert_eq!(bins.len(), n + 1, "need n+1 rFFT bins for a 2n circulant");
         let mut spec = vec![Complex::ZERO; 2 * n];
         spec[..=n].copy_from_slice(bins);
         for k in 1..n {
             spec[2 * n - k] = bins[k].conj();
         }
-        FftOp { n, spec, scratch: Mutex::new(vec![Complex::ZERO; 2 * n]) }
+        SpectralPlan { n, spec }
     }
 
-    fn apply_into(&self, x: &[f32], buf: &mut Vec<Complex>) -> Vec<f32> {
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// One circulant apply through caller scratch — the lock-free hot
+    /// path.  Output is a pure function of `(self, x)`: scratch
+    /// contents are fully overwritten, so results are bitwise
+    /// identical whichever thread's arena is used.
+    pub fn apply_with(&self, x: &[f32], scratch: &mut OpScratch) -> Vec<f32> {
         let n = self.n;
-        assert_eq!(x.len(), n, "FftOp size mismatch: x has {} values, op n={n}", x.len());
+        assert_eq!(x.len(), n, "SpectralPlan size mismatch: x has {} values, plan n={n}", x.len());
+        let buf = &mut scratch.cbuf;
         buf.clear();
         buf.extend(x.iter().map(|&v| Complex::new(v as f64, 0.0)));
         buf.resize(2 * n, Complex::ZERO);
@@ -131,9 +159,42 @@ impl FftOp {
     }
 }
 
+/// O(n log n) circulant-embedding apply with the kernel's 2n-point
+/// spectrum computed **once** at construction (a [`SpectralPlan`]) and
+/// a reusable complex scratch buffer, so repeated applies pay two FFTs
+/// and zero allocations beyond the output (the old `apply_fft`
+/// re-FFT'd the kernel and allocated four temporaries per call).
+pub struct FftOp {
+    plan: SpectralPlan,
+    /// Fallback scratch for callers without their own arena (one
+    /// apply at a time).  The shard runtime bypasses it via
+    /// [`ToeplitzOp::apply_with_scratch`].
+    scratch: Mutex<OpScratch>,
+}
+
+impl FftOp {
+    pub fn new(kernel: &ToeplitzKernel) -> FftOp {
+        FftOp::from_plan(SpectralPlan::new(kernel))
+    }
+
+    /// See [`SpectralPlan::from_rfft_bins`].
+    pub fn from_rfft_bins(n: usize, bins: &[Complex]) -> FftOp {
+        FftOp::from_plan(SpectralPlan::from_rfft_bins(n, bins))
+    }
+
+    pub fn from_plan(plan: SpectralPlan) -> FftOp {
+        FftOp { plan, scratch: Mutex::new(OpScratch::default()) }
+    }
+
+    /// The shareable lock-free plan inside this operator.
+    pub fn plan(&self) -> &SpectralPlan {
+        &self.plan
+    }
+}
+
 impl ToeplitzOp for FftOp {
     fn n(&self) -> usize {
-        self.n
+        self.plan.n
     }
 
     fn name(&self) -> &'static str {
@@ -141,19 +202,23 @@ impl ToeplitzOp for FftOp {
     }
 
     fn flops_estimate(&self) -> f64 {
-        let m = 2.0 * self.n as f64;
+        let m = 2.0 * self.plan.n as f64;
         2.0 * 5.0 * m * m.log2() + 6.0 * m
     }
 
     fn apply(&self, x: &[f32]) -> Vec<f32> {
-        let mut buf = self.scratch.lock().unwrap();
-        self.apply_into(x, &mut buf)
+        let mut s = self.scratch.lock().unwrap();
+        self.plan.apply_with(x, &mut s)
+    }
+
+    fn apply_with_scratch(&self, x: &[f32], scratch: &mut OpScratch) -> Vec<f32> {
+        self.plan.apply_with(x, scratch)
     }
 
     fn apply_batch(&self, xs: &[Vec<f32>]) -> Vec<Vec<f32>> {
         // One lock, one scratch, the whole batch.
-        let mut buf = self.scratch.lock().unwrap();
-        xs.iter().map(|x| self.apply_into(x, &mut buf)).collect()
+        let mut s = self.scratch.lock().unwrap();
+        xs.iter().map(|x| self.plan.apply_with(x, &mut s)).collect()
     }
 }
 
@@ -282,7 +347,7 @@ impl FreqCausalOp {
 
 impl ToeplitzOp for FreqCausalOp {
     fn n(&self) -> usize {
-        self.fft.n
+        self.fft.n()
     }
 
     fn name(&self) -> &'static str {
@@ -295,6 +360,10 @@ impl ToeplitzOp for FreqCausalOp {
 
     fn apply(&self, x: &[f32]) -> Vec<f32> {
         self.fft.apply(x)
+    }
+
+    fn apply_with_scratch(&self, x: &[f32], scratch: &mut OpScratch) -> Vec<f32> {
+        self.fft.apply_with_scratch(x, scratch)
     }
 
     fn apply_batch(&self, xs: &[Vec<f32>]) -> Vec<Vec<f32>> {
@@ -351,11 +420,32 @@ pub struct CostModel {
     pub ski_point_ns: f64,
     /// ns per banded-convolution multiply-add.
     pub band_mac_ns: f64,
+    /// ns of fixed overhead per shard submitted to the thread pool
+    /// (queue push + worker wake + completion latch) — what makes
+    /// small batches prefer the serial path.
+    pub shard_overhead_ns: f64,
+    /// Parallel-scalable fraction of each backend's batch work
+    /// (Amdahl-style contention: the dense matvec streams the whole
+    /// kernel table, so concurrent workers fight for memory bandwidth;
+    /// the FFT butterflies are compute-dense and scale almost
+    /// linearly; SKI's gather/scatter sits in between).
+    pub dense_par: f64,
+    pub fft_par: f64,
+    pub ski_par: f64,
 }
 
 impl Default for CostModel {
     fn default() -> Self {
-        CostModel { dense_mac_ns: 1.0, fft_point_ns: 6.0, ski_point_ns: 2.5, band_mac_ns: 1.2 }
+        CostModel {
+            dense_mac_ns: 1.0,
+            fft_point_ns: 6.0,
+            ski_point_ns: 2.5,
+            band_mac_ns: 1.2,
+            shard_overhead_ns: 2_000.0,
+            dense_par: 0.60,
+            fft_par: 0.95,
+            ski_par: 0.75,
+        }
     }
 }
 
@@ -373,6 +463,23 @@ impl CostModel {
         let a = if r.is_power_of_two() { self.fft_cost(r) } else { self.dense_cost(r) };
         self.ski_point_ns * 4.0 * n as f64 + a + self.band_mac_ns * (n * w.max(1)) as f64
     }
+
+    /// Wall-clock model of a **sharded** `apply_batch`: `rows`
+    /// independent per-row applies of `row_ns` each, split into
+    /// contiguous shards across `threads` workers.  The critical path
+    /// is the fullest shard, with each concurrent row inflated by the
+    /// backend's non-`scalable` fraction (memory-bound work does not
+    /// speed up `threads`-fold) plus per-shard dispatch overhead.
+    /// `threads <= 1` is exactly the serial cost.
+    pub fn sharded_cost(&self, row_ns: f64, rows: usize, threads: usize, scalable: f64) -> f64 {
+        let rows_f = rows.max(1) as f64;
+        let t = (threads.max(1) as f64).min(rows_f);
+        if t <= 1.0 {
+            return row_ns * rows_f;
+        }
+        let contended = row_ns * (1.0 + (1.0 - scalable) * (t - 1.0));
+        (rows_f / t).ceil() * contended + self.shard_overhead_ns * t
+    }
 }
 
 /// The shape of one apply site — everything the dispatcher looks at.
@@ -388,9 +495,14 @@ pub struct DispatchQuery {
     /// sequential dependency negates its speedup) and prefer the
     /// Hilbert-built spectrum over FFT-with-decay-bias.
     pub causal: bool,
-    /// Rows per `apply_batch` call (scales every candidate equally
-    /// today; kept explicit so batch-aware backends can bid lower).
+    /// Rows per `apply_batch` call.
     pub batch: usize,
+    /// Worker threads available to shard the batch across (1 =
+    /// serial).  Parallelism shifts the crossovers: backends whose
+    /// work is compute-dense (spectral) scale better across workers
+    /// than memory-bound ones (dense), so the dense→spectral crossover
+    /// moves to smaller `n` as `threads` grows.
+    pub threads: usize,
 }
 
 /// Cost-model auto-dispatcher: picks the cheapest eligible backend
@@ -406,27 +518,63 @@ impl Dispatch {
         Dispatch { cost }
     }
 
-    /// The cheapest eligible backend for this shape (never `Auto`).
-    pub fn select(&self, q: &DispatchQuery) -> BackendKind {
-        let b = q.batch.max(1) as f64;
-        let mut best = (BackendKind::Dense, b * self.cost.dense_cost(q.n));
+    /// Eligible `(kind, per-row ns, scalable fraction)` candidates.
+    fn candidates(&self, q: &DispatchQuery) -> Vec<(BackendKind, f64, f64)> {
+        let mut v = vec![(BackendKind::Dense, self.cost.dense_cost(q.n), self.cost.dense_par)];
         if q.n.is_power_of_two() {
             // Same apply cost either way; causal sites get the
             // Hilbert-built spectrum (whose win over the biased FFT —
             // one fewer FFT, no decay bias — is at construction, §3.3).
             let kind = if q.causal { BackendKind::Freq } else { BackendKind::Fft };
-            let cost = b * self.cost.fft_cost(q.n);
-            if cost < best.1 {
-                best = (kind, cost);
-            }
+            v.push((kind, self.cost.fft_cost(q.n), self.cost.fft_par));
         }
         if !q.causal && q.r >= 2 {
-            let cost = b * self.cost.ski_cost(q.n, q.r, q.w);
-            if cost < best.1 {
-                best = (BackendKind::Ski, cost);
+            // Causal sites exclude SKI (Appendix B: the causal scan's
+            // sequential dependency negates its speedup).
+            v.push((BackendKind::Ski, self.cost.ski_cost(q.n, q.r, q.w), self.cost.ski_par));
+        }
+        v
+    }
+
+    /// The cheapest eligible execution plan for this shape: which
+    /// backend, and whether sharding the batch across `q.threads`
+    /// workers beats running it serially.
+    pub fn plan(&self, q: &DispatchQuery) -> (BackendKind, bool) {
+        let rows = q.batch.max(1);
+        let mut best: Option<(BackendKind, f64, bool)> = None;
+        for (kind, row_ns, scalable) in self.candidates(q) {
+            let serial = row_ns * rows as f64;
+            let sharded = self.cost.sharded_cost(row_ns, rows, q.threads, scalable);
+            let parallel = sharded < serial;
+            let cost = if parallel { sharded } else { serial };
+            if best.map(|(_, c, _)| cost < c).unwrap_or(true) {
+                best = Some((kind, cost, parallel));
             }
         }
-        best.0
+        let (kind, _, parallel) = best.expect("dense is always eligible");
+        (kind, parallel)
+    }
+
+    /// The cheapest eligible backend for this shape (never `Auto`).
+    pub fn select(&self, q: &DispatchQuery) -> BackendKind {
+        self.plan(q).0
+    }
+
+    /// Whether sharding `q.batch` rows of a **given** backend across
+    /// `q.threads` workers beats running them serially — the per-call
+    /// gate for executors whose backend was forced rather than chosen
+    /// by [`plan`](Self::plan).  Unknown/ineligible kinds answer
+    /// `false` (serial is always safe).
+    pub fn should_shard(&self, kind: BackendKind, q: &DispatchQuery) -> bool {
+        let rows = q.batch.max(1);
+        self.candidates(q)
+            .into_iter()
+            .find(|(k, _, _)| *k == kind)
+            .map(|(_, row_ns, scalable)| {
+                let serial = row_ns * rows as f64;
+                self.cost.sharded_cost(row_ns, rows, q.threads, scalable) < serial
+            })
+            .unwrap_or(false)
     }
 }
 
@@ -441,7 +589,14 @@ pub fn build_op(
 ) -> Box<dyn ToeplitzOp> {
     match kind {
         BackendKind::Auto => {
-            let q = DispatchQuery { n: kernel.n, r, w, causal: kernel.is_causal(), batch: 1 };
+            let q = DispatchQuery {
+                n: kernel.n,
+                r,
+                w,
+                causal: kernel.is_causal(),
+                batch: 1,
+                threads: 1,
+            };
             build_op(kernel, Dispatch::default().select(&q), r, w)
         }
         BackendKind::Dense => Box::new(DenseOp { kernel: kernel.clone() }),
@@ -452,18 +607,26 @@ pub fn build_op(
 }
 
 /// Apply a causal spectral plan to a prefix no longer than the plan's
-/// size: zero-pad, one cached-spectrum circulant apply, truncate.
-/// Plan-holding callers (the decode oracle's per-channel cached
-/// [`FftOp`]s) use this; [`apply_causal_taps`] is the one-shot entry
-/// that builds a throwaway plan per call.
-pub fn apply_causal_plan(plan: &FftOp, x: &[f32]) -> Vec<f32> {
+/// size, through caller scratch: zero-pad, one cached-spectrum
+/// circulant apply, truncate.  Plan-holding callers (the decode
+/// oracle's per-channel [`SpectralPlan`]s, applied on the shard
+/// runtime's per-worker arenas) use this; [`apply_causal_taps`] is the
+/// one-shot entry that builds a throwaway plan per call.
+pub fn apply_causal_plan_with(plan: &SpectralPlan, x: &[f32], scratch: &mut OpScratch) -> Vec<f32> {
     let p = plan.n();
     assert!(x.len() <= p, "prefix {} longer than plan n={p}", x.len());
     let mut xp = vec![0.0f32; p];
     xp[..x.len()].copy_from_slice(x);
-    let mut y = plan.apply(&xp);
+    let mut y = plan.apply_with(&xp, scratch);
     y.truncate(x.len());
     y
+}
+
+/// [`apply_causal_plan_with`] through an [`FftOp`]'s own fallback
+/// scratch (single-caller convenience).
+pub fn apply_causal_plan(plan: &FftOp, x: &[f32]) -> Vec<f32> {
+    let mut s = plan.scratch.lock().unwrap();
+    apply_causal_plan_with(&plan.plan, x, &mut s)
 }
 
 /// Causal convolution of a length-`x.len()` prefix through the chosen
@@ -677,34 +840,105 @@ mod tests {
         assert_close(&op.apply(&x), &k.apply_dense(&x), 1e-4, "freq from kernel");
     }
 
+    /// Serial query shorthand (threads = 1, the pre-pool behaviour).
+    fn q1(n: usize, r: usize, w: usize, causal: bool) -> DispatchQuery {
+        DispatchQuery { n, r, w, causal, batch: 1, threads: 1 }
+    }
+
     #[test]
     fn dispatch_crossovers() {
         let d = Dispatch::default();
         // Tiny bidirectional: dense.
-        assert_eq!(
-            d.select(&DispatchQuery { n: 16, r: 0, w: 0, causal: false, batch: 1 }),
-            BackendKind::Dense
-        );
+        assert_eq!(d.select(&q1(16, 0, 0, false)), BackendKind::Dense);
         // Large bidirectional, no SKI rank: FFT.
-        assert_eq!(
-            d.select(&DispatchQuery { n: 4096, r: 0, w: 0, causal: false, batch: 1 }),
-            BackendKind::Fft
-        );
+        assert_eq!(d.select(&q1(4096, 0, 0, false)), BackendKind::Fft);
         // Large bidirectional with a smooth-kernel rank: SKI.
-        assert_eq!(
-            d.select(&DispatchQuery { n: 4096, r: 256, w: 9, causal: false, batch: 1 }),
-            BackendKind::Ski
-        );
+        assert_eq!(d.select(&q1(4096, 256, 9, false)), BackendKind::Ski);
         // Causal: SKI ineligible, Hilbert spectrum preferred.
-        assert_eq!(
-            d.select(&DispatchQuery { n: 4096, r: 256, w: 9, causal: true, batch: 1 }),
-            BackendKind::Freq
-        );
+        assert_eq!(d.select(&q1(4096, 256, 9, true)), BackendKind::Freq);
         // Non-power-of-two: spectral paths ineligible, SKI still fine.
-        assert_eq!(
-            d.select(&DispatchQuery { n: 3000, r: 64, w: 9, causal: false, batch: 1 }),
-            BackendKind::Ski
-        );
+        assert_eq!(d.select(&q1(3000, 64, 9, false)), BackendKind::Ski);
+    }
+
+    #[test]
+    fn sharded_cost_model_shape() {
+        let c = CostModel::default();
+        // threads=1 is exactly serial, whatever the fraction.
+        assert_eq!(c.sharded_cost(1e4, 8, 1, 0.9), 8e4);
+        // Perfectly scalable work at t == rows: one row + overhead.
+        let p = c.sharded_cost(1e4, 8, 8, 1.0);
+        assert!((p - (1e4 + 8.0 * c.shard_overhead_ns)).abs() < 1e-6, "{p}");
+        // Zero-scalable work gains nothing but still pays overhead.
+        let z = c.sharded_cost(1e4, 8, 4, 0.0);
+        assert!(z >= 8e4, "{z}");
+        // More threads never increase the fully-scalable critical path.
+        assert!(c.sharded_cost(1e4, 64, 8, 1.0) < c.sharded_cost(1e4, 64, 2, 1.0));
+    }
+
+    #[test]
+    fn dispatch_crossover_shifts_with_threads() {
+        let d = Dispatch::default();
+        // n=128, batch=8: serially dense wins (16.4k vs 26.1k ns/row)…
+        let serial = DispatchQuery { n: 128, r: 0, w: 0, causal: false, batch: 8, threads: 1 };
+        assert_eq!(d.select(&serial), BackendKind::Dense);
+        // …but across 4 workers the memory-bound dense rows contend
+        // while the FFT rows scale, so the spectral path takes over.
+        let par = DispatchQuery { threads: 4, ..serial };
+        assert_eq!(d.select(&par), BackendKind::Fft);
+        // Same shift on the causal side (dense loop vs Hilbert plan).
+        let causal = DispatchQuery { causal: true, ..par };
+        assert_eq!(d.select(&causal), BackendKind::Freq);
+    }
+
+    #[test]
+    fn dispatch_plan_gates_parallelism_by_size() {
+        let d = Dispatch::default();
+        // Tiny batch of tiny rows: sharding cannot amortise the
+        // per-shard overhead — serial plan.
+        let (_, par) =
+            d.plan(&DispatchQuery { n: 16, r: 0, w: 0, causal: false, batch: 2, threads: 8 });
+        assert!(!par, "16-wide rows must not be sharded");
+        // Big batch of big rows: sharding wins.
+        let (kind, par) =
+            d.plan(&DispatchQuery { n: 4096, r: 0, w: 0, causal: false, batch: 8, threads: 4 });
+        assert_eq!(kind, BackendKind::Fft);
+        assert!(par, "4096-wide batch of 8 must be sharded");
+        // threads=1 never parallelises.
+        let (_, par) =
+            d.plan(&DispatchQuery { n: 4096, r: 0, w: 0, causal: false, batch: 8, threads: 1 });
+        assert!(!par);
+    }
+
+    #[test]
+    fn should_shard_gates_forced_backends() {
+        let d = Dispatch::default();
+        let big = DispatchQuery { n: 4096, r: 0, w: 0, causal: false, batch: 8, threads: 4 };
+        assert!(d.should_shard(BackendKind::Fft, &big));
+        let tiny = DispatchQuery { n: 16, r: 0, w: 0, causal: false, batch: 2, threads: 8 };
+        assert!(!d.should_shard(BackendKind::Dense, &tiny));
+        // Freq is only a candidate under a causal query.
+        let causal = DispatchQuery { causal: true, ..big };
+        assert!(d.should_shard(BackendKind::Freq, &causal));
+        assert!(!d.should_shard(BackendKind::Freq, &big), "ineligible kind answers serial");
+        // threads=1 never shards.
+        assert!(!d.should_shard(BackendKind::Fft, &DispatchQuery { threads: 1, ..big }));
+    }
+
+    #[test]
+    fn apply_with_scratch_is_bitwise_identical() {
+        // The lock-free arena path must equal the Mutex path exactly,
+        // for both spectral backends, across reused scratch.
+        let mut rng = crate::util::rng::Rng::new(21);
+        let k = random_kernel(&mut rng, 64);
+        let op = FftOp::new(&k);
+        let khat = vecf(&mut rng, 65);
+        let freq = FreqCausalOp::from_response(&khat);
+        let mut scratch = OpScratch::default();
+        for _ in 0..4 {
+            let x = vecf(&mut rng, 64);
+            assert_eq!(op.apply(&x), op.apply_with_scratch(&x, &mut scratch));
+            assert_eq!(freq.apply(&x), freq.apply_with_scratch(&x, &mut scratch));
+        }
     }
 
     #[test]

@@ -1,0 +1,132 @@
+//! Sharded batch execution for [`ToeplitzOp`] backends.
+//!
+//! [`apply_batch_sharded`] splits the rows of one `apply_batch` into
+//! contiguous shards — fixed boundaries of `ceil(rows / threads)` rows
+//! each — and runs every shard on the [`ThreadPool`] (the submitting
+//! thread participates).  Each row is computed by **exactly the same
+//! per-row code as the serial path** and written into its own output
+//! slot; no reduction ever crosses a shard boundary.  Output is
+//! therefore bitwise identical for any worker count, and
+//! `--threads 1` is the reference.
+//!
+//! Per-worker scratch lives in a thread-local [`OpScratch`] arena that
+//! persists across shards and batches, so the spectral backends
+//! ([`FftOp`](super::FftOp) / [`FreqCausalOp`](super::FreqCausalOp))
+//! never touch their shared fallback `Mutex` scratch on this path —
+//! zero lock traffic, zero transform-buffer allocations in steady
+//! state.
+
+use std::cell::RefCell;
+
+use crate::runtime::pool::ThreadPool;
+
+use super::op::{CostModel, OpScratch, ToeplitzOp};
+
+thread_local! {
+    /// One scratch arena per thread — pool workers and submitting
+    /// callers alike — reused for the life of the thread.
+    static ARENA: RefCell<OpScratch> = RefCell::new(OpScratch::default());
+}
+
+/// Run `f` with this thread's persistent scratch arena.  Not
+/// re-entrant: `f` must not call `with_scratch` again (no backend
+/// does).
+pub fn with_scratch<R>(f: impl FnOnce(&mut OpScratch) -> R) -> R {
+    ARENA.with(|a| f(&mut a.borrow_mut()))
+}
+
+/// Whether sharding this batch is worth the pool's per-shard dispatch
+/// overhead — the one gate every `apply_batch_sharded` entry point
+/// shares (the server adapters, the CLI, the benches' sweep).  Mirrors
+/// [`CostModel::sharded_cost`] with the operator's own flop estimate
+/// as the per-row cost proxy (≈1 multiply-add/ns; an underestimate on
+/// real hardware, which only makes the gate conservatively serial for
+/// small shapes — the correct direction).
+fn worth_sharding(op: &dyn ToeplitzOp, rows: usize, threads: usize) -> bool {
+    let cost = CostModel::default();
+    let scalable = match op.name() {
+        "dense" => cost.dense_par,
+        "ski" => cost.ski_par,
+        _ => cost.fft_par,
+    };
+    let row_ns = op.flops_estimate();
+    cost.sharded_cost(row_ns, rows, threads, scalable) < row_ns * rows as f64
+}
+
+/// `op.apply_batch(xs)`, sharded across `pool`.  Bitwise identical to
+/// the serial result for every `pool.threads()`; falls back to the
+/// serial path when the pool is size 1, the batch has a single row,
+/// or the modeled shard overhead exceeds the parallel win
+/// ([`worth_sharding`]).
+pub fn apply_batch_sharded(
+    op: &dyn ToeplitzOp,
+    xs: &[Vec<f32>],
+    pool: &ThreadPool,
+) -> Vec<Vec<f32>> {
+    let rows = xs.len();
+    if pool.threads().min(rows) <= 1 || !worth_sharding(op, rows, pool.threads()) {
+        return op.apply_batch(xs);
+    }
+    let mut out: Vec<Vec<f32>> = vec![Vec::new(); rows];
+    pool.shard_mut(&mut out, |start, shard_out| {
+        with_scratch(|s| {
+            for (j, y) in shard_out.iter_mut().enumerate() {
+                *y = op.apply_with_scratch(&xs[start + j], s);
+            }
+        })
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::kernels::gaussian_kernel;
+    use super::super::op::{build_op, BackendKind};
+    use super::super::ToeplitzKernel;
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn batch(rng: &mut Rng, rows: usize, n: usize) -> Vec<Vec<f32>> {
+        (0..rows).map(|_| rng.normals(n)).collect()
+    }
+
+    #[test]
+    fn sharded_is_bitwise_serial_for_every_backend() {
+        let n = 64;
+        let mut rng = Rng::new(7);
+        let kernel = ToeplitzKernel::from_fn(n, |lag| gaussian_kernel(lag as f64, 12.0));
+        let causal = kernel.clone().causal();
+        // 13 rows: deliberately not divisible by any worker count.
+        let xs = batch(&mut rng, 13, n);
+        for (kind, k) in [
+            (BackendKind::Dense, &kernel),
+            (BackendKind::Fft, &kernel),
+            (BackendKind::Ski, &kernel),
+            (BackendKind::Freq, &causal),
+        ] {
+            let op = build_op(k, kind, 8, 5);
+            let reference = op.apply_batch(&xs);
+            for threads in [1usize, 2, 3, 8] {
+                let pool = ThreadPool::new(threads);
+                let got = apply_batch_sharded(op.as_ref(), &xs, &pool);
+                assert_eq!(got, reference, "{} backend, {threads} threads", op.name());
+                // Again through the same pool: arenas are reused.
+                let again = apply_batch_sharded(op.as_ref(), &xs, &pool);
+                assert_eq!(again, reference, "{} backend, reuse", op.name());
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_handles_more_workers_than_rows() {
+        let n = 32;
+        let mut rng = Rng::new(3);
+        let kernel = ToeplitzKernel::from_fn(n, |lag| gaussian_kernel(lag as f64, 6.0));
+        let op = build_op(&kernel, BackendKind::Fft, 0, 0);
+        let pool = ThreadPool::new(16);
+        for rows in [0usize, 1, 2] {
+            let xs = batch(&mut rng, rows, n);
+            assert_eq!(apply_batch_sharded(op.as_ref(), &xs, &pool), op.apply_batch(&xs));
+        }
+    }
+}

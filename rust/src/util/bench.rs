@@ -185,6 +185,14 @@ pub fn write_bench_json(name: &str, rows: Vec<Json>) -> std::io::Result<String> 
     Ok(path)
 }
 
+/// True when `SKI_TNN_BENCH_QUICK=1`: bench harnesses shrink their
+/// sizes/iterations so CI's `bench-smoke` job finishes in seconds.
+/// `bench/baseline.json` is recorded in this mode — refresh it with
+/// the same flag set (`ski-tnn bench-check --update`).
+pub fn quick_mode() -> bool {
+    std::env::var("SKI_TNN_BENCH_QUICK").map(|v| v.trim() == "1").unwrap_or(false)
+}
+
 /// Format seconds human-readably (ms below 1s).
 pub fn fmt_secs(s: f64) -> String {
     if s < 1e-3 {

@@ -1,0 +1,559 @@
+//! Offline perf-regression gate over the `BENCH_*.json` artifacts.
+//!
+//! Every bench harness emits machine-readable rows through
+//! [`super::bench::write_bench_json`] (median + p90 ns/op per cell).
+//! `ski-tnn bench-check` compares those rows against a committed
+//! `bench/baseline.json` and fails when a median regresses beyond the
+//! baseline's threshold — the teeth of CI's `bench-smoke` job, usable
+//! offline with zero extra tooling.
+//!
+//! Cross-machine noise is handled by **calibration scaling**: the
+//! baseline records `calib_ns`, the median wall time of a fixed
+//! reference workload ([`calibrate_ns`]) on the machine that wrote it;
+//! at check time the same workload is re-measured and every baseline
+//! median is scaled by `calib_now / calib_base` before comparing.  A
+//! 2× slower CI runner therefore doesn't read as a 2× regression.
+//!
+//! Row identity is structural: every scalar field of a bench row that
+//! is not a measurement (`n`, `r`, `w`, `backend`, `mode`, `batch`,
+//! `threads`, …) becomes part of the key, so rows match across runs
+//! without the checker knowing each bench's schema.  Refresh the
+//! baseline with `ski-tnn bench-check --update` after running the
+//! benches **in the same mode CI uses** (`SKI_TNN_BENCH_QUICK=1`).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::{self, Json};
+
+/// Fields that are measurements or per-run observations, not identity.
+const NON_IDENTITY: [&str; 8] = [
+    "med_ns",
+    "p90_ns",
+    "med_ns_per_token",
+    "p90_ns_per_token",
+    "rel_err",
+    "winner",
+    "dispatch",
+    "causal_dispatch",
+];
+
+/// The gated metric: median ns/op under either emitted name.
+const METRICS: [&str; 2] = ["med_ns", "med_ns_per_token"];
+
+/// Whether a row participates in the regression gate.  Multi-worker
+/// rows (`threads=N`, N > 1) are recorded and reported but never
+/// gated: parallel speedup depends on the machine's core count, which
+/// the serial calibration probe cannot observe, so comparing a
+/// 10-core baseline against a 4-vCPU CI runner would fail without any
+/// real regression.
+fn gated_key(key: &str) -> bool {
+    !key.split('/').any(|p| p.strip_prefix("threads=").map(|v| v != "1").unwrap_or(false))
+}
+
+/// `bench name → row key → median ns`.
+pub type BenchMap = BTreeMap<String, BTreeMap<String, f64>>;
+
+/// A parsed `bench/baseline.json`.
+#[derive(Debug, Clone)]
+pub struct Baseline {
+    /// [`calibrate_ns`] on the machine that wrote the baseline.
+    pub calib_ns: f64,
+    /// Allowed median regression, percent (25 = fail beyond 1.25×).
+    pub threshold_pct: f64,
+    /// True while the medians are model estimates rather than
+    /// measurements: the gate reports but never fails, so a fabricated
+    /// baseline cannot block merges.  Cleared by the first `--update`
+    /// on real hardware.
+    pub bootstrap: bool,
+    /// Whether the baseline was recorded with `SKI_TNN_BENCH_QUICK=1`
+    /// — quick and full mode emit different row sets, so a mismatch is
+    /// the usual cause of "gated rows missing" and gets called out.
+    pub quick: Option<bool>,
+    pub benches: BenchMap,
+}
+
+/// One median that regressed beyond the limit.
+#[derive(Debug, Clone)]
+pub struct Regression {
+    pub bench: String,
+    pub key: String,
+    /// Baseline median after calibration scaling, ns.
+    pub base_ns: f64,
+    pub now_ns: f64,
+    pub limit_ns: f64,
+}
+
+/// Outcome of one comparison pass.
+#[derive(Debug, Default)]
+pub struct Report {
+    pub compared: usize,
+    /// Multi-worker rows recorded on both sides but excluded from the
+    /// gate (see [`gated_key`]).
+    pub ungated: usize,
+    /// Rows present now but absent from the baseline (ungated).
+    pub new_keys: usize,
+    /// `bench/key` entries the baseline has but this run did not emit.
+    pub missing: Vec<String>,
+    pub regressions: Vec<Regression>,
+    /// `calib_now / calib_base` applied to every baseline median.
+    pub scale: f64,
+}
+
+/// Format a JSON number for a row key: integers without a trailing
+/// `.0` so keys are stable and readable (`n=256`, not `n=256.0`).
+fn fmt_num(v: f64) -> String {
+    if v.fract() == 0.0 && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+/// Structural identity of one bench row, or `None` when the row has
+/// no gated metric.
+fn row_key(row: &Json) -> Option<String> {
+    let obj = row.as_obj()?;
+    if !METRICS.iter().any(|m| obj.contains_key(*m)) {
+        return None;
+    }
+    let parts: Vec<String> = obj
+        .iter()
+        .filter(|(k, _)| !NON_IDENTITY.contains(&k.as_str()))
+        .filter_map(|(k, v)| {
+            v.as_f64()
+                .map(|n| format!("{k}={}", fmt_num(n)))
+                .or_else(|| v.as_str().map(|s| format!("{k}={s}")))
+        })
+        .collect();
+    if parts.is_empty() {
+        None
+    } else {
+        Some(parts.join("/"))
+    }
+}
+
+fn row_metric(row: &Json) -> Option<f64> {
+    METRICS.iter().find_map(|m| row.get(m).and_then(Json::as_f64))
+}
+
+/// Parse one `BENCH_<name>.json` document into `(name, key → med ns)`.
+pub fn parse_bench_doc(doc: &Json) -> Result<(String, BTreeMap<String, f64>)> {
+    let name = doc
+        .get("bench")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("bench doc missing \"bench\" name"))?
+        .to_string();
+    let rows = doc
+        .get("rows")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("bench doc {name} missing \"rows\""))?;
+    let mut map = BTreeMap::new();
+    for row in rows {
+        if let (Some(key), Some(med)) = (row_key(row), row_metric(row)) {
+            map.insert(key, med);
+        }
+    }
+    Ok((name, map))
+}
+
+/// Scan `dir` for `BENCH_*.json` artifacts.
+pub fn load_current(dir: &Path) -> Result<BenchMap> {
+    let mut out = BenchMap::new();
+    for entry in std::fs::read_dir(dir).with_context(|| format!("reading {}", dir.display()))? {
+        let path = entry?.path();
+        let Some(fname) = path.file_name().and_then(|f| f.to_str()) else { continue };
+        if !(fname.starts_with("BENCH_") && fname.ends_with(".json")) {
+            continue;
+        }
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let doc = json::parse(&text).map_err(|e| anyhow!("{}: {e}", path.display()))?;
+        let (name, map) = parse_bench_doc(&doc)?;
+        out.insert(name, map);
+    }
+    Ok(out)
+}
+
+/// Median wall time (ns) of a fixed reference workload — one dense
+/// Toeplitz apply at n = 256 — used to normalise baselines across
+/// machines.  Must never change, or committed baselines lose meaning.
+pub fn calibrate_ns() -> f64 {
+    use crate::toeplitz::ToeplitzKernel;
+    let n = 256;
+    let kernel = ToeplitzKernel::from_fn(n, |lag| 1.0 / (1.0 + lag.abs() as f32));
+    let x: Vec<f32> = (0..n).map(|i| ((i * 37) % 97) as f32 / 97.0 - 0.5).collect();
+    let mut sink = 0.0f32;
+    for _ in 0..2 {
+        sink += kernel.apply_dense(&x)[0]; // warmup
+    }
+    // 15 samples, median: one scheduling hiccup on a noisy shared
+    // runner shifts the median far less than it would a mean or a
+    // small sample set — and this one number scales every gate limit.
+    let mut samples = Vec::with_capacity(15);
+    for _ in 0..15 {
+        let t0 = std::time::Instant::now();
+        sink += kernel.apply_dense(&x)[0];
+        samples.push(1e9 * t0.elapsed().as_secs_f64());
+    }
+    std::hint::black_box(sink);
+    crate::util::bench::percentiles_of(&samples, &[0.5])[0]
+}
+
+pub fn parse_baseline(doc: &Json) -> Result<Baseline> {
+    let calib_ns = doc
+        .get("calib_ns")
+        .and_then(Json::as_f64)
+        .ok_or_else(|| anyhow!("baseline missing calib_ns"))?;
+    let threshold_pct = doc.get("threshold_pct").and_then(Json::as_f64).unwrap_or(25.0);
+    let bootstrap = doc.get("bootstrap").and_then(Json::as_bool).unwrap_or(false);
+    let quick = doc.get("quick").and_then(Json::as_bool);
+    let mut benches = BenchMap::new();
+    if let Some(bs) = doc.get("benches").and_then(Json::as_obj) {
+        for (bench, rows) in bs {
+            let rows = rows
+                .as_obj()
+                .ok_or_else(|| anyhow!("baseline bench {bench} is not an object"))?;
+            let mut map = BTreeMap::new();
+            for (key, v) in rows {
+                let med = v
+                    .as_f64()
+                    .ok_or_else(|| anyhow!("baseline {bench}/{key} is not a number"))?;
+                map.insert(key.clone(), med);
+            }
+            benches.insert(bench.clone(), map);
+        }
+    }
+    Ok(Baseline { calib_ns, threshold_pct, bootstrap, quick, benches })
+}
+
+pub fn baseline_to_json(b: &Baseline) -> Json {
+    let benches: Vec<(String, Json)> = b
+        .benches
+        .iter()
+        .map(|(bench, rows)| {
+            let rows: Vec<(String, Json)> =
+                rows.iter().map(|(k, &v)| (k.clone(), Json::num(v))).collect();
+            (bench.clone(), obj_owned(rows))
+        })
+        .collect();
+    let mut fields = vec![
+        ("calib_ns", Json::num(b.calib_ns)),
+        ("threshold_pct", Json::num(b.threshold_pct)),
+        ("bootstrap", Json::Bool(b.bootstrap)),
+    ];
+    if let Some(q) = b.quick {
+        fields.push(("quick", Json::Bool(q)));
+    }
+    fields.push(("benches", obj_owned(benches)));
+    Json::obj(fields)
+}
+
+/// `Json::obj` takes `&str` keys; this is the owned-key variant.
+fn obj_owned(pairs: Vec<(String, Json)>) -> Json {
+    Json::obj(pairs.iter().map(|(k, v)| (k.as_str(), v.clone())).collect())
+}
+
+/// Compare current medians against the (calibration-scaled) baseline.
+pub fn compare(
+    base: &Baseline,
+    current: &BenchMap,
+    calib_now: f64,
+    threshold_override: Option<f64>,
+) -> Report {
+    let scale =
+        if base.calib_ns > 0.0 && calib_now > 0.0 { calib_now / base.calib_ns } else { 1.0 };
+    let threshold = threshold_override.unwrap_or(base.threshold_pct).max(0.0);
+    let mut report = Report { scale, ..Report::default() };
+    for (bench, rows) in current {
+        for (key, &now_ns) in rows {
+            if !gated_key(key) {
+                report.ungated += 1;
+                continue;
+            }
+            match base.benches.get(bench).and_then(|b| b.get(key)) {
+                None => report.new_keys += 1,
+                Some(&raw_base) => {
+                    report.compared += 1;
+                    let base_ns = raw_base * scale;
+                    let limit_ns = base_ns * (1.0 + threshold / 100.0);
+                    if now_ns > limit_ns {
+                        report.regressions.push(Regression {
+                            bench: bench.clone(),
+                            key: key.clone(),
+                            base_ns,
+                            now_ns,
+                            limit_ns,
+                        });
+                    }
+                }
+            }
+        }
+    }
+    for (bench, rows) in &base.benches {
+        for key in rows.keys().filter(|k| gated_key(k)) {
+            if current.get(bench).map(|c| !c.contains_key(key)).unwrap_or(true) {
+                report.missing.push(format!("{bench}/{key}"));
+            }
+        }
+    }
+    report
+}
+
+/// Gate decision for one comparison.  Regressions always fail; rows
+/// the baseline gates but this run did not emit also fail (otherwise
+/// renaming a key or shrinking the sweep silently disarms the gate)
+/// unless `allow_missing`; a `bootstrap` (model-estimated) baseline is
+/// advisory and never fails.
+pub fn verdict(base: &Baseline, report: &Report, allow_missing: bool) -> bool {
+    if base.bootstrap {
+        return true;
+    }
+    report.regressions.is_empty() && (allow_missing || report.missing.is_empty())
+}
+
+/// CLI entry: load artifacts from `dir`, compare against (or, with
+/// `update`, rewrite) the baseline at `baseline_path`.  Returns
+/// whether the gate passed; prints the report either way.
+pub fn run(
+    baseline_path: &str,
+    dir: &str,
+    update: bool,
+    threshold: Option<f64>,
+    allow_missing: bool,
+) -> Result<bool> {
+    let current = load_current(Path::new(dir))?;
+    if current.is_empty() {
+        bail!(
+            "no BENCH_*.json artifacts in {dir:?} — run the benches first \
+             (e.g. `cargo bench --bench backend_matrix`)"
+        );
+    }
+    let calib_now = calibrate_ns();
+    if update {
+        // Preserve a customized threshold across refreshes: explicit
+        // --threshold wins, else whatever the armed baseline already
+        // carried, else the 25% default.
+        let prev_threshold = std::fs::read_to_string(baseline_path)
+            .ok()
+            .and_then(|t| json::parse(&t).ok())
+            .and_then(|d| parse_baseline(&d).ok())
+            .filter(|b| !b.bootstrap)
+            .map(|b| b.threshold_pct);
+        let baseline = Baseline {
+            calib_ns: calib_now,
+            threshold_pct: threshold.or(prev_threshold).unwrap_or(25.0),
+            bootstrap: false,
+            quick: Some(crate::util::bench::quick_mode()),
+            benches: current,
+        };
+        if let Some(parent) = Path::new(baseline_path).parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        std::fs::write(baseline_path, json::write(&baseline_to_json(&baseline)))
+            .with_context(|| format!("writing {baseline_path}"))?;
+        let rows: usize = baseline.benches.values().map(|b| b.len()).sum();
+        println!(
+            "bench-check: wrote {baseline_path} ({} benches, {rows} rows, calib {:.0} ns, \
+             threshold {:.0}%)",
+            baseline.benches.len(),
+            baseline.calib_ns,
+            baseline.threshold_pct
+        );
+        return Ok(true);
+    }
+    let text = std::fs::read_to_string(baseline_path).with_context(|| {
+        format!("reading {baseline_path} (refresh with `ski-tnn bench-check --update`)")
+    })?;
+    let doc = json::parse(&text).map_err(|e| anyhow!("{baseline_path}: {e}"))?;
+    let base = parse_baseline(&doc)?;
+    let report = compare(&base, &current, calib_now, threshold);
+    println!(
+        "bench-check: {} medians compared (scale {:.2} = {:.0} ns now / {:.0} ns baseline), \
+         {} multi-worker rows ungated, {} new, {} missing",
+        report.compared,
+        report.scale,
+        calib_now,
+        base.calib_ns,
+        report.ungated,
+        report.new_keys,
+        report.missing.len()
+    );
+    for m in &report.missing {
+        println!("  missing from this run: {m}");
+    }
+    for r in &report.regressions {
+        println!(
+            "  REGRESSION {}/{}: {:.0} ns vs scaled baseline {:.0} ns (limit {:.0} ns)",
+            r.bench, r.key, r.now_ns, r.base_ns, r.limit_ns
+        );
+    }
+    let passed = verdict(&base, &report, allow_missing);
+    if base.bootstrap {
+        println!(
+            "bench-check: baseline is BOOTSTRAP (model-estimated) — advisory only; record a \
+             measured baseline with `ski-tnn bench-check --update`"
+        );
+    } else if passed {
+        println!("bench-check: OK");
+    } else if report.regressions.is_empty() {
+        println!(
+            "bench-check: FAILED — {} gated rows missing from this run (refresh the baseline \
+             with --update, or pass --allow-missing)",
+            report.missing.len()
+        );
+        if let Some(q) = base.quick {
+            if q != crate::util::bench::quick_mode() {
+                println!(
+                    "  hint: the baseline was recorded with SKI_TNN_BENCH_QUICK={} but this \
+                     run used SKI_TNN_BENCH_QUICK={} — quick and full mode emit different \
+                     row sets",
+                    if q { "1" } else { "0" },
+                    if crate::util::bench::quick_mode() { "1" } else { "0" }
+                );
+            }
+        }
+    }
+    Ok(passed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(n: usize, backend: &str, med: f64) -> Json {
+        Json::obj(vec![
+            ("n", Json::num(n as f64)),
+            ("backend", Json::str(backend)),
+            ("med_ns", Json::num(med)),
+            ("p90_ns", Json::num(med * 1.2)),
+            ("winner", Json::str("fft")),
+        ])
+    }
+
+    fn doc(rows: Vec<Json>) -> Json {
+        Json::obj(vec![("bench", Json::str("t")), ("rows", Json::arr(rows))])
+    }
+
+    #[test]
+    fn keys_drop_measurements_and_observations() {
+        let (name, map) = parse_bench_doc(&doc(vec![row(256, "fft", 10.0)])).unwrap();
+        assert_eq!(name, "t");
+        assert_eq!(map.len(), 1);
+        // BTreeMap field order: backend before n; winner/p90 excluded.
+        assert_eq!(map.get("backend=fft/n=256"), Some(&10.0));
+    }
+
+    fn base_of(benches: BenchMap) -> Baseline {
+        Baseline { calib_ns: 100.0, threshold_pct: 25.0, bootstrap: false, quick: None, benches }
+    }
+
+    #[test]
+    fn compare_scales_by_calibration() {
+        let (_, cur_rows) = parse_bench_doc(&doc(vec![row(256, "fft", 2000.0)])).unwrap();
+        let mut current = BenchMap::new();
+        current.insert("t".into(), cur_rows);
+        let mut benches = BenchMap::new();
+        benches.insert("t".into(), [("backend=fft/n=256".to_string(), 1000.0)].into());
+        let base = base_of(benches);
+        // Current machine is 2× slower: 2000 ns vs scaled base 2000 — pass.
+        let r = compare(&base, &current, 200.0, None);
+        assert_eq!(r.compared, 1);
+        assert!(r.regressions.is_empty(), "{:?}", r.regressions);
+        // Same machine speed: 2000 vs limit 1250 — regression.
+        let r = compare(&base, &current, 100.0, None);
+        assert_eq!(r.regressions.len(), 1);
+        assert_eq!(r.regressions[0].key, "backend=fft/n=256");
+        // Generous override threshold rescues it.
+        let r = compare(&base, &current, 100.0, Some(150.0));
+        assert!(r.regressions.is_empty());
+    }
+
+    #[test]
+    fn missing_gated_rows_fail_the_verdict() {
+        // Renaming a key or shrinking the sweep must not silently
+        // disarm the gate: new keys are fine, missing ones fail.
+        let (_, cur_rows) = parse_bench_doc(&doc(vec![row(512, "ski", 50.0)])).unwrap();
+        let mut current = BenchMap::new();
+        current.insert("t".into(), cur_rows);
+        let mut benches = BenchMap::new();
+        benches.insert("t".into(), [("backend=fft/n=256".to_string(), 1000.0)].into());
+        let base = base_of(benches);
+        let r = compare(&base, &current, 100.0, None);
+        assert_eq!(r.compared, 0);
+        assert_eq!(r.new_keys, 1);
+        assert_eq!(r.missing, vec!["t/backend=fft/n=256".to_string()]);
+        assert!(r.regressions.is_empty());
+        assert!(!verdict(&base, &r, false), "missing gated rows must fail");
+        assert!(verdict(&base, &r, true), "--allow-missing overrides");
+        let bootstrap = Baseline { bootstrap: true, ..base };
+        assert!(verdict(&bootstrap, &r, false), "bootstrap baseline is advisory");
+    }
+
+    #[test]
+    fn regressions_fail_even_with_allow_missing() {
+        let (_, cur_rows) = parse_bench_doc(&doc(vec![row(256, "fft", 5000.0)])).unwrap();
+        let mut current = BenchMap::new();
+        current.insert("t".into(), cur_rows);
+        let mut benches = BenchMap::new();
+        benches.insert("t".into(), [("backend=fft/n=256".to_string(), 1000.0)].into());
+        let base = base_of(benches);
+        let r = compare(&base, &current, 100.0, None);
+        assert_eq!(r.regressions.len(), 1);
+        assert!(!verdict(&base, &r, true));
+    }
+
+    #[test]
+    fn baseline_roundtrips_through_json() {
+        let mut benches = BenchMap::new();
+        benches.insert(
+            "backend_matrix".into(),
+            [("backend=fft/n=256".to_string(), 123.5)].into(),
+        );
+        let b = Baseline {
+            calib_ns: 6.5e4,
+            threshold_pct: 25.0,
+            bootstrap: true,
+            quick: Some(true),
+            benches,
+        };
+        let text = json::write(&baseline_to_json(&b));
+        let parsed = parse_baseline(&json::parse(&text).unwrap()).unwrap();
+        assert_eq!(parsed.calib_ns, b.calib_ns);
+        assert_eq!(parsed.threshold_pct, b.threshold_pct);
+        assert_eq!(parsed.bootstrap, b.bootstrap);
+        assert_eq!(parsed.quick, b.quick);
+        assert_eq!(parsed.benches, b.benches);
+    }
+
+    #[test]
+    fn multi_worker_rows_are_never_gated() {
+        assert!(gated_key("backend=fft/n=256/r=16/w=9"));
+        assert!(gated_key("backend=fft/batch=8/n=1024/r=64/threads=1/w=9"));
+        assert!(!gated_key("backend=fft/batch=8/n=1024/r=64/threads=4/w=9"));
+        // A threads=4 regression must be reported in `ungated`, not
+        // failed, and a missing threads=4 baseline row must not fail.
+        let key1 = "backend=fft/batch=8/n=1024/r=64/threads=1/w=9".to_string();
+        let key4 = "backend=fft/batch=8/n=1024/r=64/threads=4/w=9".to_string();
+        let mut benches = BenchMap::new();
+        benches.insert("t".into(), [(key1.clone(), 100.0), (key4.clone(), 30.0)].into());
+        let base = base_of(benches);
+        let mut current = BenchMap::new();
+        current.insert("t".into(), [(key1, 100.0), (key4, 90.0)].into());
+        let r = compare(&base, &current, 100.0, None);
+        assert_eq!(r.compared, 1);
+        assert_eq!(r.ungated, 1);
+        assert!(r.regressions.is_empty() && r.missing.is_empty());
+        assert!(verdict(&base, &r, false));
+    }
+
+    #[test]
+    fn calibration_is_positive_and_stable_order() {
+        let a = calibrate_ns();
+        assert!(a > 0.0 && a.is_finite());
+    }
+}

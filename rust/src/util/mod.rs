@@ -11,10 +11,14 @@
 //! * [`cli`]   — flag/option argument parser (clap stand-in).
 //! * [`bench`] — warmup+iters micro-benchmark harness with mean/p50/p95
 //!   stats and aligned-table output (criterion stand-in).
+//! * [`benchcheck`] — offline perf-regression gate comparing
+//!   `BENCH_*.json` artifacts against `bench/baseline.json`
+//!   (calibration-scaled; the `ski-tnn bench-check` subcommand).
 //! * [`prop`]  — property-test driver: seeded case generation, failure
 //!   reporting with the reproducing seed (proptest stand-in).
 
 pub mod bench;
+pub mod benchcheck;
 pub mod cli;
 pub mod json;
 pub mod prop;
