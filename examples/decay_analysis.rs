@@ -42,7 +42,7 @@ fn main() -> Result<()> {
     let n = args.usize_or("n", 512);
     let d = args.usize_or("channels", 8);
     let seeds = args.usize_or("seeds", 8);
-    assert!(n.is_power_of_two(), "--n must be a power of two (irfft)");
+    assert!(n >= 2, "--n must be at least 2");
 
     let bands: Vec<(usize, usize)> =
         vec![(1, 8), (8, 16), (16, 32), (32, 64), (64, 128), (128, 256), (256, n)];

@@ -57,11 +57,11 @@ fn main() -> Result<()> {
     );
     let max_new = args.usize_or("tokens", 96);
     let t0 = std::time::Instant::now();
-    let mut session = Session::new(&model, 0, &tokenize(&prompt_text), sampler, max_new);
+    let mut session = Session::new(&model, 0, &tokenize(&prompt_text), sampler, max_new)?;
     let prefill = t0.elapsed();
     let t1 = std::time::Instant::now();
     while !session.done() {
-        session.step(&model);
+        session.step(&model)?;
     }
     let decode = t1.elapsed();
     println!("\nprompt : {prompt_text:?}");

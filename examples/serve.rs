@@ -48,6 +48,7 @@ fn main() -> Result<()> {
         n: cfg.n,
         max_wait: Duration::from_millis(args.u64_or("max-wait-ms", 2)),
         queue_depth: args.usize_or("queue-depth", 64),
+        buckets: Vec::new(),
     };
     println!(
         "serving {} (batch {}, n {}, {} classes/vocab) · {clients} clients · {requests} requests",

@@ -23,7 +23,7 @@ use std::time::Duration;
 
 use ski_tnn::runtime::ThreadPool;
 use ski_tnn::toeplitz::{
-    apply_batch_sharded, build_op, gaussian_kernel, BackendKind, Dispatch, DispatchQuery,
+    apply_batch_sharded, build_op, gaussian_kernel, BackendKind, Dispatch, DispatchQuery, FftOp,
     ToeplitzKernel, ToeplitzOp,
 };
 use ski_tnn::util::bench::{fmt_secs, quick_mode, write_bench_json, Bencher, Table};
@@ -44,8 +44,13 @@ fn rel_err(got: &[f32], want: &[f32]) -> f64 {
 fn main() {
     let args = Args::parse(false);
     let quick = quick_mode();
-    let default_sizes: &[&str] =
-        if quick { &["256", "512", "1024"] } else { &["512", "1024", "4096", "8192"] };
+    // Non-pow2 n = 1000 rides in both modes: the length-agnostic
+    // serving path is gated by the same baseline as the pow2 rows.
+    let default_sizes: &[&str] = if quick {
+        &["256", "512", "1000", "1024"]
+    } else {
+        &["512", "1000", "1024", "4096", "8192"]
+    };
     let sizes: Vec<usize> = args
         .list_or("sizes", default_sizes)
         .iter()
@@ -78,7 +83,6 @@ fn main() {
         ],
     );
     for &n in &sizes {
-        assert!(n.is_power_of_two(), "sizes must be powers of two, got {n}");
         let r = (n / 16).max(2);
         let w = 9usize;
         let scale = n as f64 / 8.0;
@@ -255,6 +259,105 @@ fn main() {
             threads: *threads_list.last().unwrap(),
         })
     );
+
+    // ---- native non-pow2 apply vs the old pad-to-next-pow2 path ----
+    // The length-agnostic claim, measured: a spectral op built at the
+    // native n (its plan picks the cheapest smooth transform length ≥
+    // 2n-1) against what a caller previously had to do — zero-extend
+    // the kernel and every signal to the next power of two, apply
+    // there, truncate.  Construction is excluded from both sides; the
+    // pad side's extra copies and larger (or equal) transform are
+    // exactly its real per-request cost.
+    let pad_sizes: &[usize] = &[96, 360, 769, 1000];
+    let mut pt = Table::new(
+        "native non-pow2 apply vs pad-to-next-pow2 (fft backend)",
+        &["n", "native", "pad→2^k", "speedup", "transform"],
+    );
+    for &n in pad_sizes {
+        let p = n.next_power_of_two();
+        let scale = n as f64 / 8.0;
+        let kernel = ToeplitzKernel::from_fn(n, |lag| gaussian_kernel(lag as f64, scale));
+        let x = rng.normals(n);
+        let native = FftOp::new(&kernel);
+        // The old strategy: the same operator embedded at p, with the
+        // missing lags zero (exact on zero-padded inputs).
+        let padded_kernel = ToeplitzKernel::from_fn(p, |lag| {
+            if lag.unsigned_abs() < n as u64 { kernel.at(lag) } else { 0.0 }
+        });
+        let padded = FftOp::new(&padded_kernel);
+        let s_native = bench.run(|| {
+            std::hint::black_box(native.apply(&x));
+        });
+        let s_pad = bench.run(|| {
+            let mut xp = vec![0.0f32; p];
+            xp[..n].copy_from_slice(&x);
+            let mut y = padded.apply(&xp);
+            y.truncate(n);
+            std::hint::black_box(y);
+        });
+        // Same operator on the shared prefix: sanity before timing is
+        // trusted.
+        {
+            let mut xp = vec![0.0f32; p];
+            xp[..n].copy_from_slice(&x);
+            let y_pad = padded.apply(&xp);
+            for (i, (a, b)) in native.apply(&x).iter().zip(y_pad.iter()).enumerate() {
+                assert!((a - b).abs() < 1e-3, "n={n} pad/native disagree at {i}: {a} vs {b}");
+            }
+        }
+        pt.row(&[
+            n.to_string(),
+            fmt_secs(s_native.p50_s),
+            fmt_secs(s_pad.p50_s),
+            format!("{:.2}×", s_pad.p50_s / s_native.p50_s),
+            format!("{} vs {}", native.plan().transform_len(), 2 * p),
+        ]);
+        for (strategy, stats) in [("native", &s_native), ("pad2", &s_pad)] {
+            rows.push(Json::obj(vec![
+                ("n", Json::num(n as f64)),
+                ("strategy", Json::str(strategy)),
+                ("med_ns", Json::num(1e9 * stats.p50_s)),
+                ("p90_ns", Json::num(1e9 * stats.p90_s)),
+            ]));
+        }
+        // The acceptance claim: native must beat the padded strategy.
+        // Sizes well below the padded transform (96/360/769 run 25-40%
+        // fewer transform points) must win outright; n=1000 shares the
+        // 2048-point transform with the padded path (2000 vs 2048 is a
+        // modeled tie) so its win is only the avoided copy.  The
+        // strict ordering is asserted in full mode (stable iteration
+        // budgets); quick/CI-smoke mode — tiny budgets on noisy shared
+        // runners — warns on an inversion and hard-fails only on a
+        // catastrophic (>1.25×) regression, leaving flake absorption
+        // to the calibrated bench-check gate over the emitted rows.
+        let slack = if native.plan().transform_len() * 10 <= 2 * p * 9 { 1.0 } else { 1.05 };
+        if quick {
+            if s_native.p50_s >= s_pad.p50_s * slack {
+                eprintln!(
+                    "WARN: native apply at n={n} ({}) did not beat pad-to-{p} in quick mode: \
+                     {} vs {}",
+                    native.plan().transform_len(),
+                    fmt_secs(s_native.p50_s),
+                    fmt_secs(s_pad.p50_s)
+                );
+            }
+            assert!(
+                s_native.p50_s < s_pad.p50_s * 1.25,
+                "native apply at n={n} catastrophically slower than pad-to-{p}: {} vs {}",
+                fmt_secs(s_native.p50_s),
+                fmt_secs(s_pad.p50_s)
+            );
+        } else {
+            assert!(
+                s_native.p50_s < s_pad.p50_s * slack,
+                "native apply at n={n} ({}) must beat pad-to-{p}: {} vs {}",
+                native.plan().transform_len(),
+                fmt_secs(s_native.p50_s),
+                fmt_secs(s_pad.p50_s)
+            );
+        }
+    }
+    pt.print();
 
     match write_bench_json("backend_matrix", rows) {
         Ok(path) => println!("wrote {path}"),

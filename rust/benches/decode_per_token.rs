@@ -78,7 +78,7 @@ fn main() {
             let mut st = win.init_state();
             let mut acc = 0.0f32;
             for &xi in &x {
-                acc += win.step(&mut st, xi);
+                acc += win.step(&mut st, xi).expect("window step");
             }
             std::hint::black_box(acc);
         });

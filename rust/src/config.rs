@@ -52,6 +52,12 @@ pub struct RunConfig {
     /// parallelism); `1` = the serial reference.  Results are bitwise
     /// identical for every value.
     pub threads: usize,
+    /// Length buckets for substrate serving (`serve --backend …`):
+    /// each request pads only to the smallest bucket ≥ its length, so
+    /// mixed-length traffic batches within buckets instead of padding
+    /// everything to `n`.  Empty = single fixed width.  JSON array or
+    /// CLI `--buckets 64,256,1024`.
+    pub buckets: Vec<usize>,
 }
 
 impl Default for RunConfig {
@@ -71,6 +77,7 @@ impl Default for RunConfig {
             prefetch: 4,
             backend: None,
             threads: 0,
+            buckets: Vec::new(),
         }
     }
 }
@@ -102,6 +109,15 @@ impl RunConfig {
                     self.backend = Some(s.to_string());
                 }
                 "threads" => self.threads = val.as_usize().context("threads")?,
+                "buckets" => {
+                    let arr = val.as_arr().ok_or_else(|| {
+                        anyhow!("buckets must be a JSON array of widths, e.g. [64, 256]")
+                    })?;
+                    self.buckets = arr
+                        .iter()
+                        .map(|v| v.as_usize().context("buckets entry"))
+                        .collect::<Result<Vec<usize>>>()?;
+                }
                 other => return Err(anyhow!("unknown run-config key {other:?}")),
             }
         }
@@ -151,6 +167,13 @@ impl RunConfig {
         }
         if let Some(v) = a.get("threads") {
             self.threads = v.parse().unwrap_or(self.threads);
+        }
+        if let Some(v) = a.get("buckets") {
+            let parsed: Option<Vec<usize>> =
+                v.split(',').map(|s| s.trim().parse().ok()).collect();
+            if let Some(ws) = parsed {
+                self.buckets = ws;
+            }
         }
     }
 
@@ -212,6 +235,20 @@ mod tests {
         let args = Args::parse_from(["--threads".to_string(), "8".to_string()], false);
         rc.apply_args(&args);
         assert_eq!(rc.threads, 8, "CLI overrides JSON");
+    }
+
+    #[test]
+    fn buckets_parsed_from_json_and_cli() {
+        let mut rc = RunConfig::default();
+        assert!(rc.buckets.is_empty(), "default is unbucketed");
+        let j = json::parse(r#"{"buckets": [64, 256]}"#).unwrap();
+        rc.apply_json(&j).unwrap();
+        assert_eq!(rc.buckets, vec![64, 256]);
+        let bad = json::parse(r#"{"buckets": 64}"#).unwrap();
+        assert!(rc.apply_json(&bad).is_err(), "non-array buckets must be rejected");
+        let args = Args::parse_from(["--buckets".to_string(), "32,128,512".to_string()], false);
+        rc.apply_args(&args);
+        assert_eq!(rc.buckets, vec![32, 128, 512], "CLI overrides JSON");
     }
 
     #[test]

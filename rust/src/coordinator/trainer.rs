@@ -77,6 +77,14 @@ pub struct EvalStats {
 /// Run a fixed validation pass through an eval entry (`fwd` or
 /// `fwd_n{L}`), aggregating exactly (metric = token count for LM,
 /// correct count for cls — see `model.loss_fn`).
+///
+/// Classification batches are weighted by the number of examples each
+/// batch actually carries (its leading tensor dimension), not the
+/// configured `cfg.batch` — the two only coincide when every stream
+/// yields full batches.  An eval pass that evaluates nothing (zero
+/// batches, or zero total weight) is an error, not a silently-rescaled
+/// loss: the old `weight.max(1.0)` could report a dampened loss when
+/// total weight fell below one.
 pub fn evaluate(
     engine: &Engine,
     state: &ModelState,
@@ -90,7 +98,11 @@ pub fn evaluate(
     let mut correct = 0.0;
     let mut examples = 0.0;
     for _ in 0..batches {
-        let batch = to_literals(&src.next_batch())?;
+        let host = src.next_batch();
+        // Real example count for this batch: the leading dimension of
+        // the inputs actually evaluated.
+        let rows = host.first().map(|t| t.shape()[0]).unwrap_or(0) as f64;
+        let batch = to_literals(&host)?;
         let (loss, metric) = state.fwd(engine, entry, &batch)?;
         match cfg.task {
             Task::LmCausal | Task::LmBidir => {
@@ -99,18 +111,24 @@ pub fn evaluate(
                 weight += f64::from(metric);
             }
             Task::Cls => {
-                loss_weighted += f64::from(loss) * cfg.batch as f64;
-                weight += cfg.batch as f64;
+                loss_weighted += f64::from(loss) * rows;
+                weight += rows;
                 correct += f64::from(metric);
-                examples += cfg.batch as f64;
+                examples += rows;
             }
         }
     }
-    let loss = loss_weighted / weight.max(1.0);
+    if weight <= 0.0 {
+        bail!(
+            "empty eval pass: {batches} batch(es) through {entry:?} carried zero weight \
+             (no tokens/examples evaluated)"
+        );
+    }
+    let loss = loss_weighted / weight;
     Ok(EvalStats {
         loss,
         ppl: if cfg.task == Task::Cls { f64::NAN } else { loss.exp() },
-        acc: if cfg.task == Task::Cls { correct / examples.max(1.0) } else { f64::NAN },
+        acc: if cfg.task == Task::Cls { correct / examples } else { f64::NAN },
     })
 }
 

@@ -33,6 +33,42 @@ pub use ssm::{pole_grid, DiagonalSsm};
 
 use crate::toeplitz::ToeplitzKernel;
 
+/// Typed decode failure — the request path's alternative to panicking.
+///
+/// A corrupted per-session state (decoder/state variant mismatch) used
+/// to `panic!` inside [`KernelDecoder::step`], which is reachable from
+/// the generation server's tick loop: one bad session would abort the
+/// whole serve process.  It now surfaces as an error that
+/// `server::generate` routes back to the owning request only.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DecodeError {
+    /// The per-session [`DecoderState`] does not match the model's
+    /// planned [`KernelDecoder`] — a variant mismatch, or a state
+    /// vector whose length diverges from the decoder count.
+    StateMismatch {
+        /// Planned decoder kind (`"ssm"`/`"window"`; `"planned"` for a
+        /// whole-vector length mismatch).
+        decoder: &'static str,
+        /// State kind actually carried by the session (`"ssm"`/
+        /// `"window"`; `"missing"` for a whole-vector length mismatch).
+        state: &'static str,
+    },
+}
+
+impl std::fmt::Display for DecodeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DecodeError::StateMismatch { decoder, state } => write!(
+                f,
+                "decoder/state variant mismatch: {decoder} decoder stepped with {state} state \
+                 (corrupted session)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for DecodeError {}
+
 /// Policy knobs for planning a kernel's streaming decoder.
 #[derive(Debug, Clone, Copy)]
 pub struct DecodePolicy {
@@ -88,6 +124,16 @@ pub enum DecoderState {
     Window { buf: Vec<f32>, pos: usize },
 }
 
+impl DecoderState {
+    /// Short variant name (`"ssm"`/`"window"`) for error reports.
+    pub fn kind_name(&self) -> &'static str {
+        match self {
+            DecoderState::Ssm(_) => "ssm",
+            DecoderState::Window { .. } => "window",
+        }
+    }
+}
+
 impl KernelDecoder {
     /// Plan a decoder for a causal kernel under `policy`.
     ///
@@ -132,14 +178,26 @@ impl KernelDecoder {
         }
     }
 
-    /// One decode step: consume `x_t`, emit `y_t`.
-    pub fn step(&self, state: &mut DecoderState, x: f32) -> f32 {
-        match (self, state) {
-            (KernelDecoder::Ssm(s), DecoderState::Ssm(h)) => s.step(h, x),
+    /// One decode step: consume `x_t`, emit `y_t`.  A decoder/state
+    /// variant mismatch (a corrupted session) is a typed error, not a
+    /// panic — it is reachable from the generation server, where one
+    /// bad session must fail its own request, not the process.
+    pub fn step(&self, state: &mut DecoderState, x: f32) -> Result<f32, DecodeError> {
+        match (self, &mut *state) {
+            (KernelDecoder::Ssm(s), DecoderState::Ssm(h)) => return Ok(s.step(h, x)),
             (KernelDecoder::Window(w), DecoderState::Window { buf, pos }) => {
-                w.step(buf, pos, x)
+                return Ok(w.step(buf, pos, x));
             }
-            _ => panic!("decoder/state variant mismatch"),
+            _ => {}
+        }
+        Err(DecodeError::StateMismatch { decoder: self.kind_name(), state: state.kind_name() })
+    }
+
+    /// Short variant name (`"ssm"`/`"window"`) for error reports.
+    pub fn kind_name(&self) -> &'static str {
+        match self {
+            KernelDecoder::Ssm(_) => "ssm",
+            KernelDecoder::Window(_) => "window",
         }
     }
 
@@ -186,7 +244,8 @@ mod tests {
             let want = k.apply_dense(&x);
             let dec = KernelDecoder::window(&k.causal_taps());
             let mut st = dec.init_state();
-            let got: Vec<f32> = x.iter().map(|&xi| dec.step(&mut st, xi)).collect();
+            let got: Vec<f32> =
+                x.iter().map(|&xi| dec.step(&mut st, xi).expect("window step")).collect();
             assert_close(&got, &want, 1e-4, "window decode");
         });
     }
@@ -235,7 +294,7 @@ mod tests {
             let bound = dec.l1_error() * xmax + (2e-3 + 1e-5 * w_l1) * (1.0 + xmax);
             let mut st = dec.init_state();
             for (t, (&xi, &wi)) in x.iter().zip(want.iter()).enumerate() {
-                let y = dec.step(&mut st, xi);
+                let y = dec.step(&mut st, xi).expect("planned step");
                 assert!(
                     ((y - wi) as f64).abs() <= bound,
                     "t={t}: |{y} - {wi}| > {bound} (n={n}, ssm={})",
@@ -285,6 +344,21 @@ mod tests {
         let k = random_causal(&mut rng, 256);
         let dec = KernelDecoder::plan(&k, DecodePolicy { rank: 8, max_rel_residual: 0.05 });
         assert!(!dec.is_ssm(), "noise kernel must fall back to the exact window");
+    }
+
+    #[test]
+    fn step_reports_state_mismatch_as_typed_error() {
+        // The satellite regression: a corrupted session (state variant
+        // not matching the planned decoder) must be an Err, not a
+        // panic — it is reachable from the generation server.
+        let dec = KernelDecoder::window(&[1.0, 0.5]);
+        let mut wrong = DecoderState::Ssm(vec![0.0; 4]);
+        let err = dec.step(&mut wrong, 1.0).unwrap_err();
+        assert_eq!(err, DecodeError::StateMismatch { decoder: "window", state: "ssm" });
+        assert!(err.to_string().contains("variant mismatch"), "{err}");
+        // And the matched pairing still works afterwards.
+        let mut ok = dec.init_state();
+        assert!(dec.step(&mut ok, 1.0).is_ok());
     }
 
     #[test]

@@ -28,7 +28,7 @@ use crate::toeplitz::{
 };
 use crate::util::rng::Rng;
 
-use super::{DecodePolicy, DecoderState, KernelDecoder};
+use super::{DecodeError, DecodePolicy, DecoderState, KernelDecoder};
 
 /// Hyper-parameters of a streaming decode model.
 #[derive(Debug, Clone, Copy)]
@@ -75,7 +75,8 @@ struct Block {
     taps: Vec<Vec<f32>>,
     decoders: Vec<KernelDecoder>,
     /// Per-channel spectral oracle plan: kernel spectrum cached once
-    /// at the padded context length, so full-context forwards never
+    /// at the native context length (the plan picks its own smooth
+    /// transform size), so full-context forwards never
     /// re-FFT the (fixed) taps.  Plans are lock-free
     /// [`SpectralPlan`]s — transform scratch lives in the shard
     /// runtime's per-worker arenas ([`with_scratch`]), not here.
@@ -119,6 +120,25 @@ impl StreamState {
             })
             .sum()
     }
+
+    /// Deliberately corrupt the state by flipping every decoder-state
+    /// variant — the regression hook for the serve path's
+    /// one-session-fails-not-the-process guarantee (a real corruption
+    /// would come from a bug or bad deserialization; tests need a
+    /// deterministic way to produce one).
+    #[doc(hidden)]
+    pub fn poison(&mut self) {
+        for states in self.blocks.iter_mut() {
+            for s in states.iter_mut() {
+                *s = match s {
+                    DecoderState::Ssm(h) => {
+                        DecoderState::Window { buf: vec![0.0; h.len().max(1)], pos: 0 }
+                    }
+                    DecoderState::Window { buf, .. } => DecoderState::Ssm(vec![0.0; buf.len()]),
+                };
+            }
+        }
+    }
 }
 
 fn sigmoid(x: f32) -> f32 {
@@ -127,17 +147,17 @@ fn sigmoid(x: f32) -> f32 {
 
 /// Whether the full-context oracle can ever take the cached spectral
 /// path under this config: forced spectral backends always, `Auto`
-/// only when the FFT cost at the padded context beats the dense loop
-/// at its largest (t_len = n) — the gate for building the per-channel
-/// plans at all.
+/// only when the FFT cost at the context length (priced at the plan's
+/// own smooth transform length — no power-of-two padding any more)
+/// beats the dense loop at its largest (t_len = n) — the gate for
+/// building the per-channel plans at all.
 fn spectral_oracle_possible(cfg: &DecodeModelConfig) -> bool {
-    let p = cfg.n.next_power_of_two();
     match cfg.oracle_backend {
         BackendKind::Dense | BackendKind::Ski => false,
         BackendKind::Fft | BackendKind::Freq => true,
         BackendKind::Auto => {
             let cost = CostModel::default();
-            cost.fft_cost(p) < cost.dense_cost(cfg.n)
+            cost.fft_cost(cfg.n) < cost.dense_cost(cfg.n)
         }
     }
 }
@@ -223,15 +243,14 @@ impl DecodeModel {
                 // Spectral oracle plans only when the configured
                 // backend can ever reach them — a dense-forced or
                 // below-crossover model skips blocks·d kernel FFTs
-                // and their spectrum/scratch buffers entirely.
-                let p = cfg.n.next_power_of_two();
+                // and their spectrum/scratch buffers entirely.  Plans
+                // are built at the native context length: the plan
+                // itself picks the cheapest smooth transform size, so
+                // a non-pow2 context no longer pads up to the next
+                // power of two.
                 let spectral: Vec<SpectralPlan> = if spectral_oracle_possible(&cfg) {
                     taps.iter()
-                        .map(|t| {
-                            let mut padded = vec![0.0f32; p];
-                            padded[..t.len()].copy_from_slice(t);
-                            SpectralPlan::new(&ToeplitzKernel::from_causal_taps(&padded))
-                        })
+                        .map(|t| SpectralPlan::new(&ToeplitzKernel::from_causal_taps(t)))
                         .collect()
                 } else {
                     Vec::new()
@@ -270,19 +289,21 @@ impl DecodeModel {
     }
 
     /// One streaming step: consume `token`, return next-token logits.
-    /// O(1) in sequence position.
-    pub fn step(&self, state: &mut StreamState, token: i32) -> Vec<f32> {
+    /// O(1) in sequence position.  A corrupted session state surfaces
+    /// as a typed [`DecodeError`] instead of a panic, so the serving
+    /// loop can fail one session without taking the process down.
+    pub fn step(&self, state: &mut StreamState, token: i32) -> Result<Vec<f32>, DecodeError> {
         let d = self.cfg.d;
         let tok = (token.max(0) as usize).min(self.cfg.vocab - 1);
         let mut x: Vec<f32> = self.embed[tok * d..(tok + 1) * d].to_vec();
         for (block, states) in self.blocks.iter().zip(state.blocks.iter_mut()) {
-            let u: Vec<f32> = block
-                .decoders
-                .iter()
-                .zip(states.iter_mut())
-                .enumerate()
-                .map(|(c, (dec, st))| dec.step(st, x[c]))
-                .collect();
+            if states.len() != block.decoders.len() {
+                return Err(DecodeError::StateMismatch { decoder: "planned", state: "missing" });
+            }
+            let mut u = Vec::with_capacity(d);
+            for (c, (dec, st)) in block.decoders.iter().zip(states.iter_mut()).enumerate() {
+                u.push(dec.step(st, x[c])?);
+            }
             let g = matvec(&block.gate, &x, d);
             let v: Vec<f32> = u.iter().zip(g.iter()).map(|(&ui, &gi)| ui * sigmoid(gi)).collect();
             let h = matvec(&block.mix, &v, d);
@@ -298,7 +319,7 @@ impl DecodeModel {
                 *l += xc * w;
             }
         }
-        logits
+        Ok(logits)
     }
 
     /// Full-context oracle: logits at every position, computed by
@@ -318,19 +339,18 @@ impl DecodeModel {
             .collect();
         // Backend choice for the per-channel causal convolutions: the
         // direct loop at t_len vs the per-channel spectral plans whose
-        // kernel spectra were cached once at the padded context length
+        // kernel spectra were cached once at the native context length
         // (`cfg.oracle_backend` forces one; Auto compares real costs).
         // Plans may be absent when construction gated them off.
-        let p = self.cfg.n.next_power_of_two();
         let have_plans = self.blocks.iter().all(|b| !b.spectral.is_empty());
-        let use_spectral = t_len <= p
+        let use_spectral = t_len <= self.cfg.n
             && have_plans
             && match self.cfg.oracle_backend {
                 BackendKind::Dense | BackendKind::Ski => false,
                 BackendKind::Fft | BackendKind::Freq => true,
                 BackendKind::Auto => {
                     let cost = CostModel::default();
-                    cost.fft_cost(p) < cost.dense_cost(t_len)
+                    cost.fft_cost(self.cfg.n) < cost.dense_cost(t_len)
                 }
             };
         let pool = self.oracle_pool();
@@ -446,7 +466,7 @@ mod tests {
             let want = model.forward_full(&toks);
             let mut st = model.init_state();
             for (t, &tk) in toks.iter().enumerate() {
-                let got = model.step(&mut st, tk);
+                let got = model.step(&mut st, tk).expect("stream step");
                 for (v, (a, b)) in got.iter().zip(want[t].iter()).enumerate() {
                     assert!(
                         (a - b).abs() < 1e-4 * (1.0 + b.abs()),
@@ -467,7 +487,7 @@ mod tests {
         let mut st = model.init_state();
         let mut worst = 0.0f32;
         for (t, &tk) in toks.iter().enumerate() {
-            let got = model.step(&mut st, tk);
+            let got = model.step(&mut st, tk).expect("stream step");
             for (a, b) in got.iter().zip(want[t].iter()) {
                 worst = worst.max((a - b).abs());
             }
@@ -518,17 +538,52 @@ mod tests {
     }
 
     #[test]
+    fn oracle_backends_agree_at_non_pow2_context() {
+        // A context length that is not a power of two: the spectral
+        // oracle plans run at their own smooth transform size and must
+        // still match the dense loop at every position.
+        let mut dense_cfg = tiny_cfg(19);
+        dense_cfg.n = 40;
+        dense_cfg.oracle_backend = BackendKind::Dense;
+        let mut fft_cfg = dense_cfg;
+        fft_cfg.oracle_backend = BackendKind::Fft;
+        let a = DecodeModel::new(dense_cfg);
+        let b = DecodeModel::new(fft_cfg);
+        let toks: Vec<i32> = (0..40).map(|i| (i * 29 % 256) as i32).collect();
+        let ya = a.forward_full(&toks);
+        let yb = b.forward_full(&toks);
+        for (t, (ra, rb)) in ya.iter().zip(yb.iter()).enumerate() {
+            for (v, (x, y)) in ra.iter().zip(rb.iter()).enumerate() {
+                assert!(
+                    (x - y).abs() < 1e-3 * (1.0 + y.abs()),
+                    "t={t} vocab={v}: dense {x} vs fft {y}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn poisoned_state_errors_instead_of_panicking() {
+        let model = DecodeModel::new(tiny_cfg(23));
+        let mut st = model.init_state();
+        let _ = model.step(&mut st, 1).unwrap();
+        st.poison();
+        let err = model.step(&mut st, 2).unwrap_err();
+        assert!(err.to_string().contains("variant mismatch"), "{err}");
+    }
+
+    #[test]
     fn state_is_per_session() {
         // Two sessions with different prefixes must not interfere.
         let model = DecodeModel::new(tiny_cfg(5));
         let mut a = model.init_state();
         let mut b = model.init_state();
-        let la1 = model.step(&mut a, 10);
-        let _ = model.step(&mut b, 200);
+        let la1 = model.step(&mut a, 10).unwrap();
+        let _ = model.step(&mut b, 200).unwrap();
         let mut a2 = model.init_state();
-        let la2 = model.step(&mut a2, 10);
+        let la2 = model.step(&mut a2, 10).unwrap();
         assert_eq!(la1, la2, "fresh sessions with same input must agree");
-        let lb = model.step(&mut b, 10);
+        let lb = model.step(&mut b, 10).unwrap();
         assert_ne!(la1, lb, "different histories must give different logits");
     }
 
@@ -537,7 +592,7 @@ mod tests {
         let model = DecodeModel::new(tiny_cfg(7));
         let mut st = model.init_state();
         for t in 0..64 {
-            let logits = model.step(&mut st, (t % 259) as i32);
+            let logits = model.step(&mut st, (t % 259) as i32).unwrap();
             assert_eq!(logits.len(), model.cfg.vocab);
             assert!(logits.iter().all(|v| v.is_finite()));
         }

@@ -8,7 +8,7 @@
 //! [`Session::step`] samples and absorbs exactly one token in O(1).
 
 use super::model::{DecodeModel, StreamState};
-use super::Sampler;
+use super::{DecodeError, Sampler};
 use crate::data::PAD;
 
 /// One live generation.
@@ -27,21 +27,23 @@ pub struct Session {
 impl Session {
     /// Open a session: allocate state and prefill the prompt.  An
     /// empty prompt is seeded with a single PAD so there is always a
-    /// distribution to sample from.
+    /// distribution to sample from.  A decode failure during prefill
+    /// (corrupted state) surfaces as a typed error for the scheduler
+    /// to route back to the owning request.
     pub fn new(
         model: &DecodeModel,
         id: u64,
         prompt: &[i32],
         sampler: Sampler,
         max_new: usize,
-    ) -> Session {
+    ) -> Result<Session, DecodeError> {
         let mut state = model.init_state();
         let tokens: Vec<i32> = if prompt.is_empty() { vec![PAD] } else { prompt.to_vec() };
         let mut next_logits = Vec::new();
         for &t in &tokens {
-            next_logits = model.step(&mut state, t);
+            next_logits = model.step(&mut state, t)?;
         }
-        Session {
+        Ok(Session {
             id,
             prompt_len: tokens.len(),
             tokens,
@@ -49,7 +51,7 @@ impl Session {
             sampler,
             state,
             next_logits,
-        }
+        })
     }
 
     /// Number of tokens generated so far.
@@ -67,8 +69,10 @@ impl Session {
     }
 
     /// Sample one token, absorb it into the recurrent state, return
-    /// it.  O(1) in context length.  Panics if called past `done()`.
-    pub fn step(&mut self, model: &DecodeModel) -> i32 {
+    /// it.  O(1) in context length.  Panics if called past `done()`
+    /// (a scheduler bug, not a data condition); a corrupted state is
+    /// a typed error the scheduler fails this session's request with.
+    pub fn step(&mut self, model: &DecodeModel) -> Result<i32, DecodeError> {
         assert!(!self.done(), "session {} already finished", self.id);
         let tok = self.sampler.sample(&self.next_logits) as i32;
         self.tokens.push(tok);
@@ -76,14 +80,21 @@ impl Session {
             // The finished session's state never feeds a sample again;
             // skipping the last model step saves one decode per
             // session without changing outputs.
-            self.next_logits = model.step(&mut self.state, tok);
+            self.next_logits = model.step(&mut self.state, tok)?;
         }
-        tok
+        Ok(tok)
     }
 
     /// Per-session recurrent memory, in f32 elements.
     pub fn state_size(&self) -> usize {
         self.state.size()
+    }
+
+    /// Corrupt this session's recurrent state (see
+    /// [`StreamState::poison`]) — regression-test hook only.
+    #[doc(hidden)]
+    pub fn poison_for_test(&mut self) {
+        self.state.poison();
     }
 }
 
@@ -107,9 +118,9 @@ mod tests {
     #[test]
     fn generates_exactly_max_new() {
         let m = model();
-        let mut s = Session::new(&m, 0, &[1, 2, 3], Sampler::greedy(), 7);
+        let mut s = Session::new(&m, 0, &[1, 2, 3], Sampler::greedy(), 7).unwrap();
         while !s.done() {
-            s.step(&m);
+            s.step(&m).unwrap();
         }
         assert_eq!(s.generated_len(), 7);
         assert_eq!(s.tokens.len(), 10);
@@ -120,9 +131,9 @@ mod tests {
     fn greedy_sessions_are_deterministic() {
         let m = model();
         let run = || {
-            let mut s = Session::new(&m, 0, &[65, 66], Sampler::greedy(), 12);
+            let mut s = Session::new(&m, 0, &[65, 66], Sampler::greedy(), 12).unwrap();
             while !s.done() {
-                s.step(&m);
+                s.step(&m).unwrap();
             }
             s.generated().to_vec()
         };
@@ -133,9 +144,9 @@ mod tests {
     fn seeds_decorrelate_sampled_sessions() {
         let m = model();
         let run = |seed: u64| {
-            let mut s = Session::new(&m, seed, &[65], Sampler::new(1.2, 20, seed), 24);
+            let mut s = Session::new(&m, seed, &[65], Sampler::new(1.2, 20, seed), 24).unwrap();
             while !s.done() {
-                s.step(&m);
+                s.step(&m).unwrap();
             }
             s.generated().to_vec()
         };
@@ -146,10 +157,10 @@ mod tests {
     #[test]
     fn empty_prompt_is_padded() {
         let m = model();
-        let mut s = Session::new(&m, 0, &[], Sampler::greedy(), 3);
+        let mut s = Session::new(&m, 0, &[], Sampler::greedy(), 3).unwrap();
         assert_eq!(s.prompt_len, 1);
         while !s.done() {
-            s.step(&m);
+            s.step(&m).unwrap();
         }
         assert_eq!(s.generated_len(), 3);
     }
@@ -159,19 +170,19 @@ mod tests {
         // Interleaving other work between steps must not change a
         // session's output — the state is fully self-contained.
         let m = model();
-        let mut a = Session::new(&m, 0, &[10, 20], Sampler::greedy(), 8);
-        let mut b = Session::new(&m, 1, &[10, 20], Sampler::greedy(), 8);
-        let mut other = Session::new(&m, 2, &[99], Sampler::greedy(), 8);
+        let mut a = Session::new(&m, 0, &[10, 20], Sampler::greedy(), 8).unwrap();
+        let mut b = Session::new(&m, 1, &[10, 20], Sampler::greedy(), 8).unwrap();
+        let mut other = Session::new(&m, 2, &[99], Sampler::greedy(), 8).unwrap();
         let mut out_a = Vec::new();
         let mut out_b = Vec::new();
         while !a.done() {
-            out_a.push(a.step(&m));
+            out_a.push(a.step(&m).unwrap());
             if !other.done() {
-                other.step(&m); // interleaved "traffic"
+                other.step(&m).unwrap(); // interleaved "traffic"
             }
         }
         while !b.done() {
-            out_b.push(b.step(&m));
+            out_b.push(b.step(&m).unwrap());
         }
         assert_eq!(out_a, out_b);
     }

@@ -1,12 +1,29 @@
-//! Iterative radix-2 Cooley–Tukey FFT with rFFT/irFFT wrappers.
+//! Planned FFT engine: mixed-radix Cooley–Tukey + Bluestein fallback.
 //!
-//! Sizes must be powers of two — every transform in this system runs on
-//! the `2n` circulant embedding of a power-of-two sequence length, so
-//! this is not a practical restriction (asserted at call sites).
-//! Twiddles are computed per stage with a recurrence seeded from
-//! `sin`/`cos` per block, which keeps the implementation allocation-free
-//! beyond the in-place buffer and accurate to ~1e-6 relative for the
-//! n ≤ 2²⁰ range the benches touch.
+//! Any size `n ≥ 1` transforms exactly:
+//!
+//! * **pow2** — the original iterative radix-2 kernel with a per-plan
+//!   twiddle table (the hot paths that were already power-of-two run
+//!   the same butterflies as before, minus the thread-local cache
+//!   lookup);
+//! * **mixed** — factored Cooley–Tukey for smooth composites: hardcoded
+//!   radix-3/radix-5 butterflies (group twiddles + small-DFT kernels),
+//!   a generic O(r²) kernel for primes ≤ 13, and the iterative radix-2
+//!   kernel on the power-of-two tail;
+//! * **bluestein** — chirp-z through a power-of-two convolution for
+//!   sizes with a prime factor > 13 (exact for primes, unlike padding).
+//!
+//! [`FftPlan`] owns its twiddle/chirp tables and is immutable after
+//! construction, so one plan is shared lock-free by any number of
+//! threads ([`FftPlan::shared`] memoises plans per process).  The free
+//! [`fft`]/[`ifft`]/[`rfft`]/[`irfft`] wrappers go through the cache
+//! and now accept any length.  [`good_conv_size`] picks the cheapest
+//! 5-smooth transform length ≥ a bound — how the Toeplitz circulant
+//! plans avoid ever paying Bluestein — and [`fft_work_units`] is the
+//! cost-model hook that prices an actual factorization.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, OnceLock};
 
 /// Minimal complex number (no external num crate offline).
 #[derive(Debug, Clone, Copy, PartialEq, Default)]
@@ -50,6 +67,114 @@ impl Complex {
     }
 }
 
+/// Largest odd prime the mixed-radix engine handles in-line; anything
+/// bigger routes the whole transform through Bluestein.
+const MAX_GENERIC_RADIX: usize = 13;
+
+/// `n = 2^k · Πfactors` with the odd prime factors ascending.  `None`
+/// factors ⇒ some odd prime exceeds [`MAX_GENERIC_RADIX`] (Bluestein).
+fn factorize(mut n: usize) -> (Option<Vec<usize>>, usize) {
+    let mut base = 1usize;
+    while n % 2 == 0 {
+        n /= 2;
+        base *= 2;
+    }
+    let mut factors = Vec::new();
+    let mut p = 3usize;
+    while p * p <= n {
+        while n % p == 0 {
+            factors.push(p);
+            n /= p;
+        }
+        p += 2;
+    }
+    if n > 1 {
+        factors.push(n);
+    }
+    if factors.iter().any(|&f| f > MAX_GENERIC_RADIX) {
+        return (None, base);
+    }
+    (Some(factors), base)
+}
+
+/// Modeled butterfly work of one `m`-point transform under the actual
+/// factorization this engine would use, in radix-2-butterfly units:
+/// pow2 = `m/2·log2 m`, each odd-radix level a calibrated multiple of
+/// `m`, Bluestein three pow2 transforms at the embedding size plus the
+/// chirp multiplies.  Relative pricing only — the dispatch cost model
+/// multiplies by its per-unit nanoseconds.
+pub fn fft_work_units(m: usize) -> f64 {
+    if m <= 1 {
+        return 0.0;
+    }
+    let (factors, base) = factorize(m);
+    let Some(factors) = factors else {
+        let big = (2 * m - 1).next_power_of_two() as f64;
+        return 3.0 * 0.5 * big * big.log2() + 2.0 * m as f64 + big;
+    };
+    let mut units = 0.5 * (m as f64) * (base as f64).log2();
+    for &r in &factors {
+        // Per-point cost of one radix-r level: hardcoded kernels for
+        // 3/5, the generic O(r²)-per-group loop above that.
+        let per_point = match r {
+            3 => 1.0,
+            5 => 1.6,
+            7 => 2.2,
+            11 => 3.0,
+            _ => 3.5,
+        };
+        units += m as f64 * per_point;
+    }
+    units
+}
+
+/// The cheapest 5-smooth (2^a·3^b·5^c) transform length `≥ min` by
+/// [`fft_work_units`] — never worse than `min.next_power_of_two()`,
+/// which is itself a candidate.  Circulant-embedding plans use this to
+/// turn "awkward n" into "nearby smooth m" instead of Bluestein.
+pub fn good_conv_size(min: usize) -> usize {
+    let min = min.max(1);
+    let bound = min.next_power_of_two();
+    let mut best = bound;
+    let mut best_units = fft_work_units(bound);
+    let mut p5 = 1usize;
+    while p5 <= bound {
+        let mut p35 = p5;
+        while p35 <= bound {
+            let mut m = p35;
+            while m < min {
+                m *= 2;
+            }
+            if m <= bound {
+                let u = fft_work_units(m);
+                if u < best_units || (u == best_units && m < best) {
+                    best = m;
+                    best_units = u;
+                }
+            }
+            match p35.checked_mul(3) {
+                Some(v) => p35 = v,
+                None => break,
+            }
+        }
+        match p5.checked_mul(5) {
+            Some(v) => p5 = v,
+            None => break,
+        }
+    }
+    best
+}
+
+/// Forward twiddle table `tw[k] = e^{-2πik/n}` for `k < len`.
+fn twiddle_table(n: usize, len: usize) -> Vec<Complex> {
+    (0..len)
+        .map(|k| {
+            let ang = -2.0 * std::f64::consts::PI * k as f64 / n as f64;
+            Complex::new(ang.cos(), ang.sin())
+        })
+        .collect()
+}
+
 fn bit_reverse_permute(buf: &mut [Complex]) {
     let n = buf.len();
     let mut j = 0usize;
@@ -66,96 +191,357 @@ fn bit_reverse_permute(buf: &mut [Complex]) {
     }
 }
 
-/// In-place forward FFT (sign -1 convention: X[k] = Σ x[t] e^{-2πikt/n}).
-pub fn fft(buf: &mut [Complex]) {
-    fft_dir(buf, false);
-}
-
-/// In-place inverse FFT, including the 1/n normalisation.
-pub fn ifft(buf: &mut [Complex]) {
-    fft_dir(buf, true);
-    let n = buf.len() as f64;
-    for v in buf.iter_mut() {
-        *v = v.scale(1.0 / n);
-    }
-}
-
-fn fft_dir(buf: &mut [Complex], inverse: bool) {
+/// The iterative radix-2 kernel (the pre-existing hot loop), over a
+/// caller-supplied half-size twiddle table for `buf.len()`.
+fn pow2_fft(buf: &mut [Complex], tw: &[Complex], inverse: bool) {
     let n = buf.len();
-    assert!(n.is_power_of_two(), "fft size {n} must be a power of two");
+    debug_assert!(n.is_power_of_two());
     if n <= 1 {
         return;
     }
     bit_reverse_permute(buf);
-    // §Perf iteration 1 (EXPERIMENTS.md): per-stage twiddles via the
-    // w·wlen recurrence cost a complex multiply per butterfly *and*
-    // accumulate rounding over long stages.  A cached half-size table
-    // of exact twiddles (stride-indexed per stage) removes both: ~1.6×
-    // on the n=4096 apply_fft microbench, and tail accuracy improves.
-    TWIDDLES.with(|cell| {
-        let mut cache = cell.borrow_mut();
-        if cache.len() < n / 2 || cache.capacity_for != n {
-            cache.fill_for(n);
-        }
-        let tw = &cache.fwd;
-        let mut len = 2;
-        while len <= n {
-            let stride = n / len;
-            let mut i = 0;
-            while i < n {
-                for j in 0..len / 2 {
-                    let mut w = tw[j * stride];
-                    if inverse {
-                        w = w.conj();
-                    }
-                    let u = buf[i + j];
-                    let v = buf[i + j + len / 2].mul(w);
-                    buf[i + j] = u.add(v);
-                    buf[i + j + len / 2] = u.sub(v);
+    let mut len = 2;
+    while len <= n {
+        let stride = n / len;
+        let mut i = 0;
+        while i < n {
+            for j in 0..len / 2 {
+                let mut w = tw[j * stride];
+                if inverse {
+                    w = w.conj();
                 }
-                i += len;
+                let u = buf[i + j];
+                let v = buf[i + j + len / 2].mul(w);
+                buf[i + j] = u.add(v);
+                buf[i + j + len / 2] = u.sub(v);
             }
-            len <<= 1;
+            i += len;
         }
-    });
-}
-
-/// Thread-local forward-twiddle cache: `fwd[k] = e^{-2πik/n}` for
-/// `k < n/2`, rebuilt only when a larger (or different) `n` appears.
-struct TwiddleCache {
-    fwd: Vec<Complex>,
-    capacity_for: usize,
-}
-
-impl TwiddleCache {
-    fn len(&self) -> usize {
-        self.fwd.len()
+        len <<= 1;
     }
+}
 
-    fn fill_for(&mut self, n: usize) {
-        self.fwd = (0..n / 2)
-            .map(|k| {
-                let ang = -2.0 * std::f64::consts::PI * k as f64 / n as f64;
+// Exact small-radix kernel constants (cos/sin of 2π/3, 2π/5, 4π/5);
+// `radix_constants_are_trig_exact` pins them against the libm values.
+const SQRT3_2: f64 = 0.866_025_403_784_438_6;
+const C72: f64 = 0.309_016_994_374_947_45;
+const C144: f64 = -0.809_016_994_374_947_5;
+const S72: f64 = 0.951_056_516_295_153_5;
+const S144: f64 = 0.587_785_252_292_473_1;
+
+/// Factored Cooley–Tukey over odd factors with a pow2 tail.
+#[derive(Debug)]
+struct MixedPlan {
+    /// Odd prime factors (ascending, with multiplicity).
+    factors: Vec<usize>,
+    /// Full n-point twiddle table (`tw[t] = e^{-2πit/n}`).
+    tw: Vec<Complex>,
+    /// Half-size table for the pow2-tail kernel (`base/2` entries).
+    tw2: Vec<Complex>,
+}
+
+impl MixedPlan {
+    /// Decimation-in-time recursion: `out` receives the `n'`-point DFT
+    /// of the `n'` input elements at `inp[offset + i·stride]`.  The
+    /// combine step works column-by-column through a stack buffer, so
+    /// no scratch beyond the top-level input copy is needed.
+    fn rec(
+        &self,
+        n: usize,
+        inp: &[Complex],
+        offset: usize,
+        stride: usize,
+        out: &mut [Complex],
+        depth: usize,
+    ) {
+        let np = out.len();
+        if depth == self.factors.len() {
+            // pow2 tail: gather the strided input, radix-2 in place.
+            for (i, o) in out.iter_mut().enumerate() {
+                *o = inp[offset + i * stride];
+            }
+            if np > 1 {
+                pow2_fft(out, &self.tw2, false);
+            }
+            return;
+        }
+        let r = self.factors[depth];
+        let m = np / r;
+        for j in 0..r {
+            let sub = &mut out[j * m..(j + 1) * m];
+            self.rec(n, inp, offset + j * stride, stride * r, sub, depth + 1);
+        }
+        // Combine: u_j = sub_j[k1]·ω_{n'}^{j·k1}, then an r-point DFT
+        // over the u's lands all r outputs of column k1 — which occupy
+        // exactly the slots the u's were read from, so the combine is
+        // in place per column.
+        let tstride = n / np;
+        let mut u = [Complex::ZERO; MAX_GENERIC_RADIX];
+        for k1 in 0..m {
+            u[0] = out[k1];
+            for j in 1..r {
+                u[j] = out[j * m + k1].mul(self.tw[j * k1 * tstride]);
+            }
+            match r {
+                3 => {
+                    let t = u[1].add(u[2]);
+                    let d = u[1].sub(u[2]);
+                    // -i·(√3/2)·d
+                    let isd = Complex::new(SQRT3_2 * d.im, -SQRT3_2 * d.re);
+                    let half = u[0].sub(t.scale(0.5));
+                    out[k1] = u[0].add(t);
+                    out[m + k1] = half.add(isd);
+                    out[2 * m + k1] = half.sub(isd);
+                }
+                5 => {
+                    let t1 = u[1].add(u[4]);
+                    let t2 = u[2].add(u[3]);
+                    let t3 = u[1].sub(u[4]);
+                    let t4 = u[2].sub(u[3]);
+                    let a1 = u[0].add(t1.scale(C72)).add(t2.scale(C144));
+                    let a2 = u[0].add(t1.scale(C144)).add(t2.scale(C72));
+                    let b1 = t3.scale(S72).add(t4.scale(S144));
+                    let b2 = t3.scale(S144).sub(t4.scale(S72));
+                    let ib1 = Complex::new(b1.im, -b1.re); // -i·b1
+                    let ib2 = Complex::new(b2.im, -b2.re); // -i·b2
+                    out[k1] = u[0].add(t1).add(t2);
+                    out[m + k1] = a1.add(ib1);
+                    out[2 * m + k1] = a2.add(ib2);
+                    out[3 * m + k1] = a2.sub(ib2);
+                    out[4 * m + k1] = a1.sub(ib1);
+                }
+                _ => {
+                    // Generic small-prime DFT: u_j already carries
+                    // ω^{j·k1}, the remaining factor is ω^{j·c·m}.
+                    let mut res = [Complex::ZERO; MAX_GENERIC_RADIX];
+                    for (c, slot) in res.iter_mut().enumerate().take(r) {
+                        let mut acc = u[0];
+                        for (j, uj) in u.iter().enumerate().take(r).skip(1) {
+                            acc = acc.add(uj.mul(self.tw[((j * c * m) % np) * tstride]));
+                        }
+                        *slot = acc;
+                    }
+                    for (c, v) in res.iter().enumerate().take(r) {
+                        out[c * m + k1] = *v;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Chirp-z (Bluestein) through a pow2 convolution: exact DFT at sizes
+/// whose factorization the mixed engine does not handle (big primes).
+#[derive(Debug)]
+struct BluesteinPlan {
+    /// pow2 convolution length `≥ 2n - 1`.
+    m: usize,
+    /// `chirp[j] = e^{-iπ j²/n}`.
+    chirp: Vec<Complex>,
+    /// m-point spectrum of the (symmetric) conjugate-chirp sequence.
+    bspec: Vec<Complex>,
+    /// The inner pow2 plan of size `m`.
+    inner: Box<FftPlan>,
+}
+
+impl BluesteinPlan {
+    fn new(n: usize) -> BluesteinPlan {
+        let m = (2 * n - 1).next_power_of_two();
+        let chirp: Vec<Complex> = (0..n)
+            .map(|j| {
+                // j² mod 2n keeps the angle small (e^{-iπj²/n} has
+                // period 2n in j²) — u128 so j² cannot overflow.
+                let q = ((j as u128 * j as u128) % (2 * n as u128)) as f64;
+                let ang = -std::f64::consts::PI * q / n as f64;
                 Complex::new(ang.cos(), ang.sin())
             })
             .collect();
-        self.capacity_for = n;
+        let inner = Box::new(FftPlan::new(m));
+        let mut bbuf = vec![Complex::ZERO; m];
+        bbuf[0] = chirp[0].conj();
+        for j in 1..n {
+            let b = chirp[j].conj();
+            bbuf[j] = b;
+            bbuf[m - j] = b;
+        }
+        inner.fft(&mut bbuf);
+        BluesteinPlan { m, chirp, bspec: bbuf, inner }
+    }
+
+    fn run(&self, buf: &mut [Complex]) {
+        let n = buf.len();
+        let mut y = vec![Complex::ZERO; self.m];
+        for (j, (yj, &xj)) in y.iter_mut().zip(buf.iter()).enumerate().take(n) {
+            *yj = xj.mul(self.chirp[j]);
+        }
+        self.inner.fft(&mut y);
+        for (v, b) in y.iter_mut().zip(self.bspec.iter()) {
+            *v = v.mul(*b);
+        }
+        self.inner.ifft(&mut y);
+        for (k, (out, &zk)) in buf.iter_mut().zip(y.iter()).enumerate().take(n) {
+            *out = zk.mul(self.chirp[k]);
+        }
     }
 }
 
-thread_local! {
-    static TWIDDLES: std::cell::RefCell<TwiddleCache> =
-        std::cell::RefCell::new(TwiddleCache { fwd: Vec::new(), capacity_for: 0 });
+#[derive(Debug)]
+enum PlanKind {
+    /// n ≤ 1.
+    Trivial,
+    /// Iterative radix-2 with a half-size twiddle table.
+    Pow2 { tw: Vec<Complex> },
+    Mixed(MixedPlan),
+    Bluestein(BluesteinPlan),
 }
 
-/// Real-input FFT: returns the n/2+1 non-redundant bins.
+/// An immutable transform plan for one size: twiddle/chirp tables plus
+/// the strategy choice.  Share freely across threads (no interior
+/// mutability); [`FftPlan::shared`] memoises one per size per process.
+#[derive(Debug)]
+pub struct FftPlan {
+    n: usize,
+    kind: PlanKind,
+}
+
+thread_local! {
+    /// Input copy for the mixed-radix recursion (its DIT gather reads
+    /// the original input while writing the caller's buffer in place).
+    static MIXED_INPUT: std::cell::RefCell<Vec<Complex>> =
+        const { std::cell::RefCell::new(Vec::new()) };
+}
+
+impl FftPlan {
+    pub fn new(n: usize) -> FftPlan {
+        let kind = if n <= 1 {
+            PlanKind::Trivial
+        } else if n.is_power_of_two() {
+            PlanKind::Pow2 { tw: twiddle_table(n, n / 2) }
+        } else {
+            match factorize(n) {
+                (Some(factors), base) => PlanKind::Mixed(MixedPlan {
+                    factors,
+                    tw: twiddle_table(n, n),
+                    tw2: twiddle_table(base, (base / 2).max(1)),
+                }),
+                (None, _) => PlanKind::Bluestein(BluesteinPlan::new(n)),
+            }
+        };
+        FftPlan { n, kind }
+    }
+
+    /// The memoised per-process plan for size `n`.  A thread-local
+    /// front cache makes the steady-state lookup lock-free (the
+    /// sharded SKI gram path resolves plans per row — it must never
+    /// serialize workers on a process mutex); the process-wide map
+    /// behind it deduplicates plan construction across threads, and
+    /// plans are built **outside** its lock so a first-touch Bluestein
+    /// build cannot stall every other size's lookup.
+    pub fn shared(n: usize) -> Arc<FftPlan> {
+        thread_local! {
+            static LOCAL: std::cell::RefCell<HashMap<usize, Arc<FftPlan>>> =
+                std::cell::RefCell::new(HashMap::new());
+        }
+        LOCAL.with(|l| {
+            if let Some(p) = l.borrow().get(&n) {
+                return Arc::clone(p);
+            }
+            let p = FftPlan::shared_global(n);
+            l.borrow_mut().insert(n, Arc::clone(&p));
+            p
+        })
+    }
+
+    fn shared_global(n: usize) -> Arc<FftPlan> {
+        static CACHE: OnceLock<Mutex<HashMap<usize, Arc<FftPlan>>>> = OnceLock::new();
+        let cache = CACHE.get_or_init(|| Mutex::new(HashMap::new()));
+        if let Some(p) = cache.lock().unwrap().get(&n) {
+            return Arc::clone(p);
+        }
+        // Miss: build with no lock held (two racing threads may both
+        // build; the map keeps the first, the loser's copy is dropped).
+        let built = Arc::new(FftPlan::new(n));
+        let mut g = cache.lock().unwrap();
+        Arc::clone(g.entry(n).or_insert(built))
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Which engine this size runs on: `trivial|pow2|mixed|bluestein`.
+    pub fn strategy(&self) -> &'static str {
+        match &self.kind {
+            PlanKind::Trivial => "trivial",
+            PlanKind::Pow2 { .. } => "pow2",
+            PlanKind::Mixed(_) => "mixed",
+            PlanKind::Bluestein(_) => "bluestein",
+        }
+    }
+
+    /// In-place forward DFT (sign -1: `X[k] = Σ x[t] e^{-2πikt/n}`).
+    pub fn fft(&self, buf: &mut [Complex]) {
+        assert_eq!(buf.len(), self.n, "plan is for n={}, buffer has {}", self.n, buf.len());
+        match &self.kind {
+            PlanKind::Trivial => {}
+            PlanKind::Pow2 { tw } => pow2_fft(buf, tw, false),
+            PlanKind::Mixed(mp) => MIXED_INPUT.with(|cell| {
+                let mut inp = cell.borrow_mut();
+                inp.clear();
+                inp.extend_from_slice(buf);
+                mp.rec(self.n, &inp, 0, 1, buf, 0);
+            }),
+            PlanKind::Bluestein(bp) => bp.run(buf),
+        }
+    }
+
+    /// In-place inverse DFT, including the 1/n normalisation.
+    pub fn ifft(&self, buf: &mut [Complex]) {
+        assert_eq!(buf.len(), self.n, "plan is for n={}, buffer has {}", self.n, buf.len());
+        let scale = 1.0 / self.n as f64;
+        match &self.kind {
+            PlanKind::Trivial => {}
+            PlanKind::Pow2 { tw } => {
+                // Conjugated-twiddle butterflies: the pre-existing
+                // inverse, numerically unchanged on pow2 sizes.
+                pow2_fft(buf, tw, true);
+                for v in buf.iter_mut() {
+                    *v = v.scale(scale);
+                }
+            }
+            _ => {
+                // ifft(x) = conj(fft(conj(x)))/n for the other engines.
+                for v in buf.iter_mut() {
+                    *v = v.conj();
+                }
+                self.fft(buf);
+                for v in buf.iter_mut() {
+                    *v = v.conj().scale(scale);
+                }
+            }
+        }
+    }
+}
+
+/// In-place forward FFT of any length (plan-cached).
+pub fn fft(buf: &mut [Complex]) {
+    if buf.len() <= 1 {
+        return;
+    }
+    FftPlan::shared(buf.len()).fft(buf);
+}
+
+/// In-place inverse FFT of any length, including the 1/n normalisation.
+pub fn ifft(buf: &mut [Complex]) {
+    if buf.len() <= 1 {
+        return;
+    }
+    FftPlan::shared(buf.len()).ifft(buf);
+}
+
+/// Real-input FFT: returns the n/2+1 non-redundant bins (any n ≥ 1).
 pub fn rfft(x: &[f32]) -> Vec<Complex> {
     let n = x.len();
-    assert!(
-        n.is_power_of_two(),
-        "rfft size {n} is not a power of two — pad the signal to {} first",
-        n.next_power_of_two()
-    );
     let mut buf: Vec<Complex> =
         x.iter().map(|&v| Complex::new(v as f64, 0.0)).collect();
     fft(&mut buf);
@@ -164,17 +550,13 @@ pub fn rfft(x: &[f32]) -> Vec<Complex> {
 }
 
 /// Inverse of `rfft`: reconstructs the length-n real signal from the
-/// n/2+1 spectrum bins (Hermitian symmetry implied).
+/// n/2+1 spectrum bins (Hermitian symmetry implied; any n ≥ 1).
 pub fn irfft(spec: &[Complex], n: usize) -> Vec<f32> {
-    assert!(
-        n.is_power_of_two(),
-        "irfft size {n} is not a power of two — pad the signal to {} first",
-        n.next_power_of_two()
-    );
+    assert!(n >= 1, "irfft needs n >= 1");
     assert_eq!(spec.len(), n / 2 + 1, "irfft: spectrum/size mismatch");
     let mut buf = vec![Complex::ZERO; n];
     buf[..spec.len()].copy_from_slice(spec);
-    for k in 1..n / 2 {
+    for k in 1..n.div_ceil(2) {
         buf[n - k] = spec[k].conj();
     }
     ifft(&mut buf);
@@ -200,27 +582,97 @@ mod tests {
             .collect()
     }
 
-    #[test]
-    fn matches_naive_dft() {
-        let mut rng = crate::util::rng::Rng::new(10);
-        for &n in &[2usize, 4, 8, 16, 64] {
-            let x: Vec<Complex> = (0..n)
-                .map(|_| Complex::new(rng.normal() as f64, rng.normal() as f64))
-                .collect();
-            let mut got = x.clone();
-            fft(&mut got);
-            let want = dft_naive(&x);
-            for (g, w) in got.iter().zip(want.iter()) {
-                assert!((g.re - w.re).abs() < 1e-6 * (n as f64), "{g:?} vs {w:?}");
-                assert!((g.im - w.im).abs() < 1e-6 * (n as f64));
-            }
+    fn assert_matches_naive(n: usize, tol: f64) {
+        let mut rng = crate::util::rng::Rng::new(10 + n as u64);
+        let x: Vec<Complex> = (0..n)
+            .map(|_| Complex::new(rng.normal() as f64, rng.normal() as f64))
+            .collect();
+        let mut got = x.clone();
+        fft(&mut got);
+        let want = dft_naive(&x);
+        let plan = FftPlan::shared(n);
+        for (i, (g, w)) in got.iter().zip(want.iter()).enumerate() {
+            assert!(
+                (g.re - w.re).abs() < tol * (n as f64),
+                "n={n} ({}) bin {i}: {g:?} vs {w:?}",
+                plan.strategy()
+            );
+            assert!((g.im - w.im).abs() < tol * (n as f64), "n={n} bin {i}");
         }
     }
 
     #[test]
-    fn prop_fft_roundtrip() {
-        check("fft roundtrip", |rng| {
-            let n = 1 << size(rng, 1, 12);
+    fn matches_naive_dft_pow2() {
+        for n in [2usize, 4, 8, 16, 64] {
+            assert_matches_naive(n, 1e-6);
+        }
+    }
+
+    #[test]
+    fn matches_naive_dft_awkward_sizes() {
+        // The satellite contract: mixed-radix and Bluestein pinned
+        // against the naive DFT at the acceptance sizes (96 = 2⁵·3,
+        // 360 = 2³·3²·5, 769 prime, 1000 = 2³·5³) plus small odds,
+        // generic-radix primes, and prime powers.
+        for n in [3usize, 5, 6, 7, 9, 11, 12, 13, 15, 45, 49, 77, 96, 100, 143, 169, 360, 769, 1000]
+        {
+            assert_matches_naive(n, 1e-6);
+        }
+    }
+
+    #[test]
+    fn strategy_selection() {
+        assert_eq!(FftPlan::new(1).strategy(), "trivial");
+        assert_eq!(FftPlan::new(64).strategy(), "pow2");
+        assert_eq!(FftPlan::new(96).strategy(), "mixed");
+        assert_eq!(FftPlan::new(1000).strategy(), "mixed");
+        assert_eq!(FftPlan::new(91).strategy(), "mixed"); // 7·13 generic radices
+        assert_eq!(FftPlan::new(769).strategy(), "bluestein");
+        assert_eq!(FftPlan::new(34).strategy(), "bluestein"); // 2·17
+    }
+
+    #[test]
+    fn plan_cache_memoises() {
+        let a = FftPlan::shared(360);
+        let b = FftPlan::shared(360);
+        assert!(Arc::ptr_eq(&a, &b), "same size must share one plan");
+        assert_eq!(a.n(), 360);
+    }
+
+    #[test]
+    fn good_conv_size_prefers_cheap_smooth_lengths() {
+        // ≥ the bound, ≤ the next power of two, and cheaper (or equal)
+        // by the work model.
+        for min in [1usize, 2, 7, 100, 191, 719, 1537, 1999, 4095] {
+            let m = good_conv_size(min);
+            assert!(m >= min, "good_conv_size({min}) = {m} below bound");
+            assert!(m <= min.next_power_of_two());
+            assert!(fft_work_units(m) <= fft_work_units(min.next_power_of_two()));
+        }
+        // Pinned picks (also verified by the python reference model):
+        // 192 = 2⁶·3 beats 256, 768 = 2⁸·3 beats 1024, 1600 = 2⁶·5²
+        // beats 2048; just under a power of two, the pow2 size wins.
+        assert_eq!(good_conv_size(191), 192);
+        assert_eq!(good_conv_size(719), 768);
+        assert_eq!(good_conv_size(1537), 1600);
+        assert_eq!(good_conv_size(1999), 2048);
+        assert_eq!(good_conv_size(128), 128);
+    }
+
+    #[test]
+    fn radix_constants_are_trig_exact() {
+        let pi = std::f64::consts::PI;
+        assert!((SQRT3_2 - (3.0f64).sqrt() / 2.0).abs() < 1e-15);
+        assert!((C72 - (2.0 * pi / 5.0).cos()).abs() < 1e-15);
+        assert!((C144 - (4.0 * pi / 5.0).cos()).abs() < 1e-15);
+        assert!((S72 - (2.0 * pi / 5.0).sin()).abs() < 1e-15);
+        assert!((S144 - (4.0 * pi / 5.0).sin()).abs() < 1e-15);
+    }
+
+    #[test]
+    fn prop_fft_roundtrip_any_length() {
+        check("fft roundtrip (any n)", |rng| {
+            let n = size(rng, 1, 3000);
             let x: Vec<Complex> = (0..n)
                 .map(|_| Complex::new(rng.normal() as f64, rng.normal() as f64))
                 .collect();
@@ -228,16 +680,16 @@ mod tests {
             fft(&mut buf);
             ifft(&mut buf);
             for (a, b) in x.iter().zip(buf.iter()) {
-                assert!((a.re - b.re).abs() < 1e-8, "{a:?} vs {b:?}");
+                assert!((a.re - b.re).abs() < 1e-8, "n={n}: {a:?} vs {b:?}");
                 assert!((a.im - b.im).abs() < 1e-8);
             }
         });
     }
 
     #[test]
-    fn prop_rfft_roundtrip() {
-        check("rfft roundtrip", |rng| {
-            let n = 1 << size(rng, 1, 12);
+    fn prop_rfft_roundtrip_any_length() {
+        check("rfft roundtrip (any n)", |rng| {
+            let n = size(rng, 1, 3000);
             let x = vecf(rng, n);
             let back = irfft(&rfft(&x), n);
             assert_close(&x, &back, 1e-5, "rfft/irfft");
@@ -247,45 +699,28 @@ mod tests {
     #[test]
     fn parseval() {
         let mut rng = crate::util::rng::Rng::new(3);
-        let n = 256;
-        let x = rng.normals(n);
-        let time: f64 = x.iter().map(|&v| (v as f64).powi(2)).sum();
-        let mut buf: Vec<Complex> =
-            x.iter().map(|&v| Complex::new(v as f64, 0.0)).collect();
-        fft(&mut buf);
-        let freq: f64 = buf.iter().map(|c| c.abs().powi(2)).sum::<f64>() / n as f64;
-        assert!((time - freq).abs() < 1e-6 * time, "{time} vs {freq}");
-    }
-
-    #[test]
-    fn impulse_is_flat() {
-        let mut x = vec![0.0f32; 16];
-        x[0] = 1.0;
-        let spec = rfft(&x);
-        for c in spec {
-            assert!((c.re - 1.0).abs() < 1e-9 && c.im.abs() < 1e-9);
+        for n in [256usize, 360, 769] {
+            let x = rng.normals(n);
+            let time: f64 = x.iter().map(|&v| (v as f64).powi(2)).sum();
+            let mut buf: Vec<Complex> =
+                x.iter().map(|&v| Complex::new(v as f64, 0.0)).collect();
+            fft(&mut buf);
+            let freq: f64 = buf.iter().map(|c| c.abs().powi(2)).sum::<f64>() / n as f64;
+            assert!((time - freq).abs() < 1e-6 * time, "n={n}: {time} vs {freq}");
         }
     }
 
     #[test]
-    #[should_panic]
-    fn rejects_non_power_of_two() {
-        let mut buf = vec![Complex::ZERO; 12];
-        fft(&mut buf);
-    }
-
-    #[test]
-    #[should_panic(expected = "rfft size 12 is not a power of two")]
-    fn rfft_rejects_non_power_of_two_cleanly() {
-        // The guard must fire at the rfft entry with the offending
-        // size, not surface as garbage output or an index panic.
-        let _ = rfft(&[0.0f32; 12]);
-    }
-
-    #[test]
-    #[should_panic(expected = "irfft size 12 is not a power of two")]
-    fn irfft_rejects_non_power_of_two_cleanly() {
-        let _ = irfft(&[Complex::ZERO; 7], 12);
+    fn impulse_is_flat() {
+        for n in [16usize, 15, 31] {
+            let mut x = vec![0.0f32; n];
+            x[0] = 1.0;
+            let spec = rfft(&x);
+            assert_eq!(spec.len(), n / 2 + 1);
+            for c in spec {
+                assert!((c.re - 1.0).abs() < 1e-9 && c.im.abs() < 1e-9, "n={n}");
+            }
+        }
     }
 
     #[test]

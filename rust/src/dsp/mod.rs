@@ -1,12 +1,15 @@
 //! Signal-processing substrate: complex FFT, real FFT, Hilbert transform.
 //!
-//! A from-scratch iterative radix-2 Cooley–Tukey FFT (no external
-//! crates are resolvable offline).  This powers the pure-Rust Toeplitz
-//! oracle (`crate::toeplitz`), the decay-analysis example (paper Figs
-//! 4–6) and the property tests that cross-check the AOT'd HLO numerics.
+//! A from-scratch planned FFT engine (no external crates are
+//! resolvable offline): iterative radix-2 for powers of two, factored
+//! mixed-radix Cooley–Tukey for smooth composites, Bluestein for big
+//! primes — any length `n ≥ 1`, behind a per-process plan cache
+//! ([`FftPlan`]).  This powers the pure-Rust Toeplitz oracle
+//! (`crate::toeplitz`), the decay-analysis example (paper Figs 4–6)
+//! and the property tests that cross-check the AOT'd HLO numerics.
 
 mod fft;
 mod hilbert;
 
-pub use fft::{fft, ifft, irfft, rfft, Complex};
+pub use fft::{fft, fft_work_units, good_conv_size, ifft, irfft, rfft, Complex, FftPlan};
 pub use hilbert::{analytic_window, causal_spectrum, hilbert_of_real};

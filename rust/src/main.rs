@@ -206,6 +206,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         n: cfg.n,
         max_wait: std::time::Duration::from_millis(args.u64_or("max-wait-ms", 2)),
         queue_depth: args.usize_or("queue-depth", 64),
+        // The AOT artifact's batch shape is baked in — no buckets.
+        buckets: Vec::new(),
     };
     println!(
         "serving {} (batch {}, n {}) with {clients} clients × {} requests",
@@ -227,27 +229,32 @@ fn cmd_serve(args: &Args) -> Result<()> {
 }
 
 /// Artifact-free serving: client rows are interpreted as f32 signals
-/// and answered by one [`ToeplitzOp`](ski_tnn::toeplitz::ToeplitzOp)
-/// backend — requested explicitly or chosen by the cost-model
-/// dispatcher — with the same queueing/latency report as model serving.
+/// and answered by [`ToeplitzOp`](ski_tnn::toeplitz::ToeplitzOp)
+/// backends — requested explicitly or chosen by the cost-model
+/// dispatcher — with the same queueing/latency report as model
+/// serving.  Any `--n` works (the spectral plans pick their own smooth
+/// transform lengths), and `--buckets 64,256` (or run-config JSON)
+/// turns on length-bucketed batching: mixed-length request streams
+/// batch within buckets, each with a right-sized per-width operator.
 fn cmd_serve_substrate(args: &Args, backend: &str) -> Result<()> {
     use ski_tnn::runtime::{resolve_threads, ThreadPool};
-    use ski_tnn::server::serve_toeplitz_on;
+    use ski_tnn::server::{serve_toeplitz_factory, serve_toeplitz_on};
     use ski_tnn::toeplitz::{
         build_op, gaussian_kernel, BackendKind, Dispatch, DispatchQuery, ToeplitzKernel,
         ToeplitzOp,
     };
 
     let n = args.usize_or("n", 256);
-    anyhow::ensure!(n.is_power_of_two(), "--n must be a power of two for the spectral backends");
     anyhow::ensure!(n >= 16, "--n must be at least 16, got {n}");
     let requests = args.usize_or("requests", 200);
     let clients = args.usize_or("clients", 4).max(1);
     let r = args.usize_or("rank", (n / 16).max(2));
     let w = args.usize_or("band", 9);
-    // Thread count via RunConfig so `"threads"` in a --config-file is
-    // honoured here exactly as in `generate` (CLI flag still wins).
-    let threads = resolve_threads(RunConfig::from_args(args)?.threads);
+    // Thread count and buckets via RunConfig so `"threads"`/`"buckets"`
+    // in a --config-file are honoured here exactly as in `generate`
+    // (CLI flags still win).
+    let rc = RunConfig::from_args(args)?;
+    let threads = resolve_threads(rc.threads);
     let requested = BackendKind::parse(backend)
         .ok_or_else(|| anyhow::anyhow!("unknown backend {backend:?} (auto|dense|fft|ski|freq)"))?;
     let server_cfg = ServerConfig {
@@ -255,42 +262,82 @@ fn cmd_serve_substrate(args: &Args, backend: &str) -> Result<()> {
         n,
         max_wait: std::time::Duration::from_millis(args.u64_or("max-wait-ms", 2)),
         queue_depth: args.usize_or("queue-depth", 64),
+        buckets: rc.buckets.clone(),
     };
     let dispatch = Dispatch::default();
-    let query = DispatchQuery { n, r, w, causal: false, batch: server_cfg.max_batch, threads };
-    // `plan` decides backend AND whether sharding pays at this shape;
-    // for a forced backend the same model still gates the sharding
-    // (tiny shapes run serially instead of paying shard overhead).
-    let (kind, parallelize) = match requested {
-        BackendKind::Auto => dispatch.plan(&query),
-        k => {
-            let q = DispatchQuery { causal: k == BackendKind::Freq, ..query };
-            (k, dispatch.should_shard(k, &q))
+    let max_batch = server_cfg.max_batch;
+    // Per-width backend choice: `plan` decides backend AND whether
+    // sharding pays at that shape; for a forced backend the same model
+    // still gates the sharding (tiny shapes run serially instead of
+    // paying shard overhead).
+    // SKI rank scales with the bucket width (same r/n ratio at every
+    // width) — one definition shared by the dispatch query and the
+    // operator build so the two can never diverge.
+    let rank_for = move |width: usize| (width * r / n.max(1)).max(2);
+    let plan_for = move |width: usize| -> (BackendKind, bool) {
+        let query = DispatchQuery {
+            n: width,
+            r: rank_for(width),
+            w,
+            causal: false,
+            batch: max_batch,
+            threads,
+        };
+        match requested {
+            BackendKind::Auto => dispatch.plan(&query),
+            k => {
+                let q = DispatchQuery { causal: k == BackendKind::Freq, ..query };
+                (k, dispatch.should_shard(k, &q))
+            }
         }
     };
-    let kernel = ToeplitzKernel::from_fn(n, |lag| gaussian_kernel(lag as f64, n as f64 / 8.0));
-    let kernel = if kind == BackendKind::Freq { kernel.causal() } else { kernel };
-    let op: std::sync::Arc<dyn ToeplitzOp> = std::sync::Arc::from(build_op(&kernel, kind, r, w));
+    let make_op = move |width: usize| -> std::sync::Arc<dyn ToeplitzOp> {
+        let (kind, _) = plan_for(width);
+        let kernel =
+            ToeplitzKernel::from_fn(width, |lag| gaussian_kernel(lag as f64, width as f64 / 8.0));
+        let kernel = if kind == BackendKind::Freq { kernel.causal() } else { kernel };
+        std::sync::Arc::from(build_op(&kernel, kind, rank_for(width), w))
+    };
+    let widths = server_cfg.bucket_widths();
+    let (kind, parallelize) = plan_for(n);
     let pool_threads = if parallelize { threads } else { 1 };
-    println!(
-        "serving substrate backend {} (requested {requested:?} → dispatched), n={n}, \
-         ~{:.0} flops/apply, batch {} sharded over {pool_threads} threads",
-        op.name(),
-        op.flops_estimate(),
-        server_cfg.max_batch
-    );
-    let max_batch = server_cfg.max_batch;
     let pool = std::sync::Arc::new(ThreadPool::new(pool_threads));
     let batcher = Batcher::new(server_cfg);
-    run_synthetic_load(
-        batcher,
-        serve_toeplitz_on(op, pool),
-        clients,
-        (requests / clients).max(1),
-        n,
-        args.u64_or("seed", 0),
-        max_batch,
-    )
+    let seed = args.u64_or("seed", 0);
+    let per_client = (requests / clients).max(1);
+    if widths.len() > 1 {
+        println!(
+            "serving substrate backend {} (requested {requested:?}), n={n}, length buckets \
+             {widths:?}, batch {max_batch} sharded over {pool_threads} threads",
+            kind.name()
+        );
+        run_synthetic_load(
+            batcher,
+            serve_toeplitz_factory(make_op, pool),
+            clients,
+            per_client,
+            n,
+            seed,
+            max_batch,
+        )
+    } else {
+        let op = make_op(n);
+        println!(
+            "serving substrate backend {} (requested {requested:?} → dispatched), n={n}, \
+             ~{:.0} flops/apply, batch {max_batch} sharded over {pool_threads} threads",
+            op.name(),
+            op.flops_estimate()
+        );
+        run_synthetic_load(
+            batcher,
+            serve_toeplitz_on(op, pool),
+            clients,
+            per_client,
+            n,
+            seed,
+            max_batch,
+        )
+    }
 }
 
 /// Offline perf gate: compare emitted `BENCH_*.json` medians against
@@ -336,7 +383,7 @@ fn cmd_generate(args: &Args) -> Result<()> {
         ..DecodeModelConfig::default()
     };
     let dispatched = Dispatch::default().select(&DispatchQuery {
-        n: cfg.n.next_power_of_two(),
+        n: cfg.n,
         r: 0,
         w: 0,
         causal: true,

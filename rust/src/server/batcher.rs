@@ -3,8 +3,21 @@
 //! Policy: block for the first request, then keep admitting until
 //! either the model batch is full or `max_wait` has elapsed since the
 //! first admit — the standard latency/throughput knob.  Short rows are
-//! padded with PAD to the model context; surplus capacity is padded
-//! with zero rows and the corresponding logits discarded.
+//! padded with PAD; surplus capacity is padded with zero rows and the
+//! corresponding logits discarded.
+//!
+//! **Length buckets**: with `ServerConfig::buckets` set, a gathered
+//! batch is partitioned by row length into per-bucket sub-batches —
+//! each request pads only to the smallest bucket ≥ its length instead
+//! of the full model context, so mixed-length traffic stops paying
+//! max-length compute for every short row.  Empty `buckets` keeps the
+//! single fixed-width behaviour (the AOT model path, whose artifact
+//! batch shape is baked in).
+//!
+//! **Hardening**: an executor failure answers the affected requests
+//! with error responses and the serve loop keeps going — a malformed
+//! batch can no longer abort the batcher (`BatcherStats::exec_errors`
+//! counts the casualties).
 
 use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
 use std::sync::Arc;
@@ -27,6 +40,10 @@ pub struct ServerConfig {
     pub max_wait: Duration,
     /// Bounded queue depth — overflow is backpressure, not OOM.
     pub queue_depth: usize,
+    /// Length buckets (row widths) for mixed-length serving; empty =
+    /// one fixed width `n`.  Normalised at startup: sorted, deduped,
+    /// clamped to `n`, with `n` always the top bucket.
+    pub buckets: Vec<usize>,
 }
 
 impl Default for ServerConfig {
@@ -36,8 +53,37 @@ impl Default for ServerConfig {
             n: 256,
             max_wait: Duration::from_millis(2),
             queue_depth: 64,
+            buckets: Vec::new(),
         }
     }
+}
+
+impl ServerConfig {
+    /// The effective bucket widths, ascending, ending at `n` (a single
+    /// `[n]` when bucketing is off).
+    pub fn bucket_widths(&self) -> Vec<usize> {
+        let mut ws: Vec<usize> =
+            self.buckets.iter().copied().filter(|&w| w >= 1 && w < self.n).collect();
+        ws.sort_unstable();
+        ws.dedup();
+        ws.push(self.n);
+        ws
+    }
+
+    /// The width a row of `len` ids executes at: the smallest bucket
+    /// that fits it, else the top bucket (the row is truncated there,
+    /// exactly like the fixed-width path truncates to `n`).
+    pub fn bucket_for(&self, len: usize) -> usize {
+        let ws = self.bucket_widths();
+        ws[bucket_index(&ws, len)]
+    }
+}
+
+/// Index of the smallest bucket fitting `len` in precomputed
+/// (ascending, non-empty) widths, else the last — the one bucket rule,
+/// shared by [`ServerConfig::bucket_for`] and the run-loop partition.
+fn bucket_index(widths: &[usize], len: usize) -> usize {
+    widths.iter().position(|&w| len <= w).unwrap_or(widths.len() - 1)
 }
 
 /// One inference request: token ids in, logits out.
@@ -56,6 +102,13 @@ pub struct Response {
     pub queued: Duration,
     /// Size of the batch this request rode in (diagnostics).
     pub batch_rows: usize,
+    /// Row width this request executed at (its length bucket; `cfg.n`
+    /// when bucketing is off).
+    pub width: usize,
+    /// Set when this request's batch failed to execute: the request
+    /// errored, the batcher loop carried on.  [`ClientHandle::infer`]
+    /// surfaces it as an `Err`.
+    pub error: Option<String>,
 }
 
 /// Aggregate server-side counters.
@@ -64,6 +117,14 @@ pub struct BatcherStats {
     pub requests: usize,
     pub batches: usize,
     pub padded_rows: usize,
+    /// Total tensor rows across executions — the honest denominator
+    /// for batch fill: bucketed sub-batches size their tensors to
+    /// their own rows, so `batches * max_batch` would over-count their
+    /// capacity.
+    pub exec_rows: usize,
+    /// Requests answered with an error because their batch's executor
+    /// failed (the loop itself survives — see the module docs).
+    pub exec_errors: usize,
     pub exec_seconds: f64,
     /// Per-request time spent queued before its batch executed —
     /// recorded server-side so latency reports don't rely on ad-hoc
@@ -79,10 +140,14 @@ pub const QUEUE_SAMPLE_CAP: usize = 65536;
 
 impl BatcherStats {
     pub fn mean_batch_fill(&self, max_batch: usize) -> f64 {
-        if self.batches == 0 {
+        // Executed row capacity when recorded (always, for stats from
+        // a `run` loop); the legacy `batches * max_batch` denominator
+        // is kept for stats assembled without per-execution tracking.
+        let cap = if self.exec_rows > 0 { self.exec_rows } else { self.batches * max_batch };
+        if cap == 0 {
             return 0.0;
         }
-        self.requests as f64 / (self.batches * max_batch) as f64
+        self.requests as f64 / cap as f64
     }
 
     /// Queue-latency percentile (`p` in [0, 1]); 0.0 before traffic.
@@ -104,13 +169,19 @@ pub struct ClientHandle {
 }
 
 impl ClientHandle {
-    /// Blocking round-trip: submit and wait for the response.
+    /// Blocking round-trip: submit and wait for the response.  A
+    /// failed execution comes back as `Err` (the response's `error`
+    /// field), not a dead server.
     pub fn infer(&self, ids: Vec<i32>) -> Result<Response> {
         let (rtx, rrx) = sync_channel(1);
         self.tx
             .send(Request { ids, resp: rtx, submitted: Instant::now() })
             .map_err(|_| anyhow!("server stopped"))?;
-        rrx.recv().map_err(|_| anyhow!("server dropped request"))
+        let resp = rrx.recv().map_err(|_| anyhow!("server dropped request"))?;
+        if let Some(e) = &resp.error {
+            return Err(anyhow!("inference failed: {e}"));
+        }
+        Ok(resp)
     }
 
     /// Non-blocking submit; `Err` means the queue is full (backpressure).
@@ -168,47 +239,142 @@ impl Batcher {
 
     /// Run the serve loop with an arbitrary executor.
     ///
-    /// `exec` maps a padded `(max_batch, n)` i32 tensor to per-row
-    /// logits.  Drop the `Batcher`'s own sender first so the loop ends
-    /// when every [`ClientHandle`] is gone.
+    /// `exec` maps a padded `(max_batch, width)` i32 tensor to per-row
+    /// logits — `width` is `cfg.n` without buckets, a bucket width
+    /// with them (one executor call per bucket present in the
+    /// gathered batch).  An executor failure answers its requests with
+    /// error responses and the loop continues.  Drop the `Batcher`'s
+    /// own sender first so the loop ends when every [`ClientHandle`]
+    /// is gone.
     pub fn run<F>(mut self, mut exec: F) -> Result<BatcherStats>
     where
         F: FnMut(&HostTensor) -> Result<Vec<Vec<f32>>>,
     {
         drop(self.tx.take()); // only client handles keep the queue alive
-        let (bcap, n) = (self.cfg.max_batch, self.cfg.n);
+        let widths = self.cfg.bucket_widths();
         let mut stats = BatcherStats::default();
         while let Some(reqs) = self.gather() {
             let started = Instant::now();
-            let mut ids = vec![PAD; bcap * n];
-            for (row, req) in reqs.iter().enumerate() {
-                let take = req.ids.len().min(n);
-                ids[row * n..row * n + take].copy_from_slice(&req.ids[..take]);
+            // Partition into per-bucket sub-batches (arrival order is
+            // kept within a bucket; one bucket ⇒ one execution, so
+            // the non-bucketed path is exactly the old single batch).
+            let mut groups: Vec<(usize, Vec<Request>)> =
+                widths.iter().map(|&w| (w, Vec::new())).collect();
+            for req in reqs {
+                let slot = bucket_index(&widths, req.ids.len());
+                groups[slot].1.push(req);
             }
-            let batch = HostTensor::i32(vec![bcap, n], ids);
-            let t0 = Instant::now();
-            let rows = exec(&batch)?;
-            stats.exec_seconds += t0.elapsed().as_secs_f64();
-            if rows.len() < reqs.len() {
-                return Err(anyhow!("executor returned {} rows for {} requests",
-                    rows.len(), reqs.len()));
-            }
-            let nreq = reqs.len();
-            stats.requests += nreq;
-            stats.batches += 1;
-            stats.padded_rows += bcap - nreq;
-            for (i, (req, logits)) in reqs.into_iter().zip(rows).enumerate() {
-                let queued = started.duration_since(req.submitted);
-                crate::util::bench::push_sample(
-                    &mut stats.queue_seconds,
-                    QUEUE_SAMPLE_CAP,
-                    stats.requests - nreq + i,
-                    queued.as_secs_f64(),
-                );
-                let _ = req.resp.send(Response { logits, queued, batch_rows: bcap });
+            for (width, group) in groups {
+                if !group.is_empty() {
+                    self.execute(width, group, started, &mut exec, &mut stats);
+                }
             }
         }
         Ok(stats)
+    }
+
+    /// Execute one same-width sub-batch and answer its requests
+    /// (logits on success, error responses on executor failure).
+    fn execute<F>(
+        &self,
+        width: usize,
+        reqs: Vec<Request>,
+        started: Instant,
+        exec: &mut F,
+        stats: &mut BatcherStats,
+    ) where
+        F: FnMut(&HostTensor) -> Result<Vec<Vec<f32>>>,
+    {
+        // Tensor row count: the fixed-width path pads to the model
+        // batch (the AOT artifact's shape is baked in); bucketed
+        // sub-batches carry exactly their own rows — the substrate
+        // executors take any row count, and padding every bucket to
+        // max_batch would multiply the dead-row compute by the number
+        // of buckets present.
+        let nreq = reqs.len();
+        let rows_cap = if self.cfg.buckets.is_empty() { self.cfg.max_batch } else { nreq };
+        let mut ids = vec![PAD; rows_cap * width];
+        for (row, req) in reqs.iter().enumerate() {
+            let take = req.ids.len().min(width);
+            ids[row * width..row * width + take].copy_from_slice(&req.ids[..take]);
+        }
+        let batch = HostTensor::i32(vec![rows_cap, width], ids);
+        let t0 = Instant::now();
+        let result = exec(&batch);
+        stats.exec_seconds += t0.elapsed().as_secs_f64();
+        stats.requests += nreq;
+        stats.batches += 1;
+        stats.exec_rows += rows_cap;
+        stats.padded_rows += rows_cap - nreq;
+        let rows = match result {
+            Ok(rows) if rows.len() >= nreq => rows,
+            Ok(rows) => {
+                // Contract violation — fail this batch's requests, not
+                // the server.
+                self.fail_batch(
+                    reqs,
+                    &format!("executor returned {} rows for {nreq} requests", rows.len()),
+                    started,
+                    width,
+                    rows_cap,
+                    stats,
+                );
+                return;
+            }
+            Err(e) => {
+                self.fail_batch(reqs, &format!("{e:#}"), started, width, rows_cap, stats);
+                return;
+            }
+        };
+        for (i, (req, logits)) in reqs.into_iter().zip(rows).enumerate() {
+            let queued = started.duration_since(req.submitted);
+            crate::util::bench::push_sample(
+                &mut stats.queue_seconds,
+                QUEUE_SAMPLE_CAP,
+                stats.requests - nreq + i,
+                queued.as_secs_f64(),
+            );
+            let _ = req.resp.send(Response {
+                logits,
+                queued,
+                batch_rows: rows_cap,
+                width,
+                error: None,
+            });
+        }
+    }
+
+    /// Answer every request of a failed batch with an error response.
+    fn fail_batch(
+        &self,
+        reqs: Vec<Request>,
+        msg: &str,
+        started: Instant,
+        width: usize,
+        rows_cap: usize,
+        stats: &mut BatcherStats,
+    ) {
+        let nreq = reqs.len();
+        stats.exec_errors += nreq;
+        for (i, req) in reqs.into_iter().enumerate() {
+            let queued = started.duration_since(req.submitted);
+            // Errored requests stay in the latency percentiles — they
+            // are often the longest-queued ones when the executor is
+            // struggling, and dropping them would flatter the report.
+            crate::util::bench::push_sample(
+                &mut stats.queue_seconds,
+                QUEUE_SAMPLE_CAP,
+                stats.requests - nreq + i,
+                queued.as_secs_f64(),
+            );
+            let _ = req.resp.send(Response {
+                logits: Vec::new(),
+                queued,
+                batch_rows: rows_cap,
+                width,
+                error: Some(msg.to_string()),
+            });
+        }
     }
 }
 
@@ -254,6 +420,24 @@ pub fn serve_toeplitz_on(
     move |batch: &HostTensor| exec_toeplitz(op.as_ref(), &pool, batch)
 }
 
+/// Length-bucketed substrate serving: `make(width)` builds (once, then
+/// cached) the operator for each bucket width the batcher executes at,
+/// so one serve loop answers mixed-length traffic with a right-sized
+/// plan per bucket instead of padding everything to a single `n`.
+pub fn serve_toeplitz_factory(
+    make: impl Fn(usize) -> Arc<dyn ToeplitzOp>,
+    pool: Arc<ThreadPool>,
+) -> impl FnMut(&HostTensor) -> Result<Vec<Vec<f32>>> {
+    let mut ops: std::collections::HashMap<usize, Arc<dyn ToeplitzOp>> =
+        std::collections::HashMap::new();
+    move |batch: &HostTensor| {
+        let shape = batch.shape().to_vec();
+        ensure!(shape.len() == 2, "expected a (batch, width) ids tensor, got {shape:?}");
+        let op = Arc::clone(ops.entry(shape[1]).or_insert_with(|| make(shape[1])));
+        exec_toeplitz(op.as_ref(), &pool, batch)
+    }
+}
+
 fn exec_toeplitz(
     op: &dyn ToeplitzOp,
     pool: &ThreadPool,
@@ -284,7 +468,13 @@ mod tests {
     }
 
     fn small_cfg() -> ServerConfig {
-        ServerConfig { max_batch: 4, n: 8, max_wait: Duration::from_millis(5), queue_depth: 16 }
+        ServerConfig {
+            max_batch: 4,
+            n: 8,
+            max_wait: Duration::from_millis(5),
+            queue_depth: 16,
+            buckets: Vec::new(),
+        }
     }
 
     #[test]
@@ -414,6 +604,145 @@ mod tests {
         let mut exec = serve_toeplitz(op);
         let batch = HostTensor::i32(vec![1, 8], vec![0; 8]);
         assert!(exec(&batch).is_err(), "width mismatch must surface as an executor error");
+    }
+
+    #[test]
+    fn bucket_widths_normalised() {
+        let cfg = ServerConfig { n: 64, buckets: vec![32, 8, 8, 0, 200, 32], ..small_cfg() };
+        assert_eq!(cfg.bucket_widths(), vec![8, 32, 64]);
+        assert_eq!(cfg.bucket_for(1), 8);
+        assert_eq!(cfg.bucket_for(8), 8);
+        assert_eq!(cfg.bucket_for(9), 32);
+        assert_eq!(cfg.bucket_for(64), 64);
+        assert_eq!(cfg.bucket_for(500), 64, "overlong rows truncate at the top bucket");
+        // No buckets: single fixed width.
+        assert_eq!(small_cfg().bucket_widths(), vec![8]);
+    }
+
+    #[test]
+    fn bucketed_batches_execute_at_bucket_widths() {
+        // Mixed-length traffic must run as per-bucket sub-batches:
+        // short rows at the small width, long rows at the top width,
+        // every response still correct.
+        use std::sync::Mutex;
+        let b = Batcher::new(ServerConfig {
+            max_batch: 8,
+            n: 32,
+            max_wait: Duration::from_millis(20),
+            queue_depth: 32,
+            buckets: vec![8],
+        });
+        let h = b.handle();
+        let t = std::thread::spawn(move || {
+            // Interleave short (≤ 8) and long rows, all submitted up
+            // front so they coalesce into one gather.
+            let pending: Vec<_> = (0..8)
+                .map(|i| {
+                    let len = if i % 2 == 0 { 3 + i / 2 } else { 20 + i };
+                    h.try_submit(vec![1; len]).unwrap()
+                })
+                .collect();
+            pending.into_iter().map(|rx| rx.recv().unwrap()).collect::<Vec<Response>>()
+        });
+        let shapes = std::sync::Arc::new(Mutex::new(Vec::new()));
+        let s2 = shapes.clone();
+        let stats = b
+            .run(move |batch| {
+                s2.lock().unwrap().push((batch.shape()[0], batch.shape()[1]));
+                echo(batch)
+            })
+            .unwrap();
+        let resps = t.join().unwrap();
+        assert_eq!(stats.requests, 8);
+        let seen = shapes.lock().unwrap().clone();
+        let widths: Vec<usize> = seen.iter().map(|&(_, w)| w).collect();
+        assert!(
+            widths.contains(&8) && widths.contains(&32),
+            "both buckets must execute: {seen:?}"
+        );
+        assert!(widths.iter().all(|w| *w == 8 || *w == 32), "{seen:?}");
+        // Bucketed sub-batches carry exactly their own rows — no
+        // max_batch padding multiplied per bucket.
+        assert_eq!(seen.iter().map(|&(rows, _)| rows).sum::<usize>(), 8, "{seen:?}");
+        assert_eq!(stats.padded_rows, 0, "bucketed batches must not pad rows");
+        for (i, r) in resps.iter().enumerate() {
+            let len = if i % 2 == 0 { 3 + i / 2 } else { 20 + i };
+            assert_eq!(r.logits, vec![len as f32], "row {i} sum");
+            assert_eq!(r.width, if len <= 8 { 8 } else { 32 });
+            assert!(r.error.is_none());
+        }
+    }
+
+    #[test]
+    fn executor_failure_errors_requests_not_the_loop() {
+        // Satellite hardening: one failing execution answers its own
+        // requests with errors; the loop keeps serving.
+        let b = Batcher::new(ServerConfig { max_batch: 1, ..small_cfg() });
+        let h = b.handle();
+        let t = std::thread::spawn(move || {
+            let bad = h.infer(vec![99]); // magic id → executor fails
+            let good = h.infer(vec![1, 2]);
+            (bad, good)
+        });
+        let stats = b
+            .run(|batch| {
+                let ids = batch.as_i32()?;
+                if ids.contains(&99) {
+                    return Err(anyhow!("synthetic executor failure"));
+                }
+                echo(batch)
+            })
+            .unwrap();
+        let (bad, good) = t.join().unwrap();
+        let err = bad.expect_err("failed batch must surface as request error");
+        assert!(err.to_string().contains("synthetic executor failure"), "{err}");
+        assert_eq!(good.unwrap().logits, vec![3.0], "server must keep serving after a failure");
+        assert_eq!(stats.exec_errors, 1);
+        assert_eq!(stats.requests, 2);
+    }
+
+    #[test]
+    fn bucketed_toeplitz_factory_serves_per_width_ops() {
+        use crate::toeplitz::{gaussian_kernel, ToeplitzKernel};
+        let widths = [8usize, 24];
+        let b = Batcher::new(ServerConfig {
+            max_batch: 4,
+            n: 24,
+            max_wait: Duration::from_millis(10),
+            queue_depth: 16,
+            buckets: vec![8],
+        });
+        let h = b.handle();
+        let t = std::thread::spawn(move || {
+            let short: Vec<i32> = (0..6).collect();
+            let long: Vec<i32> = (0..20).collect();
+            let rs = h.infer(short.clone()).unwrap();
+            let rl = h.infer(long.clone()).unwrap();
+            (short, rs, long, rl)
+        });
+        let make = |w: usize| -> Arc<dyn ToeplitzOp> {
+            let kernel =
+                ToeplitzKernel::from_fn(w, |lag| gaussian_kernel(lag as f64, w as f64 / 4.0));
+            Arc::from(crate::toeplitz::build_op(&kernel, crate::toeplitz::BackendKind::Fft, 0, 0))
+        };
+        let pool = Arc::new(ThreadPool::new(1));
+        let stats = b.run(serve_toeplitz_factory(make, pool)).unwrap();
+        let (short, rs, long, rl) = t.join().unwrap();
+        // Oracles at each bucket width (pad the ids to the width the
+        // batcher executed at, then dense-apply the same kernel).
+        for (ids, resp, w) in [(&short, &rs, widths[0]), (&long, &rl, widths[1])] {
+            assert_eq!(resp.width, w);
+            assert_eq!(resp.logits.len(), w);
+            let mut padded = vec![PAD; w];
+            padded[..ids.len()].copy_from_slice(ids);
+            let kernel =
+                ToeplitzKernel::from_fn(w, |lag| gaussian_kernel(lag as f64, w as f64 / 4.0));
+            let want = kernel.apply_dense(&ids_to_signal(&padded));
+            for (i, (a, b)) in resp.logits.iter().zip(want.iter()).enumerate() {
+                assert!((a - b).abs() < 1e-4, "width {w} value {i}: {a} vs {b}");
+            }
+        }
+        assert_eq!(stats.requests, 2);
     }
 
     #[test]

@@ -21,7 +21,7 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Result};
 
 use super::batcher::QUEUE_SAMPLE_CAP;
-use crate::decode::{DecodeModel, Sampler, Session};
+use crate::decode::{DecodeError, DecodeModel, Sampler, Session};
 use crate::runtime::pool::{resolve_threads, ThreadPool};
 use crate::util::bench::{percentiles_of, push_sample};
 
@@ -79,6 +79,10 @@ pub struct GenResponse {
     pub tokens: Vec<i32>,
     /// Time between submit and admission to a decode slot.
     pub queued: Duration,
+    /// Set when this session failed (corrupted decode state): the
+    /// request errored, the serve process and every other live session
+    /// carried on.  [`GenClient::generate`] surfaces it as an `Err`.
+    pub error: Option<String>,
 }
 
 /// Aggregate scheduler counters.
@@ -132,13 +136,18 @@ pub struct GenClient {
 }
 
 impl GenClient {
-    /// Blocking round-trip.
+    /// Blocking round-trip.  A per-session decode failure comes back
+    /// as `Err` (the response's `error` field), not a dead server.
     pub fn generate(&self, prompt: Vec<i32>, params: GenParams) -> Result<GenResponse> {
         let (rtx, rrx) = sync_channel(1);
         self.tx
             .send(GenRequest { prompt, params, resp: rtx, submitted: Instant::now() })
             .map_err(|_| anyhow!("generation server stopped"))?;
-        rrx.recv().map_err(|_| anyhow!("generation server dropped session"))
+        let resp = rrx.recv().map_err(|_| anyhow!("generation server dropped session"))?;
+        if let Some(e) = &resp.error {
+            return Err(anyhow!("generation failed: {e}"));
+        }
+        Ok(resp)
     }
 
     /// Non-blocking submit; `Err` on a full queue (backpressure).
@@ -162,6 +171,29 @@ struct Live {
     session: Session,
     resp: SyncSender<GenResponse>,
     queued: Duration,
+    /// Set when a decode step failed: the session is retired on the
+    /// next sweep with an error response instead of tokens.
+    error: Option<String>,
+}
+
+/// One admitted-but-not-yet-prefilled request (the unit the grouped
+/// prefill shards across the pool).
+struct Admission {
+    id: u64,
+    prompt: Vec<i32>,
+    params: GenParams,
+    max_new: usize,
+    resp: SyncSender<GenResponse>,
+    queued: Duration,
+    built: Option<Result<Session, DecodeError>>,
+}
+
+/// Length bucket of a prompt: the next power of two ≥ len (capped so
+/// tiny prompts share one bucket).  Used only to ORDER admissions so
+/// the sharded prefill hands each worker prompts of similar length —
+/// per-session results are independent of the grouping.
+fn prompt_bucket(len: usize) -> usize {
+    len.max(8).next_power_of_two()
 }
 
 /// The continuous-batching scheduler.  Owns the prompt queue; `run`
@@ -185,33 +217,73 @@ impl GenScheduler {
         GenClient { tx: self.tx.clone().expect("scheduler already running") }
     }
 
-    fn admit(&mut self, req: GenRequest, model: &DecodeModel, stats: &mut GenStats) -> Live {
-        let queued = req.submitted.elapsed();
-        push_sample(
-            &mut stats.queue_seconds,
-            QUEUE_SAMPLE_CAP,
-            stats.sessions,
-            queued.as_secs_f64(),
-        );
-        stats.sessions += 1;
-        let id = self.next_id;
-        self.next_id += 1;
-        let p = req.params;
-        // The request's seed is used verbatim: identical (prompt, seed)
-        // requests reproduce identical tokens regardless of admission
-        // order.  Clients wanting decorrelated sessions pass distinct
-        // seeds (the CLI/example load drivers do).
-        let sampler = Sampler::new(p.temperature, p.top_k, p.seed);
+    /// Admit a group of requests: record queue waits, assign ids in
+    /// arrival order, then prefill every prompt **sharded across the
+    /// pool**, grouped by prompt-length bucket so each worker's shard
+    /// holds similar-length prompts (balanced shards under
+    /// mixed-length traffic).  Sessions are independent — the request
+    /// seed is used verbatim — so identical (prompt, seed) requests
+    /// reproduce identical tokens regardless of grouping or worker
+    /// count.  A request whose prefill fails (corrupted state) is
+    /// answered with an error response here; it never occupies a slot.
+    fn admit_group(
+        &mut self,
+        reqs: Vec<GenRequest>,
+        model: &DecodeModel,
+        pool: &ThreadPool,
+        stats: &mut GenStats,
+        active: &mut Vec<Live>,
+    ) {
+        let mut adms: Vec<Admission> = reqs
+            .into_iter()
+            .map(|req| {
+                let queued = req.submitted.elapsed();
+                push_sample(
+                    &mut stats.queue_seconds,
+                    QUEUE_SAMPLE_CAP,
+                    stats.sessions,
+                    queued.as_secs_f64(),
+                );
+                stats.sessions += 1;
+                let id = self.next_id;
+                self.next_id += 1;
+                let max_new = req.params.max_new.min(self.cfg.max_new_cap);
+                Admission {
+                    id,
+                    prompt: req.prompt,
+                    params: req.params,
+                    max_new,
+                    resp: req.resp,
+                    queued,
+                    built: None,
+                }
+            })
+            .collect();
+        // Stable sort: arrival order within a bucket is preserved.
+        adms.sort_by_key(|a| prompt_bucket(a.prompt.len()));
         let t0 = Instant::now();
-        let session = Session::new(
-            model,
-            id,
-            &req.prompt,
-            sampler,
-            p.max_new.min(self.cfg.max_new_cap),
-        );
+        pool.shard_mut(&mut adms, |_, shard| {
+            for a in shard.iter_mut() {
+                let p = a.params;
+                let sampler = Sampler::new(p.temperature, p.top_k, p.seed);
+                a.built = Some(Session::new(model, a.id, &a.prompt, sampler, a.max_new));
+            }
+        });
         stats.prefill_seconds += t0.elapsed().as_secs_f64();
-        Live { session, resp: req.resp, queued }
+        for a in adms {
+            match a.built.expect("prefill ran for every admission") {
+                Ok(session) => {
+                    active.push(Live { session, resp: a.resp, queued: a.queued, error: None })
+                }
+                Err(e) => {
+                    let _ = a.resp.send(GenResponse {
+                        tokens: Vec::new(),
+                        queued: a.queued,
+                        error: Some(e.to_string()),
+                    });
+                }
+            }
+        }
     }
 
     /// Run the scheduler loop.  Returns when every [`GenClient`] is
@@ -223,31 +295,35 @@ impl GenScheduler {
         let mut active: Vec<Live> = Vec::new();
         let mut disconnected = false;
         loop {
-            // Admission: block when idle, otherwise top up free slots.
+            // Admission: block when idle, otherwise top up free slots;
+            // everything gathered this round prefills as one group.
+            let mut incoming: Vec<GenRequest> = Vec::new();
             if active.is_empty() {
                 if disconnected {
                     break;
                 }
                 match self.rx.recv() {
-                    Ok(r) => {
-                        let live = self.admit(r, model, &mut stats);
-                        active.push(live);
-                    }
+                    Ok(r) => incoming.push(r),
                     Err(_) => break,
                 }
             }
-            while !disconnected && active.len() < self.cfg.max_sessions {
+            while !disconnected && active.len() + incoming.len() < self.cfg.max_sessions {
                 match self.rx.try_recv() {
-                    Ok(r) => {
-                        let live = self.admit(r, model, &mut stats);
-                        active.push(live);
-                    }
+                    Ok(r) => incoming.push(r),
                     Err(TryRecvError::Empty) => break,
                     Err(TryRecvError::Disconnected) => {
                         disconnected = true;
                         break;
                     }
                 }
+            }
+            if !incoming.is_empty() {
+                self.admit_group(incoming, model, &pool, &mut stats, &mut active);
+            }
+            if active.is_empty() {
+                // Every admission this round failed prefill (or none
+                // arrived): nothing to tick.
+                continue;
             }
             // One tick: a decode step for every live session, sharded
             // across the pool (sessions are independent — each owns
@@ -259,15 +335,7 @@ impl GenScheduler {
             stats.ticks += 1;
             stats.active_session_ticks += active.len();
             stats.tokens += stepped;
-            // Retire finished sessions — their slots free mid-stream.
-            active.retain_mut(|live| {
-                if !live.session.done() {
-                    return true;
-                }
-                let tokens = live.session.generated().to_vec();
-                let _ = live.resp.send(GenResponse { tokens, queued: live.queued });
-                false
-            });
+            retire_finished(&mut active);
         }
         Ok(stats)
     }
@@ -276,21 +344,46 @@ impl GenScheduler {
 /// One decode step for every unfinished live session, sharded across
 /// `pool` in fixed contiguous chunks.  Returns how many sessions
 /// actually stepped (a commutative sum, so the count is deterministic
-/// too).
+/// too).  A step failure (corrupted session) marks that session only;
+/// [`retire_finished`] answers its request with the error.
 fn step_sessions(pool: &ThreadPool, model: &DecodeModel, active: &mut [Live]) -> usize {
     use std::sync::atomic::{AtomicUsize, Ordering};
     let stepped = AtomicUsize::new(0);
     pool.shard_mut(active, |_, shard| {
         let mut local = 0usize;
         for live in shard.iter_mut() {
-            if !live.session.done() {
-                live.session.step(model);
-                local += 1;
+            if live.error.is_none() && !live.session.done() {
+                match live.session.step(model) {
+                    Ok(_) => local += 1,
+                    Err(e) => live.error = Some(e.to_string()),
+                }
             }
         }
         stepped.fetch_add(local, Ordering::Relaxed);
     });
     stepped.into_inner()
+}
+
+/// Retire finished and failed sessions — their slots free mid-stream.
+/// A failed session answers its own request with the error; every
+/// other live session (and the serve loop itself) is untouched.
+fn retire_finished(active: &mut Vec<Live>) {
+    active.retain_mut(|live| {
+        if let Some(e) = live.error.take() {
+            let _ = live.resp.send(GenResponse {
+                tokens: Vec::new(),
+                queued: live.queued,
+                error: Some(e),
+            });
+            return false;
+        }
+        if !live.session.done() {
+            return true;
+        }
+        let tokens = live.session.generated().to_vec();
+        let _ = live.resp.send(GenResponse { tokens, queued: live.queued, error: None });
+        false
+    });
 }
 
 #[cfg(test)]
@@ -388,9 +481,9 @@ mod tests {
         // same prompt/params ⇒ identical tokens to a direct decode.
         let model = tiny_model();
         let params = GenParams { max_new: 10, temperature: 0.0, top_k: 0, seed: 5 };
-        let mut direct = Session::new(&model, 0, &[7, 8, 9], Sampler::greedy(), 10);
+        let mut direct = Session::new(&model, 0, &[7, 8, 9], Sampler::greedy(), 10).unwrap();
         while !direct.done() {
-            direct.step(&model);
+            direct.step(&model).unwrap();
         }
         let sched = GenScheduler::new(GenConfig::default());
         let h = sched.handle();
@@ -434,6 +527,108 @@ mod tests {
         let serial = run(1);
         assert_eq!(serial, run(2), "2 workers diverged from serial");
         assert_eq!(serial, run(8), "8 workers diverged from serial");
+    }
+
+    #[test]
+    fn corrupted_session_fails_its_own_request_only() {
+        // The satellite regression: a decoder/state variant mismatch
+        // used to panic inside the tick loop and kill the whole serve
+        // process.  Now the poisoned session's request gets an error
+        // response while the healthy session generates to completion.
+        let model = tiny_model();
+        let pool = ThreadPool::new(2);
+        let (tx_bad, rx_bad) = sync_channel(1);
+        let (tx_ok, rx_ok) = sync_channel(1);
+        let mut bad = Session::new(&model, 0, &[1, 2], Sampler::greedy(), 4).unwrap();
+        bad.poison_for_test();
+        let good = Session::new(&model, 1, &[3, 4], Sampler::greedy(), 4).unwrap();
+        let mut active = vec![
+            Live { session: bad, resp: tx_bad, queued: Duration::ZERO, error: None },
+            Live { session: good, resp: tx_ok, queued: Duration::ZERO, error: None },
+        ];
+        let mut guard = 0;
+        while !active.is_empty() {
+            step_sessions(&pool, &model, &mut active);
+            retire_finished(&mut active);
+            guard += 1;
+            assert!(guard < 32, "sessions must drain");
+        }
+        let bad_resp = rx_bad.recv().unwrap();
+        assert!(bad_resp.error.is_some(), "poisoned session must error");
+        assert!(bad_resp.tokens.is_empty());
+        let ok_resp = rx_ok.recv().unwrap();
+        assert!(ok_resp.error.is_none(), "healthy session must be unaffected");
+        assert_eq!(ok_resp.tokens.len(), 4);
+    }
+
+    #[test]
+    fn scheduler_survives_corrupted_session_via_client_api() {
+        // End-to-end through GenClient: the corrupted request's client
+        // sees Err, the scheduler's run loop returns Ok (process
+        // alive), and a subsequent healthy request still serves.
+        let model = tiny_model();
+        let pool = ThreadPool::new(1);
+        let (tx_bad, rx_bad) = sync_channel::<GenResponse>(1);
+        let mut bad = Session::new(&model, 7, &[9], Sampler::greedy(), 8).unwrap();
+        bad.poison_for_test();
+        let mut active =
+            vec![Live { session: bad, resp: tx_bad, queued: Duration::ZERO, error: None }];
+        step_sessions(&pool, &model, &mut active);
+        retire_finished(&mut active);
+        assert!(active.is_empty(), "failed session must free its slot");
+        assert!(rx_bad.recv().unwrap().error.is_some());
+        // The scheduler keeps serving healthy traffic afterwards.
+        let sched = GenScheduler::new(GenConfig::default());
+        let h = sched.handle();
+        let t = std::thread::spawn(move || {
+            h.generate(vec![5, 6], GenParams { max_new: 3, ..GenParams::default() }).unwrap()
+        });
+        let stats = sched.run(&model).unwrap();
+        assert_eq!(t.join().unwrap().tokens.len(), 3);
+        assert_eq!(stats.sessions, 1);
+    }
+
+    #[test]
+    fn bucketed_prefill_preserves_per_session_determinism() {
+        // Mixed-length prompts admitted as one group: the bucketed,
+        // pool-sharded prefill must not perturb any session's tokens
+        // relative to a serial one-at-a-time scheduler.
+        let model = tiny_model();
+        let run = |threads: usize, queue_ahead: bool| -> Vec<Vec<i32>> {
+            let sched = GenScheduler::new(GenConfig {
+                max_sessions: 8,
+                queue_depth: 16,
+                max_new_cap: 64,
+                threads,
+            });
+            let h = sched.handle();
+            let t = std::thread::spawn(move || {
+                let prompts: Vec<Vec<i32>> = (0..6)
+                    .map(|i| (0..(3 + i * 7)).map(|j| ((i * 31 + j) % 256) as i32).collect())
+                    .collect();
+                let pending: Vec<_> = prompts
+                    .into_iter()
+                    .enumerate()
+                    .map(|(i, p)| {
+                        let params = GenParams {
+                            max_new: 5,
+                            temperature: 0.9,
+                            top_k: 8,
+                            seed: 100 + i as u64,
+                        };
+                        if !queue_ahead {
+                            std::thread::sleep(Duration::from_millis(1));
+                        }
+                        h.try_submit(p, params).unwrap()
+                    })
+                    .collect();
+                pending.into_iter().map(|rx| rx.recv().unwrap().tokens).collect::<Vec<_>>()
+            });
+            sched.run(&model).unwrap();
+            t.join().unwrap()
+        };
+        let serial = run(1, false);
+        assert_eq!(serial, run(4, true), "grouped parallel prefill diverged");
     }
 
     #[test]

@@ -21,8 +21,8 @@ mod batcher;
 mod generate;
 
 pub use batcher::{
-    serve_model, serve_toeplitz, serve_toeplitz_on, Batcher, BatcherStats, Request, Response,
-    ServerConfig,
+    serve_model, serve_toeplitz, serve_toeplitz_factory, serve_toeplitz_on, Batcher,
+    BatcherStats, Request, Response, ServerConfig,
 };
 pub use generate::{
     GenClient, GenConfig, GenParams, GenRequest, GenResponse, GenScheduler, GenStats,

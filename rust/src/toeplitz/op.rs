@@ -14,13 +14,18 @@
 //! | backend | operator | complexity |
 //! |---|---|---|
 //! | [`DenseOp`] | dense matvec oracle | O(n²) |
-//! | [`FftOp`] | 2n circulant embedding, cached spectrum + scratch | O(n log n) |
+//! | [`FftOp`] | circulant embedding at the cheapest smooth length ≥ 2n-1, cached spectrum + scratch | O(n log n) |
 //! | [`SparseLowRankOp`] | width-w band + asymmetric SKI `W A Wᵀ` | O(nw + n + r log r) |
 //! | [`FreqCausalOp`] | Hilbert-completed causal spectrum (§3.3.1) | O(n log n), one fewer FFT |
+//!
+//! Every backend accepts **any n ≥ 1**: the spectral paths run on the
+//! mixed-radix/Bluestein plan engine (`dsp::FftPlan`), and the cost
+//! model prices each shape's actual transform factorization instead of
+//! special-casing powers of two.
 
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
-use crate::dsp::{causal_spectrum, fft, ifft, irfft, Complex};
+use crate::dsp::{causal_spectrum, fft_work_units, good_conv_size, irfft, Complex, FftPlan};
 
 use super::{conv1d, Ski, ToeplitzKernel};
 
@@ -93,50 +98,74 @@ impl ToeplitzOp for DenseOp {
     }
 }
 
-/// An immutable circulant-multiply plan: the 2n-point kernel spectrum
-/// with **no attached scratch**, so one plan is shared lock-free by
-/// any number of workers, each supplying its own [`OpScratch`].  The
-/// decode oracle keeps one plan per channel; [`FftOp`] wraps one plan
-/// with a `Mutex` scratch for plain single-caller use.
+/// An immutable circulant-multiply plan: the kernel spectrum on an
+/// `m ≥ 2n-1` transform grid with **no attached scratch**, so one plan
+/// is shared lock-free by any number of workers, each supplying its
+/// own [`OpScratch`].  The decode oracle keeps one plan per channel;
+/// [`FftOp`] wraps one plan with a `Mutex` scratch for plain
+/// single-caller use.
+///
+/// Any `n ≥ 1` works: [`SpectralPlan::new`] picks the cheapest smooth
+/// transform length `m = good_conv_size(2n-1)` (the circulant
+/// embedding is exact for every `m ≥ 2n-1`), so awkward and prime `n`
+/// pay a nearby mixed-radix size instead of either Bluestein or the
+/// old panic.
 #[derive(Debug, Clone)]
 pub struct SpectralPlan {
     n: usize,
-    /// Full 2n-point spectrum of the circulant first column.
+    /// Transform length (`good_conv_size(2n-1)`, or exactly `2n` when
+    /// built from rFFT bins on the 2n grid).
+    m: usize,
+    /// Full m-point spectrum of the circulant first column.
     spec: Vec<Complex>,
+    /// The shared transform plan for `m` (lock-free after build).
+    plan: Arc<FftPlan>,
 }
 
 impl SpectralPlan {
     pub fn new(kernel: &ToeplitzKernel) -> SpectralPlan {
         let n = kernel.n;
-        assert!(n.is_power_of_two(), "SpectralPlan needs power-of-two n, got {n}");
-        let mut c = vec![Complex::ZERO; 2 * n];
+        assert!(n >= 1, "SpectralPlan needs n >= 1");
+        let m = good_conv_size(2 * n - 1);
+        // Circulant first column on the m grid: positive lags at the
+        // front, negative lags wrapped to the back (m ≥ 2n-1 keeps the
+        // two ranges disjoint, so the embedding stays exact).
+        let mut c = vec![Complex::ZERO; m];
         for (t, v) in c.iter_mut().enumerate().take(n) {
             v.re = kernel.at(t as i64) as f64;
         }
         for t in 1..n {
-            c[n + t].re = kernel.at(t as i64 - n as i64) as f64;
+            c[m - t].re = kernel.at(-(t as i64)) as f64;
         }
-        fft(&mut c);
-        SpectralPlan { n, spec: c }
+        let plan = FftPlan::shared(m);
+        plan.fft(&mut c);
+        SpectralPlan { n, m, spec: c, plan }
     }
 
     /// Build from the n+1 non-redundant rFFT bins of a 2n circulant
     /// column (Hermitian completion).  This is how [`FreqCausalOp`]
     /// consumes the Hilbert-completed causal spectrum directly —
-    /// no time-domain kernel materialisation, no kernel FFT.
+    /// no time-domain kernel materialisation, no kernel FFT.  The
+    /// transform length is pinned to `2n` (the grid the bins live on);
+    /// any `n ≥ 1` works.
     pub fn from_rfft_bins(n: usize, bins: &[Complex]) -> SpectralPlan {
-        assert!(n.is_power_of_two(), "SpectralPlan needs power-of-two n, got {n}");
+        assert!(n >= 1, "SpectralPlan needs n >= 1");
         assert_eq!(bins.len(), n + 1, "need n+1 rFFT bins for a 2n circulant");
         let mut spec = vec![Complex::ZERO; 2 * n];
         spec[..=n].copy_from_slice(bins);
         for k in 1..n {
             spec[2 * n - k] = bins[k].conj();
         }
-        SpectralPlan { n, spec }
+        SpectralPlan { n, m: 2 * n, spec, plan: FftPlan::shared(2 * n) }
     }
 
     pub fn n(&self) -> usize {
         self.n
+    }
+
+    /// The transform length this plan runs on (`≥ 2n - 1`).
+    pub fn transform_len(&self) -> usize {
+        self.m
     }
 
     /// One circulant apply through caller scratch — the lock-free hot
@@ -149,12 +178,12 @@ impl SpectralPlan {
         let buf = &mut scratch.cbuf;
         buf.clear();
         buf.extend(x.iter().map(|&v| Complex::new(v as f64, 0.0)));
-        buf.resize(2 * n, Complex::ZERO);
-        fft(buf);
+        buf.resize(self.m, Complex::ZERO);
+        self.plan.fft(buf);
         for (v, s) in buf.iter_mut().zip(self.spec.iter()) {
             *v = v.mul(*s);
         }
-        ifft(buf);
+        self.plan.ifft(buf);
         buf[..n].iter().map(|c| c.re as f32).collect()
     }
 }
@@ -202,8 +231,10 @@ impl ToeplitzOp for FftOp {
     }
 
     fn flops_estimate(&self) -> f64 {
-        let m = 2.0 * self.plan.n as f64;
-        2.0 * 5.0 * m * m.log2() + 6.0 * m
+        // Two transforms at the plan's actual factorization (10 flops
+        // per modeled radix-2-butterfly unit) plus the bin multiply.
+        let m = self.plan.transform_len();
+        2.0 * 10.0 * fft_work_units(m) + 6.0 * m as f64
     }
 
     fn apply(&self, x: &[f32]) -> Vec<f32> {
@@ -284,9 +315,13 @@ impl ToeplitzOp for SparseLowRankOp {
     fn flops_estimate(&self) -> f64 {
         let n = self.n as f64;
         let r = self.ski.r;
-        let a = if r.is_power_of_two() {
-            let m = 2.0 * r as f64;
-            2.0 * 5.0 * m * m.log2() + 6.0 * m
+        // The inducing-Gram multiply takes whichever path is cheaper
+        // at this rank (decided once at Ski construction) — any r, not
+        // just powers of two, prices the spectral route now.  The
+        // spectral side is `apply_fft` on the exact 2r grid: three
+        // transforms, kernel spectrum rebuilt per call.
+        let a = if self.ski.gram_fft {
+            3.0 * 10.0 * fft_work_units(2 * r) + 6.0 * (2 * r) as f64
         } else {
             2.0 * (r as f64) * (r as f64)
         };
@@ -324,7 +359,20 @@ impl FreqCausalOp {
         let spec = causal_spectrum(khat_r);
         let kt = irfft(&spec, 2 * n);
         let taps = kt[..n].to_vec();
-        FreqCausalOp { taps, fft: FftOp::from_rfft_bins(n, &spec) }
+        // Consuming the bins directly pins every apply to the exact 2n
+        // transform grid.  When that grid factorizes well (the common
+        // case) it saves the kernel FFT; when it would run Bluestein
+        // (2n with a big prime factor), one construction-time kernel
+        // FFT at the plan's own smooth length is cheaper than paying
+        // the chirp-z embedding on every request — the first n outputs
+        // are identical either way (the dropped t = n tap only ever
+        // lands past the truncation).
+        let fft = if FftPlan::shared(2 * n).strategy() == "bluestein" {
+            FftOp::new(&ToeplitzKernel::from_causal_taps(&taps))
+        } else {
+            FftOp::from_rfft_bins(n, &spec)
+        };
+        FreqCausalOp { taps, fft }
     }
 
     /// From an already-causal time kernel (the degenerate case where
@@ -454,13 +502,36 @@ impl CostModel {
         self.dense_mac_ns * (n as f64) * (n as f64)
     }
 
+    /// Spectral apply cost at the transform length a [`SpectralPlan`]
+    /// would actually pick for this `n`, priced by the real
+    /// factorization (`fft_work_units`): pow2 and smooth sizes cost
+    /// their butterfly count, a hypothetical Bluestein size its three
+    /// embedded transforms.  On powers of two this reproduces the old
+    /// `2·fft_point_ns·m·log2 m + fft_point_ns·m` exactly; just past a
+    /// power of two it no longer overcharges the padded size.
     pub fn fft_cost(&self, n: usize) -> f64 {
-        let m = 2.0 * n as f64; // circulant embedding length
-        2.0 * self.fft_point_ns * m * m.log2() + self.fft_point_ns * m
+        let m = good_conv_size(2 * n.max(1) - 1);
+        self.fft_point_ns * (4.0 * fft_work_units(m) + m as f64)
+    }
+
+    /// What `Ski::apply_sparse`'s spectral gram route actually costs:
+    /// a `ToeplitzKernel::apply_fft` on the **exact** 2r grid — three
+    /// transforms (the kernel spectrum is rebuilt per call) at that
+    /// grid's real factorization, Bluestein penalty included when 2r
+    /// has a big prime factor.  Deliberately not `fft_cost(r)`: that
+    /// prices a cached-spectrum plan at a freely-chosen smooth length,
+    /// which is not the code the gram multiply runs.
+    pub fn gram_fft_cost(&self, r: usize) -> f64 {
+        let m = 2 * r.max(1);
+        self.fft_point_ns * (6.0 * fft_work_units(m) + m as f64)
     }
 
     pub fn ski_cost(&self, n: usize, r: usize, w: usize) -> f64 {
-        let a = if r.is_power_of_two() { self.fft_cost(r) } else { self.dense_cost(r) };
+        let a = if super::ski::gram_prefers_fft(r) {
+            self.gram_fft_cost(r)
+        } else {
+            self.dense_cost(r)
+        };
         self.ski_point_ns * 4.0 * n as f64 + a + self.band_mac_ns * (n * w.max(1)) as f64
     }
 
@@ -521,13 +592,14 @@ impl Dispatch {
     /// Eligible `(kind, per-row ns, scalable fraction)` candidates.
     fn candidates(&self, q: &DispatchQuery) -> Vec<(BackendKind, f64, f64)> {
         let mut v = vec![(BackendKind::Dense, self.cost.dense_cost(q.n), self.cost.dense_par)];
-        if q.n.is_power_of_two() {
-            // Same apply cost either way; causal sites get the
-            // Hilbert-built spectrum (whose win over the biased FFT —
-            // one fewer FFT, no decay bias — is at construction, §3.3).
-            let kind = if q.causal { BackendKind::Freq } else { BackendKind::Fft };
-            v.push((kind, self.cost.fft_cost(q.n), self.cost.fft_par));
-        }
+        // The spectral paths are eligible at every n — `fft_cost`
+        // prices the plan's actual transform length/factorization, so
+        // non-pow2 shapes compete on real numbers instead of being
+        // excluded.  Causal sites get the Hilbert-built spectrum
+        // (whose win over the biased FFT — one fewer FFT, no decay
+        // bias — is at construction, §3.3).
+        let kind = if q.causal { BackendKind::Freq } else { BackendKind::Fft };
+        v.push((kind, self.cost.fft_cost(q.n), self.cost.fft_par));
         if !q.causal && q.r >= 2 {
             // Causal sites exclude SKI (Appendix B: the causal scan's
             // sequential dependency negates its speedup).
@@ -630,10 +702,12 @@ pub fn apply_causal_plan(plan: &FftOp, x: &[f32]) -> Vec<f32> {
 }
 
 /// Causal convolution of a length-`x.len()` prefix through the chosen
-/// backend (`taps[τ]` at lag τ).  Spectral backends pad to the next
-/// power of two and pay a per-call kernel FFT — callers with fixed
-/// taps should hold an [`FftOp`] and use [`apply_causal_plan`]; the
-/// dense path is bit-identical to the direct nested loop it replaced.
+/// backend (`taps[τ]` at lag τ).  Spectral backends build a native
+/// `t_len`-point plan (no power-of-two padding — the plan picks its
+/// own smooth transform length) but still pay a per-call kernel FFT —
+/// callers with fixed taps should hold an [`FftOp`] and use
+/// [`apply_causal_plan`]; the dense path is bit-identical to the
+/// direct nested loop it replaced.
 pub fn apply_causal_taps(taps: &[f32], x: &[f32], kind: BackendKind) -> Vec<f32> {
     let t_len = x.len();
     if t_len == 0 {
@@ -642,12 +716,11 @@ pub fn apply_causal_taps(taps: &[f32], x: &[f32], kind: BackendKind) -> Vec<f32>
     let kind = match kind {
         BackendKind::Auto => {
             // The two real costs here: the direct loop at t_len vs the
-            // spectral path at the padded power of two (a query through
-            // `Dispatch::select` would cost dense at the padded size
-            // too, overcharging it up to 4× just past a power of two).
+            // spectral path, both priced at the actual prefix length
+            // (the old version compared against the padded power of
+            // two, overcharging up to 4× just past one).
             let cost = CostModel::default();
-            let p = t_len.next_power_of_two();
-            if cost.dense_cost(t_len) <= cost.fft_cost(p) {
+            if cost.dense_cost(t_len) <= cost.fft_cost(t_len) {
                 BackendKind::Dense
             } else {
                 BackendKind::Freq
@@ -669,9 +742,8 @@ pub fn apply_causal_taps(taps: &[f32], x: &[f32], kind: BackendKind) -> Vec<f32>
             y
         }
         _ => {
-            let p = t_len.next_power_of_two();
             let m = taps.len().min(t_len);
-            let mut tp = vec![0.0f32; p];
+            let mut tp = vec![0.0f32; t_len];
             tp[..m].copy_from_slice(&taps[..m]);
             let plan = FftOp::new(&ToeplitzKernel::from_causal_taps(&tp));
             apply_causal_plan(&plan, x)
@@ -691,13 +763,36 @@ mod tests {
 
     #[test]
     fn prop_fft_op_matches_dense() {
-        check("FftOp == dense oracle", |rng| {
-            let n = 1 << size(rng, 1, 9);
+        // Any n, not just powers of two: the plan picks its own smooth
+        // transform length ≥ 2n-1.
+        check("FftOp == dense oracle (any n)", |rng| {
+            let n = size(rng, 2, 600);
             let k = random_kernel(rng, n);
             let op = FftOp::new(&k);
             let x = vecf(rng, n);
             assert_close(&op.apply(&x), &k.apply_dense(&x), 1e-4, "fft op");
         });
+    }
+
+    #[test]
+    fn backends_agree_with_dense_oracle_at_awkward_sizes() {
+        // The acceptance sizes: smooth composites (96, 360, 1000) and
+        // a prime (769).  fft/freq are exact to FFT roundoff; SKI at
+        // full rank reassembles the kernel (inducing grid on every
+        // lag) so it is held to the same tolerance.
+        for n in [96usize, 360, 769, 1000] {
+            let mut rng = crate::util::rng::Rng::new(n as u64);
+            let k = random_kernel(&mut rng, n);
+            let x = vecf(&mut rng, n);
+            let want = k.apply_dense(&x);
+            let fft_op = FftOp::new(&k);
+            assert_close(&fft_op.apply(&x), &want, 1e-4, "fft at awkward n");
+            let causal = k.clone().causal();
+            let freq = FreqCausalOp::from_causal_kernel(&causal);
+            assert_close(&freq.apply(&x), &causal.apply_dense(&x), 1e-4, "freq at awkward n");
+            let ski = SparseLowRankOp::from_kernel(&k, n, 3);
+            assert_close(&ski.apply(&x), &want, 1e-3, "full-rank ski at awkward n");
+        }
     }
 
     #[test]
@@ -830,6 +925,22 @@ mod tests {
     }
 
     #[test]
+    fn freq_from_response_avoids_bluestein_at_prime_n() {
+        // 2n = 1538 = 2·769 would pin every apply to a chirp-z
+        // transform; from_response must fall back to one kernel FFT on
+        // a smooth grid instead, with identical outputs.
+        let mut rng = crate::util::rng::Rng::new(769);
+        let n = 769usize;
+        let khat = vecf(&mut rng, n + 1);
+        let op = FreqCausalOp::from_response(&khat);
+        assert_ne!(op.fft.plan().transform_len(), 2 * n, "must not serve on the Bluestein grid");
+        let k = op.kernel();
+        assert!(k.is_causal());
+        let x = vecf(&mut rng, n);
+        assert_close(&op.apply(&x), &k.apply_dense(&x), 1e-4, "freq at prime n");
+    }
+
+    #[test]
     fn freq_causal_from_kernel_roundtrips() {
         let mut rng = crate::util::rng::Rng::new(5);
         let taps = vecf(&mut rng, 64);
@@ -856,8 +967,13 @@ mod tests {
         assert_eq!(d.select(&q1(4096, 256, 9, false)), BackendKind::Ski);
         // Causal: SKI ineligible, Hilbert spectrum preferred.
         assert_eq!(d.select(&q1(4096, 256, 9, true)), BackendKind::Freq);
-        // Non-power-of-two: spectral paths ineligible, SKI still fine.
+        // Non-power-of-two with a usable rank: SKI still cheapest.
         assert_eq!(d.select(&q1(3000, 64, 9, false)), BackendKind::Ski);
+        // Non-power-of-two with no rank: the spectral path is now
+        // eligible (priced at its smooth transform length) and beats
+        // dense — the shape that used to fall back to O(n²).
+        assert_eq!(d.select(&q1(3000, 0, 0, false)), BackendKind::Fft);
+        assert_eq!(d.select(&q1(1000, 0, 0, true)), BackendKind::Freq);
     }
 
     #[test]

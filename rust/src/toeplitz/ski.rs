@@ -18,6 +18,19 @@
 
 use super::ToeplitzKernel;
 
+/// Whether the r-point inducing-Gram multiply is cheaper through the
+/// spectral path than the dense r² matvec, per the calibrated cost
+/// model — priced at what the spectral route *actually runs*
+/// (`apply_fft` on the exact 2r grid, three transforms per call,
+/// Bluestein penalty included for awkward 2r), so a rank whose grid
+/// factorizes badly correctly stays dense.  Shared by
+/// [`Ski::apply_sparse`], `SparseLowRankOp::flops_estimate`, and
+/// `CostModel::ski_cost` so the three always agree on the route.
+pub(crate) fn gram_prefers_fft(r: usize) -> bool {
+    let cost = super::op::CostModel::default();
+    cost.gram_fft_cost(r) < cost.dense_cost(r)
+}
+
 /// `r` uniform inducing points covering `[0, n-1]`.
 ///
 /// The hat-function interpolation needs at least two inducing points
@@ -50,6 +63,10 @@ pub struct Ski {
     pub r: usize,
     /// Inducing Gram taps: `A_ij = taps[i-j+r-1]` (lag -(r-1)..=(r-1)).
     pub a: ToeplitzKernel,
+    /// Whether the Gram multiply takes the spectral route — decided
+    /// once here (see [`gram_prefers_fft`]); `apply_sparse` is the
+    /// per-row hot path and must not re-derive it.
+    pub gram_fft: bool,
 }
 
 impl Ski {
@@ -59,7 +76,7 @@ impl Ski {
         assert!(r >= 2, "SKI needs at least 2 inducing points, got r={r}");
         let h = (n as f64 - 1.0) / (r as f64 - 1.0);
         let a = ToeplitzKernel::from_fn(r, |lag| k(lag as f64 * h));
-        Ski { n, r, a }
+        Ski { n, r, a, gram_fft: gram_prefers_fft(r) }
     }
 
     /// `u = Wᵀ x` — sparse scatter, O(n).
@@ -83,11 +100,13 @@ impl Ski {
             .collect()
     }
 
-    /// O(n + r log r) apply (FFT for A when r is a power of two,
-    /// dense r² matvec otherwise — r is tiny either way).
+    /// O(n + r log r) apply.  The inducing-Gram multiply takes the
+    /// spectral path whenever the cost model prices it below the dense
+    /// r² matvec — any r, not just powers of two (the old non-pow2
+    /// dense fallback cost up to r²/r·log r extra at awkward ranks).
     pub fn apply_sparse(&self, x: &[f32]) -> Vec<f32> {
         let u = self.wt_apply(x);
-        let v = if self.r.is_power_of_two() {
+        let v = if self.gram_fft {
             self.a.apply_fft(&u)
         } else {
             self.a.apply_dense(&u)
@@ -225,7 +244,7 @@ mod tests {
             // accumulation magnitudes O(1) rather than letting the
             // generic N(0,1)·√(n/r) growth eat the tolerance.
             let lags: Vec<f32> = vecf(rng, 2 * r - 1).iter().map(|v| 0.5 * v).collect();
-            let ski = Ski { n, r, a: ToeplitzKernel { n: r, lags } };
+            let ski = Ski { n, r, a: ToeplitzKernel { n: r, lags }, gram_fft: gram_prefers_fft(r) };
             let x: Vec<f32> = vecf(rng, n).iter().map(|v| 0.25 * v).collect();
             assert_close(&ski.apply_sparse(&x), &ski.apply_dense(&x), 1e-5, "pinned paths");
         });
@@ -281,7 +300,8 @@ mod tests {
         check("ski sparse == dense path", |rng| {
             let n = size(rng, 8, 256);
             let r = size(rng, 3, 24).min(n);
-            let ski = Ski { n, r, a: ToeplitzKernel { n: r, lags: vecf(rng, 2 * r - 1) } };
+            let a = ToeplitzKernel { n: r, lags: vecf(rng, 2 * r - 1) };
+            let ski = Ski { n, r, a, gram_fft: gram_prefers_fft(r) };
             let x = vecf(rng, n);
             assert_close(&ski.apply_sparse(&x), &ski.apply_dense(&x), 1e-4, "paths");
         });
@@ -333,7 +353,8 @@ mod tests {
         check("causal ski scan == lower-tri(W A Wt)", |rng| {
             let n = size(rng, 4, 96);
             let r = size(rng, 3, 12).min(n);
-            let ski = Ski { n, r, a: ToeplitzKernel { n: r, lags: vecf(rng, 2 * r - 1) } };
+            let a = ToeplitzKernel { n: r, lags: vecf(rng, 2 * r - 1) };
+            let ski = Ski { n, r, a, gram_fft: gram_prefers_fft(r) };
             let x = vecf(rng, n);
             let got = causal_ski_scan(&ski, &x);
             // reference: dense W A Wᵀ, lower-triangular masked

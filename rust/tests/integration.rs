@@ -164,6 +164,7 @@ fn logits_entry_serves_through_batcher() {
         n: cfg.n,
         max_wait: std::time::Duration::from_millis(1),
         queue_depth: 16,
+        buckets: Vec::new(),
     });
     let handle = batcher.handle();
     let vocab = cfg.vocab;
@@ -265,7 +266,10 @@ fn backend_stack_agrees_with_dense_oracle() {
         }
     };
 
-    for &n in &[64usize, 256, 1024] {
+    // Power-of-two sizes plus the length-agnostic acceptance sizes:
+    // smooth composites (96 = 2⁵·3, 360 = 2³·3²·5, 1000 = 2³·5³) and a
+    // prime (769) — every backend must serve them natively now.
+    for &n in &[64usize, 96, 256, 360, 769, 1000, 1024] {
         let mut rng = Rng::new(n as u64);
         let kernel = ToeplitzKernel { n, lags: rng.normals(2 * n - 1) };
         let x = rng.normals(n);
@@ -322,6 +326,7 @@ fn batcher_serves_dispatched_backend_end_to_end() {
         n,
         max_wait: Duration::from_millis(2),
         queue_depth: 16,
+        buckets: Vec::new(),
     };
     let batcher = Batcher::new(cfg);
     let handle = batcher.handle();
@@ -346,4 +351,77 @@ fn batcher_serves_dispatched_backend_end_to_end() {
     }
     assert_eq!(stats.requests, 15);
     assert!(stats.batches <= 15);
+}
+
+#[test]
+fn bucketed_serving_handles_mixed_length_traffic_at_awkward_widths() {
+    // Acceptance: a mixed-length request stream through the
+    // length-bucketed batcher, with non-power-of-two bucket widths, a
+    // per-width operator factory, and the pooled executor — every
+    // response matches the dense oracle at its bucket width and
+    // nothing panics.
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    use ski_tnn::data::PAD;
+    use ski_tnn::runtime::ThreadPool;
+    use ski_tnn::server::{serve_toeplitz_factory, Batcher, ServerConfig};
+    use ski_tnn::toeplitz::{build_op, gaussian_kernel, BackendKind, ToeplitzKernel, ToeplitzOp};
+
+    let make_kernel =
+        |w: usize| ToeplitzKernel::from_fn(w, |lag| gaussian_kernel(lag as f64, w as f64 / 8.0));
+    let cfg = ServerConfig {
+        max_batch: 4,
+        n: 360,
+        max_wait: Duration::from_millis(2),
+        queue_depth: 64,
+        buckets: vec![24, 96],
+    };
+    let batcher = Batcher::new(cfg);
+    let handle = batcher.handle();
+    let workers: Vec<_> = (0..3)
+        .map(|c| {
+            let h = handle.clone();
+            let make_kernel = make_kernel;
+            std::thread::spawn(move || {
+                for i in 0..6usize {
+                    // Lengths spread across all three buckets.
+                    let len = [5, 20, 60, 90, 200, 360][(c + i) % 6] + c;
+                    let ids: Vec<i32> =
+                        (0..len as i32).map(|v| (v * 7 + c as i32) % 256).collect();
+                    let resp = h.infer(ids.clone()).expect("bucketed infer");
+                    let width = resp.width;
+                    assert!(
+                        [24, 96, 360].contains(&width),
+                        "row of len {len} served at unexpected width {width}"
+                    );
+                    assert!(width >= len.min(360), "bucket must fit the row (len {len})");
+                    // Oracle at the served width.
+                    let mut padded = vec![PAD; width];
+                    let take = ids.len().min(width);
+                    padded[..take].copy_from_slice(&ids[..take]);
+                    let signal: Vec<f32> = padded
+                        .iter()
+                        .map(|&t| if t == PAD { 0.0 } else { t as f32 / 128.0 - 1.0 })
+                        .collect();
+                    let want = make_kernel(width).apply_dense(&signal);
+                    assert_eq!(resp.logits.len(), width);
+                    for (j, (a, b)) in resp.logits.iter().zip(want.iter()).enumerate() {
+                        assert!((a - b).abs() < 1e-3, "len {len} width {width} at {j}: {a} vs {b}");
+                    }
+                }
+            })
+        })
+        .collect();
+    drop(handle);
+    let make = move |w: usize| -> Arc<dyn ToeplitzOp> {
+        Arc::from(build_op(&make_kernel(w), BackendKind::Fft, 0, 0))
+    };
+    let pool = Arc::new(ThreadPool::new(2));
+    let stats = batcher.run(serve_toeplitz_factory(make, pool)).unwrap();
+    for w in workers {
+        w.join().unwrap();
+    }
+    assert_eq!(stats.requests, 18);
+    assert_eq!(stats.exec_errors, 0, "no request may fail on the bucketed path");
 }

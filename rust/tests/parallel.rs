@@ -53,6 +53,40 @@ fn apply_batch_bitwise_identical_across_worker_counts() {
 }
 
 #[test]
+fn apply_batch_bitwise_identical_at_non_pow2_sizes() {
+    // The length-agnostic satellite: sharded determinism must hold at
+    // awkward sizes too — smooth composite (360) and prime (769),
+    // where the spectral backends run mixed-radix/Bluestein plans on
+    // per-worker scratch arenas.
+    for n in [360usize, 769] {
+        let mut rng = Rng::new(n as u64);
+        let kernel = ToeplitzKernel::from_fn(n, |lag| gaussian_kernel(lag as f64, n as f64 / 8.0));
+        let causal = kernel.clone().causal();
+        // 11 rows: not divisible by 2 or 8, so shards are uneven.
+        let xs = rows(&mut rng, 11, n);
+        for (kind, k) in [
+            (BackendKind::Dense, &kernel),
+            (BackendKind::Fft, &kernel),
+            (BackendKind::Ski, &kernel),
+            (BackendKind::Freq, &causal),
+        ] {
+            let op = build_op(k, kind, (n / 16).max(2), 9);
+            let reference = op.apply_batch(&xs);
+            for threads in [1usize, 2, 8] {
+                let pool = ThreadPool::new(threads);
+                let got = apply_batch_sharded(op.as_ref(), &xs, &pool);
+                assert_eq!(
+                    got,
+                    reference,
+                    "{} backend at n={n} must be bitwise identical at {threads} threads",
+                    op.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
 fn pool_shutdown_is_clean_under_panic_in_task() {
     let pool = ThreadPool::new(4);
     // One shard panics; the scope must still drain the whole batch,
@@ -148,6 +182,7 @@ fn serve_toeplitz_pooled_end_to_end_matches_dense_oracle() {
         n,
         max_wait: Duration::from_millis(2),
         queue_depth: 32,
+        buckets: Vec::new(),
     };
     let batcher = Batcher::new(cfg);
     let handle = batcher.handle();
