@@ -58,6 +58,16 @@ pub struct RunConfig {
     /// everything to `n`.  Empty = single fixed width.  JSON array or
     /// CLI `--buckets 64,256,1024`.
     pub buckets: Vec<usize>,
+    /// Enable the telemetry layer (`telemetry` module): span
+    /// histograms on the request path, FFT plan-cache counters, the
+    /// dispatch audit ring.  Equivalent to env `SKI_TNN_TELEMETRY=1`
+    /// (either one turns it on).  JSON `"telemetry": true` or CLI
+    /// `--telemetry`.
+    pub telemetry: bool,
+    /// Emit periodic JSON telemetry snapshots to this path
+    /// (atomic-rename writes; a final snapshot lands on shutdown).
+    /// Setting it implies `telemetry = true`.  CLI `--stats-json`.
+    pub stats_json: Option<PathBuf>,
 }
 
 impl Default for RunConfig {
@@ -78,6 +88,8 @@ impl Default for RunConfig {
             backend: None,
             threads: 0,
             buckets: Vec::new(),
+            telemetry: false,
+            stats_json: None,
         }
     }
 }
@@ -117,6 +129,12 @@ impl RunConfig {
                         .iter()
                         .map(|v| v.as_usize().context("buckets entry"))
                         .collect::<Result<Vec<usize>>>()?;
+                }
+                "telemetry" => {
+                    self.telemetry = val.as_bool().context("telemetry")?;
+                }
+                "stats_json" => {
+                    self.stats_json = Some(val.as_str().context("stats_json")?.into());
                 }
                 other => return Err(anyhow!("unknown run-config key {other:?}")),
             }
@@ -174,6 +192,16 @@ impl RunConfig {
             if let Some(ws) = parsed {
                 self.buckets = ws;
             }
+        }
+        // `--telemetry` works bare or with an explicit value (the CLI
+        // parser treats `--telemetry 1` as an option).
+        if a.flag("telemetry") {
+            self.telemetry = true;
+        } else if let Some(v) = a.get("telemetry") {
+            self.telemetry = matches!(v.trim().to_ascii_lowercase().as_str(), "1" | "true" | "on");
+        }
+        if let Some(v) = a.get("stats-json") {
+            self.stats_json = Some(v.into());
         }
     }
 
@@ -249,6 +277,32 @@ mod tests {
         let args = Args::parse_from(["--buckets".to_string(), "32,128,512".to_string()], false);
         rc.apply_args(&args);
         assert_eq!(rc.buckets, vec![32, 128, 512], "CLI overrides JSON");
+    }
+
+    #[test]
+    fn telemetry_and_stats_json_parsed() {
+        let mut rc = RunConfig::default();
+        assert!(!rc.telemetry && rc.stats_json.is_none(), "telemetry defaults off");
+        let j = json::parse(r#"{"telemetry": true, "stats_json": "run_stats.json"}"#).unwrap();
+        rc.apply_json(&j).unwrap();
+        assert!(rc.telemetry);
+        assert_eq!(rc.stats_json.as_deref(), Some(std::path::Path::new("run_stats.json")));
+        let bad = json::parse(r#"{"telemetry": "yes"}"#).unwrap();
+        assert!(rc.apply_json(&bad).is_err(), "non-bool telemetry must be rejected");
+
+        let mut rc = RunConfig::default();
+        let args = Args::parse_from(
+            ["--telemetry".to_string(), "--stats-json".to_string(), "s.json".to_string()],
+            false,
+        );
+        rc.apply_args(&args);
+        assert!(rc.telemetry, "bare --telemetry flag enables");
+        assert_eq!(rc.stats_json.as_deref(), Some(std::path::Path::new("s.json")));
+
+        let mut rc = RunConfig::default();
+        let args = Args::parse_from(["--telemetry".to_string(), "off".to_string()], false);
+        rc.apply_args(&args);
+        assert!(!rc.telemetry, "--telemetry off stays disabled");
     }
 
     #[test]

@@ -4,6 +4,12 @@
 //! log keeps everything in memory (runs here are ≤ thousands of steps)
 //! and serializes on demand so examples and benches can emit both the
 //! human table and machine-readable files for EXPERIMENTS.md.
+//!
+//! When telemetry is enabled each logged value is also mirrored into
+//! the global [`crate::telemetry`] registry as a `{kind}.{key}` gauge
+//! (latest value wins), so live stats snapshots carry training/eval
+//! progress alongside the request-path series.  The log itself stays
+//! the report of record.
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -32,6 +38,14 @@ impl MetricsLog {
     }
 
     pub fn log(&mut self, step: usize, kind: &'static str, values: &[(&str, f64)]) {
+        if crate::telemetry::enabled() {
+            let reg = crate::telemetry::global();
+            for (k, v) in values {
+                reg.gauge(&format!("{kind}.{k}")).set(*v);
+            }
+            reg.gauge(&format!("{kind}.step")).set(step as f64);
+            reg.counter("metrics.records").incr();
+        }
         self.records.push(Record {
             step,
             kind,
@@ -144,6 +158,20 @@ mod tests {
         assert_eq!(lines.next(), Some("step,kind,loss,acc"));
         assert_eq!(lines.next(), Some("0,train,1.5,"));
         assert_eq!(lines.next(), Some("1,eval,,0.5"));
+    }
+
+    #[test]
+    fn log_mirrors_into_telemetry_registry_when_enabled() {
+        let _g = crate::telemetry::test_guard();
+        let was = crate::telemetry::enabled();
+        crate::telemetry::set_enabled(true);
+        let mut m = MetricsLog::new();
+        m.log(7, "train", &[("loss", 1.25)]);
+        let reg = crate::telemetry::global();
+        assert_eq!(reg.gauge("train.loss").get(), 1.25);
+        assert_eq!(reg.gauge("train.step").get(), 7.0);
+        assert!(reg.counter("metrics.records").get() >= 1);
+        crate::telemetry::set_enabled(was);
     }
 
     #[test]

@@ -11,6 +11,11 @@ use super::model::{DecodeModel, StreamState};
 use super::{DecodeError, Sampler};
 use crate::data::PAD;
 
+/// Tokens generated across all sessions (telemetry; the per-run
+/// `GenStats.tokens` stays the report of record).
+static DECODE_TOKENS: crate::telemetry::LazyCounter =
+    crate::telemetry::LazyCounter::new("decode.tokens");
+
 /// One live generation.
 pub struct Session {
     pub id: u64,
@@ -76,6 +81,7 @@ impl Session {
         assert!(!self.done(), "session {} already finished", self.id);
         let tok = self.sampler.sample(&self.next_logits) as i32;
         self.tokens.push(tok);
+        DECODE_TOKENS.incr();
         if !self.done() {
             // The finished session's state never feeds a sample again;
             // skipping the last model step saves one decode per

@@ -21,9 +21,35 @@
 //! 5-smooth transform length ≥ a bound — how the Toeplitz circulant
 //! plans avoid ever paying Bluestein — and [`fft_work_units`] is the
 //! cost-model hook that prices an actual factorization.
+//!
+//! ## Plan-cache memory model
+//!
+//! Both plan caches are **unbounded by design**: entries are keyed by
+//! transform size, a process only ever touches the handful of sizes
+//! its configs use, and each plan's twiddle/chirp tables are O(n).
+//! The thread-local front caches add one `Arc` per (thread, size) on
+//! top of the process map, so worst-case residency is
+//! `sizes × plan + sizes × threads × Arc` — growth tracks distinct
+//! sizes, never request volume.  With telemetry enabled
+//! (`SKI_TNN_TELEMETRY=1`) the caches account for themselves in every
+//! stats snapshot: `fft.plan_cache.local_hit` / `.hit` / `.miss`
+//! counters (front-cache hit, process-map hit, plan build) and the
+//! `fft.plan_cache.size` gauge (process-map entries), making any
+//! unexpected growth observable instead of silent.
 
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::telemetry::{LazyCounter, LazyGauge};
+
+/// Thread-local front-cache hits (no lock taken).
+static PLAN_CACHE_LOCAL_HIT: LazyCounter = LazyCounter::new("fft.plan_cache.local_hit");
+/// Process-map hits (lock taken, no plan built).
+static PLAN_CACHE_HIT: LazyCounter = LazyCounter::new("fft.plan_cache.hit");
+/// Misses — each one builds a plan (O(n) table memory retained).
+static PLAN_CACHE_MISS: LazyCounter = LazyCounter::new("fft.plan_cache.miss");
+/// Distinct sizes resident in the process-wide map.
+static PLAN_CACHE_SIZE: LazyGauge = LazyGauge::new("fft.plan_cache.size");
 
 /// Minimal complex number (no external num crate offline).
 #[derive(Debug, Clone, Copy, PartialEq, Default)]
@@ -444,6 +470,7 @@ impl FftPlan {
         }
         LOCAL.with(|l| {
             if let Some(p) = l.borrow().get(&n) {
+                PLAN_CACHE_LOCAL_HIT.incr();
                 return Arc::clone(p);
             }
             let p = FftPlan::shared_global(n);
@@ -456,13 +483,17 @@ impl FftPlan {
         static CACHE: OnceLock<Mutex<HashMap<usize, Arc<FftPlan>>>> = OnceLock::new();
         let cache = CACHE.get_or_init(|| Mutex::new(HashMap::new()));
         if let Some(p) = cache.lock().unwrap().get(&n) {
+            PLAN_CACHE_HIT.incr();
             return Arc::clone(p);
         }
         // Miss: build with no lock held (two racing threads may both
         // build; the map keeps the first, the loser's copy is dropped).
+        PLAN_CACHE_MISS.incr();
         let built = Arc::new(FftPlan::new(n));
         let mut g = cache.lock().unwrap();
-        Arc::clone(g.entry(n).or_insert(built))
+        let p = Arc::clone(g.entry(n).or_insert(built));
+        PLAN_CACHE_SIZE.set(g.len() as f64);
+        p
     }
 
     pub fn n(&self) -> usize {

@@ -33,6 +33,7 @@
 //! | [`dsp`] | from-scratch FFT/rFFT + discrete Hilbert transform |
 //! | [`linalg`] | dense f64 matrix helpers, Jacobi SVD, pseudo-inverse (Theorem 1 checks) |
 //! | [`config`] | typed run configuration parsed from JSON + CLI overrides |
+//! | [`telemetry`] | lock-free metrics registry, request-path spans, dispatch audit, stats export |
 //! | [`util`] | JSON, RNG, CLI, mini-bench, property-test driver |
 
 // Clippy policy (CI runs `cargo clippy -- -D warnings`): two style
@@ -52,5 +53,6 @@ pub mod linalg;
 pub mod nn;
 pub mod runtime;
 pub mod server;
+pub mod telemetry;
 pub mod toeplitz;
 pub mod util;

@@ -13,7 +13,12 @@
 //! * `bench-check` — offline perf gate: compare the `BENCH_*.json`
 //!   artifacts emitted by the benches against `bench/baseline.json`
 //!   and fail on median regressions (CI's `bench-smoke` job; see
-//!   README "Threading & benchmarking in CI").
+//!   README "Threading & benchmarking in CI").  `--stats-snapshot
+//!   STATS.json` additionally gates a telemetry snapshot for
+//!   completeness.
+//! * `stats` — pretty-print a telemetry stats snapshot written by
+//!   `--stats-json` (latency percentiles, counters/gauges, dispatch
+//!   audit); `--check` applies the CI completeness gate first.
 //!
 //! Shared flags come from [`ski_tnn::config::RunConfig`]
 //! (`--config-file run.json` plus per-flag overrides).  Examples:
@@ -38,6 +43,12 @@
 //! applies and scheduler ticks run across N threads, bitwise identical
 //! to `--threads 1`.  Default 0 = auto (`SKI_TNN_THREADS`, else the
 //! machine's parallelism).
+//!
+//! `--telemetry` (or `SKI_TNN_TELEMETRY=1`) enables the lock-free
+//! metrics registry ([`ski_tnn::telemetry`]): request-path span
+//! histograms, FFT plan-cache counters, the dispatch audit ring.
+//! `--stats-json STATS.json` implies it and writes periodic
+//! atomic-rename snapshots readable by `ski-tnn stats`.
 
 use anyhow::{bail, Result};
 
@@ -57,15 +68,32 @@ fn main() -> Result<()> {
         Some("serve") => cmd_serve(&args),
         Some("generate") => cmd_generate(&args),
         Some("bench-check") => cmd_bench_check(&args),
+        Some("stats") => cmd_stats(&args),
         Some(other) => {
-            bail!("unknown subcommand {other:?} (try list|train|eval|serve|generate|bench-check)")
+            bail!(
+                "unknown subcommand {other:?} (try list|train|eval|serve|generate|bench-check|stats)"
+            )
         }
         None => {
-            eprintln!("usage: ski-tnn <list|train|eval|serve|generate|bench-check> [flags]");
+            eprintln!("usage: ski-tnn <list|train|eval|serve|generate|bench-check|stats> [flags]");
             eprintln!("see `cargo doc` or README.md for the full flag set");
             Ok(())
         }
     }
+}
+
+/// Honour `--telemetry` / `--stats-json` (and `SKI_TNN_TELEMETRY`,
+/// read lazily by the registry): flip the global enable and, when a
+/// snapshot path is configured, start the background stats writer.
+/// The returned guard must stay alive for the whole command — its Drop
+/// writes the final snapshot.
+fn telemetry_setup(rc: &RunConfig) -> Option<ski_tnn::telemetry::StatsWriter> {
+    if rc.telemetry || rc.stats_json.is_some() {
+        ski_tnn::telemetry::set_enabled(true);
+    }
+    rc.stats_json.as_ref().map(|p| {
+        ski_tnn::telemetry::StatsWriter::start(p.clone(), std::time::Duration::from_secs(2))
+    })
 }
 
 /// Dump the synthetic corpus to a file (debugging / cross-language
@@ -101,6 +129,7 @@ fn cmd_list(args: &Args) -> Result<()> {
 
 fn cmd_train(args: &Args) -> Result<()> {
     let rc = RunConfig::from_args(args)?;
+    let _stats_writer = telemetry_setup(&rc);
     let engine = Engine::new(&rc.artifacts)?;
     println!("platform: {}", engine.platform());
     let mut trainer = Trainer::new(&engine, rc)?;
@@ -114,6 +143,7 @@ fn cmd_train(args: &Args) -> Result<()> {
 
 fn cmd_eval(args: &Args) -> Result<()> {
     let rc = RunConfig::from_args(args)?;
+    let _stats_writer = telemetry_setup(&rc);
     let engine = Engine::new(&rc.artifacts)?;
     let mut trainer = Trainer::new(&engine, rc)?;
     let stats = trainer.eval()?;
@@ -190,6 +220,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         return cmd_serve_substrate(args, &backend);
     }
     let rc = RunConfig::from_args(args)?;
+    let _stats_writer = telemetry_setup(&rc);
     let requests = args.usize_or("requests", 200);
     let clients = args.usize_or("clients", 4);
     let engine = Engine::new(&rc.artifacts)?;
@@ -238,7 +269,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
 /// batch within buckets, each with a right-sized per-width operator.
 fn cmd_serve_substrate(args: &Args, backend: &str) -> Result<()> {
     use ski_tnn::runtime::{resolve_threads, ThreadPool};
-    use ski_tnn::server::{serve_toeplitz_factory, serve_toeplitz_on};
+    use ski_tnn::server::{audit_exec, serve_toeplitz_factory, serve_toeplitz_on};
     use ski_tnn::toeplitz::{
         build_op, gaussian_kernel, BackendKind, Dispatch, DispatchQuery, ToeplitzKernel,
         ToeplitzOp,
@@ -254,6 +285,7 @@ fn cmd_serve_substrate(args: &Args, backend: &str) -> Result<()> {
     // in a --config-file are honoured here exactly as in `generate`
     // (CLI flags still win).
     let rc = RunConfig::from_args(args)?;
+    let _stats_writer = telemetry_setup(&rc);
     let threads = resolve_threads(rc.threads);
     let requested = BackendKind::parse(backend)
         .ok_or_else(|| anyhow::anyhow!("unknown backend {backend:?} (auto|dense|fft|ski|freq)"))?;
@@ -313,7 +345,14 @@ fn cmd_serve_substrate(args: &Args, backend: &str) -> Result<()> {
         );
         run_synthetic_load(
             batcher,
-            serve_toeplitz_factory(make_op, pool),
+            audit_exec(
+                serve_toeplitz_factory(make_op, pool),
+                dispatch,
+                plan_for,
+                rank_for,
+                w,
+                threads,
+            ),
             clients,
             per_client,
             n,
@@ -330,7 +369,7 @@ fn cmd_serve_substrate(args: &Args, backend: &str) -> Result<()> {
         );
         run_synthetic_load(
             batcher,
-            serve_toeplitz_on(op, pool),
+            audit_exec(serve_toeplitz_on(op, pool), dispatch, plan_for, rank_for, w, threads),
             clients,
             per_client,
             n,
@@ -350,8 +389,36 @@ fn cmd_bench_check(args: &Args) -> Result<()> {
     let update = args.flag("update");
     let allow_missing = args.flag("allow-missing");
     let threshold = args.get("threshold").and_then(|v| v.parse::<f64>().ok());
+    if let Some(snap) = args.get("stats-snapshot") {
+        ski_tnn::util::benchcheck::check_stats_snapshot(snap)?;
+        println!("bench-check: telemetry snapshot {snap} OK");
+    }
     let ok = ski_tnn::util::benchcheck::run(&baseline, &dir, update, threshold, allow_missing)?;
     anyhow::ensure!(ok, "bench-check: median regression beyond threshold (see report above)");
+    Ok(())
+}
+
+/// Inspect a telemetry stats snapshot written by `--stats-json`:
+/// latency-series percentiles, counters/gauges, FFT plan-cache hit
+/// rate and the dispatch-audit calibration table.  `--check` applies
+/// the same completeness gate CI uses before printing.
+fn cmd_stats(args: &Args) -> Result<()> {
+    let path = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .or_else(|| args.get("file"))
+        .unwrap_or("STATS.json");
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("reading stats snapshot {path}: {e}"))?;
+    let doc = ski_tnn::util::json::parse(&text)
+        .map_err(|e| anyhow::anyhow!("parsing {path}: {e}"))?;
+    if args.flag("check") {
+        ski_tnn::telemetry::check_snapshot(&doc)
+            .map_err(|e| anyhow::anyhow!("{path}: {e:#}"))?;
+        println!("stats: snapshot {path} passes the completeness gate");
+    }
+    ski_tnn::telemetry::print_snapshot(&doc);
     Ok(())
 }
 
@@ -366,6 +433,7 @@ fn cmd_generate(args: &Args) -> Result<()> {
     // scheduler: run-config JSON or CLI (`RunConfig::apply_args` gives
     // the CLI flag precedence).
     let rc = RunConfig::from_args(args)?;
+    let _stats_writer = telemetry_setup(&rc);
     let backend_flag = rc.backend.unwrap_or_else(|| "auto".to_string());
     let oracle_backend = BackendKind::parse(&backend_flag)
         .ok_or_else(|| anyhow::anyhow!("unknown backend {backend_flag:?} (auto|dense|fft|ski|freq)"))?;

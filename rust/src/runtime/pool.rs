@@ -23,8 +23,12 @@
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::sync::{Arc, Condvar, Mutex, Once, OnceLock};
 use std::thread::JoinHandle;
+
+/// Resolved pool parallelism, exported as a telemetry gauge whenever a
+/// pool is built (latest pool wins — in practice the per-run pool).
+static POOL_WORKERS: crate::telemetry::LazyGauge = crate::telemetry::LazyGauge::new("pool.workers");
 
 /// A borrowed shard task, alive only for the duration of one
 /// [`ThreadPool::scope`] call.
@@ -63,6 +67,7 @@ impl ThreadPool {
     /// `scope` a plain serial loop.
     pub fn new(threads: usize) -> ThreadPool {
         let threads = threads.max(1);
+        POOL_WORKERS.set(threads as f64);
         let shared = Arc::new(Shared {
             queue: Mutex::new(VecDeque::new()),
             work: Condvar::new(),
@@ -226,15 +231,41 @@ fn worker_loop(shared: &Shared) {
     }
 }
 
-/// Parallelism the pool defaults to: `SKI_TNN_THREADS` when set to a
-/// positive integer, else the machine's available parallelism, else 1.
-pub fn default_threads() -> usize {
-    if let Ok(v) = std::env::var("SKI_TNN_THREADS") {
-        if let Ok(t) = v.trim().parse::<usize>() {
-            if t >= 1 {
-                return t;
-            }
+/// Parse one `SKI_TNN_THREADS` value: `Some(t)` for a positive
+/// integer, `None` for anything else (empty counts as unset and is
+/// not an error; zero and garbage are).
+fn parse_threads(v: &str) -> Option<usize> {
+    let v = v.trim();
+    if v.is_empty() {
+        return None;
+    }
+    match v.parse::<usize>() {
+        Ok(t) if t >= 1 => Some(t),
+        _ => {
+            warn_bad_threads(v);
+            None
         }
+    }
+}
+
+/// An unusable `SKI_TNN_THREADS` used to be silently ignored; warn
+/// once per process so a typo'd CI matrix or shell export is visible.
+fn warn_bad_threads(v: &str) {
+    static WARNED: Once = Once::new();
+    WARNED.call_once(|| {
+        eprintln!(
+            "warning: ignoring SKI_TNN_THREADS={v:?} (want a positive integer); \
+             falling back to available parallelism"
+        );
+    });
+}
+
+/// Parallelism the pool defaults to: `SKI_TNN_THREADS` when set to a
+/// positive integer (anything else warns once to stderr and falls
+/// through), else the machine's available parallelism, else 1.
+pub fn default_threads() -> usize {
+    if let Some(t) = std::env::var("SKI_TNN_THREADS").ok().and_then(|v| parse_threads(&v)) {
+        return t;
     }
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
@@ -358,5 +389,28 @@ mod tests {
     fn resolve_threads_zero_is_auto() {
         assert!(resolve_threads(0) >= 1);
         assert_eq!(resolve_threads(3), 3);
+    }
+
+    #[test]
+    fn parse_threads_accepts_positive_rejects_rest() {
+        assert_eq!(parse_threads("4"), Some(4));
+        assert_eq!(parse_threads(" 2 "), Some(2));
+        assert_eq!(parse_threads(""), None, "empty is unset, not an error");
+        assert_eq!(parse_threads("0"), None, "zero threads is unusable");
+        assert_eq!(parse_threads("fast"), None);
+        assert_eq!(parse_threads("-1"), None);
+    }
+
+    #[test]
+    fn pool_records_worker_gauge_when_enabled() {
+        let _g = crate::telemetry::test_guard();
+        let was = crate::telemetry::enabled();
+        crate::telemetry::set_enabled(true);
+        drop(ThreadPool::new(5));
+        let recorded = crate::telemetry::global().gauge("pool.workers").get();
+        crate::telemetry::set_enabled(was);
+        // Another concurrently-constructed pool may have overwritten
+        // the latest-wins gauge; it must at least hold a live value.
+        assert!(recorded >= 1.0, "pool.workers gauge not recorded: {recorded}");
     }
 }

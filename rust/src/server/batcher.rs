@@ -27,7 +27,8 @@ use anyhow::{anyhow, ensure, Result};
 
 use crate::data::PAD;
 use crate::runtime::{global_pool, Engine, HostTensor, ModelState, ThreadPool};
-use crate::toeplitz::{apply_batch_sharded, ToeplitzOp};
+use crate::telemetry;
+use crate::toeplitz::{apply_batch_sharded, BackendKind, Dispatch, DispatchQuery, ToeplitzOp};
 
 /// Server tuning knobs.
 #[derive(Debug, Clone)]
@@ -129,9 +130,15 @@ pub struct BatcherStats {
     /// Per-request time spent queued before its batch executed —
     /// recorded server-side so latency reports don't rely on ad-hoc
     /// client-side timing.  Bounded: holds the most recent
-    /// [`QUEUE_SAMPLE_CAP`] samples so a long-lived server stays O(1)
-    /// in request count.
+    /// [`QUEUE_SAMPLE_CAP`] raw samples — kept as a compatibility view
+    /// of recent traffic; the percentile accessors read `queue_hist`.
     pub queue_seconds: Vec<f64>,
+    /// Whole-run queue-latency histogram (log₂-bucketed, O(1) memory —
+    /// see `telemetry::Histogram`).  [`queue_pct`](Self::queue_pct) /
+    /// [`queue_percentiles`](Self::queue_percentiles) read this, so a
+    /// long-lived server reports percentiles over **every** request
+    /// instead of the bounded recent-sample window above.
+    pub queue_hist: Arc<telemetry::Histogram>,
 }
 
 /// Latency-sample window size shared by the batcher and the
@@ -151,14 +158,28 @@ impl BatcherStats {
     }
 
     /// Queue-latency percentile (`p` in [0, 1]); 0.0 before traffic.
+    /// Reads the whole-run histogram: covers every request ever
+    /// served, bucketed — the estimate is within 2× of the exact
+    /// order statistic (`queue_seconds` still holds exact recent raw
+    /// samples for anyone who needs them).
     pub fn queue_pct(&self, p: f64) -> f64 {
-        crate::util::bench::percentiles_of(&self.queue_seconds, &[p])[0]
+        self.queue_hist.quantile(p) * 1e-9
     }
 
-    /// (p50, p95, p99) queue latency, seconds.
+    /// (p50, p95, p99) queue latency, seconds, over the whole run.
     pub fn queue_percentiles(&self) -> (f64, f64, f64) {
-        let ps = crate::util::bench::percentiles_of(&self.queue_seconds, &[0.50, 0.95, 0.99]);
-        (ps[0], ps[1], ps[2])
+        (self.queue_pct(0.50), self.queue_pct(0.95), self.queue_pct(0.99))
+    }
+
+    /// Record one request's queue wait everywhere it is reported: the
+    /// whole-run histogram, the bounded recent-sample window, and
+    /// (when telemetry is enabled) the global `span.queue_wait`
+    /// series.
+    fn record_queue_wait(&mut self, index: usize, queued: Duration) {
+        let secs = queued.as_secs_f64();
+        self.queue_hist.record_secs(secs);
+        crate::util::bench::push_sample(&mut self.queue_seconds, QUEUE_SAMPLE_CAP, index, secs);
+        telemetry::SPAN_QUEUE_WAIT.record_ns(queued.as_nanos() as u64);
     }
 }
 
@@ -258,12 +279,16 @@ impl Batcher {
             // Partition into per-bucket sub-batches (arrival order is
             // kept within a bucket; one bucket ⇒ one execution, so
             // the non-bucketed path is exactly the old single batch).
-            let mut groups: Vec<(usize, Vec<Request>)> =
-                widths.iter().map(|&w| (w, Vec::new())).collect();
-            for req in reqs {
-                let slot = bucket_index(&widths, req.ids.len());
-                groups[slot].1.push(req);
-            }
+            let groups = {
+                let _span = telemetry::span(&telemetry::SPAN_BUCKET_GATHER);
+                let mut groups: Vec<(usize, Vec<Request>)> =
+                    widths.iter().map(|&w| (w, Vec::new())).collect();
+                for req in reqs {
+                    let slot = bucket_index(&widths, req.ids.len());
+                    groups[slot].1.push(req);
+                }
+                groups
+            };
             for (width, group) in groups {
                 if !group.is_empty() {
                     self.execute(width, group, started, &mut exec, &mut stats);
@@ -300,7 +325,10 @@ impl Batcher {
         }
         let batch = HostTensor::i32(vec![rows_cap, width], ids);
         let t0 = Instant::now();
-        let result = exec(&batch);
+        let result = {
+            let _span = telemetry::span(&telemetry::SPAN_SHARD_EXEC);
+            exec(&batch)
+        };
         stats.exec_seconds += t0.elapsed().as_secs_f64();
         stats.requests += nreq;
         stats.batches += 1;
@@ -328,12 +356,7 @@ impl Batcher {
         };
         for (i, (req, logits)) in reqs.into_iter().zip(rows).enumerate() {
             let queued = started.duration_since(req.submitted);
-            crate::util::bench::push_sample(
-                &mut stats.queue_seconds,
-                QUEUE_SAMPLE_CAP,
-                stats.requests - nreq + i,
-                queued.as_secs_f64(),
-            );
+            stats.record_queue_wait(stats.requests - nreq + i, queued);
             let _ = req.resp.send(Response {
                 logits,
                 queued,
@@ -361,12 +384,7 @@ impl Batcher {
             // Errored requests stay in the latency percentiles — they
             // are often the longest-queued ones when the executor is
             // struggling, and dropping them would flatter the report.
-            crate::util::bench::push_sample(
-                &mut stats.queue_seconds,
-                QUEUE_SAMPLE_CAP,
-                stats.requests - nreq + i,
-                queued.as_secs_f64(),
-            );
+            stats.record_queue_wait(stats.requests - nreq + i, queued);
             let _ = req.resp.send(Response {
                 logits: Vec::new(),
                 queued,
@@ -435,6 +453,63 @@ pub fn serve_toeplitz_factory(
         ensure!(shape.len() == 2, "expected a (batch, width) ids tensor, got {shape:?}");
         let op = Arc::clone(ops.entry(shape[1]).or_insert_with(|| make(shape[1])));
         exec_toeplitz(op.as_ref(), &pool, batch)
+    }
+}
+
+/// Wrap a substrate executor with the telemetry **dispatch audit**:
+/// when telemetry is enabled, every executed batch re-derives its
+/// dispatch query from the tensor shape (through the same `plan_for` /
+/// `rank_for` the serving path used to build its operators), prices
+/// the chosen backend with the cost model, measures the actual batch
+/// wall time, and records the pair via `telemetry::record_dispatch` —
+/// the data behind the cost-model calibration table in stats
+/// snapshots.  With telemetry disabled this is a transparent
+/// pass-through.
+pub fn audit_exec<F, P, R>(
+    mut exec: F,
+    dispatch: Dispatch,
+    plan_for: P,
+    rank_for: R,
+    w: usize,
+    threads: usize,
+) -> impl FnMut(&HostTensor) -> Result<Vec<Vec<f32>>>
+where
+    F: FnMut(&HostTensor) -> Result<Vec<Vec<f32>>>,
+    P: Fn(usize) -> (BackendKind, bool),
+    R: Fn(usize) -> usize,
+{
+    move |batch: &HostTensor| {
+        if !telemetry::enabled() {
+            return exec(batch);
+        }
+        let shape = batch.shape().to_vec();
+        let rows = shape.first().copied().unwrap_or(0);
+        let width = shape.get(1).copied().unwrap_or(0);
+        let (kind, parallel) = plan_for(width);
+        let query = DispatchQuery {
+            n: width,
+            r: rank_for(width),
+            w,
+            causal: kind == BackendKind::Freq,
+            batch: rows,
+            threads: if parallel { threads } else { 1 },
+        };
+        let predicted = dispatch.predicted_ns(kind, &query).unwrap_or(0.0);
+        let t0 = Instant::now();
+        let out = exec(batch);
+        let measured = 1e9 * t0.elapsed().as_secs_f64();
+        telemetry::record_dispatch(telemetry::AuditRow {
+            n: query.n,
+            r: query.r,
+            w: query.w,
+            causal: query.causal,
+            threads: query.threads,
+            rows,
+            backend: kind.name(),
+            predicted_ns: predicted,
+            measured_ns: measured,
+        });
+        out
     }
 }
 
@@ -555,6 +630,57 @@ mod tests {
         assert!(p50 <= p95 && p95 <= p99, "{p50} {p95} {p99}");
         assert!(p99 >= 0.0 && p99 < 5.0, "queue p99 {p99}s out of range");
         assert_eq!(stats.queue_pct(0.99), p99);
+    }
+
+    #[test]
+    fn queue_stats_cover_whole_run_via_histogram() {
+        // More traffic than the bounded raw-sample window holds: the
+        // early slow outliers fall out of `queue_seconds` but must
+        // stay visible in the whole-run percentiles.
+        let mut stats = BatcherStats::default();
+        for i in 0..(QUEUE_SAMPLE_CAP + 64) {
+            let secs = if i < 10 { 1.0 } else { 1e-6 };
+            stats.record_queue_wait(i, Duration::from_secs_f64(secs));
+            stats.requests += 1;
+        }
+        assert_eq!(stats.queue_seconds.len(), QUEUE_SAMPLE_CAP, "window stays bounded");
+        assert!(
+            stats.queue_seconds.iter().all(|&s| s < 1e-3),
+            "outliers aged out of the raw window"
+        );
+        assert_eq!(stats.queue_hist.count() as usize, QUEUE_SAMPLE_CAP + 64);
+        // The 1s outliers survive in the histogram max (within the 2x
+        // bucketing tolerance).
+        assert!(stats.queue_pct(1.0) > 0.4, "whole-run max lost: {}", stats.queue_pct(1.0));
+        assert!(stats.queue_pct(0.5) < 1e-3, "median should be the fast traffic");
+    }
+
+    #[test]
+    fn audit_exec_records_predicted_vs_measured() {
+        let _g = telemetry::test_guard();
+        let was = telemetry::enabled();
+        telemetry::set_enabled(true);
+        let before = telemetry::global_audit().rows().len();
+        let mut exec = audit_exec(
+            echo,
+            Dispatch::default(),
+            |_width| (BackendKind::Fft, false),
+            |_width| 4,
+            9,
+            2,
+        );
+        let batch = HostTensor::i32(vec![2, 8], vec![1; 16]);
+        exec(&batch).unwrap();
+        let rows = telemetry::global_audit().rows();
+        telemetry::set_enabled(was);
+        assert!(rows.len() > before, "audit row must be recorded");
+        let row = rows.last().unwrap();
+        assert_eq!(row.backend, "fft");
+        assert_eq!(row.n, 8);
+        assert_eq!(row.rows, 2);
+        assert_eq!(row.threads, 1, "serial plan audits as one thread");
+        assert!(row.predicted_ns > 0.0, "cost model must price the fft row");
+        assert!(row.measured_ns > 0.0);
     }
 
     #[test]

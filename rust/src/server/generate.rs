@@ -244,6 +244,7 @@ impl GenScheduler {
                     stats.sessions,
                     queued.as_secs_f64(),
                 );
+                crate::telemetry::SPAN_QUEUE_WAIT.record_ns(queued.as_nanos() as u64);
                 stats.sessions += 1;
                 let id = self.next_id;
                 self.next_id += 1;
@@ -330,7 +331,10 @@ impl GenScheduler {
             // its state and sampler — so this is bitwise identical to
             // the serial loop for any worker count).
             let t0 = Instant::now();
-            let stepped = step_sessions(&pool, model, &mut active);
+            let stepped = {
+                let _span = crate::telemetry::span(&crate::telemetry::SPAN_DECODE_TICK);
+                step_sessions(&pool, model, &mut active)
+            };
             stats.decode_seconds += t0.elapsed().as_secs_f64();
             stats.ticks += 1;
             stats.active_session_ticks += active.len();

@@ -21,7 +21,7 @@ mod batcher;
 mod generate;
 
 pub use batcher::{
-    serve_model, serve_toeplitz, serve_toeplitz_factory, serve_toeplitz_on, Batcher,
+    audit_exec, serve_model, serve_toeplitz, serve_toeplitz_factory, serve_toeplitz_on, Batcher,
     BatcherStats, Request, Response, ServerConfig,
 };
 pub use generate::{

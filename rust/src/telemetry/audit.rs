@@ -1,0 +1,219 @@
+//! Dispatch audit trail: predicted-vs-measured cost per executed shape.
+//!
+//! The cost-model dispatcher (`toeplitz::op::Dispatch`) picks a
+//! backend from closed-form ns estimates.  This module keeps a bounded
+//! ring of executed decisions — query shape, chosen backend, the
+//! model's predicted ns, and the measured wall time — so a snapshot
+//! can report per-shape calibration error and flag shapes where the
+//! model is off by ≥ 2× (i.e. the dispatcher may be choosing a backend
+//! that is ≥ 2× worse than what it would measure).
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::{Mutex, OnceLock, PoisonError};
+
+use crate::util::json::Json;
+
+/// Most recent decisions kept (the ring is bounded; ~100 B per row).
+pub const AUDIT_RING_CAP: usize = 512;
+
+/// One executed dispatch decision.
+#[derive(Debug, Clone)]
+pub struct AuditRow {
+    pub n: usize,
+    pub r: usize,
+    pub w: usize,
+    pub causal: bool,
+    pub threads: usize,
+    /// Rows in the executed batch.
+    pub rows: usize,
+    /// `BackendKind::name()` of the chosen backend.
+    pub backend: &'static str,
+    /// Cost-model estimate for the whole batch, ns (0.0 when the model
+    /// has no candidate for the forced backend).
+    pub predicted_ns: f64,
+    /// Measured wall time of the executed batch, ns.
+    pub measured_ns: f64,
+}
+
+impl AuditRow {
+    /// Key the calibration summary groups by (batch size excluded:
+    /// per-row cost is shape-determined, batch fill is traffic).
+    fn shape(&self) -> String {
+        format!(
+            "backend={}/causal={}/n={}/r={}/threads={}/w={}",
+            self.backend, self.causal, self.n, self.r, self.threads, self.w
+        )
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("n", Json::num(self.n as f64)),
+            ("r", Json::num(self.r as f64)),
+            ("w", Json::num(self.w as f64)),
+            ("causal", Json::Bool(self.causal)),
+            ("threads", Json::num(self.threads as f64)),
+            ("rows", Json::num(self.rows as f64)),
+            ("backend", Json::str(self.backend)),
+            ("predicted_ns", Json::num(self.predicted_ns)),
+            ("measured_ns", Json::num(self.measured_ns)),
+        ])
+    }
+}
+
+#[derive(Debug, Default)]
+struct AuditInner {
+    ring: VecDeque<AuditRow>,
+    recorded: u64,
+}
+
+/// Bounded ring of [`AuditRow`]s with a per-shape calibration summary.
+#[derive(Debug, Default)]
+pub struct DispatchAudit {
+    inner: Mutex<AuditInner>,
+}
+
+impl DispatchAudit {
+    pub fn new() -> DispatchAudit {
+        DispatchAudit::default()
+    }
+
+    pub fn record(&self, row: AuditRow) {
+        let mut g = self.inner.lock().unwrap_or_else(PoisonError::into_inner);
+        if g.ring.len() >= AUDIT_RING_CAP {
+            g.ring.pop_front();
+        }
+        g.ring.push_back(row);
+        g.recorded += 1;
+    }
+
+    /// Rows currently held (≤ [`AUDIT_RING_CAP`]).
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap_or_else(PoisonError::into_inner).ring.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn rows(&self) -> Vec<AuditRow> {
+        self.inner.lock().unwrap_or_else(PoisonError::into_inner).ring.iter().cloned().collect()
+    }
+
+    /// `{recorded, rows, summary}` where `summary` aggregates the ring
+    /// per shape: count, mean predicted/measured ns, the
+    /// `measured_over_predicted` ratio, and `flagged` when that ratio
+    /// is ≥ 2 (model far too optimistic) or ≤ 0.5 (far too
+    /// pessimistic) — either way the dispatcher's ranking at that
+    /// shape is untrustworthy.
+    pub fn to_json(&self) -> Json {
+        let g = self.inner.lock().unwrap_or_else(PoisonError::into_inner);
+        let rows: Vec<Json> = g.ring.iter().map(AuditRow::to_json).collect();
+        let mut agg: BTreeMap<String, (u64, f64, f64)> = BTreeMap::new();
+        for row in &g.ring {
+            let e = agg.entry(row.shape()).or_insert((0, 0.0, 0.0));
+            e.0 += 1;
+            e.1 += row.predicted_ns;
+            e.2 += row.measured_ns;
+        }
+        let summary: Vec<Json> = agg
+            .into_iter()
+            .map(|(shape, (count, pred, meas))| {
+                let mean_pred = pred / count as f64;
+                let mean_meas = meas / count as f64;
+                let ratio = if mean_pred > 0.0 { mean_meas / mean_pred } else { 0.0 };
+                let flagged = mean_pred > 0.0 && (ratio >= 2.0 || ratio <= 0.5);
+                Json::obj(vec![
+                    ("shape", Json::str(shape)),
+                    ("count", Json::num(count as f64)),
+                    ("mean_predicted_ns", Json::num(mean_pred)),
+                    ("mean_measured_ns", Json::num(mean_meas)),
+                    ("measured_over_predicted", Json::num(ratio)),
+                    ("flagged", Json::Bool(flagged)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("recorded", Json::num(g.recorded as f64)),
+            ("rows", Json::arr(rows)),
+            ("summary", Json::arr(summary)),
+        ])
+    }
+}
+
+/// The process-wide audit ring.
+pub fn global_audit() -> &'static DispatchAudit {
+    static AUDIT: OnceLock<DispatchAudit> = OnceLock::new();
+    AUDIT.get_or_init(DispatchAudit::new)
+}
+
+/// Record one executed decision into the global ring; no-op while
+/// telemetry is disabled.
+pub fn record_dispatch(row: AuditRow) {
+    if super::enabled() {
+        global_audit().record(row);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(predicted_ns: f64, measured_ns: f64) -> AuditRow {
+        AuditRow {
+            n: 256,
+            r: 16,
+            w: 9,
+            causal: false,
+            threads: 1,
+            rows: 8,
+            backend: "fft",
+            predicted_ns,
+            measured_ns,
+        }
+    }
+
+    #[test]
+    fn ring_is_bounded() {
+        let a = DispatchAudit::new();
+        for _ in 0..(AUDIT_RING_CAP + 40) {
+            a.record(row(1000.0, 1100.0));
+        }
+        assert_eq!(a.len(), AUDIT_RING_CAP);
+        let doc = a.to_json();
+        assert_eq!(doc.get("recorded").and_then(Json::as_usize), Some(AUDIT_RING_CAP + 40));
+        assert_eq!(doc.get("rows").and_then(Json::as_arr).map(|r| r.len()), Some(AUDIT_RING_CAP));
+    }
+
+    #[test]
+    fn summary_flags_miscalibrated_shapes() {
+        let a = DispatchAudit::new();
+        a.record(row(1000.0, 1100.0));
+        a.record(row(1000.0, 900.0));
+        let doc = a.to_json();
+        let summary = doc.get("summary").and_then(Json::as_arr).unwrap();
+        assert_eq!(summary.len(), 1);
+        assert_eq!(summary[0].get("count").and_then(Json::as_usize), Some(2));
+        assert_eq!(summary[0].get("flagged").and_then(Json::as_bool), Some(false));
+
+        let b = DispatchAudit::new();
+        b.record(row(100.0, 250.0));
+        let doc = b.to_json();
+        let summary = doc.get("summary").and_then(Json::as_arr).unwrap();
+        assert_eq!(summary[0].get("flagged").and_then(Json::as_bool), Some(true));
+        assert_eq!(
+            summary[0].get("measured_over_predicted").and_then(Json::as_f64),
+            Some(2.5)
+        );
+        assert!(!b.is_empty());
+    }
+
+    #[test]
+    fn zero_prediction_never_flags_or_nans() {
+        let a = DispatchAudit::new();
+        a.record(row(0.0, 500.0));
+        let doc = a.to_json();
+        let summary = doc.get("summary").and_then(Json::as_arr).unwrap();
+        assert_eq!(summary[0].get("flagged").and_then(Json::as_bool), Some(false));
+        assert_eq!(summary[0].get("measured_over_predicted").and_then(Json::as_f64), Some(0.0));
+    }
+}

@@ -1,0 +1,350 @@
+//! Snapshot export: JSON assembly, atomic-rename file writes, the
+//! periodic `--stats-json` writer thread, snapshot validation (the
+//! `bench-check --stats-snapshot` gate), and the `ski-tnn stats`
+//! pretty-printer.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{anyhow, ensure, Result};
+
+use super::audit::{global_audit, DispatchAudit};
+use super::registry::{global, Registry};
+use crate::util::json::{self, Json};
+
+/// Schema version stamped into every snapshot document.
+pub const SNAPSHOT_VERSION: f64 = 1.0;
+
+/// Assemble a snapshot document from explicit parts.  [`snapshot`] is
+/// the global-state convenience; this form keeps the schema
+/// unit-testable against a local registry.
+pub fn snapshot_json(reg: &Registry, audit: &DispatchAudit) -> Json {
+    let sections = reg.to_json();
+    let section = |k: &str| sections.get(k).cloned().unwrap_or(Json::Null);
+    Json::obj(vec![
+        ("version", Json::num(SNAPSHOT_VERSION)),
+        ("enabled", Json::Bool(super::enabled())),
+        ("counters", section("counters")),
+        ("gauges", section("gauges")),
+        ("histograms", section("histograms")),
+        ("dispatch_audit", audit.to_json()),
+    ])
+}
+
+/// Snapshot of the global registry + audit ring.
+pub fn snapshot() -> Json {
+    snapshot_json(global(), global_audit())
+}
+
+/// Write the global snapshot to `path` (see [`write_snapshot_doc`]).
+pub fn write_snapshot(path: &Path) -> std::io::Result<()> {
+    write_snapshot_doc(path, &snapshot())
+}
+
+/// Write `doc` to `path` via a sibling `.tmp` file and an atomic
+/// rename, so concurrent readers never observe a torn document.
+pub fn write_snapshot_doc(path: &Path, doc: &Json) -> std::io::Result<()> {
+    let mut tmp_name = path.as_os_str().to_os_string();
+    tmp_name.push(".tmp");
+    let tmp = PathBuf::from(tmp_name);
+    std::fs::write(&tmp, json::write(doc))?;
+    std::fs::rename(&tmp, path)
+}
+
+/// Periodic snapshot emission: a background thread rewrites `path`
+/// every `interval`, and dropping the writer emits one final snapshot
+/// — so an interrupted run still leaves current numbers behind.
+pub struct StatsWriter {
+    path: PathBuf,
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl StatsWriter {
+    pub fn start(path: PathBuf, interval: Duration) -> StatsWriter {
+        let stop = Arc::new(AtomicBool::new(false));
+        let flag = Arc::clone(&stop);
+        let target = path.clone();
+        let handle = std::thread::Builder::new()
+            .name("ski-tnn-stats".into())
+            .spawn(move || {
+                while !flag.load(Ordering::Relaxed) {
+                    std::thread::park_timeout(interval);
+                    if flag.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    let _ = write_snapshot(&target);
+                }
+            })
+            .expect("spawning stats writer thread");
+        StatsWriter { path, stop, handle: Some(handle) }
+    }
+
+    /// The snapshot path this writer maintains.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+impl Drop for StatsWriter {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            h.thread().unpark();
+            let _ = h.join();
+        }
+        let _ = write_snapshot(&self.path);
+    }
+}
+
+/// Validate a snapshot document: the core series must be present
+/// (queue-wait span with samples and a finite p99, `pool.workers`
+/// gauge ≥ 1, at least one dispatch audit row) and no number anywhere
+/// in the document may be NaN/±inf.  `ski-tnn bench-check
+/// --stats-snapshot` refuses files failing any of these.
+pub fn check_snapshot(doc: &Json) -> Result<()> {
+    ensure!(
+        doc.get("version").and_then(Json::as_f64).is_some(),
+        "snapshot missing \"version\""
+    );
+    let hists = doc
+        .get("histograms")
+        .and_then(Json::as_obj)
+        .ok_or_else(|| anyhow!("snapshot missing \"histograms\""))?;
+    let qw = hists
+        .get("span.queue_wait")
+        .ok_or_else(|| anyhow!("snapshot missing the span.queue_wait series"))?;
+    let count = qw.get("count").and_then(Json::as_f64).unwrap_or(0.0);
+    ensure!(count > 0.0, "span.queue_wait has no samples");
+    let p99 = qw
+        .get("p99_ns")
+        .and_then(Json::as_f64)
+        .ok_or_else(|| anyhow!("span.queue_wait missing p99_ns"))?;
+    ensure!(p99.is_finite() && p99 >= 0.0, "span.queue_wait p99_ns is not a finite number");
+    let workers = doc
+        .get("gauges")
+        .and_then(|g| g.get("pool.workers"))
+        .and_then(Json::as_f64)
+        .ok_or_else(|| anyhow!("snapshot missing the pool.workers gauge"))?;
+    ensure!(workers >= 1.0, "pool.workers gauge is {workers}, want >= 1");
+    let rows = doc
+        .get("dispatch_audit")
+        .and_then(|a| a.get("rows"))
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("snapshot missing dispatch_audit rows"))?;
+    ensure!(!rows.is_empty(), "snapshot has no dispatch audit rows");
+    let mut bad = Vec::new();
+    sweep_nonfinite("$", doc, &mut bad);
+    ensure!(bad.is_empty(), "snapshot contains non-finite series: {}", bad.join(", "));
+    Ok(())
+}
+
+fn sweep_nonfinite(path: &str, v: &Json, bad: &mut Vec<String>) {
+    match v {
+        Json::Num(n) if !n.is_finite() => bad.push(path.to_string()),
+        Json::Arr(items) => {
+            for (i, item) in items.iter().enumerate() {
+                sweep_nonfinite(&format!("{path}[{i}]"), item, bad);
+            }
+        }
+        Json::Obj(map) => {
+            for (k, item) in map {
+                sweep_nonfinite(&format!("{path}.{k}"), item, bad);
+            }
+        }
+        _ => {}
+    }
+}
+
+/// Pretty-print a snapshot (the `ski-tnn stats` subcommand): latency
+/// series with percentiles, counters/gauges, the FFT plan-cache hit
+/// rate, and the dispatch-audit calibration table.
+pub fn print_snapshot(doc: &Json) {
+    use crate::util::bench::{fmt_secs, Table};
+    let enabled = doc.get("enabled").and_then(Json::as_bool).unwrap_or(false);
+    println!(
+        "telemetry snapshot (v{}, captured {})",
+        doc.get("version").and_then(Json::as_f64).unwrap_or(0.0),
+        if enabled { "enabled" } else { "disabled" }
+    );
+
+    if let Some(hists) = doc.get("histograms").and_then(Json::as_obj) {
+        if !hists.is_empty() {
+            let mut t =
+                Table::new("latency series", &["series", "count", "mean", "p50", "p90", "p99"]);
+            for (name, h) in hists {
+                let f = |k: &str| h.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+                t.row(&[
+                    name.clone(),
+                    format!("{}", f("count") as u64),
+                    fmt_secs(f("mean_ns") * 1e-9),
+                    fmt_secs(f("p50_ns") * 1e-9),
+                    fmt_secs(f("p90_ns") * 1e-9),
+                    fmt_secs(f("p99_ns") * 1e-9),
+                ]);
+            }
+            t.print();
+        }
+    }
+
+    for (title, section) in [("counters", "counters"), ("gauges", "gauges")] {
+        if let Some(map) = doc.get(section).and_then(Json::as_obj) {
+            if !map.is_empty() {
+                let mut t = Table::new(title, &["name", "value"]);
+                for (k, v) in map {
+                    t.row(&[k.clone(), format!("{}", v.as_f64().unwrap_or(0.0))]);
+                }
+                t.print();
+            }
+        }
+    }
+
+    if let Some(cs) = doc.get("counters").and_then(Json::as_obj) {
+        let c = |k: &str| cs.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+        let miss = c("fft.plan_cache.miss");
+        let looked = c("fft.plan_cache.hit") + c("fft.plan_cache.local_hit") + miss;
+        if looked > 0.0 {
+            println!(
+                "\nfft plan cache: {:.1}% hit rate ({} lookups, {} plan builds)",
+                100.0 * (looked - miss) / looked,
+                looked as u64,
+                miss as u64
+            );
+        }
+    }
+
+    let summary = doc
+        .get("dispatch_audit")
+        .and_then(|a| a.get("summary"))
+        .and_then(Json::as_arr);
+    if let Some(summary) = summary {
+        if !summary.is_empty() {
+            let mut t = Table::new(
+                "dispatch audit (cost-model calibration)",
+                &["shape", "count", "predicted", "measured", "meas/pred", "flag"],
+            );
+            for s in summary {
+                let f = |k: &str| s.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+                let flagged = s.get("flagged").and_then(Json::as_bool).unwrap_or(false);
+                t.row(&[
+                    s.get("shape").and_then(Json::as_str).unwrap_or("?").to_string(),
+                    format!("{}", f("count") as u64),
+                    fmt_secs(f("mean_predicted_ns") * 1e-9),
+                    fmt_secs(f("mean_measured_ns") * 1e-9),
+                    format!("{:.2}", f("measured_over_predicted")),
+                    if flagged { "MISCALIBRATED".to_string() } else { String::new() },
+                ]);
+            }
+            t.print();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::AuditRow;
+
+    fn audit_row() -> AuditRow {
+        AuditRow {
+            n: 128,
+            r: 8,
+            w: 9,
+            causal: false,
+            threads: 2,
+            rows: 4,
+            backend: "ski",
+            predicted_ns: 4000.0,
+            measured_ns: 5000.0,
+        }
+    }
+
+    #[test]
+    fn snapshot_roundtrips_through_json() {
+        let reg = Registry::new();
+        reg.counter("c.x").add(3);
+        reg.gauge("g.y").set(2.5);
+        reg.histogram("span.queue_wait").record(1500);
+        let audit = DispatchAudit::new();
+        audit.record(audit_row());
+        let doc = snapshot_json(&reg, &audit);
+        let parsed = json::parse(&json::write(&doc)).unwrap();
+        assert_eq!(
+            parsed.get("counters").and_then(|c| c.get("c.x")).and_then(Json::as_usize),
+            Some(3)
+        );
+        assert_eq!(
+            parsed.get("gauges").and_then(|g| g.get("g.y")).and_then(Json::as_f64),
+            Some(2.5)
+        );
+        let h = parsed.get("histograms").and_then(|h| h.get("span.queue_wait")).unwrap();
+        assert_eq!(h.get("count").and_then(Json::as_usize), Some(1));
+        let row = parsed
+            .get("dispatch_audit")
+            .and_then(|a| a.get("rows"))
+            .and_then(|r| r.idx(0))
+            .unwrap();
+        assert_eq!(row.get("backend").and_then(Json::as_str), Some("ski"));
+        assert_eq!(row.get("predicted_ns").and_then(Json::as_f64), Some(4000.0));
+        assert_eq!(row.get("measured_ns").and_then(Json::as_f64), Some(5000.0));
+    }
+
+    #[test]
+    fn check_snapshot_requires_core_series() {
+        let reg = Registry::new();
+        let audit = DispatchAudit::new();
+        assert!(check_snapshot(&snapshot_json(&reg, &audit)).is_err());
+        reg.histogram("span.queue_wait").record(1000);
+        assert!(check_snapshot(&snapshot_json(&reg, &audit)).is_err());
+        reg.gauge("pool.workers").set(4.0);
+        assert!(check_snapshot(&snapshot_json(&reg, &audit)).is_err(), "still no audit rows");
+        audit.record(audit_row());
+        check_snapshot(&snapshot_json(&reg, &audit)).unwrap();
+    }
+
+    #[test]
+    fn check_snapshot_rejects_nonfinite_numbers() {
+        let reg = Registry::new();
+        reg.histogram("span.queue_wait").record(1000);
+        reg.gauge("pool.workers").set(2.0);
+        let audit = DispatchAudit::new();
+        audit.record(audit_row());
+        let mut doc = snapshot_json(&reg, &audit);
+        if let Json::Obj(top) = &mut doc {
+            if let Some(Json::Obj(gauges)) = top.get_mut("gauges") {
+                gauges.insert("bad".to_string(), Json::Num(f64::NAN));
+            }
+        }
+        let err = check_snapshot(&doc).unwrap_err().to_string();
+        assert!(err.contains("non-finite"), "{err}");
+        assert!(err.contains("gauges.bad"), "{err}");
+    }
+
+    #[test]
+    fn write_snapshot_doc_lands_parseable_file() {
+        let path =
+            std::env::temp_dir().join(format!("ski_tnn_snap_unit_{}.json", std::process::id()));
+        let doc = Json::obj(vec![("version", Json::num(1.0))]);
+        write_snapshot_doc(&path, &doc).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        let parsed = json::parse(&text).unwrap();
+        assert_eq!(parsed.get("version").and_then(Json::as_f64), Some(1.0));
+    }
+
+    #[test]
+    fn stats_writer_emits_final_snapshot_on_drop() {
+        let path =
+            std::env::temp_dir().join(format!("ski_tnn_writer_unit_{}.json", std::process::id()));
+        {
+            let w = StatsWriter::start(path.clone(), Duration::from_secs(60));
+            assert_eq!(w.path(), path.as_path());
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        let parsed = json::parse(&text).unwrap();
+        assert!(parsed.get("version").is_some());
+    }
+}

@@ -1,0 +1,227 @@
+//! Crate-wide observability: lock-free metrics, request-path span
+//! timing, and a dispatcher cost-model audit trail.
+//!
+//! A request crossing the serving stack touches five subsystems
+//! (batcher → length bucket → cost-model dispatch → sharded pool →
+//! spectral plan); this module makes that path measurable without
+//! perturbing it:
+//!
+//! * [`registry`](self) — atomic [`Counter`]s, [`Gauge`]s, and
+//!   log₂-bucketed [`Histogram`]s keyed by name in a process-wide
+//!   [`Registry`] ([`global`]).
+//! * **Spans** — RAII timers over the named request-path sections
+//!   (`span.queue_wait`, `span.bucket_gather`, `span.dispatch_decide`,
+//!   `span.shard_exec`, `span.fft_forward`, `span.decode_tick`).
+//! * **Dispatch audit** — a bounded ring of `Dispatch::plan` outcomes
+//!   with predicted-vs-measured ns per shape ([`record_dispatch`]).
+//! * **Export** — JSON snapshots ([`snapshot`], [`write_snapshot`],
+//!   periodic [`StatsWriter`]), validation ([`check_snapshot`]) and
+//!   pretty-printing ([`print_snapshot`]).
+//!
+//! Everything is gated on one global flag: set env
+//! `SKI_TNN_TELEMETRY=1` (or `RunConfig.telemetry` / `--telemetry`)
+//! to enable.  While disabled, instrumented call sites cost one
+//! relaxed atomic load — no clock reads, no allocation, and nothing is
+//! ever registered (the zero-overhead contract the unit tests pin).
+//!
+//! Call sites declare `static` [`LazyCounter`] / [`LazyGauge`] /
+//! [`LazyHistogram`] handles next to the code they instrument; the
+//! first enabled-mode use resolves the name against the global
+//! registry once, after which every record is a couple of relaxed
+//! atomic ops.
+
+mod audit;
+mod export;
+mod registry;
+
+pub use audit::{global_audit, record_dispatch, AuditRow, DispatchAudit, AUDIT_RING_CAP};
+pub use export::{
+    check_snapshot, print_snapshot, snapshot, snapshot_json, write_snapshot, write_snapshot_doc,
+    StatsWriter, SNAPSHOT_VERSION,
+};
+pub use registry::{global, Counter, Gauge, Histogram, Registry, HIST_BUCKETS};
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, Once, OnceLock, PoisonError};
+use std::time::Instant;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static ENV_INIT: Once = Once::new();
+
+/// Whether telemetry is on.  The first call folds in the
+/// `SKI_TNN_TELEMETRY` environment variable (`1`/`true`/`on`);
+/// [`set_enabled`] overrides it either way.
+pub fn enabled() -> bool {
+    ENV_INIT.call_once(|| {
+        if let Ok(v) = std::env::var("SKI_TNN_TELEMETRY") {
+            let v = v.trim().to_ascii_lowercase();
+            if v == "1" || v == "true" || v == "on" {
+                ENABLED.store(true, Ordering::Relaxed);
+            }
+        }
+    });
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn telemetry on or off for the whole process.
+pub fn set_enabled(on: bool) {
+    // Make sure the env init cannot race in afterwards and clobber us.
+    enabled();
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Counter handle resolved against [`global`] on first enabled use.
+/// `const`-constructible so call sites keep one in a `static`.
+pub struct LazyCounter {
+    name: &'static str,
+    slot: OnceLock<Arc<Counter>>,
+}
+
+impl LazyCounter {
+    pub const fn new(name: &'static str) -> LazyCounter {
+        LazyCounter { name, slot: OnceLock::new() }
+    }
+
+    pub fn add(&self, delta: u64) {
+        if enabled() {
+            self.slot.get_or_init(|| global().counter(self.name)).add(delta);
+        }
+    }
+
+    pub fn incr(&self) {
+        self.add(1);
+    }
+}
+
+/// Gauge handle resolved against [`global`] on first enabled use.
+pub struct LazyGauge {
+    name: &'static str,
+    slot: OnceLock<Arc<Gauge>>,
+}
+
+impl LazyGauge {
+    pub const fn new(name: &'static str) -> LazyGauge {
+        LazyGauge { name, slot: OnceLock::new() }
+    }
+
+    pub fn set(&self, v: f64) {
+        if enabled() {
+            self.slot.get_or_init(|| global().gauge(self.name)).set(v);
+        }
+    }
+}
+
+/// Histogram handle resolved against [`global`] on first enabled use.
+pub struct LazyHistogram {
+    name: &'static str,
+    slot: OnceLock<Arc<Histogram>>,
+}
+
+impl LazyHistogram {
+    pub const fn new(name: &'static str) -> LazyHistogram {
+        LazyHistogram { name, slot: OnceLock::new() }
+    }
+
+    pub fn record_ns(&self, ns: u64) {
+        if enabled() {
+            self.slot.get_or_init(|| global().histogram(self.name)).record(ns);
+        }
+    }
+}
+
+/// Time a request spends queued before its batch executes.
+pub static SPAN_QUEUE_WAIT: LazyHistogram = LazyHistogram::new("span.queue_wait");
+/// Partitioning one gathered batch into length buckets.
+pub static SPAN_BUCKET_GATHER: LazyHistogram = LazyHistogram::new("span.bucket_gather");
+/// One `Dispatch::plan` cost-model evaluation.
+pub static SPAN_DISPATCH_DECIDE: LazyHistogram = LazyHistogram::new("span.dispatch_decide");
+/// Executing one batch through the (possibly sharded) backend.
+pub static SPAN_SHARD_EXEC: LazyHistogram = LazyHistogram::new("span.shard_exec");
+/// One spectral-plan forward application (FFT → multiply → inverse).
+pub static SPAN_FFT_FORWARD: LazyHistogram = LazyHistogram::new("span.fft_forward");
+/// One decode scheduler tick (stepping every live session once).
+pub static SPAN_DECODE_TICK: LazyHistogram = LazyHistogram::new("span.decode_tick");
+
+/// RAII span timer from [`span`]: records elapsed ns into its series
+/// on drop.  While telemetry is disabled it holds nothing and never
+/// reads the clock.
+pub struct SpanGuard {
+    live: Option<(&'static LazyHistogram, Instant)>,
+}
+
+/// Start timing a span; keep the guard alive for the region's extent.
+pub fn span(series: &'static LazyHistogram) -> SpanGuard {
+    if enabled() {
+        SpanGuard { live: Some((series, Instant::now())) }
+    } else {
+        SpanGuard { live: None }
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if let Some((series, t0)) = self.live.take() {
+            series.record_ns(t0.elapsed().as_nanos() as u64);
+        }
+    }
+}
+
+/// Serialises tests that flip the process-global enabled flag (unit
+/// tests in one binary share the process).  Test support only.
+#[doc(hidden)]
+pub fn test_guard() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_mode_creates_no_registry_entries() {
+        let _g = test_guard();
+        let was = enabled();
+        set_enabled(false);
+        static PROBE_H: LazyHistogram = LazyHistogram::new("test.disabled_probe_hist");
+        static PROBE_C: LazyCounter = LazyCounter::new("test.disabled_probe_count");
+        static PROBE_G: LazyGauge = LazyGauge::new("test.disabled_probe_gauge");
+        let before = global().len();
+        {
+            let _s = span(&PROBE_H);
+            PROBE_C.incr();
+            PROBE_G.set(1.0);
+            PROBE_H.record_ns(42);
+        }
+        assert_eq!(global().len(), before, "disabled telemetry must register nothing");
+        set_enabled(was);
+    }
+
+    #[test]
+    fn enabled_spans_record_into_global_registry() {
+        let _g = test_guard();
+        let was = enabled();
+        set_enabled(true);
+        static PROBE: LazyHistogram = LazyHistogram::new("test.enabled_probe");
+        {
+            let _s = span(&PROBE);
+            std::thread::sleep(std::time::Duration::from_micros(50));
+        }
+        set_enabled(was);
+        let h = global().histogram("test.enabled_probe");
+        assert_eq!(h.count(), 1);
+        assert!(h.quantile(0.5) > 0.0);
+    }
+
+    #[test]
+    fn lazy_handles_share_the_named_instrument() {
+        let _g = test_guard();
+        let was = enabled();
+        set_enabled(true);
+        static C: LazyCounter = LazyCounter::new("test.shared_counter");
+        C.add(2);
+        C.incr();
+        set_enabled(was);
+        assert_eq!(global().counter("test.shared_counter").get(), 3);
+    }
+}

@@ -1,0 +1,342 @@
+//! Lock-free metric primitives and the process-wide registry.
+//!
+//! Three instrument kinds, all updatable from any thread without
+//! taking a lock on the hot path:
+//!
+//! * [`Counter`] — monotonically increasing `u64` (one atomic add).
+//! * [`Gauge`] — last-written `f64`, stored as bits in an `AtomicU64`.
+//! * [`Histogram`] — log₂-bucketed latency distribution: 64 fixed
+//!   buckets, so recording is two atomic adds plus one atomic add on
+//!   the bucket.  Quantiles use the same nearest-rank convention as
+//!   `util::bench::percentile`, interpolated inside the bucket, so an
+//!   estimate is always within 2× of the exact order statistic.
+//!
+//! The [`Registry`] maps names to shared instruments; the name lookup
+//! takes a `Mutex`, but call sites hold on to the returned `Arc` (see
+//! the `Lazy*` handles in the module root) so that cost is paid once.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock, PoisonError};
+
+use crate::util::json::Json;
+
+/// Fixed bucket count: bucket `i` holds values in `[2^(i-1), 2^i)` ns
+/// (bucket 0 holds zero), which spans zero to ~584 years.
+pub const HIST_BUCKETS: usize = 64;
+
+/// Monotonic event counter.
+#[derive(Debug, Default)]
+pub struct Counter {
+    value: AtomicU64,
+}
+
+impl Counter {
+    pub fn new() -> Counter {
+        Counter::default()
+    }
+
+    pub fn add(&self, delta: u64) {
+        self.value.fetch_add(delta, Ordering::Relaxed);
+    }
+
+    pub fn incr(&self) {
+        self.add(1);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.value.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-value gauge (an `f64` stored as its bit pattern).
+#[derive(Debug, Default)]
+pub struct Gauge {
+    bits: AtomicU64,
+}
+
+impl Gauge {
+    pub fn new() -> Gauge {
+        Gauge::default()
+    }
+
+    pub fn set(&self, v: f64) {
+        self.bits.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.bits.load(Ordering::Relaxed))
+    }
+}
+
+/// Log₂-bucketed latency histogram over nanosecond samples.
+pub struct Histogram {
+    count: AtomicU64,
+    sum: AtomicU64,
+    buckets: [AtomicU64; HIST_BUCKETS],
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram {
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+}
+
+impl std::fmt::Debug for Histogram {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Histogram")
+            .field("count", &self.count())
+            .field("mean_ns", &self.mean_ns())
+            .field("p99_ns", &self.quantile(0.99))
+            .finish()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram::default()
+    }
+
+    #[inline]
+    fn bucket_of(v: u64) -> usize {
+        ((64 - v.leading_zeros()) as usize).min(HIST_BUCKETS - 1)
+    }
+
+    /// Record one sample, in nanoseconds.
+    pub fn record(&self, ns: u64) {
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(ns, Ordering::Relaxed);
+        self.buckets[Self::bucket_of(ns)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a sample given in seconds (negative clamps to zero).
+    pub fn record_secs(&self, s: f64) {
+        self.record((s.max(0.0) * 1e9) as u64);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Sum of all recorded samples, ns.
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    /// Mean sample, ns (0.0 when empty).
+    pub fn mean_ns(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            0.0
+        } else {
+            self.sum() as f64 / c as f64
+        }
+    }
+
+    /// Quantile estimate in ns: nearest-rank (the convention of
+    /// `util::bench::percentile` — rank 0 is the min, rank `count-1`
+    /// the max), linearly interpolated within the hit bucket.  The
+    /// exact order statistic lives in the same bucket, so the estimate
+    /// is within a factor of 2 of it.  0.0 when empty.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let counts: Vec<u64> = self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let rank = (q.clamp(0.0, 1.0) * (total - 1) as f64).round() as u64;
+        let mut cum = 0u64;
+        for (i, &c) in counts.iter().enumerate() {
+            if c > 0 && cum + c > rank {
+                let lo = if i == 0 { 0.0 } else { (1u64 << (i - 1)) as f64 };
+                let hi = (1u64 << i) as f64;
+                let frac = ((rank - cum) as f64 + 0.5) / c as f64;
+                return lo + (hi - lo) * frac;
+            }
+            cum += c;
+        }
+        (1u64 << (HIST_BUCKETS - 1)) as f64
+    }
+
+    /// `{count, sum_ns, mean_ns, p50_ns, p90_ns, p99_ns}`.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("count", Json::num(self.count() as f64)),
+            ("sum_ns", Json::num(self.sum() as f64)),
+            ("mean_ns", Json::num(self.mean_ns())),
+            ("p50_ns", Json::num(self.quantile(0.50))),
+            ("p90_ns", Json::num(self.quantile(0.90))),
+            ("p99_ns", Json::num(self.quantile(0.99))),
+        ])
+    }
+}
+
+/// Named instrument store.  Looking an instrument up (or creating it
+/// on first use) locks the per-kind map; recording through the
+/// returned `Arc` never does.
+#[derive(Debug, Default)]
+pub struct Registry {
+    counters: Mutex<BTreeMap<String, Arc<Counter>>>,
+    gauges: Mutex<BTreeMap<String, Arc<Gauge>>>,
+    histograms: Mutex<BTreeMap<String, Arc<Histogram>>>,
+}
+
+fn obj_owned(pairs: Vec<(String, Json)>) -> Json {
+    Json::Obj(pairs.into_iter().collect())
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        let mut g = self.counters.lock().unwrap_or_else(PoisonError::into_inner);
+        Arc::clone(g.entry(name.to_string()).or_default())
+    }
+
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        let mut g = self.gauges.lock().unwrap_or_else(PoisonError::into_inner);
+        Arc::clone(g.entry(name.to_string()).or_default())
+    }
+
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        let mut g = self.histograms.lock().unwrap_or_else(PoisonError::into_inner);
+        Arc::clone(g.entry(name.to_string()).or_default())
+    }
+
+    /// Total registered instruments across all three kinds.
+    pub fn len(&self) -> usize {
+        let c = self.counters.lock().unwrap_or_else(PoisonError::into_inner).len();
+        let g = self.gauges.lock().unwrap_or_else(PoisonError::into_inner).len();
+        let h = self.histograms.lock().unwrap_or_else(PoisonError::into_inner).len();
+        c + g + h
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// `{counters: {name: n}, gauges: {name: v}, histograms: {name: {...}}}`.
+    pub fn to_json(&self) -> Json {
+        let counters: Vec<(String, Json)> = self
+            .counters
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .iter()
+            .map(|(k, v)| (k.clone(), Json::num(v.get() as f64)))
+            .collect();
+        let gauges: Vec<(String, Json)> = self
+            .gauges
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .iter()
+            .map(|(k, v)| (k.clone(), Json::num(v.get())))
+            .collect();
+        let histograms: Vec<(String, Json)> = self
+            .histograms
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .iter()
+            .map(|(k, v)| (k.clone(), v.to_json()))
+            .collect();
+        Json::obj(vec![
+            ("counters", obj_owned(counters)),
+            ("gauges", obj_owned(gauges)),
+            ("histograms", obj_owned(histograms)),
+        ])
+    }
+}
+
+/// The process-wide registry every instrumented call site records into.
+pub fn global() -> &'static Registry {
+    static REG: OnceLock<Registry> = OnceLock::new();
+    REG.get_or_init(Registry::new)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::pool::{Task, ThreadPool};
+    use crate::util::bench::stats_of;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn histogram_percentiles_track_exact_stats() {
+        let mut rng = Rng::new(7);
+        let h = Histogram::new();
+        let mut samples = Vec::new();
+        for _ in 0..4000 {
+            // Log-uniform latencies spanning 100ns..100ms.
+            let ns = 10f64.powf(2.0 + 6.0 * (rng.below(1_000_000) as f64 / 1e6));
+            samples.push(ns * 1e-9);
+            h.record(ns as u64);
+        }
+        let s = stats_of(&samples);
+        for (q, exact_s) in [(0.5, s.p50_s), (0.9, s.p90_s)] {
+            let est_ns = h.quantile(q);
+            let exact_ns = exact_s * 1e9;
+            assert!(
+                est_ns >= exact_ns / 2.05 && est_ns <= exact_ns * 2.05,
+                "q={q}: bucketed estimate {est_ns} vs exact {exact_ns}"
+            );
+        }
+    }
+
+    #[test]
+    fn histogram_empty_and_monotone() {
+        let h = Histogram::new();
+        assert_eq!(h.quantile(0.5), 0.0);
+        assert_eq!(h.mean_ns(), 0.0);
+        for v in [0u64, 1, 5, 100, 1000, 100_000] {
+            h.record(v);
+        }
+        let (a, b, c) = (h.quantile(0.5), h.quantile(0.9), h.quantile(0.99));
+        assert!(a <= b && b <= c, "{a} {b} {c}");
+        assert!(h.mean_ns() > 0.0);
+        assert_eq!(h.count(), 6);
+        assert_eq!(h.sum(), 101_106);
+    }
+
+    #[test]
+    fn concurrent_updates_lose_nothing() {
+        let reg = Registry::new();
+        let c = reg.counter("t.count");
+        let h = reg.histogram("t.hist");
+        let pool = ThreadPool::new(4);
+        let tasks: Vec<Task> = (0..8u64)
+            .map(|s| {
+                let c = Arc::clone(&c);
+                let h = Arc::clone(&h);
+                let task: Task = Box::new(move || {
+                    for i in 0..10_000u64 {
+                        c.incr();
+                        h.record(s * 10_000 + i);
+                    }
+                });
+                task
+            })
+            .collect();
+        pool.scope(tasks);
+        assert_eq!(c.get(), 80_000);
+        assert_eq!(h.count(), 80_000);
+        let expected: u64 = (0..80_000u64).sum();
+        assert_eq!(h.sum(), expected);
+    }
+
+    #[test]
+    fn registry_deduplicates_by_name() {
+        let reg = Registry::new();
+        reg.counter("a").add(2);
+        reg.counter("a").add(3);
+        assert_eq!(reg.counter("a").get(), 5);
+        reg.gauge("g").set(1.5);
+        assert_eq!(reg.gauge("g").get(), 1.5);
+        assert_eq!(reg.len(), 2);
+        assert!(!reg.is_empty());
+    }
+}

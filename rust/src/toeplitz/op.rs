@@ -173,6 +173,7 @@ impl SpectralPlan {
     /// contents are fully overwritten, so results are bitwise
     /// identical whichever thread's arena is used.
     pub fn apply_with(&self, x: &[f32], scratch: &mut OpScratch) -> Vec<f32> {
+        let _span = crate::telemetry::span(&crate::telemetry::SPAN_FFT_FORWARD);
         let n = self.n;
         assert_eq!(x.len(), n, "SpectralPlan size mismatch: x has {} values, plan n={n}", x.len());
         let buf = &mut scratch.cbuf;
@@ -612,6 +613,15 @@ impl Dispatch {
     /// backend, and whether sharding the batch across `q.threads`
     /// workers beats running it serially.
     pub fn plan(&self, q: &DispatchQuery) -> (BackendKind, bool) {
+        let (kind, parallel, _) = self.plan_costed(q);
+        (kind, parallel)
+    }
+
+    /// [`plan`](Self::plan) plus the winning plan's predicted total ns
+    /// for the whole batch — the number the telemetry dispatch audit
+    /// compares against measured wall time.
+    pub fn plan_costed(&self, q: &DispatchQuery) -> (BackendKind, bool, f64) {
+        let _span = crate::telemetry::span(&crate::telemetry::SPAN_DISPATCH_DECIDE);
         let rows = q.batch.max(1);
         let mut best: Option<(BackendKind, f64, bool)> = None;
         for (kind, row_ns, scalable) in self.candidates(q) {
@@ -623,8 +633,24 @@ impl Dispatch {
                 best = Some((kind, cost, parallel));
             }
         }
-        let (kind, _, parallel) = best.expect("dense is always eligible");
-        (kind, parallel)
+        let (kind, cost, parallel) = best.expect("dense is always eligible");
+        (kind, parallel, cost)
+    }
+
+    /// Predicted total ns for executing `q.batch` rows on a **given**
+    /// backend (taking the cheaper of serial and sharded), or `None`
+    /// when the backend is ineligible at this shape.  Used by the
+    /// telemetry audit to price forced backends.
+    pub fn predicted_ns(&self, kind: BackendKind, q: &DispatchQuery) -> Option<f64> {
+        let rows = q.batch.max(1);
+        self.candidates(q)
+            .into_iter()
+            .find(|(k, _, _)| *k == kind)
+            .map(|(_, row_ns, scalable)| {
+                let serial = row_ns * rows as f64;
+                let sharded = self.cost.sharded_cost(row_ns, rows, q.threads, scalable);
+                serial.min(sharded)
+            })
     }
 
     /// The cheapest eligible backend for this shape (never `Auto`).
@@ -1038,6 +1064,32 @@ mod tests {
         assert!(!d.should_shard(BackendKind::Freq, &big), "ineligible kind answers serial");
         // threads=1 never shards.
         assert!(!d.should_shard(BackendKind::Fft, &DispatchQuery { threads: 1, ..big }));
+    }
+
+    #[test]
+    fn plan_costed_and_predicted_ns_agree_with_plan() {
+        let d = Dispatch::default();
+        for q in [
+            DispatchQuery { n: 16, r: 0, w: 0, causal: false, batch: 2, threads: 8 },
+            DispatchQuery { n: 4096, r: 64, w: 9, causal: false, batch: 8, threads: 4 },
+            DispatchQuery { n: 512, r: 16, w: 5, causal: true, batch: 4, threads: 2 },
+        ] {
+            let (kind, parallel, cost) = d.plan_costed(&q);
+            assert_eq!((kind, parallel), d.plan(&q), "plan_costed must match plan");
+            assert!(cost > 0.0 && cost.is_finite());
+            // The winner's cost equals its own predicted_ns, and no
+            // eligible backend predicts cheaper.
+            assert_eq!(d.predicted_ns(kind, &q), Some(cost));
+            for k in [BackendKind::Dense, BackendKind::Fft, BackendKind::Ski, BackendKind::Freq] {
+                if let Some(p) = d.predicted_ns(k, &q) {
+                    assert!(p >= cost, "{k:?} predicted {p} under winner {cost}");
+                }
+            }
+        }
+        // Ineligible backends price as None.
+        let q = DispatchQuery { n: 64, r: 0, w: 0, causal: false, batch: 1, threads: 1 };
+        assert_eq!(d.predicted_ns(BackendKind::Freq, &q), None);
+        assert_eq!(d.predicted_ns(BackendKind::Ski, &q), None);
     }
 
     #[test]

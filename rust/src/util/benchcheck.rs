@@ -314,6 +314,18 @@ pub fn verdict(base: &Baseline, report: &Report, allow_missing: bool) -> bool {
     report.regressions.is_empty() && (allow_missing || report.missing.is_empty())
 }
 
+/// Gate a telemetry stats snapshot (see [`crate::telemetry`]): the
+/// file must parse and pass [`crate::telemetry::check_snapshot`] —
+/// core series present, no missing or non-finite numbers.  Used by
+/// `ski-tnn bench-check --stats-snapshot <path>` so CI refuses runs
+/// whose observability output silently degraded.
+pub fn check_stats_snapshot(path: &str) -> Result<()> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading stats snapshot {path}"))?;
+    let doc = json::parse(&text).map_err(|e| anyhow!("{path}: {e}"))?;
+    crate::telemetry::check_snapshot(&doc).with_context(|| format!("stats snapshot {path}"))
+}
+
 /// CLI entry: load artifacts from `dir`, compare against (or, with
 /// `update`, rewrite) the baseline at `baseline_path`.  Returns
 /// whether the gate passed; prints the report either way.
@@ -555,5 +567,39 @@ mod tests {
     fn calibration_is_positive_and_stable_order() {
         let a = calibrate_ns();
         assert!(a > 0.0 && a.is_finite());
+    }
+
+    #[test]
+    fn stats_snapshot_gate_refuses_incomplete_files() {
+        let dir = std::env::temp_dir();
+        let pid = std::process::id();
+        let bad = dir.join(format!("ski_tnn_gate_bad_{pid}.json"));
+        std::fs::write(&bad, "{\"version\": 1}").unwrap();
+        let err = check_stats_snapshot(bad.to_str().unwrap()).unwrap_err();
+        assert!(format!("{err:#}").contains("stats snapshot"), "{err:#}");
+
+        // A snapshot with the core series — span histogram, pool
+        // gauge, audit rows — passes.
+        let reg = crate::telemetry::Registry::default();
+        reg.histogram("span.queue_wait").record(1_000);
+        reg.gauge("pool.workers").set(2.0);
+        let audit = crate::telemetry::DispatchAudit::new();
+        audit.record(crate::telemetry::AuditRow {
+            n: 64,
+            r: 8,
+            w: 9,
+            causal: false,
+            threads: 1,
+            rows: 4,
+            backend: "fft",
+            predicted_ns: 1000.0,
+            measured_ns: 1200.0,
+        });
+        let good = dir.join(format!("ski_tnn_gate_good_{pid}.json"));
+        std::fs::write(&good, json::write(&crate::telemetry::snapshot_json(&reg, &audit)))
+            .unwrap();
+        check_stats_snapshot(good.to_str().unwrap()).unwrap();
+        let _ = std::fs::remove_file(&bad);
+        let _ = std::fs::remove_file(&good);
     }
 }

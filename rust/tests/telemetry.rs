@@ -1,0 +1,136 @@
+//! End-to-end telemetry: real serving and generation runs must leave
+//! a snapshot behind that passes the CI completeness gate.
+//!
+//! Lives in its own test binary (own process) because these tests flip
+//! the process-wide telemetry enable and assert on the **global**
+//! registry/audit ring — isolation the library unit tests, which share
+//! one process, deliberately avoid by using local instances.
+
+use std::sync::Arc;
+
+use ski_tnn::runtime::ThreadPool;
+use ski_tnn::server::{audit_exec, serve_toeplitz_factory, Batcher, ServerConfig};
+use ski_tnn::telemetry;
+use ski_tnn::toeplitz::{
+    build_op, gaussian_kernel, BackendKind, Dispatch, DispatchQuery, ToeplitzKernel, ToeplitzOp,
+};
+use ski_tnn::util::json;
+
+/// A bucketed substrate serve run with the dispatch audit wrapped in
+/// (the `ski-tnn serve --backend auto --stats-json` path) must emit a
+/// snapshot carrying every core series: span percentiles, the pool
+/// gauge, and predicted-vs-measured audit rows — both in memory and
+/// through the atomic-rename file write.
+#[test]
+fn serve_substrate_emits_complete_snapshot() {
+    telemetry::set_enabled(true);
+    let n = 128usize;
+    let threads = 2usize;
+    let r = 16usize;
+    let w = 9usize;
+    let dispatch = Dispatch::default();
+    let rank_for = move |width: usize| (width * r / n).max(2);
+    let plan_for = move |width: usize| -> (BackendKind, bool) {
+        dispatch.plan(&DispatchQuery {
+            n: width,
+            r: rank_for(width),
+            w,
+            causal: false,
+            batch: 8,
+            threads,
+        })
+    };
+    let make_op = move |width: usize| -> Arc<dyn ToeplitzOp> {
+        let (kind, _) = plan_for(width);
+        let kernel =
+            ToeplitzKernel::from_fn(width, |lag| gaussian_kernel(lag as f64, width as f64 / 8.0));
+        let kernel = if kind == BackendKind::Freq { kernel.causal() } else { kernel };
+        Arc::from(build_op(&kernel, kind, rank_for(width), w))
+    };
+    let pool = Arc::new(ThreadPool::new(threads));
+    let batcher = Batcher::new(ServerConfig {
+        max_batch: 8,
+        n,
+        max_wait: std::time::Duration::from_millis(1),
+        queue_depth: 64,
+        buckets: vec![32],
+    });
+    let handle = batcher.handle();
+    let client = std::thread::spawn(move || {
+        for i in 0..48usize {
+            let len = 8 + (i * 7) % (n - 8);
+            let ids: Vec<i32> = (0..len).map(|j| (j % 256) as i32).collect();
+            handle.infer(ids).expect("infer");
+        }
+    });
+    let exec = audit_exec(
+        serve_toeplitz_factory(make_op, pool),
+        dispatch,
+        plan_for,
+        rank_for,
+        w,
+        threads,
+    );
+    let stats = batcher.run(exec).expect("serve loop");
+    client.join().unwrap();
+    assert_eq!(stats.requests, 48);
+
+    let doc = telemetry::snapshot();
+    telemetry::check_snapshot(&doc).expect("live snapshot must pass the CI gate");
+    let qw = doc
+        .get("histograms")
+        .and_then(|h| h.get("span.queue_wait"))
+        .expect("queue-wait series present");
+    let pct = |k: &str| qw.get(k).and_then(json::Json::as_f64).unwrap();
+    assert!(pct("p50_ns") <= pct("p99_ns"), "percentiles must be ordered");
+    let rows = telemetry::global_audit().rows();
+    assert!(!rows.is_empty(), "audit ring captured executed batches");
+    assert!(rows.iter().all(|row| row.measured_ns > 0.0), "measured wall times are positive");
+
+    // The file path a `--stats-json` run takes: atomic-rename write,
+    // then re-parse and re-gate what actually landed on disk.
+    let path = std::env::temp_dir().join(format!("ski_tnn_e2e_{}.json", std::process::id()));
+    telemetry::write_snapshot(&path).expect("write snapshot");
+    let text = std::fs::read_to_string(&path).expect("snapshot file readable");
+    let _ = std::fs::remove_file(&path);
+    let ondisk = json::parse(&text).expect("snapshot parses");
+    telemetry::check_snapshot(&ondisk).expect("on-disk snapshot must pass the CI gate");
+}
+
+/// One generation through the continuous-batching scheduler records
+/// the decode-tick span and the token counter.
+#[test]
+fn generate_ticks_record_decode_span() {
+    use ski_tnn::decode::{DecodeModel, DecodeModelConfig, DecodePolicy};
+    use ski_tnn::server::{GenConfig, GenParams, GenScheduler};
+
+    telemetry::set_enabled(true);
+    let model = DecodeModel::new(DecodeModelConfig {
+        d: 8,
+        blocks: 1,
+        n: 32,
+        policy: DecodePolicy { rank: 8, max_rel_residual: 0.05 },
+        seed: 3,
+        ..DecodeModelConfig::default()
+    });
+    let before_ticks = telemetry::global().histogram("span.decode_tick").count();
+    let before_tokens = telemetry::global().counter("decode.tokens").get();
+    let sched = GenScheduler::new(GenConfig {
+        max_sessions: 2,
+        queue_depth: 8,
+        max_new_cap: 16,
+        threads: 1,
+    });
+    let handle = sched.handle();
+    let client = std::thread::spawn(move || {
+        handle.generate(vec![1, 2, 3], GenParams { max_new: 5, ..GenParams::default() })
+    });
+    let stats = sched.run(&model).expect("scheduler run");
+    let resp = client.join().unwrap().expect("generate");
+    assert_eq!(resp.tokens.len(), 5);
+    assert!(stats.ticks >= 5, "at least one tick per generated token");
+    let ticks = telemetry::global().histogram("span.decode_tick").count() - before_ticks;
+    let tokens = telemetry::global().counter("decode.tokens").get() - before_tokens;
+    assert!(ticks >= 5, "decode_tick span recorded {ticks} ticks, want >= 5");
+    assert!(tokens >= 5, "decode.tokens counted {tokens}, want >= 5");
+}
