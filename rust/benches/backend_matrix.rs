@@ -7,10 +7,14 @@
 //! compare dense / fft / ski (r = n/16, the paper's §3.2 regime); the
 //! causal cells compare dense / freq (Hilbert-built spectrum, §3.3).
 //! A second table sweeps the **sharded** `apply_batch` at the largest
-//! size across worker counts (`--threads 1,2,4`): every cell's output
-//! is asserted bitwise identical to the serial reference before being
-//! timed, so the speedup column is the tentpole claim — parallel rows,
-//! identical bits.
+//! size across worker counts (`--threads 1,2,4`), timing both the
+//! per-row ABI and the flat zero-allocation ABI
+//! (`apply_batch_flat_sharded`): every cell's output is asserted
+//! bitwise identical to the serial reference before being timed, so
+//! the speedup column is the tentpole claim — parallel rows, identical
+//! bits.  The run also asserts the `fft.real_fast_path` telemetry
+//! counter went nonzero: the spectral cells must actually be riding
+//! the r2c engine.
 //!
 //! Emits `BENCH_backend_matrix.json` (median + p90 ns/op per cell) so
 //! the perf trajectory — and the calibrated crossovers quoted in the
@@ -23,8 +27,8 @@ use std::time::Duration;
 
 use ski_tnn::runtime::ThreadPool;
 use ski_tnn::toeplitz::{
-    apply_batch_sharded, build_op, gaussian_kernel, BackendKind, Dispatch, DispatchQuery, FftOp,
-    ToeplitzKernel, ToeplitzOp,
+    apply_batch_flat_sharded, apply_batch_sharded, build_op, gaussian_kernel, BackendKind,
+    Dispatch, DispatchQuery, FftOp, ToeplitzKernel, ToeplitzOp,
 };
 use ski_tnn::util::bench::{fmt_secs, quick_mode, write_bench_json, Bencher, Table};
 use ski_tnn::util::cli::Args;
@@ -44,6 +48,9 @@ fn rel_err(got: &[f32], want: &[f32]) -> f64 {
 fn main() {
     let args = Args::parse(false);
     let quick = quick_mode();
+    // Telemetry on for the whole run: the real-FFT fast-path counter
+    // asserted at the end only ticks while telemetry is enabled.
+    ski_tnn::telemetry::set_enabled(true);
     // Non-pow2 n = 1000 rides in both modes: the length-agnostic
     // serving path is gated by the same baseline as the pow2 rows.
     let default_sizes: &[&str] = if quick {
@@ -205,13 +212,22 @@ fn main() {
     headers.push("speedup".into());
     let header_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
     let mut bt = Table::new(
-        &format!("sharded apply_batch: median batch time (n = {bn}, batch = {batch_rows})"),
+        &format!(
+            "sharded apply_batch: median batch time, per-row / flat ABI \
+             (n = {bn}, batch = {batch_rows})"
+        ),
         &header_refs,
     );
     for kind in [BackendKind::Dense, BackendKind::Fft, BackendKind::Ski, BackendKind::Freq] {
         let k = if kind == BackendKind::Freq { &causal_kernel } else { &kernel };
         let op = build_op(k, kind, r, w);
         let reference = op.apply_batch(&xs);
+        // Flat-ABI twin of the same batch: rows packed in one buffer,
+        // asserted bitwise equal to the per-row reference per cell.
+        let xs_flat: Vec<f32> = xs.iter().flat_map(|row| row.iter().copied()).collect();
+        let reference_flat: Vec<f32> =
+            reference.iter().flat_map(|row| row.iter().copied()).collect();
+        let mut out_flat = vec![0.0f32; batch_rows * bn];
         let mut cells = vec![op.name().to_string()];
         let mut meds: Vec<(usize, f64)> = Vec::new();
         for &threads in &threads_list {
@@ -223,24 +239,40 @@ fn main() {
                 "{} sharded output diverged from serial at {threads} threads",
                 op.name()
             );
+            out_flat.fill(f32::NAN);
+            apply_batch_flat_sharded(op.as_ref(), &xs_flat, batch_rows, &mut out_flat, &pool);
+            assert_eq!(
+                out_flat,
+                reference_flat,
+                "{} flat sharded output diverged from per-row at {threads} threads",
+                op.name()
+            );
             let s = bench.run(|| {
                 std::hint::black_box(apply_batch_sharded(op.as_ref(), &xs, &pool));
             });
-            meds.push((threads, s.p50_s));
-            cells.push(fmt_secs(s.p50_s));
-            rows.push(Json::obj(vec![
-                ("n", Json::num(bn as f64)),
-                ("r", Json::num(r as f64)),
-                ("w", Json::num(w as f64)),
-                ("backend", Json::str(op.name())),
-                ("batch", Json::num(batch_rows as f64)),
-                ("threads", Json::num(threads as f64)),
-                ("med_ns", Json::num(1e9 * s.p50_s)),
-                ("p90_ns", Json::num(1e9 * s.p90_s)),
-            ]));
+            let s_flat = bench.run(|| {
+                apply_batch_flat_sharded(op.as_ref(), &xs_flat, batch_rows, &mut out_flat, &pool);
+                std::hint::black_box(&mut out_flat);
+            });
+            meds.push((threads, s_flat.p50_s));
+            cells.push(format!("{} / {}", fmt_secs(s.p50_s), fmt_secs(s_flat.p50_s)));
+            for (abi, stats) in [("per_row", &s), ("flat", &s_flat)] {
+                rows.push(Json::obj(vec![
+                    ("n", Json::num(bn as f64)),
+                    ("r", Json::num(r as f64)),
+                    ("w", Json::num(w as f64)),
+                    ("backend", Json::str(op.name())),
+                    ("abi", Json::str(abi)),
+                    ("batch", Json::num(batch_rows as f64)),
+                    ("threads", Json::num(threads as f64)),
+                    ("med_ns", Json::num(1e9 * stats.p50_s)),
+                    ("p90_ns", Json::num(1e9 * stats.p90_s)),
+                ]));
+            }
         }
-        // Speedup = fewest-threads median over most-threads median,
-        // independent of the order --threads was given in.
+        // Speedup = fewest-threads median over most-threads median on
+        // the flat ABI (the serve path), independent of the order
+        // --threads was given in.
         let lo = meds.iter().min_by_key(|(t, _)| *t).expect("at least one thread count");
         let hi = meds.iter().max_by_key(|(t, _)| *t).expect("at least one thread count");
         cells.push(format!("{:.2}×", lo.1 / hi.1.max(1e-12)));
@@ -358,6 +390,13 @@ fn main() {
         }
     }
     pt.print();
+
+    // Every spectral cell above ran even-length transforms, so the
+    // r2c fast path must have fired — a zero counter means the real
+    // engine silently fell back to full complex transforms.
+    let real_fast = ski_tnn::telemetry::global().counter("fft.real_fast_path").get();
+    assert!(real_fast > 0, "fft.real_fast_path counter stayed zero across the spectral sweep");
+    println!("fft.real_fast_path transforms this run: {real_fast}");
 
     match write_bench_json("backend_matrix", rows) {
         Ok(path) => println!("wrote {path}"),

@@ -21,10 +21,10 @@
 //! only has to fill the same arrays.
 
 use crate::data::VOCAB;
-use crate::runtime::pool::{global_pool, ThreadPool};
+use crate::runtime::pool::{global_pool, Task, ThreadPool};
 use crate::toeplitz::{
-    apply_causal_plan_with, apply_causal_taps, with_scratch, BackendKind, CostModel, SpectralPlan,
-    ToeplitzKernel,
+    apply_causal_plan_into, apply_causal_taps, with_scratch, BackendKind, CostModel, OpScratch,
+    SpectralPlan, ToeplitzKernel,
 };
 use crate::util::rng::Rng;
 
@@ -167,40 +167,66 @@ fn matvec(m: &[f32], x: &[f32], d: usize) -> Vec<f32> {
     (0..d).map(|i| (0..d).map(|j| m[i * d + j] * x[j]).sum()).collect()
 }
 
-/// Per-channel causal token-mix columns of the full-context oracle:
-/// `cols[c][t]` = channel `c`'s convolution output at position `t`.
-/// Channels are independent, so they shard across `pool` (the model's
-/// own when `cfg.threads >= 1`, else the process-global one) —
-/// spectral applies run on each worker's own scratch arena
-/// ([`with_scratch`]); short prefixes stay serial (the per-shard
-/// dispatch overhead would dominate).  Either way every channel runs
-/// exactly the same code, so the result is bitwise identical for any
-/// worker count.
-fn oracle_cols(
-    block: &Block,
-    xs: &[Vec<f32>],
-    use_spectral: bool,
-    pool: &ThreadPool,
-) -> Vec<Vec<f32>> {
+/// Per-channel causal token-mix columns of the full-context oracle,
+/// packed row-major into one flat `(d, t_len)` buffer:
+/// `cols[c * t_len + t]` = channel `c`'s convolution output at
+/// position `t`.  Channels are independent, so they shard across
+/// `pool` (the model's own when `cfg.threads >= 1`, else the
+/// process-global one) as **channel-aligned ranges** of the flat
+/// buffer — spectral applies run through each worker's own scratch
+/// arena ([`with_scratch`]) and write straight into their slice, so a
+/// warm spectral forward allocates only this one buffer.  Short
+/// prefixes stay serial (the per-shard dispatch overhead would
+/// dominate).  Either way every channel runs exactly the same code, so
+/// the result is bitwise identical for any worker count.
+fn oracle_cols(block: &Block, xs: &[Vec<f32>], use_spectral: bool, pool: &ThreadPool) -> Vec<f32> {
     let d = block.taps.len();
     let t_len = xs.len();
-    let col_for = |c: usize| -> Vec<f32> {
-        let series: Vec<f32> = xs.iter().map(|row| row[c]).collect();
-        if use_spectral {
-            with_scratch(|s| apply_causal_plan_with(&block.spectral[c], &series, s))
-        } else {
-            apply_causal_taps(&block.taps[c], &series, BackendKind::Dense)
-        }
-    };
-    if pool.threads().min(d) <= 1 || t_len < 32 {
-        return (0..d).map(col_for).collect();
+    let mut cols = vec![0.0f32; d * t_len];
+    if t_len == 0 {
+        return cols;
     }
-    let mut cols: Vec<Vec<f32>> = vec![Vec::new(); d];
-    pool.shard_mut(&mut cols, |start, shard_out| {
-        for (j, slot) in shard_out.iter_mut().enumerate() {
-            *slot = col_for(start + j);
+    // Gather channel `c`'s time series into the arena's row buffer and
+    // convolve it straight into its column slice (`mem::take` lets the
+    // spectral plan borrow the rest of the scratch).
+    let col_into = |c: usize, out: &mut [f32], s: &mut OpScratch| {
+        let mut series = std::mem::take(&mut s.row);
+        series.clear();
+        series.extend(xs.iter().map(|row| row[c]));
+        if use_spectral {
+            apply_causal_plan_into(&block.spectral[c], &series, out, s);
+        } else {
+            out.copy_from_slice(&apply_causal_taps(&block.taps[c], &series, BackendKind::Dense));
         }
-    });
+        s.row = series;
+    };
+    let shards = pool.threads().min(d);
+    if shards <= 1 || t_len < 32 {
+        with_scratch(|s| {
+            for (c, out) in cols.chunks_mut(t_len).enumerate() {
+                col_into(c, out, s);
+            }
+        });
+        return cols;
+    }
+    let chunk = d.div_ceil(shards);
+    let tasks: Vec<Task> = cols
+        .chunks_mut(chunk * t_len)
+        .enumerate()
+        .map(|(s_idx, shard)| {
+            let start = s_idx * chunk;
+            let col_into = &col_into;
+            let task: Task = Box::new(move || {
+                with_scratch(|s| {
+                    for (j, out) in shard.chunks_mut(t_len).enumerate() {
+                        col_into(start + j, out, s);
+                    }
+                })
+            });
+            task
+        })
+        .collect();
+    pool.scope(tasks);
     cols
 }
 
@@ -355,13 +381,14 @@ impl DecodeModel {
             };
         let pool = self.oracle_pool();
         for block in &self.blocks {
-            // cols[c][t]: channel c's token-mix output — channels are
-            // independent, so they shard across the pool (bitwise
-            // identical to the serial loop for any worker count).
+            // cols[c * t_len + t]: channel c's token-mix output —
+            // channels are independent, so they shard across the pool
+            // (bitwise identical to the serial loop for any worker
+            // count).
             let cols = oracle_cols(block, &xs, use_spectral, pool);
             for t in 0..t_len {
                 let g = matvec(&block.gate, &xs[t], d);
-                let v: Vec<f32> = (0..d).map(|c| cols[c][t] * sigmoid(g[c])).collect();
+                let v: Vec<f32> = (0..d).map(|c| cols[c * t_len + t] * sigmoid(g[c])).collect();
                 let h = matvec(&block.mix, &v, d);
                 for c in 0..d {
                     xs[t][c] += h[c].tanh();

@@ -19,8 +19,22 @@
 //! [`fft`]/[`ifft`]/[`rfft`]/[`irfft`] wrappers go through the cache
 //! and now accept any length.  [`good_conv_size`] picks the cheapest
 //! 5-smooth transform length ≥ a bound — how the Toeplitz circulant
-//! plans avoid ever paying Bluestein — and [`fft_work_units`] is the
-//! cost-model hook that prices an actual factorization.
+//! plans avoid ever paying Bluestein — and [`fft_work_units`] /
+//! [`rfft_work_units`] are the cost-model hooks that price an actual
+//! factorization.
+//!
+//! ## Real-input fast path
+//!
+//! Every transform in this crate's hot paths is real-valued, so
+//! [`RealFftPlan`] adds the standard r2c half-complex packing: an even
+//! length n packs its n reals into n/2 complex points, runs the
+//! **half-length** complex plan, and unpacks to the n/2+1 non-redundant
+//! bins with an O(n) split/twiddle post-pass — about half the
+//! butterfly work and memory traffic of transforming a zero-padded
+//! complex buffer.  Odd lengths fall back to the full complex engine
+//! (they only arise from `good_conv_size` at tiny n).  Each packed
+//! transform bumps the `fft.real_fast_path` counter, making the
+//! discount observable in stats snapshots.
 //!
 //! ## Plan-cache memory model
 //!
@@ -50,6 +64,9 @@ static PLAN_CACHE_HIT: LazyCounter = LazyCounter::new("fft.plan_cache.hit");
 static PLAN_CACHE_MISS: LazyCounter = LazyCounter::new("fft.plan_cache.miss");
 /// Distinct sizes resident in the process-wide map.
 static PLAN_CACHE_SIZE: LazyGauge = LazyGauge::new("fft.plan_cache.size");
+/// Transforms served by the packed r2c/c2r fast path (one per
+/// direction per apply — a spectral apply at even m counts two).
+static REAL_FAST_PATH: LazyCounter = LazyCounter::new("fft.real_fast_path");
 
 /// Minimal complex number (no external num crate offline).
 #[derive(Debug, Clone, Copy, PartialEq, Default)]
@@ -154,6 +171,20 @@ pub fn fft_work_units(m: usize) -> f64 {
     units
 }
 
+/// Modeled butterfly work of one **real-input** `m`-point transform
+/// through [`RealFftPlan`]: even lengths run one half-length complex
+/// transform plus the O(m) split/twiddle pass (priced like one extra
+/// radix-2 level); odd lengths fall back to the full complex engine.
+/// The dispatch cost model uses this to give spectral backends their
+/// r2c discount.
+pub fn rfft_work_units(m: usize) -> f64 {
+    if m >= 2 && m % 2 == 0 {
+        fft_work_units(m / 2) + 0.5 * m as f64
+    } else {
+        fft_work_units(m)
+    }
+}
+
 /// The cheapest 5-smooth (2^a·3^b·5^c) transform length `≥ min` by
 /// [`fft_work_units`] — never worse than `min.next_power_of_two()`,
 /// which is itself a candidate.  Circulant-embedding plans use this to
@@ -219,6 +250,14 @@ fn bit_reverse_permute(buf: &mut [Complex]) {
 
 /// The iterative radix-2 kernel (the pre-existing hot loop), over a
 /// caller-supplied half-size twiddle table for `buf.len()`.
+///
+/// The butterfly is written over split lo/hi half-slices with scalar
+/// re/im arithmetic and the inverse's twiddle conjugation hoisted to a
+/// sign outside the loop, so the inner loop is branch-free
+/// straight-line code the autovectorizer can keep lanes full on.  The
+/// float operations are value-for-value those of the classic
+/// `u ± w·v` form, so outputs are bitwise identical to the original
+/// branching loop.
 fn pow2_fft(buf: &mut [Complex], tw: &[Complex], inverse: bool) {
     let n = buf.len();
     debug_assert!(n.is_power_of_two());
@@ -226,20 +265,22 @@ fn pow2_fft(buf: &mut [Complex], tw: &[Complex], inverse: bool) {
         return;
     }
     bit_reverse_permute(buf);
+    let im_sign = if inverse { -1.0 } else { 1.0 };
     let mut len = 2;
     while len <= n {
         let stride = n / len;
+        let half = len / 2;
         let mut i = 0;
         while i < n {
-            for j in 0..len / 2 {
-                let mut w = tw[j * stride];
-                if inverse {
-                    w = w.conj();
-                }
-                let u = buf[i + j];
-                let v = buf[i + j + len / 2].mul(w);
-                buf[i + j] = u.add(v);
-                buf[i + j + len / 2] = u.sub(v);
+            let (lo, hi) = buf[i..i + len].split_at_mut(half);
+            for (j, (l, h)) in lo.iter_mut().zip(hi.iter_mut()).enumerate() {
+                let w = tw[j * stride];
+                let (w_re, w_im) = (w.re, im_sign * w.im);
+                let (u_re, u_im) = (l.re, l.im);
+                let v_re = h.re * w_re - h.im * w_im;
+                let v_im = h.re * w_im + h.im * w_re;
+                *l = Complex { re: u_re + v_re, im: u_im + v_im };
+                *h = Complex { re: u_re - v_re, im: u_im - v_im };
             }
             i += len;
         }
@@ -570,14 +611,222 @@ pub fn ifft(buf: &mut [Complex]) {
     FftPlan::shared(buf.len()).ifft(buf);
 }
 
+/// How a [`RealFftPlan`] runs one size.
+#[derive(Debug)]
+enum RealKind {
+    /// n ≤ 1: `X[0] = x[0]`.
+    Trivial,
+    /// Even n: pack n reals into n/2 complex points, transform at the
+    /// **half** length, split/twiddle unpack to the n/2+1 bins.  `tw`
+    /// holds `e^{-2πik/n}` for `k ≤ n/4` — all either direction needs,
+    /// since the unpack walks conjugate pairs `(k, n/2-k)`.
+    Packed { half: Arc<FftPlan>, tw: Vec<Complex> },
+    /// Odd n: full-length complex transform (only tiny `good_conv_size`
+    /// picks are odd — every serving grid in this crate is even).
+    Fallback(Arc<FftPlan>),
+}
+
+/// A real-input transform plan: `n` reals ↔ the `n/2+1` non-redundant
+/// spectrum bins, through caller-provided buffers with **zero steady-
+/// state allocations** (buffers grow once, then are reused).
+///
+/// Even sizes take the half-complex packed route — one complex
+/// transform at n/2 instead of n, ~2x less butterfly work and memory
+/// traffic (the `fft.real_fast_path` counter records each packed
+/// transform).  Like [`FftPlan`], a built plan is immutable and shared
+/// lock-free; [`RealFftPlan::shared`] memoises one per size per
+/// process (the inner complex plans come from [`FftPlan::shared`], so
+/// the existing `fft.plan_cache.*` counters account for them).
+#[derive(Debug)]
+pub struct RealFftPlan {
+    n: usize,
+    kind: RealKind,
+}
+
+impl RealFftPlan {
+    pub fn new(n: usize) -> RealFftPlan {
+        let kind = if n <= 1 {
+            RealKind::Trivial
+        } else if n % 2 == 0 {
+            RealKind::Packed { half: FftPlan::shared(n / 2), tw: twiddle_table(n, n / 4 + 1) }
+        } else {
+            RealKind::Fallback(FftPlan::shared(n))
+        };
+        RealFftPlan { n, kind }
+    }
+
+    /// The memoised per-process plan for size `n` (same two-level
+    /// cache discipline as [`FftPlan::shared`]: lock-free thread-local
+    /// front, process map behind it, plans built outside the lock).
+    pub fn shared(n: usize) -> Arc<RealFftPlan> {
+        thread_local! {
+            static LOCAL: std::cell::RefCell<HashMap<usize, Arc<RealFftPlan>>> =
+                std::cell::RefCell::new(HashMap::new());
+        }
+        LOCAL.with(|l| {
+            if let Some(p) = l.borrow().get(&n) {
+                return Arc::clone(p);
+            }
+            let p = RealFftPlan::shared_global(n);
+            l.borrow_mut().insert(n, Arc::clone(&p));
+            p
+        })
+    }
+
+    fn shared_global(n: usize) -> Arc<RealFftPlan> {
+        static CACHE: OnceLock<Mutex<HashMap<usize, Arc<RealFftPlan>>>> = OnceLock::new();
+        let cache = CACHE.get_or_init(|| Mutex::new(HashMap::new()));
+        if let Some(p) = cache.lock().unwrap().get(&n) {
+            return Arc::clone(p);
+        }
+        let built = Arc::new(RealFftPlan::new(n));
+        let mut g = cache.lock().unwrap();
+        Arc::clone(g.entry(n).or_insert(built))
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Number of non-redundant spectrum bins (`n/2 + 1`).
+    pub fn bins(&self) -> usize {
+        self.n / 2 + 1
+    }
+
+    /// Whether this size takes the packed half-complex fast path.
+    pub fn is_packed(&self) -> bool {
+        matches!(self.kind, RealKind::Packed { .. })
+    }
+
+    /// Which complex engine backs this plan (`trivial` | `pow2` |
+    /// `mixed` | `bluestein`) — for the packed route, the strategy of
+    /// the **half-length** plan every transform actually runs on.
+    pub fn strategy(&self) -> &'static str {
+        match &self.kind {
+            RealKind::Trivial => "trivial",
+            RealKind::Packed { half, .. } => half.strategy(),
+            RealKind::Fallback(plan) => plan.strategy(),
+        }
+    }
+
+    /// Forward r2c: the `n/2+1` non-redundant bins of the length-n real
+    /// signal `x`, into `out` (resized; no allocation once capacity is
+    /// warm).  `scratch` is only touched on the odd-length fallback.
+    pub fn rfft_into(&self, x: &[f32], out: &mut Vec<Complex>, scratch: &mut Vec<Complex>) {
+        assert_eq!(x.len(), self.n, "rfft_into: signal/plan size mismatch");
+        out.clear();
+        match &self.kind {
+            RealKind::Trivial => {
+                out.push(Complex::new(x.first().copied().unwrap_or(0.0) as f64, 0.0));
+            }
+            RealKind::Packed { half, tw } => {
+                let h = self.n / 2;
+                // Pack: z[j] = x[2j] + i·x[2j+1], half-length transform.
+                out.extend(x.chunks_exact(2).map(|p| Complex::new(p[0] as f64, p[1] as f64)));
+                out.push(Complex::ZERO); // bin h, filled by the unpack
+                half.fft(&mut out[..h]);
+                // Split/twiddle unpack, in place over the h+1 slots:
+                // with A/B the even/odd-sample half-spectra recovered
+                // from conjugate pairs of Z, X[k] = A + W^k·B and
+                // X[h-k] = conj(A - W^k·B), W = e^{-2πi/n}.
+                let z0 = out[0];
+                out[h] = Complex::new(z0.re - z0.im, 0.0);
+                out[0] = Complex::new(z0.re + z0.im, 0.0);
+                for k in 1..(h + 1) / 2 {
+                    let zk = out[k];
+                    let zhk = out[h - k];
+                    let a = Complex::new(0.5 * (zk.re + zhk.re), 0.5 * (zk.im - zhk.im));
+                    let b = Complex::new(0.5 * (zk.im + zhk.im), 0.5 * (zhk.re - zk.re));
+                    let t = tw[k].mul(b);
+                    out[k] = a.add(t);
+                    out[h - k] = a.sub(t).conj();
+                }
+                if h % 2 == 0 && h >= 2 {
+                    out[h / 2] = out[h / 2].conj();
+                }
+                REAL_FAST_PATH.incr();
+            }
+            RealKind::Fallback(plan) => {
+                scratch.clear();
+                scratch.extend(x.iter().map(|&v| Complex::new(v as f64, 0.0)));
+                plan.fft(scratch);
+                out.extend_from_slice(&scratch[..self.n / 2 + 1]);
+            }
+        }
+    }
+
+    /// Inverse c2r: reconstruct the length-n real signal from its
+    /// `n/2+1` bins (Hermitian symmetry implied) into `out`, which must
+    /// be exactly n long.  `scratch` holds the complex work buffer
+    /// (n/2 packed, n on the odd-length fallback); no allocation once
+    /// its capacity is warm.
+    pub fn irfft_into(&self, spec: &[Complex], out: &mut [f32], scratch: &mut Vec<Complex>) {
+        assert_eq!(spec.len(), self.bins(), "irfft_into: spectrum/size mismatch");
+        assert_eq!(out.len(), self.n, "irfft_into: output/plan size mismatch");
+        match &self.kind {
+            RealKind::Trivial => {
+                if let Some(o) = out.first_mut() {
+                    *o = spec[0].re as f32;
+                }
+            }
+            RealKind::Packed { half, tw } => {
+                let h = self.n / 2;
+                scratch.clear();
+                scratch.resize(h, Complex::ZERO);
+                // Rebuild the packed half-length spectrum Z from the
+                // real bins: Z[k] = A + i·B with A/B recovered from the
+                // conjugate pair (X[k], X[h-k]) — the exact inverse of
+                // the forward unpack, then one half-length IFFT (its
+                // 1/h normalisation is already the right one).
+                let x0 = spec[0].re;
+                let xh = spec[h].re;
+                scratch[0] = Complex::new(0.5 * (x0 + xh), 0.5 * (x0 - xh));
+                for k in 1..(h + 1) / 2 {
+                    let xk = spec[k];
+                    let xc = spec[h - k].conj();
+                    let a = xk.add(xc).scale(0.5);
+                    let b = tw[k].conj().mul(xk.sub(xc).scale(0.5));
+                    scratch[k] = Complex::new(a.re - b.im, a.im + b.re);
+                    scratch[h - k] = Complex::new(a.re + b.im, b.re - a.im);
+                }
+                if h % 2 == 0 && h >= 2 {
+                    scratch[h / 2] = spec[h / 2].conj();
+                }
+                half.ifft(scratch);
+                for (pair, z) in out.chunks_exact_mut(2).zip(scratch.iter()) {
+                    pair[0] = z.re as f32;
+                    pair[1] = z.im as f32;
+                }
+                REAL_FAST_PATH.incr();
+            }
+            RealKind::Fallback(plan) => {
+                let n = self.n;
+                scratch.clear();
+                scratch.resize(n, Complex::ZERO);
+                scratch[..spec.len()].copy_from_slice(spec);
+                for k in 1..n.div_ceil(2) {
+                    scratch[n - k] = spec[k].conj();
+                }
+                plan.ifft(scratch);
+                for (o, c) in out.iter_mut().zip(scratch.iter()) {
+                    *o = c.re as f32;
+                }
+            }
+        }
+    }
+}
+
 /// Real-input FFT: returns the n/2+1 non-redundant bins (any n ≥ 1).
+/// Even lengths ride the [`RealFftPlan`] half-complex fast path.
 pub fn rfft(x: &[f32]) -> Vec<Complex> {
     let n = x.len();
-    let mut buf: Vec<Complex> =
-        x.iter().map(|&v| Complex::new(v as f64, 0.0)).collect();
-    fft(&mut buf);
-    buf.truncate(n / 2 + 1);
-    buf
+    if n == 0 {
+        return Vec::new();
+    }
+    let mut out = Vec::new();
+    let mut scratch = Vec::new();
+    RealFftPlan::shared(n).rfft_into(x, &mut out, &mut scratch);
+    out
 }
 
 /// Inverse of `rfft`: reconstructs the length-n real signal from the
@@ -585,13 +834,10 @@ pub fn rfft(x: &[f32]) -> Vec<Complex> {
 pub fn irfft(spec: &[Complex], n: usize) -> Vec<f32> {
     assert!(n >= 1, "irfft needs n >= 1");
     assert_eq!(spec.len(), n / 2 + 1, "irfft: spectrum/size mismatch");
-    let mut buf = vec![Complex::ZERO; n];
-    buf[..spec.len()].copy_from_slice(spec);
-    for k in 1..n.div_ceil(2) {
-        buf[n - k] = spec[k].conj();
-    }
-    ifft(&mut buf);
-    buf.iter().map(|c| c.re as f32).collect()
+    let mut out = vec![0.0f32; n];
+    let mut scratch = Vec::new();
+    RealFftPlan::shared(n).irfft_into(spec, &mut out, &mut scratch);
+    out
 }
 
 #[cfg(test)]
@@ -733,8 +979,7 @@ mod tests {
         for n in [256usize, 360, 769] {
             let x = rng.normals(n);
             let time: f64 = x.iter().map(|&v| (v as f64).powi(2)).sum();
-            let mut buf: Vec<Complex> =
-                x.iter().map(|&v| Complex::new(v as f64, 0.0)).collect();
+            let mut buf: Vec<Complex> = x.iter().map(|&v| Complex::new(v as f64, 0.0)).collect();
             fft(&mut buf);
             let freq: f64 = buf.iter().map(|c| c.abs().powi(2)).sum::<f64>() / n as f64;
             assert!((time - freq).abs() < 1e-6 * time, "n={n}: {time} vs {freq}");
@@ -758,5 +1003,110 @@ mod tests {
     #[should_panic(expected = "spectrum/size mismatch")]
     fn irfft_rejects_wrong_bin_count() {
         let _ = irfft(&[Complex::ZERO; 5], 16);
+    }
+
+    /// The full-complex reference the r2c path must reproduce: transform
+    /// the reals at length n, keep the first n/2+1 bins.
+    fn rfft_reference(x: &[f32]) -> Vec<Complex> {
+        let n = x.len();
+        let mut buf: Vec<Complex> = x.iter().map(|&v| Complex::new(v as f64, 0.0)).collect();
+        fft(&mut buf);
+        buf.truncate(n / 2 + 1);
+        buf
+    }
+
+    fn assert_real_plan_matches_complex(n: usize, seed: u64) {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let x = rng.normals(n);
+        let want = rfft_reference(&x);
+        let plan = RealFftPlan::new(n);
+        assert_eq!(plan.bins(), n / 2 + 1);
+        assert_eq!(plan.is_packed(), n >= 2 && n % 2 == 0, "n={n}");
+        let (mut got, mut scratch) = (Vec::new(), Vec::new());
+        plan.rfft_into(&x, &mut got, &mut scratch);
+        assert_eq!(got.len(), want.len(), "n={n}");
+        let scale = 1.0f64.max(want.iter().map(|c| c.abs()).fold(0.0, f64::max));
+        for (i, (g, w)) in got.iter().zip(want.iter()).enumerate() {
+            assert!(
+                (g.re - w.re).abs() < 1e-9 * scale && (g.im - w.im).abs() < 1e-9 * scale,
+                "n={n} ({}) bin {i}: {g:?} vs {w:?}",
+                plan.strategy()
+            );
+        }
+        // And back: c2r of the reference spectrum recovers the signal.
+        let mut back = vec![0.0f32; n];
+        plan.irfft_into(&want, &mut back, &mut scratch);
+        assert_close(&x, &back, 1e-5, "irfft_into");
+    }
+
+    #[test]
+    fn real_plan_matches_complex_path_at_pinned_sizes() {
+        // The satellite contract: even/odd/prime acceptance sizes plus
+        // powers of two — 96 = 2⁵·3, 360 = 2³·3²·5, 769 prime (packed
+        // half 384; the free-function path at odd n falls back), 1000 =
+        // 2³·5³, 2^k up to 4096, and the h-odd/h-even parity cases.
+        for (i, n) in [1usize, 2, 4, 6, 10, 16, 34, 96, 360, 769, 1000, 1024, 4096]
+            .into_iter()
+            .enumerate()
+        {
+            assert_real_plan_matches_complex(n, 40 + i as u64);
+        }
+    }
+
+    #[test]
+    fn prop_real_plan_matches_complex_path() {
+        check("r2c vs complex path (any n)", |rng| {
+            let n = size(rng, 1, 2000);
+            let x = vecf(rng, n);
+            let want = rfft_reference(&x);
+            let plan = RealFftPlan::shared(n);
+            let (mut got, mut scratch) = (Vec::new(), Vec::new());
+            plan.rfft_into(&x, &mut got, &mut scratch);
+            let scale = 1.0f64.max(want.iter().map(|c| c.abs()).fold(0.0, f64::max));
+            for (g, w) in got.iter().zip(want.iter()) {
+                assert!(
+                    (g.re - w.re).abs() < 1e-8 * scale && (g.im - w.im).abs() < 1e-8 * scale,
+                    "n={n}: {g:?} vs {w:?}"
+                );
+            }
+            let mut back = vec![0.0f32; n];
+            plan.irfft_into(&got, &mut back, &mut scratch);
+            assert_close(&x, &back, 1e-5, "r2c roundtrip");
+        });
+    }
+
+    #[test]
+    fn real_plan_buffers_are_reused_without_growth() {
+        // The zero-allocation contract: once warm, repeated transforms
+        // through the same buffers never grow capacity.
+        let plan = RealFftPlan::shared(256);
+        let mut rng = crate::util::rng::Rng::new(9);
+        let (mut out, mut scratch) = (Vec::new(), Vec::new());
+        let mut back = vec![0.0f32; 256];
+        plan.rfft_into(&rng.normals(256), &mut out, &mut scratch);
+        plan.irfft_into(&out.clone(), &mut back, &mut scratch);
+        let (co, cs) = (out.capacity(), scratch.capacity());
+        for _ in 0..4 {
+            plan.rfft_into(&rng.normals(256), &mut out, &mut scratch);
+            plan.irfft_into(&out.clone(), &mut back, &mut scratch);
+        }
+        assert_eq!(out.capacity(), co);
+        assert_eq!(scratch.capacity(), cs);
+    }
+
+    #[test]
+    fn real_plan_counts_fast_path_transforms() {
+        let _g = crate::telemetry::test_guard();
+        let was = crate::telemetry::enabled();
+        crate::telemetry::set_enabled(true);
+        let plan = RealFftPlan::shared(128);
+        let series = crate::telemetry::global().counter("fft.real_fast_path");
+        let before = series.get();
+        let (mut out, mut scratch) = (Vec::new(), Vec::new());
+        plan.rfft_into(&vec![1.0f32; 128], &mut out, &mut scratch);
+        let mut back = vec![0.0f32; 128];
+        plan.irfft_into(&out, &mut back, &mut scratch);
+        assert_eq!(series.get() - before, 2, "one forward + one inverse packed transform");
+        crate::telemetry::set_enabled(was);
     }
 }

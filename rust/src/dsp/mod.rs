@@ -11,5 +11,8 @@
 mod fft;
 mod hilbert;
 
-pub use fft::{fft, fft_work_units, good_conv_size, ifft, irfft, rfft, Complex, FftPlan};
+pub use fft::{
+    fft, fft_work_units, good_conv_size, ifft, irfft, rfft, rfft_work_units, Complex, FftPlan,
+    RealFftPlan,
+};
 pub use hilbert::{analytic_window, causal_spectrum, hilbert_of_real};

@@ -28,7 +28,7 @@ use anyhow::{anyhow, ensure, Result};
 use crate::data::PAD;
 use crate::runtime::{global_pool, Engine, HostTensor, ModelState, ThreadPool};
 use crate::telemetry;
-use crate::toeplitz::{apply_batch_sharded, BackendKind, Dispatch, DispatchQuery, ToeplitzOp};
+use crate::toeplitz::{apply_batch_flat_sharded, BackendKind, Dispatch, DispatchQuery, ToeplitzOp};
 
 /// Server tuning knobs.
 #[derive(Debug, Clone)]
@@ -412,15 +412,27 @@ pub fn serve_model<'a>(
 }
 
 /// Map one batcher row of token ids to an f32 signal on [-1, 1)
-/// (PAD → 0, so padded tail positions are silent).
+/// (PAD → 0, so padded tail positions are silent), written into a
+/// caller-provided row of the flat batch buffer.
+fn ids_to_signal_into(row: &[i32], out: &mut [f32]) {
+    for (o, &t) in out.iter_mut().zip(row) {
+        *o = if t == PAD { 0.0 } else { t as f32 / 128.0 - 1.0 };
+    }
+}
+
+/// [`ids_to_signal_into`] into a fresh row — the test oracles' form.
+#[cfg(test)]
 fn ids_to_signal(row: &[i32]) -> Vec<f32> {
-    row.iter().map(|&t| if t == PAD { 0.0 } else { t as f32 / 128.0 - 1.0 }).collect()
+    let mut out = vec![0.0f32; row.len()];
+    ids_to_signal_into(row, &mut out);
+    out
 }
 
 /// Adapt a [`ToeplitzOp`] backend into a [`Batcher::run`] executor:
 /// each row's ids become an f32 signal and the response row is the
-/// operator applied to it, with the batch **sharded across the global
-/// thread pool** (`SKI_TNN_THREADS`-sized) instead of looped serially.
+/// operator applied to it, with the batch packed into one flat buffer
+/// and **sharded row-aligned across the global thread pool**
+/// (`SKI_TNN_THREADS`-sized) instead of looped serially.
 /// This is how the backend dispatcher rides the same
 /// queueing/batching policy as the XLA model path — and the
 /// artifact-free load-test target of `ski-tnn serve --backend …`.
@@ -522,8 +534,18 @@ fn exec_toeplitz(
     ensure!(shape.len() == 2, "expected a (batch, n) ids tensor, got {shape:?}");
     ensure!(shape[1] == op.n(), "row width {} does not match operator n {}", shape[1], op.n());
     let ids = batch.as_i32()?;
-    let rows: Vec<Vec<f32>> = ids.chunks(shape[1]).map(ids_to_signal).collect();
-    Ok(apply_batch_sharded(op, &rows, pool))
+    let (rows, n) = (shape[0], shape[1]);
+    // One flat row-major signal buffer and one flat result buffer for
+    // the whole batch: the operator runs through the allocation-free
+    // flat ABI with row-aligned shards, so the only allocations on
+    // this path are these two buffers and the response rows.
+    let mut xs = vec![0.0f32; rows * n];
+    for (sig, row) in xs.chunks_mut(n).zip(ids.chunks(n)) {
+        ids_to_signal_into(row, sig);
+    }
+    let mut out = vec![0.0f32; rows * n];
+    apply_batch_flat_sharded(op, &xs, rows, &mut out, pool);
+    Ok(out.chunks(n).map(|c| c.to_vec()).collect())
 }
 
 #[cfg(test)]

@@ -19,11 +19,11 @@ mod ski;
 
 pub use kernels::{decay_bias, gaussian_kernel, rational_kernel, warp, TableKernel};
 pub use op::{
-    apply_causal_plan, apply_causal_plan_with, apply_causal_taps, build_op, BackendKind,
-    CostModel, DenseOp, Dispatch, DispatchQuery, FftOp, FreqCausalOp, OpScratch, SparseLowRankOp,
-    SpectralPlan, ToeplitzOp,
+    apply_causal_plan, apply_causal_plan_into, apply_causal_plan_with, apply_causal_taps, build_op,
+    with_scratch, BackendKind, CostModel, DenseOp, Dispatch, DispatchQuery, FftOp, FreqCausalOp,
+    OpScratch, SparseLowRankOp, SpectralPlan, ToeplitzOp,
 };
-pub use parallel::{apply_batch_sharded, with_scratch};
+pub use parallel::{apply_batch_flat_sharded, apply_batch_sharded};
 pub use ski::{causal_ski_scan, inducing_grid, interp_weights, Ski};
 
 use crate::dsp::{irfft, rfft, Complex};
@@ -95,15 +95,21 @@ impl ToeplitzKernel {
 
     /// Dense O(n²) action `y = T x`.
     pub fn apply_dense(&self, x: &[f32]) -> Vec<f32> {
+        let mut y = vec![0.0f32; self.n];
+        self.apply_dense_into(x, &mut y);
+        y
+    }
+
+    /// [`apply_dense`](Self::apply_dense) into a caller-provided row —
+    /// the flat-batch ABI's allocation-free path.  Same accumulation
+    /// order, so the two are bitwise identical.
+    pub fn apply_dense_into(&self, x: &[f32], out: &mut [f32]) {
         let n = self.n;
         assert_eq!(x.len(), n);
-        (0..n)
-            .map(|i| {
-                (0..n)
-                    .map(|j| self.at(i as i64 - j as i64) * x[j])
-                    .sum()
-            })
-            .collect()
+        assert_eq!(out.len(), n);
+        for (i, o) in out.iter_mut().enumerate() {
+            *o = (0..n).map(|j| self.at(i as i64 - j as i64) * x[j]).sum();
+        }
     }
 
     /// O(n log n) action via the 2n circulant embedding — any n ≥ 1
@@ -140,21 +146,29 @@ impl ToeplitzKernel {
 /// Depthwise 1-D convolution — the sparse component's action.
 /// `causal`: taps cover lags `0..m-1`; otherwise centred (lag `t-m/2`).
 pub fn conv1d(x: &[f32], w: &[f32], causal: bool) -> Vec<f32> {
+    let mut y = vec![0.0f32; x.len()];
+    conv1d_into(x, w, causal, &mut y);
+    y
+}
+
+/// [`conv1d`] into a caller-provided row (same accumulation order —
+/// bitwise identical; the flat-batch ABI's allocation-free path).
+pub fn conv1d_into(x: &[f32], w: &[f32], causal: bool, out: &mut [f32]) {
     let n = x.len();
+    assert_eq!(out.len(), n, "conv1d_into: output length mismatch");
     let m = w.len();
     let c = if causal { 0 } else { (m / 2) as i64 };
-    (0..n as i64)
-        .map(|i| {
-            let mut acc = 0.0;
-            for (t, &wt) in w.iter().enumerate() {
-                let j = i - (t as i64 - c);
-                if (0..n as i64).contains(&j) {
-                    acc += wt * x[j as usize];
-                }
+    for (i, o) in out.iter_mut().enumerate() {
+        let i = i as i64;
+        let mut acc = 0.0;
+        for (t, &wt) in w.iter().enumerate() {
+            let j = i - (t as i64 - c);
+            if (0..n as i64).contains(&j) {
+                acc += wt * x[j as usize];
             }
-            acc
-        })
-        .collect()
+        }
+        *o = acc;
+    }
 }
 
 #[cfg(test)]

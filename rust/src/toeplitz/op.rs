@@ -23,20 +23,48 @@
 //! model prices each shape's actual transform factorization instead of
 //! special-casing powers of two.
 
-use std::sync::{Arc, Mutex};
+use std::cell::RefCell;
+use std::sync::Arc;
 
-use crate::dsp::{causal_spectrum, fft_work_units, good_conv_size, irfft, Complex, FftPlan};
+use crate::dsp::{
+    causal_spectrum, good_conv_size, irfft, rfft, rfft_work_units, Complex, FftPlan, RealFftPlan,
+};
 
-use super::{conv1d, Ski, ToeplitzKernel};
+use super::{conv1d_into, Ski, ToeplitzKernel};
 
-/// Reusable scratch for lock-free spectral applies.  The shard runtime
-/// ([`super::parallel`]) keeps one per worker thread, so the hot path
-/// of [`FftOp`] / [`FreqCausalOp`] never touches their shared fallback
-/// `Mutex` scratch.  Buffers grow on demand and are kept.
+/// Reusable scratch for lock-free spectral applies.  Every thread —
+/// pool workers and plain callers alike — owns one arena
+/// ([`with_scratch`]), so the hot path of [`FftOp`] /
+/// [`FreqCausalOp`] / [`SparseLowRankOp`] never locks and never
+/// allocates in steady state.  Buffers grow on demand and are kept.
 #[derive(Debug, Default)]
 pub struct OpScratch {
-    /// 2n-point complex transform buffer.
+    /// Half-spectrum bins (`m/2 + 1`) of the transformed signal.
     pub cbuf: Vec<Complex>,
+    /// Packed half-length complex work buffer for the r2c engine.
+    pub half: Vec<Complex>,
+    /// m-point zero-padded real signal, reused as the inverse output.
+    pub xpad: Vec<f32>,
+    /// SKI inducing-space vectors (`u = Wᵀx`, `v = A u`).
+    pub u: Vec<f32>,
+    pub v: Vec<f32>,
+    /// Per-channel gather buffer for the decode oracle's flat forward.
+    pub row: Vec<f32>,
+}
+
+thread_local! {
+    /// One scratch arena per thread, reused for the life of the thread.
+    static ARENA: RefCell<OpScratch> = RefCell::new(OpScratch::default());
+}
+
+/// Run `f` with this thread's persistent scratch arena.  **Not
+/// re-entrant**: `f` must not call `with_scratch` again.  The
+/// discipline that keeps this safe: only scratch-less entry points
+/// ([`ToeplitzOp::apply`], [`ToeplitzOp::apply_batch`],
+/// [`apply_causal_plan`], [`Ski::apply_sparse`], the shard workers)
+/// borrow the arena; everything taking `&mut OpScratch` never does.
+pub fn with_scratch<R>(f: impl FnOnce(&mut OpScratch) -> R) -> R {
+    ARENA.with(|a| f(&mut a.borrow_mut()))
 }
 
 /// One Toeplitz operator action `y = T x`, backend-agnostic.
@@ -71,6 +99,23 @@ pub trait ToeplitzOp: Send + Sync {
     fn apply_batch(&self, xs: &[Vec<f32>]) -> Vec<Vec<f32>> {
         xs.iter().map(|x| self.apply(x)).collect()
     }
+
+    /// `ys = T xs` over `rows` length-n signals packed row-major in
+    /// flat buffers — the zero-allocation batch ABI the serving path
+    /// runs on (no per-row `Vec`s).  Every backend overrides the
+    /// default per-row fallback with an in-place row loop; each row's
+    /// arithmetic is identical to
+    /// [`apply_with_scratch`](Self::apply_with_scratch), so flat and
+    /// per-row execution agree bitwise.  (The parallel counterpart is
+    /// [`apply_batch_flat_sharded`](super::apply_batch_flat_sharded).)
+    fn apply_batch_flat(&self, xs: &[f32], rows: usize, out: &mut [f32], scratch: &mut OpScratch) {
+        let n = self.n();
+        assert_eq!(xs.len(), rows * n, "apply_batch_flat: input shape mismatch");
+        assert_eq!(out.len(), rows * n, "apply_batch_flat: output shape mismatch");
+        for (x, y) in xs.chunks_exact(n).zip(out.chunks_exact_mut(n)) {
+            y.copy_from_slice(&self.apply_with_scratch(x, scratch));
+        }
+    }
 }
 
 /// The dense O(n²) oracle — exact, cache-friendly at small n, and the
@@ -96,6 +141,15 @@ impl ToeplitzOp for DenseOp {
     fn apply(&self, x: &[f32]) -> Vec<f32> {
         self.kernel.apply_dense(x)
     }
+
+    fn apply_batch_flat(&self, xs: &[f32], rows: usize, out: &mut [f32], _scratch: &mut OpScratch) {
+        let n = self.kernel.n;
+        assert_eq!(xs.len(), rows * n, "apply_batch_flat: input shape mismatch");
+        assert_eq!(out.len(), rows * n, "apply_batch_flat: output shape mismatch");
+        for (x, y) in xs.chunks_exact(n).zip(out.chunks_exact_mut(n)) {
+            self.kernel.apply_dense_into(x, y);
+        }
+    }
 }
 
 /// An immutable circulant-multiply plan: the kernel spectrum on an
@@ -116,10 +170,16 @@ pub struct SpectralPlan {
     /// Transform length (`good_conv_size(2n-1)`, or exactly `2n` when
     /// built from rFFT bins on the 2n grid).
     m: usize,
-    /// Full m-point spectrum of the circulant first column.
-    spec: Vec<Complex>,
-    /// The shared transform plan for `m` (lock-free after build).
-    plan: Arc<FftPlan>,
+    /// Kernel **half-spectrum** (`m/2 + 1` non-redundant bins of the
+    /// circulant first column), split into re/im planes so the
+    /// pointwise multiply runs on contiguous f64 lanes.  Conjugate
+    /// symmetry makes these bins the whole product: both operands are
+    /// real, so the full-spectrum multiply is determined by its first
+    /// half.
+    spec_re: Vec<f64>,
+    spec_im: Vec<f64>,
+    /// The shared r2c transform plan for `m` (lock-free after build).
+    rplan: Arc<RealFftPlan>,
 }
 
 impl SpectralPlan {
@@ -130,33 +190,39 @@ impl SpectralPlan {
         // Circulant first column on the m grid: positive lags at the
         // front, negative lags wrapped to the back (m ≥ 2n-1 keeps the
         // two ranges disjoint, so the embedding stays exact).
-        let mut c = vec![Complex::ZERO; m];
+        let mut c = vec![0.0f32; m];
         for (t, v) in c.iter_mut().enumerate().take(n) {
-            v.re = kernel.at(t as i64) as f64;
+            *v = kernel.at(t as i64);
         }
         for t in 1..n {
-            c[m - t].re = kernel.at(-(t as i64)) as f64;
+            c[m - t] = kernel.at(-(t as i64));
         }
-        let plan = FftPlan::shared(m);
-        plan.fft(&mut c);
-        SpectralPlan { n, m, spec: c, plan }
+        Self::from_half_spectrum(n, m, &rfft(&c))
     }
 
     /// Build from the n+1 non-redundant rFFT bins of a 2n circulant
-    /// column (Hermitian completion).  This is how [`FreqCausalOp`]
-    /// consumes the Hilbert-completed causal spectrum directly —
-    /// no time-domain kernel materialisation, no kernel FFT.  The
-    /// transform length is pinned to `2n` (the grid the bins live on);
-    /// any `n ≥ 1` works.
+    /// column.  This is how [`FreqCausalOp`] consumes the
+    /// Hilbert-completed causal spectrum directly — no time-domain
+    /// kernel materialisation, no kernel FFT, and since the engine
+    /// multiplies in the half-spectrum the bins are stored as-is (the
+    /// old full-spectrum Hermitian completion is gone).  The transform
+    /// length is pinned to `2n` (the grid the bins live on); any
+    /// `n ≥ 1` works.
     pub fn from_rfft_bins(n: usize, bins: &[Complex]) -> SpectralPlan {
         assert!(n >= 1, "SpectralPlan needs n >= 1");
         assert_eq!(bins.len(), n + 1, "need n+1 rFFT bins for a 2n circulant");
-        let mut spec = vec![Complex::ZERO; 2 * n];
-        spec[..=n].copy_from_slice(bins);
-        for k in 1..n {
-            spec[2 * n - k] = bins[k].conj();
+        Self::from_half_spectrum(n, 2 * n, bins)
+    }
+
+    fn from_half_spectrum(n: usize, m: usize, bins: &[Complex]) -> SpectralPlan {
+        debug_assert_eq!(bins.len(), m / 2 + 1);
+        SpectralPlan {
+            n,
+            m,
+            spec_re: bins.iter().map(|c| c.re).collect(),
+            spec_im: bins.iter().map(|c| c.im).collect(),
+            rplan: RealFftPlan::shared(m),
         }
-        SpectralPlan { n, m: 2 * n, spec, plan: FftPlan::shared(2 * n) }
     }
 
     pub fn n(&self) -> usize {
@@ -168,38 +234,58 @@ impl SpectralPlan {
         self.m
     }
 
-    /// One circulant apply through caller scratch — the lock-free hot
-    /// path.  Output is a pure function of `(self, x)`: scratch
-    /// contents are fully overwritten, so results are bitwise
-    /// identical whichever thread's arena is used.
-    pub fn apply_with(&self, x: &[f32], scratch: &mut OpScratch) -> Vec<f32> {
+    /// One circulant apply through caller buffers — the lock-free,
+    /// allocation-free hot path (scratch grows once, then every apply
+    /// reuses it).  Accepts any prefix `x.len() ≤ n`, zero-padded to
+    /// the transform grid (the decode oracle applies causal plans to
+    /// growing prefixes); `out` receives exactly `x.len()` values.
+    /// Output is a pure function of `(self, x)`: scratch contents are
+    /// fully overwritten, so results are bitwise identical whichever
+    /// thread's arena is used.
+    pub fn apply_into(&self, x: &[f32], out: &mut [f32], scratch: &mut OpScratch) {
         let _span = crate::telemetry::span(&crate::telemetry::SPAN_FFT_FORWARD);
+        assert!(
+            x.len() <= self.n,
+            "SpectralPlan size mismatch: x has {} values, plan n={}",
+            x.len(),
+            self.n
+        );
+        assert_eq!(out.len(), x.len(), "SpectralPlan apply_into: output length mismatch");
+        scratch.xpad.clear();
+        scratch.xpad.extend_from_slice(x);
+        scratch.xpad.resize(self.m, 0.0);
+        self.rplan.rfft_into(&scratch.xpad, &mut scratch.cbuf, &mut scratch.half);
+        for (v, (&sr, &si)) in
+            scratch.cbuf.iter_mut().zip(self.spec_re.iter().zip(self.spec_im.iter()))
+        {
+            let (re, im) = (v.re, v.im);
+            v.re = re * sr - im * si;
+            v.im = re * si + im * sr;
+        }
+        self.rplan.irfft_into(&scratch.cbuf, &mut scratch.xpad, &mut scratch.half);
+        out.copy_from_slice(&scratch.xpad[..out.len()]);
+    }
+
+    /// [`apply_into`](Self::apply_into) for a full-length signal,
+    /// returning a fresh output row (the per-row `Vec` ABI).
+    pub fn apply_with(&self, x: &[f32], scratch: &mut OpScratch) -> Vec<f32> {
         let n = self.n;
         assert_eq!(x.len(), n, "SpectralPlan size mismatch: x has {} values, plan n={n}", x.len());
-        let buf = &mut scratch.cbuf;
-        buf.clear();
-        buf.extend(x.iter().map(|&v| Complex::new(v as f64, 0.0)));
-        buf.resize(self.m, Complex::ZERO);
-        self.plan.fft(buf);
-        for (v, s) in buf.iter_mut().zip(self.spec.iter()) {
-            *v = v.mul(*s);
-        }
-        self.plan.ifft(buf);
-        buf[..n].iter().map(|c| c.re as f32).collect()
+        let mut y = vec![0.0f32; n];
+        self.apply_into(x, &mut y, scratch);
+        y
     }
 }
 
-/// O(n log n) circulant-embedding apply with the kernel's 2n-point
-/// spectrum computed **once** at construction (a [`SpectralPlan`]) and
-/// a reusable complex scratch buffer, so repeated applies pay two FFTs
-/// and zero allocations beyond the output (the old `apply_fft`
-/// re-FFT'd the kernel and allocated four temporaries per call).
+/// O(n log n) circulant-embedding apply with the kernel's
+/// half-spectrum computed **once** at construction (a
+/// [`SpectralPlan`]), running two packed r2c transforms per apply.
+/// Scratch-less calls borrow the calling thread's arena
+/// ([`with_scratch`]) — no `Mutex`, so casual single-threaded callers
+/// never contend and the hot path allocates nothing beyond the output
+/// row (nothing at all on the flat ABI).
 pub struct FftOp {
     plan: SpectralPlan,
-    /// Fallback scratch for callers without their own arena (one
-    /// apply at a time).  The shard runtime bypasses it via
-    /// [`ToeplitzOp::apply_with_scratch`].
-    scratch: Mutex<OpScratch>,
 }
 
 impl FftOp {
@@ -213,7 +299,7 @@ impl FftOp {
     }
 
     pub fn from_plan(plan: SpectralPlan) -> FftOp {
-        FftOp { plan, scratch: Mutex::new(OpScratch::default()) }
+        FftOp { plan }
     }
 
     /// The shareable lock-free plan inside this operator.
@@ -232,15 +318,15 @@ impl ToeplitzOp for FftOp {
     }
 
     fn flops_estimate(&self) -> f64 {
-        // Two transforms at the plan's actual factorization (10 flops
-        // per modeled radix-2-butterfly unit) plus the bin multiply.
+        // Two r2c transforms at the plan's actual factorization (10
+        // flops per modeled radix-2-butterfly unit) plus the bin
+        // multiply.
         let m = self.plan.transform_len();
-        2.0 * 10.0 * fft_work_units(m) + 6.0 * m as f64
+        2.0 * 10.0 * rfft_work_units(m) + 6.0 * m as f64
     }
 
     fn apply(&self, x: &[f32]) -> Vec<f32> {
-        let mut s = self.scratch.lock().unwrap();
-        self.plan.apply_with(x, &mut s)
+        with_scratch(|s| self.plan.apply_with(x, s))
     }
 
     fn apply_with_scratch(&self, x: &[f32], scratch: &mut OpScratch) -> Vec<f32> {
@@ -248,9 +334,17 @@ impl ToeplitzOp for FftOp {
     }
 
     fn apply_batch(&self, xs: &[Vec<f32>]) -> Vec<Vec<f32>> {
-        // One lock, one scratch, the whole batch.
-        let mut s = self.scratch.lock().unwrap();
-        xs.iter().map(|x| self.plan.apply_with(x, &mut s)).collect()
+        // One arena borrow, the whole batch.
+        with_scratch(|s| xs.iter().map(|x| self.plan.apply_with(x, s)).collect())
+    }
+
+    fn apply_batch_flat(&self, xs: &[f32], rows: usize, out: &mut [f32], scratch: &mut OpScratch) {
+        let n = self.plan.n;
+        assert_eq!(xs.len(), rows * n, "apply_batch_flat: input shape mismatch");
+        assert_eq!(out.len(), rows * n, "apply_batch_flat: output shape mismatch");
+        for (x, y) in xs.chunks_exact(n).zip(out.chunks_exact_mut(n)) {
+            self.plan.apply_into(x, y, scratch);
+        }
     }
 }
 
@@ -302,6 +396,16 @@ impl SparseLowRankOp {
     pub fn ski(&self) -> &Ski {
         &self.ski
     }
+
+    /// `out = (B + W A Wᵀ) x` through caller scratch — the
+    /// allocation-free core every apply surface funnels into: the band
+    /// convolution writes `out`, the SKI term accumulates on top
+    /// ([`Ski::apply_sparse_add`]).
+    fn apply_into(&self, x: &[f32], out: &mut [f32], scratch: &mut OpScratch) {
+        assert_eq!(x.len(), self.n, "SparseLowRankOp size mismatch");
+        conv1d_into(x, &self.band, false, out);
+        self.ski.apply_sparse_add(x, out, scratch);
+    }
 }
 
 impl ToeplitzOp for SparseLowRankOp {
@@ -319,10 +423,11 @@ impl ToeplitzOp for SparseLowRankOp {
         // The inducing-Gram multiply takes whichever path is cheaper
         // at this rank (decided once at Ski construction) — any r, not
         // just powers of two, prices the spectral route now.  The
-        // spectral side is `apply_fft` on the exact 2r grid: three
-        // transforms, kernel spectrum rebuilt per call.
+        // spectral side is a cached-spectrum [`SpectralPlan`] on the
+        // gram's own smooth grid: two r2c transforms per call.
         let a = if self.ski.gram_fft {
-            3.0 * 10.0 * fft_work_units(2 * r) + 6.0 * (2 * r) as f64
+            let m = good_conv_size(2 * r.max(1) - 1);
+            2.0 * 10.0 * rfft_work_units(m) + 6.0 * m as f64
         } else {
             2.0 * (r as f64) * (r as f64)
         };
@@ -330,12 +435,23 @@ impl ToeplitzOp for SparseLowRankOp {
     }
 
     fn apply(&self, x: &[f32]) -> Vec<f32> {
+        with_scratch(|s| self.apply_with_scratch(x, s))
+    }
+
+    fn apply_with_scratch(&self, x: &[f32], scratch: &mut OpScratch) -> Vec<f32> {
         assert_eq!(x.len(), self.n, "SparseLowRankOp size mismatch");
-        let mut y = conv1d(x, &self.band, false);
-        for (yi, si) in y.iter_mut().zip(self.ski.apply_sparse(x)) {
-            *yi += si;
-        }
+        let mut y = vec![0.0f32; self.n];
+        self.apply_into(x, &mut y, scratch);
         y
+    }
+
+    fn apply_batch_flat(&self, xs: &[f32], rows: usize, out: &mut [f32], scratch: &mut OpScratch) {
+        let n = self.n;
+        assert_eq!(xs.len(), rows * n, "apply_batch_flat: input shape mismatch");
+        assert_eq!(out.len(), rows * n, "apply_batch_flat: output shape mismatch");
+        for (x, y) in xs.chunks_exact(n).zip(out.chunks_exact_mut(n)) {
+            self.apply_into(x, y, scratch);
+        }
     }
 }
 
@@ -362,13 +478,16 @@ impl FreqCausalOp {
         let taps = kt[..n].to_vec();
         // Consuming the bins directly pins every apply to the exact 2n
         // transform grid.  When that grid factorizes well (the common
-        // case) it saves the kernel FFT; when it would run Bluestein
-        // (2n with a big prime factor), one construction-time kernel
-        // FFT at the plan's own smooth length is cheaper than paying
-        // the chirp-z embedding on every request — the first n outputs
-        // are identical either way (the dropped t = n tap only ever
-        // lands past the truncation).
-        let fft = if FftPlan::shared(2 * n).strategy() == "bluestein" {
+        // case) it saves the kernel FFT; when it would run Bluestein,
+        // one construction-time kernel FFT at the plan's own smooth
+        // length is cheaper than paying the chirp-z embedding on every
+        // request — the first n outputs are identical either way (the
+        // dropped t = n tap only ever lands past the truncation).  The
+        // 2n grid is even, so the r2c engine runs the **half-length**
+        // plan at n — that is the strategy to probe (2n and n share
+        // every odd prime factor, so the verdict matches the old
+        // full-grid check).
+        let fft = if FftPlan::shared(n).strategy() == "bluestein" {
             FftOp::new(&ToeplitzKernel::from_causal_taps(&taps))
         } else {
             FftOp::from_rfft_bins(n, &spec)
@@ -418,6 +537,10 @@ impl ToeplitzOp for FreqCausalOp {
     fn apply_batch(&self, xs: &[Vec<f32>]) -> Vec<Vec<f32>> {
         self.fft.apply_batch(xs)
     }
+
+    fn apply_batch_flat(&self, xs: &[f32], rows: usize, out: &mut [f32], scratch: &mut OpScratch) {
+        self.fft.apply_batch_flat(xs, rows, out, scratch);
+    }
 }
 
 /// Backend selector — `auto` defers to [`Dispatch`].
@@ -456,8 +579,9 @@ impl BackendKind {
 /// Per-primitive wall-clock constants (ns), calibrated on this
 /// container by `benches/backend_matrix.rs` (its JSON artifact records
 /// the re-measured values every run).  The defaults reproduce the
-/// measured crossovers: dense wins below n ≈ 128, the spectral paths
-/// above, and sparse+low-rank beats FFT whenever r ≤ n/16.
+/// measured crossovers: dense wins below n ≈ 64 (the r2c discount
+/// pulled this down from n ≈ 128), the spectral paths above, and
+/// sparse+low-rank beats FFT whenever r ≤ n/16.
 #[derive(Debug, Clone, Copy)]
 pub struct CostModel {
     /// ns per dense multiply-add (tight n² inner loop).
@@ -505,26 +629,26 @@ impl CostModel {
 
     /// Spectral apply cost at the transform length a [`SpectralPlan`]
     /// would actually pick for this `n`, priced by the real
-    /// factorization (`fft_work_units`): pow2 and smooth sizes cost
-    /// their butterfly count, a hypothetical Bluestein size its three
-    /// embedded transforms.  On powers of two this reproduces the old
-    /// `2·fft_point_ns·m·log2 m + fft_point_ns·m` exactly; just past a
-    /// power of two it no longer overcharges the padded size.
+    /// factorization of the **r2c fast path** (`rfft_work_units`):
+    /// even grids pay one half-length transform plus the O(m)
+    /// split/twiddle pass per direction — the ~2x discount that moves
+    /// the dense→spectral crossover down to n ≈ 64 — while odd grids
+    /// fall back to the full complex price, Bluestein penalty
+    /// included.
     pub fn fft_cost(&self, n: usize) -> f64 {
         let m = good_conv_size(2 * n.max(1) - 1);
-        self.fft_point_ns * (4.0 * fft_work_units(m) + m as f64)
+        self.fft_point_ns * (4.0 * rfft_work_units(m) + m as f64)
     }
 
-    /// What `Ski::apply_sparse`'s spectral gram route actually costs:
-    /// a `ToeplitzKernel::apply_fft` on the **exact** 2r grid — three
-    /// transforms (the kernel spectrum is rebuilt per call) at that
-    /// grid's real factorization, Bluestein penalty included when 2r
-    /// has a big prime factor.  Deliberately not `fft_cost(r)`: that
-    /// prices a cached-spectrum plan at a freely-chosen smooth length,
-    /// which is not the code the gram multiply runs.
+    /// What `Ski::apply_sparse`'s spectral gram route actually costs.
+    /// The gram multiply now runs a cached-spectrum [`SpectralPlan`]
+    /// over the r-point inducing kernel — the same code as
+    /// [`fft_cost`](Self::fft_cost) prices (two r2c transforms on the
+    /// plan's own smooth grid; the kernel spectrum is built once at
+    /// construction, not per call), so the two formulas are kept
+    /// literally identical.
     pub fn gram_fft_cost(&self, r: usize) -> f64 {
-        let m = 2 * r.max(1);
-        self.fft_point_ns * (6.0 * fft_work_units(m) + m as f64)
+        self.fft_cost(r)
     }
 
     pub fn ski_cost(&self, n: usize, r: usize, w: usize) -> f64 {
@@ -711,20 +835,30 @@ pub fn build_op(
 /// runtime's per-worker arenas) use this; [`apply_causal_taps`] is the
 /// one-shot entry that builds a throwaway plan per call.
 pub fn apply_causal_plan_with(plan: &SpectralPlan, x: &[f32], scratch: &mut OpScratch) -> Vec<f32> {
-    let p = plan.n();
-    assert!(x.len() <= p, "prefix {} longer than plan n={p}", x.len());
-    let mut xp = vec![0.0f32; p];
-    xp[..x.len()].copy_from_slice(x);
-    let mut y = plan.apply_with(&xp, scratch);
-    y.truncate(x.len());
+    let mut y = vec![0.0f32; x.len()];
+    apply_causal_plan_into(plan, x, &mut y, scratch);
     y
 }
 
-/// [`apply_causal_plan_with`] through an [`FftOp`]'s own fallback
-/// scratch (single-caller convenience).
+/// [`apply_causal_plan_with`] into a caller-provided output row — the
+/// flat-batch form (the decode oracle's sharded channel loop writes
+/// each channel's column straight into one flat buffer, so a
+/// full-context forward allocates no per-channel vectors).
+pub fn apply_causal_plan_into(
+    plan: &SpectralPlan,
+    x: &[f32],
+    out: &mut [f32],
+    scratch: &mut OpScratch,
+) {
+    let p = plan.n();
+    assert!(x.len() <= p, "prefix {} longer than plan n={p}", x.len());
+    plan.apply_into(x, out, scratch);
+}
+
+/// [`apply_causal_plan_with`] through the calling thread's arena
+/// (single-caller convenience; [`with_scratch`] entry point).
 pub fn apply_causal_plan(plan: &FftOp, x: &[f32]) -> Vec<f32> {
-    let mut s = plan.scratch.lock().unwrap();
-    apply_causal_plan_with(&plan.plan, x, &mut s)
+    with_scratch(|s| apply_causal_plan_with(&plan.plan, x, s))
 }
 
 /// Causal convolution of a length-`x.len()` prefix through the chosen
@@ -1020,16 +1154,34 @@ mod tests {
     #[test]
     fn dispatch_crossover_shifts_with_threads() {
         let d = Dispatch::default();
-        // n=128, batch=8: serially dense wins (16.4k vs 26.1k ns/row)…
-        let serial = DispatchQuery { n: 128, r: 0, w: 0, causal: false, batch: 8, threads: 1 };
+        // n=64, batch=8: serially dense wins (4.1k vs 6.9k ns/row; the
+        // r2c discount moved this pin down from the old n=128, where
+        // the spectral path now wins even serially)…
+        let serial = DispatchQuery { n: 64, r: 0, w: 0, causal: false, batch: 8, threads: 1 };
         assert_eq!(d.select(&serial), BackendKind::Dense);
         // …but across 4 workers the memory-bound dense rows contend
-        // while the FFT rows scale, so the spectral path takes over.
+        // while the FFT rows scale (26.0k vs 23.9k total ns), so the
+        // spectral path takes over.
         let par = DispatchQuery { threads: 4, ..serial };
         assert_eq!(d.select(&par), BackendKind::Fft);
         // Same shift on the causal side (dense loop vs Hilbert plan).
         let causal = DispatchQuery { causal: true, ..par };
         assert_eq!(d.select(&causal), BackendKind::Freq);
+    }
+
+    #[test]
+    fn fft_cost_prices_the_r2c_discount() {
+        let c = CostModel::default();
+        // n=64 runs on the m=128 grid: one 64-point complex transform
+        // (192 units) plus the 0.5·m split pass (64) per direction —
+        // 6 ns × (4·256 + 128) = 6912, vs 11520 for the old full
+        // complex price.  The serial dense→spectral crossover lands
+        // between n=64 and n=128 as a result.
+        assert!((c.fft_cost(64) - 6912.0).abs() < 1e-9, "{}", c.fft_cost(64));
+        assert!(c.dense_cost(64) < c.fft_cost(64));
+        assert!(c.dense_cost(128) > c.fft_cost(128));
+        // The gram route prices the same cached-plan code path.
+        assert_eq!(c.gram_fft_cost(64), c.fft_cost(64));
     }
 
     #[test]
@@ -1094,8 +1246,8 @@ mod tests {
 
     #[test]
     fn apply_with_scratch_is_bitwise_identical() {
-        // The lock-free arena path must equal the Mutex path exactly,
-        // for both spectral backends, across reused scratch.
+        // Caller-owned scratch must equal the thread-local arena path
+        // exactly, for both spectral backends, across reused scratch.
         let mut rng = crate::util::rng::Rng::new(21);
         let k = random_kernel(&mut rng, 64);
         let op = FftOp::new(&k);
@@ -1106,6 +1258,64 @@ mod tests {
             let x = vecf(&mut rng, 64);
             assert_eq!(op.apply(&x), op.apply_with_scratch(&x, &mut scratch));
             assert_eq!(freq.apply(&x), freq.apply_with_scratch(&x, &mut scratch));
+        }
+    }
+
+    #[test]
+    fn apply_batch_flat_is_bitwise_per_row_for_every_backend() {
+        // The flat ABI is the same per-row arithmetic as
+        // apply_with_scratch, whatever the backend — including at a
+        // non-pow2 grid (odd transform lengths exercise the r2c
+        // fallback inside the engine).
+        for n in [64usize, 96] {
+            let mut rng = crate::util::rng::Rng::new(n as u64 + 100);
+            let kernel = random_kernel(&mut rng, n);
+            let causal = kernel.clone().causal();
+            let rows = 5usize;
+            let xs = vecf(&mut rng, rows * n);
+            for (kind, k) in [
+                (BackendKind::Dense, &kernel),
+                (BackendKind::Fft, &kernel),
+                (BackendKind::Ski, &kernel),
+                (BackendKind::Freq, &causal),
+            ] {
+                let op = build_op(k, kind, 8, 5);
+                let mut out = vec![0.0f32; rows * n];
+                let mut scratch = OpScratch::default();
+                op.apply_batch_flat(&xs, rows, &mut out, &mut scratch);
+                let mut per_row = OpScratch::default();
+                for (x, y) in xs.chunks_exact(n).zip(out.chunks_exact(n)) {
+                    assert_eq!(
+                        y,
+                        op.apply_with_scratch(x, &mut per_row).as_slice(),
+                        "{} backend at n={n}",
+                        op.name()
+                    );
+                }
+                // And again through the same scratch: reuse is clean.
+                let mut again = vec![0.0f32; rows * n];
+                op.apply_batch_flat(&xs, rows, &mut again, &mut scratch);
+                assert_eq!(out, again, "{} backend, scratch reuse", op.name());
+            }
+        }
+    }
+
+    #[test]
+    fn spectral_plan_prefix_apply_matches_zero_padded_full_apply() {
+        // apply_into on a short prefix is the zero-padded full apply,
+        // truncated — the contract the causal decode oracle relies on.
+        let mut rng = crate::util::rng::Rng::new(17);
+        let k = random_kernel(&mut rng, 100).causal();
+        let plan = SpectralPlan::new(&k);
+        let mut scratch = OpScratch::default();
+        for len in [1usize, 37, 64, 100] {
+            let x = vecf(&mut rng, len);
+            let mut got = vec![0.0f32; len];
+            plan.apply_into(&x, &mut got, &mut scratch);
+            let mut xp = vec![0.0f32; 100];
+            xp[..len].copy_from_slice(&x);
+            let full = plan.apply_with(&xp, &mut scratch);
+            assert_eq!(got.as_slice(), &full[..len], "prefix len {len}");
         }
     }
 

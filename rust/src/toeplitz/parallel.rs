@@ -9,31 +9,21 @@
 //! therefore bitwise identical for any worker count, and
 //! `--threads 1` is the reference.
 //!
-//! Per-worker scratch lives in a thread-local [`OpScratch`] arena that
-//! persists across shards and batches, so the spectral backends
-//! ([`FftOp`](super::FftOp) / [`FreqCausalOp`](super::FreqCausalOp))
-//! never touch their shared fallback `Mutex` scratch on this path —
-//! zero lock traffic, zero transform-buffer allocations in steady
-//! state.
+//! Per-worker scratch lives in a thread-local arena
+//! ([`with_scratch`](super::with_scratch), owned by `op.rs` alongside
+//! [`OpScratch`](super::OpScratch)) that persists across shards and
+//! batches — zero lock traffic, zero transform-buffer allocations in
+//! steady state.
+//!
+//! [`apply_batch_flat_sharded`] is the flat-ABI counterpart: rows live
+//! packed in one input and one output buffer, shards are **row-aligned
+//! ranges** of those buffers, and each worker runs the backend's
+//! allocation-free [`ToeplitzOp::apply_batch_flat`] over its range —
+//! a steady-state serve tick allocates nothing at all.
 
-use std::cell::RefCell;
+use crate::runtime::pool::{Task, ThreadPool};
 
-use crate::runtime::pool::ThreadPool;
-
-use super::op::{CostModel, OpScratch, ToeplitzOp};
-
-thread_local! {
-    /// One scratch arena per thread — pool workers and submitting
-    /// callers alike — reused for the life of the thread.
-    static ARENA: RefCell<OpScratch> = RefCell::new(OpScratch::default());
-}
-
-/// Run `f` with this thread's persistent scratch arena.  Not
-/// re-entrant: `f` must not call `with_scratch` again (no backend
-/// does).
-pub fn with_scratch<R>(f: impl FnOnce(&mut OpScratch) -> R) -> R {
-    ARENA.with(|a| f(&mut a.borrow_mut()))
-}
+use super::op::{with_scratch, CostModel, ToeplitzOp};
 
 /// Whether sharding this batch is worth the pool's per-shard dispatch
 /// overhead — the one gate every `apply_batch_sharded` entry point
@@ -78,6 +68,47 @@ pub fn apply_batch_sharded(
     out
 }
 
+/// Flat-ABI counterpart of [`apply_batch_sharded`]: `rows` signals of
+/// length `op.n()` packed row-major in `xs`, results written row-major
+/// into `out`.  Shards are row-aligned ranges of the two flat buffers
+/// (a raw element split would cut rows in half), each executed by the
+/// backend's allocation-free [`ToeplitzOp::apply_batch_flat`] with the
+/// worker's thread-local scratch arena — after the arenas warm up, a
+/// call allocates nothing beyond the pool's task boxes.  Bitwise
+/// identical to the serial flat path for every worker count.
+pub fn apply_batch_flat_sharded(
+    op: &dyn ToeplitzOp,
+    xs: &[f32],
+    rows: usize,
+    out: &mut [f32],
+    pool: &ThreadPool,
+) {
+    let n = op.n();
+    assert_eq!(xs.len(), rows * n, "apply_batch_flat_sharded: input shape mismatch");
+    assert_eq!(out.len(), rows * n, "apply_batch_flat_sharded: output shape mismatch");
+    if rows == 0 || n == 0 {
+        return;
+    }
+    let shards = pool.threads().min(rows);
+    if shards <= 1 || !worth_sharding(op, rows, pool.threads()) {
+        with_scratch(|s| op.apply_batch_flat(xs, rows, out, s));
+        return;
+    }
+    let chunk_rows = rows.div_ceil(shards);
+    let tasks: Vec<Task> = out
+        .chunks_mut(chunk_rows * n)
+        .zip(xs.chunks(chunk_rows * n))
+        .map(|(shard_out, shard_xs)| {
+            let shard_rows = shard_out.len() / n;
+            let task: Task = Box::new(move || {
+                with_scratch(|s| op.apply_batch_flat(shard_xs, shard_rows, shard_out, s));
+            });
+            task
+        })
+        .collect();
+    pool.scope(tasks);
+}
+
 #[cfg(test)]
 mod tests {
     use super::super::kernels::gaussian_kernel;
@@ -115,6 +146,47 @@ mod tests {
                 assert_eq!(again, reference, "{} backend, reuse", op.name());
             }
         }
+    }
+
+    #[test]
+    fn flat_sharded_is_bitwise_per_row_for_every_backend() {
+        let n = 64;
+        let mut rng = Rng::new(11);
+        let kernel = ToeplitzKernel::from_fn(n, |lag| gaussian_kernel(lag as f64, 12.0));
+        let causal = kernel.clone().causal();
+        let rows = 13; // deliberately not divisible by any worker count
+        let xs: Vec<f32> = (0..rows).flat_map(|_| rng.normals(n)).collect();
+        for (kind, k) in [
+            (BackendKind::Dense, &kernel),
+            (BackendKind::Fft, &kernel),
+            (BackendKind::Ski, &kernel),
+            (BackendKind::Freq, &causal),
+        ] {
+            let op = build_op(k, kind, 8, 5);
+            let reference: Vec<f32> = xs.chunks(n).flat_map(|x| op.apply(x)).collect();
+            let mut out = vec![0.0f32; rows * n];
+            for threads in [1usize, 2, 3, 8] {
+                let pool = ThreadPool::new(threads);
+                out.fill(f32::NAN);
+                apply_batch_flat_sharded(op.as_ref(), &xs, rows, &mut out, &pool);
+                assert_eq!(out, reference, "{} backend, {threads} threads", op.name());
+                // Again through the same pool: arenas are reused.
+                out.fill(f32::NAN);
+                apply_batch_flat_sharded(op.as_ref(), &xs, rows, &mut out, &pool);
+                assert_eq!(out, reference, "{} backend, reuse", op.name());
+            }
+        }
+    }
+
+    #[test]
+    fn flat_sharded_handles_empty_batch() {
+        let n = 32;
+        let kernel = ToeplitzKernel::from_fn(n, |lag| gaussian_kernel(lag as f64, 6.0));
+        let op = build_op(&kernel, BackendKind::Fft, 0, 0);
+        let pool = ThreadPool::new(4);
+        let mut out: Vec<f32> = Vec::new();
+        apply_batch_flat_sharded(op.as_ref(), &[], 0, &mut out, &pool);
+        assert!(out.is_empty());
     }
 
     #[test]

@@ -16,15 +16,16 @@
 //! `x'_i = [W A]_i ᵀ s_i`, which is what shows that causal masking
 //! negates SKI's speedup.
 
+use super::op::{with_scratch, OpScratch, SpectralPlan};
 use super::ToeplitzKernel;
 
 /// Whether the r-point inducing-Gram multiply is cheaper through the
 /// spectral path than the dense r² matvec, per the calibrated cost
-/// model — priced at what the spectral route *actually runs*
-/// (`apply_fft` on the exact 2r grid, three transforms per call,
-/// Bluestein penalty included for awkward 2r), so a rank whose grid
-/// factorizes badly correctly stays dense.  Shared by
-/// [`Ski::apply_sparse`], `SparseLowRankOp::flops_estimate`, and
+/// model — priced at what the spectral route *actually runs* (a
+/// cached-spectrum [`SpectralPlan`] on the gram's own smooth grid,
+/// two r2c transforms per call), so the crossover sits near r = 128
+/// rather than the old per-call-kernel-FFT break-even at r = 512.
+/// Shared by [`Ski::new`], `SparseLowRankOp::flops_estimate`, and
 /// `CostModel::ski_cost` so the three always agree on the route.
 pub(crate) fn gram_prefers_fft(r: usize) -> bool {
     let cost = super::op::CostModel::default();
@@ -67,16 +68,30 @@ pub struct Ski {
     /// once here (see [`gram_prefers_fft`]); `apply_sparse` is the
     /// per-row hot path and must not re-derive it.
     pub gram_fft: bool,
+    /// Cached circulant plan over `a` when the spectral route won:
+    /// the gram spectrum is built once here instead of re-FFT'd on
+    /// every apply.
+    gram_plan: Option<SpectralPlan>,
 }
 
 impl Ski {
+    /// Assemble from an explicit inducing Gram kernel (`a.n` must be
+    /// `r`), deciding the gram-multiply route once.
+    pub fn new(n: usize, r: usize, a: ToeplitzKernel) -> Self {
+        assert!(r >= 2, "SKI needs at least 2 inducing points, got r={r}");
+        assert_eq!(a.n, r, "inducing Gram kernel must be r-point");
+        let gram_fft = gram_prefers_fft(r);
+        let gram_plan = gram_fft.then(|| SpectralPlan::new(&a));
+        Ski { n, r, a, gram_fft, gram_plan }
+    }
+
     /// Build from a kernel function over real-valued lags: the Gram
     /// matrix of the kernel at inducing-point differences `(i-j)·h`.
     pub fn from_kernel(n: usize, r: usize, k: impl Fn(f64) -> f32) -> Self {
         assert!(r >= 2, "SKI needs at least 2 inducing points, got r={r}");
         let h = (n as f64 - 1.0) / (r as f64 - 1.0);
         let a = ToeplitzKernel::from_fn(r, |lag| k(lag as f64 * h));
-        Ski { n, r, a, gram_fft: gram_prefers_fft(r) }
+        Ski::new(n, r, a)
     }
 
     /// `u = Wᵀ x` — sparse scatter, O(n).
@@ -100,18 +115,48 @@ impl Ski {
             .collect()
     }
 
-    /// O(n + r log r) apply.  The inducing-Gram multiply takes the
-    /// spectral path whenever the cost model prices it below the dense
-    /// r² matvec — any r, not just powers of two (the old non-pow2
-    /// dense fallback cost up to r²/r·log r extra at awkward ranks).
+    /// O(n + r log r) apply through the calling thread's arena
+    /// ([`with_scratch`] entry point — don't call from inside another
+    /// arena borrow; use [`apply_sparse_add`](Self::apply_sparse_add)
+    /// there).
     pub fn apply_sparse(&self, x: &[f32]) -> Vec<f32> {
-        let u = self.wt_apply(x);
-        let v = if self.gram_fft {
-            self.a.apply_fft(&u)
-        } else {
-            self.a.apply_dense(&u)
-        };
-        self.w_apply(&v)
+        let mut y = vec![0.0f32; self.n];
+        with_scratch(|s| self.apply_sparse_add(x, &mut y, s));
+        y
+    }
+
+    /// `out += W A Wᵀ x` through caller scratch — the allocation-free
+    /// core of the sparse path: O(n) scatter into `scratch.u`, the
+    /// inducing-Gram multiply into `scratch.v` (the cached spectral
+    /// plan whenever the cost model priced it below the dense r²
+    /// matvec — any r, not just powers of two), O(n) gather-accumulate
+    /// into `out`.
+    pub fn apply_sparse_add(&self, x: &[f32], out: &mut [f32], scratch: &mut OpScratch) {
+        assert_eq!(x.len(), self.n, "Ski size mismatch");
+        assert_eq!(out.len(), self.n, "Ski output size mismatch");
+        // Take u/v out of the arena so the gram plan can borrow the
+        // rest of it for its own transform buffers.
+        let mut u = std::mem::take(&mut scratch.u);
+        let mut v = std::mem::take(&mut scratch.v);
+        u.clear();
+        u.resize(self.r, 0.0);
+        for (i, &xi) in x.iter().enumerate() {
+            let (lo, wl, wr) = interp_weights(i, self.n, self.r);
+            u[lo] += wl * xi;
+            u[lo + 1] += wr * xi;
+        }
+        v.clear();
+        v.resize(self.r, 0.0);
+        match &self.gram_plan {
+            Some(plan) => plan.apply_into(&u, &mut v, scratch),
+            None => self.a.apply_dense_into(&u, &mut v),
+        }
+        for (i, o) in out.iter_mut().enumerate() {
+            let (lo, wl, wr) = interp_weights(i, self.n, self.r);
+            *o += wl * v[lo] + wr * v[lo + 1];
+        }
+        scratch.u = u;
+        scratch.v = v;
     }
 
     /// The paper's practical path: materialised dense `W` matmuls
@@ -244,7 +289,7 @@ mod tests {
             // accumulation magnitudes O(1) rather than letting the
             // generic N(0,1)·√(n/r) growth eat the tolerance.
             let lags: Vec<f32> = vecf(rng, 2 * r - 1).iter().map(|v| 0.5 * v).collect();
-            let ski = Ski { n, r, a: ToeplitzKernel { n: r, lags }, gram_fft: gram_prefers_fft(r) };
+            let ski = Ski::new(n, r, ToeplitzKernel { n: r, lags });
             let x: Vec<f32> = vecf(rng, n).iter().map(|v| 0.25 * v).collect();
             assert_close(&ski.apply_sparse(&x), &ski.apply_dense(&x), 1e-5, "pinned paths");
         });
@@ -301,7 +346,7 @@ mod tests {
             let n = size(rng, 8, 256);
             let r = size(rng, 3, 24).min(n);
             let a = ToeplitzKernel { n: r, lags: vecf(rng, 2 * r - 1) };
-            let ski = Ski { n, r, a, gram_fft: gram_prefers_fft(r) };
+            let ski = Ski::new(n, r, a);
             let x = vecf(rng, n);
             assert_close(&ski.apply_sparse(&x), &ski.apply_dense(&x), 1e-4, "paths");
         });
@@ -354,7 +399,7 @@ mod tests {
             let n = size(rng, 4, 96);
             let r = size(rng, 3, 12).min(n);
             let a = ToeplitzKernel { n: r, lags: vecf(rng, 2 * r - 1) };
-            let ski = Ski { n, r, a, gram_fft: gram_prefers_fft(r) };
+            let ski = Ski::new(n, r, a);
             let x = vecf(rng, n);
             let got = causal_ski_scan(&ski, &x);
             // reference: dense W A Wᵀ, lower-triangular masked

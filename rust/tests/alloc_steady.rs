@@ -1,0 +1,129 @@
+//! Steady-state allocation gate for the flat spectral serve path.
+//!
+//! A counting global allocator wraps `System`; after a warmup that
+//! grows the thread-local scratch arenas to steady-state capacity, the
+//! serial flat core — `apply_batch_flat` through [`with_scratch`], the
+//! exact code one shard of a serve tick runs — must perform **zero**
+//! heap allocations per tick for every backend.  The sharded entry is
+//! additionally checked to stay bounded: its only steady-state
+//! allocations are the pool's per-shard task boxes and queue nodes, a
+//! small constant per tick independent of how many ticks have run.
+//!
+//! One `#[test]` on purpose: the allocation counter is process-global,
+//! so the measurement windows must not race other test threads.  The
+//! verdict is written to `ALLOC_steady_state.json` (deliberately not a
+//! `BENCH_*.json` — bench-check must not read it as a latency
+//! baseline); CI's bench-smoke job uploads it with the bench
+//! artifacts.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use ski_tnn::runtime::ThreadPool;
+use ski_tnn::toeplitz::{
+    apply_batch_flat_sharded, build_op, gaussian_kernel, with_scratch, BackendKind, ToeplitzKernel,
+};
+use ski_tnn::util::json::{self, Json};
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        unsafe { System.alloc(layout) }
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        unsafe { System.alloc_zeroed(layout) }
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        unsafe { System.realloc(ptr, layout, new_size) }
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        unsafe { System.dealloc(ptr, layout) }
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+fn allocs() -> u64 {
+    ALLOCS.load(Ordering::Relaxed)
+}
+
+#[test]
+fn steady_state_spectral_core_is_allocation_free() {
+    let n = 1024usize;
+    let rows = 4usize;
+    let ticks = 10u64;
+    let kernel = ToeplitzKernel::from_fn(n, |lag| gaussian_kernel(lag as f64, n as f64 / 8.0));
+    let causal = kernel.clone().causal();
+    // Deterministic signal — no RNG state to allocate inside a window.
+    let xs: Vec<f32> = (0..rows * n).map(|i| (i * 37 % 256) as f32 / 128.0 - 1.0).collect();
+    let mut out = vec![0.0f32; rows * n];
+    let mut report: Vec<Json> = Vec::new();
+
+    // ---- serial flat core: strict zero after warmup ----
+    for (kind, k) in [
+        (BackendKind::Fft, &kernel),
+        (BackendKind::Ski, &kernel),
+        (BackendKind::Freq, &causal),
+        (BackendKind::Dense, &kernel),
+    ] {
+        let op = build_op(k, kind, (n / 16).max(2), 9);
+        // Warmup grows the arena's transform/gather buffers (and any
+        // lazily registered telemetry handles) to their final size.
+        for _ in 0..3 {
+            with_scratch(|s| op.apply_batch_flat(&xs, rows, &mut out, s));
+        }
+        let before = allocs();
+        for _ in 0..ticks {
+            with_scratch(|s| op.apply_batch_flat(&xs, rows, &mut out, s));
+        }
+        let delta = allocs() - before;
+        assert_eq!(
+            delta,
+            0,
+            "{} backend allocated in steady state: {delta} allocs over {ticks} ticks",
+            op.name()
+        );
+        report.push(Json::obj(vec![
+            ("backend", Json::str(op.name())),
+            ("abi", Json::str("serial_flat")),
+            ("ticks", Json::num(ticks as f64)),
+            ("allocs", Json::num(delta as f64)),
+        ]));
+    }
+
+    // ---- sharded flat path: bounded, tick-count-independent ----
+    // The pool's task boxes and queue nodes are the only steady-state
+    // allocations; the per-row spectral work itself is covered by the
+    // zero assertion above.
+    let op = build_op(&kernel, BackendKind::Fft, (n / 16).max(2), 9);
+    let pool = ThreadPool::new(2);
+    for _ in 0..3 {
+        apply_batch_flat_sharded(op.as_ref(), &xs, rows, &mut out, &pool);
+    }
+    let before = allocs();
+    for _ in 0..ticks {
+        apply_batch_flat_sharded(op.as_ref(), &xs, rows, &mut out, &pool);
+    }
+    let per_tick = (allocs() - before) as f64 / ticks as f64;
+    assert!(per_tick <= 64.0, "sharded serve tick allocates too much: {per_tick} allocs/tick");
+    report.push(Json::obj(vec![
+        ("backend", Json::str("fft")),
+        ("abi", Json::str("sharded_flat")),
+        ("threads", Json::num(2.0)),
+        ("ticks", Json::num(ticks as f64)),
+        ("allocs_per_tick", Json::num(per_tick)),
+    ]));
+
+    let doc = Json::obj(vec![("alloc_gate", Json::arr(report))]);
+    std::fs::write("ALLOC_steady_state.json", json::write(&doc)).expect("write alloc report");
+}

@@ -14,8 +14,8 @@ use std::time::Instant;
 use ski_tnn::runtime::pool::Task;
 use ski_tnn::runtime::ThreadPool;
 use ski_tnn::toeplitz::{
-    apply_batch_sharded, build_op, gaussian_kernel, BackendKind, Dispatch, DispatchQuery,
-    ToeplitzKernel, ToeplitzOp,
+    apply_batch_flat_sharded, apply_batch_sharded, build_op, gaussian_kernel, with_scratch,
+    BackendKind, Dispatch, DispatchQuery, ToeplitzKernel, ToeplitzOp,
 };
 use ski_tnn::util::rng::Rng;
 
@@ -79,6 +79,46 @@ fn apply_batch_bitwise_identical_at_non_pow2_sizes() {
                     got,
                     reference,
                     "{} backend at n={n} must be bitwise identical at {threads} threads",
+                    op.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn apply_batch_flat_bitwise_identical_across_worker_counts() {
+    // The flat zero-allocation ABI must answer bit-for-bit what the
+    // per-row scratch path answers, for every backend and worker
+    // count — including awkward sizes (smooth composite 360, prime
+    // 769) where the spectral backends run mixed-radix/Bluestein
+    // plans.
+    for n in [128usize, 360, 769] {
+        let mut rng = Rng::new(n as u64 ^ 0xF1A7);
+        let kernel = ToeplitzKernel::from_fn(n, |lag| gaussian_kernel(lag as f64, n as f64 / 8.0));
+        let causal = kernel.clone().causal();
+        // 11 rows: not divisible by 2 or 8, so shards are uneven.
+        let count = 11usize;
+        let xs: Vec<f32> = (0..count).flat_map(|_| rng.normals(n)).collect();
+        for (kind, k) in [
+            (BackendKind::Dense, &kernel),
+            (BackendKind::Fft, &kernel),
+            (BackendKind::Ski, &kernel),
+            (BackendKind::Freq, &causal),
+        ] {
+            let op = build_op(k, kind, (n / 16).max(2), 9);
+            // Reference: each row through the per-row scratch entry.
+            let reference: Vec<f32> =
+                with_scratch(|s| xs.chunks(n).flat_map(|x| op.apply_with_scratch(x, s)).collect());
+            let mut out = vec![0.0f32; count * n];
+            for threads in [1usize, 2, 8] {
+                let pool = ThreadPool::new(threads);
+                out.fill(f32::NAN);
+                apply_batch_flat_sharded(op.as_ref(), &xs, count, &mut out, &pool);
+                assert_eq!(
+                    out,
+                    reference,
+                    "{} backend at n={n} flat ABI must be bitwise per-row at {threads} threads",
                     op.name()
                 );
             }
@@ -192,8 +232,7 @@ fn serve_toeplitz_pooled_end_to_end_matches_dense_oracle() {
             let ids: Vec<i32> = (0..n as i32).map(|v| (v * 3 + i as i32) % 256).collect();
             let resp = handle.infer(ids.clone()).expect("infer");
             // Oracle: the same signal through the dense apply.
-            let signal: Vec<f32> =
-                ids.iter().map(|&t| t as f32 / 128.0 - 1.0).collect();
+            let signal: Vec<f32> = ids.iter().map(|&t| t as f32 / 128.0 - 1.0).collect();
             let want = kernel_check.apply_dense(&signal);
             assert_eq!(resp.logits.len(), n);
             for (j, (a, b)) in resp.logits.iter().zip(want.iter()).enumerate() {
