@@ -25,6 +25,7 @@
 
 use std::time::Duration;
 
+use ski_tnn::dsp::{Complex, FftPlan, RealFftPlan};
 use ski_tnn::runtime::ThreadPool;
 use ski_tnn::toeplitz::{
     apply_batch_flat_sharded, apply_batch_sharded, build_op, gaussian_kernel, BackendKind,
@@ -391,12 +392,102 @@ fn main() {
     }
     pt.print();
 
-    // Every spectral cell above ran even-length transforms, so the
-    // r2c fast path must have fired — a zero counter means the real
-    // engine silently fell back to full complex transforms.
-    let real_fast = ski_tnn::telemetry::global().counter("fft.real_fast_path").get();
+    // ---- direct odd-length rfft: half-spectrum chirp-z vs the old
+    // full-complex fallback ----
+    // Circulant grids are always even, so this path only serves
+    // direct odd-length `rfft` callers — but for them the chirp-z
+    // real plan replaces a full complex engine pass.  n = 1001
+    // (7·11·13) is the control: its mixed-radix complex plan is
+    // modelled cheaper than the chirp, so `RealFftPlan` keeps the
+    // fallback there and the two columns should tie.
+    let odd_sizes: &[usize] = &[97, 361, 769, 1001];
+    let mut ot = Table::new(
+        "odd-length rfft: real plan vs full complex engine",
+        &["n", "real plan", "complex", "speedup", "strategy"],
+    );
+    for &n in odd_sizes {
+        let rplan = RealFftPlan::new(n);
+        let cplan = FftPlan::new(n);
+        let x = rng.normals(n);
+        let mut spec: Vec<Complex> = Vec::new();
+        let mut scratch: Vec<Complex> = Vec::new();
+        rplan.rfft_into(&x, &mut spec, &mut scratch); // warm scratch
+        let s_real = bench.run(|| {
+            rplan.rfft_into(&x, &mut spec, &mut scratch);
+            std::hint::black_box(&spec);
+        });
+        let mut cbuf: Vec<Complex> = vec![Complex::ZERO; n];
+        let s_cplx = bench.run(|| {
+            for (c, &v) in cbuf.iter_mut().zip(x.iter()) {
+                *c = Complex::new(v as f64, 0.0);
+            }
+            cplan.fft(&mut cbuf);
+            std::hint::black_box(&cbuf);
+        });
+        ot.row(&[
+            n.to_string(),
+            fmt_secs(s_real.p50_s),
+            fmt_secs(s_cplx.p50_s),
+            format!("{:.2}×", s_cplx.p50_s / s_real.p50_s),
+            rplan.strategy().to_string(),
+        ]);
+        for (strategy, stats) in [("rfft_real", &s_real), ("rfft_complex", &s_cplx)] {
+            rows.push(Json::obj(vec![
+                ("n", Json::num(n as f64)),
+                ("strategy", Json::str(strategy)),
+                ("med_ns", Json::num(1e9 * stats.p50_s)),
+                ("p90_ns", Json::num(1e9 * stats.p90_s)),
+            ]));
+        }
+        // Where the cost gate routed to the odd-real path, the whole
+        // point is beating the complex engine — same quick/full
+        // discipline as the pad-vs-native assert above.
+        if rplan.is_odd_real() {
+            if quick {
+                if s_real.p50_s >= s_cplx.p50_s {
+                    eprintln!(
+                        "WARN: odd-real rfft at n={n} did not beat the complex engine in \
+                         quick mode: {} vs {}",
+                        fmt_secs(s_real.p50_s),
+                        fmt_secs(s_cplx.p50_s)
+                    );
+                }
+                assert!(
+                    s_real.p50_s < s_cplx.p50_s * 1.25,
+                    "odd-real rfft at n={n} catastrophically slower than the complex \
+                     engine it replaces: {} vs {}",
+                    fmt_secs(s_real.p50_s),
+                    fmt_secs(s_cplx.p50_s)
+                );
+            } else {
+                assert!(
+                    s_real.p50_s < s_cplx.p50_s,
+                    "odd-real rfft at n={n} must beat the complex engine it replaces: \
+                     {} vs {}",
+                    fmt_secs(s_real.p50_s),
+                    fmt_secs(s_cplx.p50_s)
+                );
+            }
+        }
+    }
+    ot.print();
+
+    // Every spectral cell above ran even-length transforms and the
+    // odd sweep ran the chirp-z real path, so both fast-path flavours
+    // must have fired — a zero counter means the real engine silently
+    // fell back to full complex transforms.
+    let tele = ski_tnn::telemetry::global();
+    let real_fast = tele.counter("fft.real_fast_path").get();
+    let packed = tele.counter("fft.real_fast_path.packed").get();
+    let odd = tele.counter("fft.real_fast_path.odd").get();
+    let fallback = tele.counter("fft.real_fallback").get();
     assert!(real_fast > 0, "fft.real_fast_path counter stayed zero across the spectral sweep");
-    println!("fft.real_fast_path transforms this run: {real_fast}");
+    assert!(packed > 0, "packed r2c counter stayed zero across the even-length sweep");
+    assert!(odd > 0, "odd-real counter stayed zero across the odd rfft sweep");
+    println!(
+        "fft.real_fast_path transforms this run: {real_fast} \
+         (packed {packed}, odd {odd}; complex fallback {fallback})"
+    );
 
     match write_bench_json("backend_matrix", rows) {
         Ok(path) => println!("wrote {path}"),

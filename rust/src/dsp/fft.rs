@@ -31,10 +31,18 @@
 //! **half-length** complex plan, and unpacks to the n/2+1 non-redundant
 //! bins with an O(n) split/twiddle post-pass — about half the
 //! butterfly work and memory traffic of transforming a zero-padded
-//! complex buffer.  Odd lengths fall back to the full complex engine
-//! (they only arise from `good_conv_size` at tiny n).  Each packed
-//! transform bumps the `fft.real_fast_path` counter, making the
-//! discount observable in stats snapshots.
+//! complex buffer.  Odd Bluestein-class lengths (any prime factor
+//! > 13) take a dedicated half-spectrum chirp: only the `(n+1)/2`
+//! non-redundant bins are produced, through a *smooth* convolution
+//! length `≥ n + n/2` picked by [`good_conv_size`] — strictly cheaper
+//! than the complex engine's own pow2 `≥ 2n-1` Bluestein embedding.
+//! Odd smooth lengths keep the full complex engine (one mixed
+//! transform at n beats two chirp convolutions at ~1.5n; they only
+//! arise from `good_conv_size` at tiny n).  Each fast-path transform
+//! bumps `fft.real_fast_path`, split into `.packed` / `.odd` shares,
+//! and `fft.real_fallback` counts the complex-engine remainder —
+//! making the discount (and which route served it) observable in
+//! stats snapshots.
 //!
 //! ## Plan-cache memory model
 //!
@@ -64,9 +72,17 @@ static PLAN_CACHE_HIT: LazyCounter = LazyCounter::new("fft.plan_cache.hit");
 static PLAN_CACHE_MISS: LazyCounter = LazyCounter::new("fft.plan_cache.miss");
 /// Distinct sizes resident in the process-wide map.
 static PLAN_CACHE_SIZE: LazyGauge = LazyGauge::new("fft.plan_cache.size");
-/// Transforms served by the packed r2c/c2r fast path (one per
-/// direction per apply — a spectral apply at even m counts two).
+/// Transforms served by a real fast path — packed even r2c/c2r or the
+/// odd-length half-spectrum chirp (one per direction per apply — a
+/// spectral apply at even m counts two).
 static REAL_FAST_PATH: LazyCounter = LazyCounter::new("fft.real_fast_path");
+/// The packed-even share of `fft.real_fast_path`.
+static REAL_FAST_PATH_PACKED: LazyCounter = LazyCounter::new("fft.real_fast_path.packed");
+/// The odd-length chirp share of `fft.real_fast_path`.
+static REAL_FAST_PATH_ODD: LazyCounter = LazyCounter::new("fft.real_fast_path.odd");
+/// Transforms that fell back to the full complex engine (odd smooth
+/// sizes where one mixed transform beats two chirp convolutions).
+static REAL_FALLBACK: LazyCounter = LazyCounter::new("fft.real_fallback");
 
 /// Minimal complex number (no external num crate offline).
 #[derive(Debug, Clone, Copy, PartialEq, Default)]
@@ -174,12 +190,16 @@ pub fn fft_work_units(m: usize) -> f64 {
 /// Modeled butterfly work of one **real-input** `m`-point transform
 /// through [`RealFftPlan`]: even lengths run one half-length complex
 /// transform plus the O(m) split/twiddle pass (priced like one extra
-/// radix-2 level); odd lengths fall back to the full complex engine.
+/// radix-2 level); odd lengths take the cheaper of the half-spectrum
+/// chirp (two smooth convolution transforms — wins for Bluestein-class
+/// sizes) and the full complex engine (wins for odd smooth sizes).
 /// The dispatch cost model uses this to give spectral backends their
 /// r2c discount.
 pub fn rfft_work_units(m: usize) -> f64 {
     if m >= 2 && m % 2 == 0 {
         fft_work_units(m / 2) + 0.5 * m as f64
+    } else if m >= 3 {
+        odd_chirp_units(m, good_conv_size(m + m / 2)).min(fft_work_units(m))
     } else {
         fft_work_units(m)
     }
@@ -611,6 +631,89 @@ pub fn ifft(buf: &mut [Complex]) {
     FftPlan::shared(buf.len()).ifft(buf);
 }
 
+/// Half-spectrum chirp-z for **odd** real lengths: compute only the
+/// `h+1 = (n+1)/2` non-redundant bins as a convolution at a *smooth*
+/// length `m ≥ n + h` (picked by [`good_conv_size`], so the inner
+/// transforms run the mixed/pow2 engines, never a pow2 `≥ 2n-1`
+/// Bluestein embedding).  Both directions reuse one chirp table and
+/// one inner plan; the only per-call state is the caller's scratch.
+///
+/// Forward (`w = e^{-2πi/n}`, `c[t] = e^{-iπt²/n}`, so
+/// `w^{jk} = c[j]·c[k]·conj(c[j-k])`):
+/// `X[k] = c[k] · Σ_j (x[j]·c[j]) · conj(c[k-j])` for `k ∈ [0, h]` —
+/// the input multiply is a *real* scale (x is real), and the kernel
+/// `conj(c)` has support `k-j ∈ [-(n-1), h]`, which fits a length-m
+/// circular convolution exactly when `m ≥ n + h`.
+///
+/// Inverse: with `S[j] = Σ_{k=0}^{h} X[k] e^{+2πijk/n}
+///   = conj(c[j]) · Σ_k (X[k]·conj(c[k])) · c[j-k]`,
+/// Hermitian symmetry gives `x[j] = (2·Re S[j] − X[0]) / n` (odd n has
+/// no Nyquist bin), and the inverse kernel `c[j-k]` has support
+/// `[-h, n-1]` — the same `m ≥ n + h` bound.
+#[derive(Debug)]
+struct OddRealPlan {
+    /// Smooth circular-convolution length `≥ n + h`.
+    m: usize,
+    /// `chirp[t] = e^{-iπ t²/n}` for `t < n` (even in t, so negative
+    /// kernel indices read the same table).
+    chirp: Vec<Complex>,
+    /// m-point spectrum of the forward kernel `conj(chirp)`.
+    fwd_spec: Vec<Complex>,
+    /// m-point spectrum of the inverse kernel `chirp`.
+    inv_spec: Vec<Complex>,
+    /// The inner smooth plan of size `m`.
+    inner: Arc<FftPlan>,
+}
+
+impl OddRealPlan {
+    fn new(n: usize, m: usize) -> OddRealPlan {
+        debug_assert!(n % 2 == 1 && n >= 3);
+        let h = n / 2;
+        debug_assert!(m >= n + h);
+        let chirp: Vec<Complex> = (0..n)
+            .map(|j| {
+                // j² mod 2n keeps the angle small — u128 so j² cannot
+                // overflow (same trick as the complex Bluestein plan).
+                let q = ((j as u128 * j as u128) % (2 * n as u128)) as f64;
+                let ang = -std::f64::consts::PI * q / n as f64;
+                Complex::new(ang.cos(), ang.sin())
+            })
+            .collect();
+        let inner = FftPlan::shared(m);
+        // Forward kernel b[t] = conj(c[t]) for t ∈ [-(n-1), h],
+        // negatives wrapped to the top of the m-grid.
+        let mut fwd = vec![Complex::ZERO; m];
+        for (t, f) in fwd.iter_mut().enumerate().take(h + 1) {
+            *f = chirp[t].conj();
+        }
+        for u in 1..n {
+            fwd[m - u] = chirp[u].conj();
+        }
+        inner.fft(&mut fwd);
+        // Inverse kernel k[t] = c[t] for t ∈ [-h, n-1].
+        let mut inv = vec![Complex::ZERO; m];
+        for (t, f) in inv.iter_mut().enumerate().take(n) {
+            *f = chirp[t];
+        }
+        for u in 1..=h {
+            inv[m - u] = chirp[u];
+        }
+        inner.fft(&mut inv);
+        OddRealPlan { m, chirp, fwd_spec: fwd, inv_spec: inv, inner }
+    }
+}
+
+/// Modeled cost of the odd half-spectrum chirp at length `n` with
+/// inner convolution length `m`: two m-point transforms plus the O(n)
+/// chirp multiplies.  The plan (and [`rfft_work_units`]) takes the
+/// chirp route only when this undercuts one full-length complex
+/// transform — true exactly when `n` itself would route through
+/// Bluestein, whose pow2 embedding is `≥ 2n-1` and pays *three*
+/// transforms' worth of work.
+fn odd_chirp_units(n: usize, m: usize) -> f64 {
+    2.0 * fft_work_units(m) + 2.0 * n as f64
+}
+
 /// How a [`RealFftPlan`] runs one size.
 #[derive(Debug)]
 enum RealKind {
@@ -621,8 +724,14 @@ enum RealKind {
     /// holds `e^{-2πik/n}` for `k ≤ n/4` — all either direction needs,
     /// since the unpack walks conjugate pairs `(k, n/2-k)`.
     Packed { half: Arc<FftPlan>, tw: Vec<Complex> },
-    /// Odd n: full-length complex transform (only tiny `good_conv_size`
-    /// picks are odd — every serving grid in this crate is even).
+    /// Odd n in the Bluestein class: half-spectrum chirp through a
+    /// smooth convolution (strictly cheaper than the complex engine's
+    /// own pow2 chirp embedding).
+    OddChirp(OddRealPlan),
+    /// Odd smooth n: full-length complex transform — one mixed
+    /// transform at n beats two chirp convolutions at ~1.5n, so the
+    /// fallback is the *fast* route for these (only tiny
+    /// `good_conv_size` picks are odd — every serving grid is even).
     Fallback(Arc<FftPlan>),
 }
 
@@ -650,7 +759,12 @@ impl RealFftPlan {
         } else if n % 2 == 0 {
             RealKind::Packed { half: FftPlan::shared(n / 2), tw: twiddle_table(n, n / 4 + 1) }
         } else {
-            RealKind::Fallback(FftPlan::shared(n))
+            let m = good_conv_size(n + n / 2);
+            if odd_chirp_units(n, m) < fft_work_units(n) {
+                RealKind::OddChirp(OddRealPlan::new(n, m))
+            } else {
+                RealKind::Fallback(FftPlan::shared(n))
+            }
         };
         RealFftPlan { n, kind }
     }
@@ -698,23 +812,37 @@ impl RealFftPlan {
         matches!(self.kind, RealKind::Packed { .. })
     }
 
+    /// Whether this size takes the odd-length half-spectrum chirp path.
+    pub fn is_odd_real(&self) -> bool {
+        matches!(self.kind, RealKind::OddChirp(_))
+    }
+
     /// Which complex engine backs this plan (`trivial` | `pow2` |
     /// `mixed` | `bluestein`) — for the packed route, the strategy of
-    /// the **half-length** plan every transform actually runs on.
+    /// the **half-length** plan every transform actually runs on; for
+    /// the odd chirp route, the strategy of the smooth inner
+    /// convolution plan.
     pub fn strategy(&self) -> &'static str {
         match &self.kind {
             RealKind::Trivial => "trivial",
             RealKind::Packed { half, .. } => half.strategy(),
+            RealKind::OddChirp(op) => op.inner.strategy(),
             RealKind::Fallback(plan) => plan.strategy(),
         }
     }
 
     /// Forward r2c: the `n/2+1` non-redundant bins of the length-n real
     /// signal `x`, into `out` (resized; no allocation once capacity is
-    /// warm).  `scratch` is only touched on the odd-length fallback.
+    /// warm).  `scratch` is only touched on the odd-length routes (the
+    /// chirp convolution buffer, or the fallback's complex copy).
     pub fn rfft_into(&self, x: &[f32], out: &mut Vec<Complex>, scratch: &mut Vec<Complex>) {
         assert_eq!(x.len(), self.n, "rfft_into: signal/plan size mismatch");
         out.clear();
+        // One exact reservation up front: the packed arm's extend(h) +
+        // push would otherwise reserve exactly h and then pay a second,
+        // doubling reallocation for the Nyquist slot — overshooting the
+        // high-water mark the steady-state capacity pins at.
+        out.reserve(self.bins());
         match &self.kind {
             RealKind::Trivial => {
                 out.push(Complex::new(x.first().copied().unwrap_or(0.0) as f64, 0.0));
@@ -745,12 +873,31 @@ impl RealFftPlan {
                     out[h / 2] = out[h / 2].conj();
                 }
                 REAL_FAST_PATH.incr();
+                REAL_FAST_PATH_PACKED.incr();
+            }
+            RealKind::OddChirp(op) => {
+                let h = self.n / 2;
+                scratch.clear();
+                scratch.resize(op.m, Complex::ZERO);
+                // Chirp the input — a *real* scale, x is real.
+                for (s, (&xj, c)) in scratch.iter_mut().zip(x.iter().zip(op.chirp.iter())) {
+                    *s = c.scale(xj as f64);
+                }
+                op.inner.fft(scratch);
+                for (v, b) in scratch.iter_mut().zip(op.fwd_spec.iter()) {
+                    *v = v.mul(*b);
+                }
+                op.inner.ifft(scratch);
+                out.extend((0..=h).map(|k| op.chirp[k].mul(scratch[k])));
+                REAL_FAST_PATH.incr();
+                REAL_FAST_PATH_ODD.incr();
             }
             RealKind::Fallback(plan) => {
                 scratch.clear();
                 scratch.extend(x.iter().map(|&v| Complex::new(v as f64, 0.0)));
                 plan.fft(scratch);
                 out.extend_from_slice(&scratch[..self.n / 2 + 1]);
+                REAL_FALLBACK.incr();
             }
         }
     }
@@ -758,8 +905,9 @@ impl RealFftPlan {
     /// Inverse c2r: reconstruct the length-n real signal from its
     /// `n/2+1` bins (Hermitian symmetry implied) into `out`, which must
     /// be exactly n long.  `scratch` holds the complex work buffer
-    /// (n/2 packed, n on the odd-length fallback); no allocation once
-    /// its capacity is warm.
+    /// (n/2 packed, the smooth convolution length on the odd chirp
+    /// route, n on the odd-length fallback); no allocation once its
+    /// capacity is warm.
     pub fn irfft_into(&self, spec: &[Complex], out: &mut [f32], scratch: &mut Vec<Complex>) {
         assert_eq!(spec.len(), self.bins(), "irfft_into: spectrum/size mismatch");
         assert_eq!(out.len(), self.n, "irfft_into: output/plan size mismatch");
@@ -798,6 +946,29 @@ impl RealFftPlan {
                     pair[1] = z.im as f32;
                 }
                 REAL_FAST_PATH.incr();
+                REAL_FAST_PATH_PACKED.incr();
+            }
+            RealKind::OddChirp(op) => {
+                scratch.clear();
+                scratch.resize(op.m, Complex::ZERO);
+                for ((s, sp), c) in scratch.iter_mut().zip(spec.iter()).zip(op.chirp.iter()) {
+                    *s = sp.mul(c.conj());
+                }
+                op.inner.fft(scratch);
+                for (v, b) in scratch.iter_mut().zip(op.inv_spec.iter()) {
+                    *v = v.mul(*b);
+                }
+                op.inner.ifft(scratch);
+                // x[j] = (2·Re S[j] − X[0]) / n with S[j] =
+                // conj(chirp[j])·conv[j] — only the real part matters.
+                let x0 = spec[0].re;
+                let inv_n = 1.0 / self.n as f64;
+                for ((o, s), c) in out.iter_mut().zip(scratch.iter()).zip(op.chirp.iter()) {
+                    let re = c.re * s.re + c.im * s.im;
+                    *o = ((2.0 * re - x0) * inv_n) as f32;
+                }
+                REAL_FAST_PATH.incr();
+                REAL_FAST_PATH_ODD.incr();
             }
             RealKind::Fallback(plan) => {
                 let n = self.n;
@@ -811,13 +982,15 @@ impl RealFftPlan {
                 for (o, c) in out.iter_mut().zip(scratch.iter()) {
                     *o = c.re as f32;
                 }
+                REAL_FALLBACK.incr();
             }
         }
     }
 }
 
 /// Real-input FFT: returns the n/2+1 non-redundant bins (any n ≥ 1).
-/// Even lengths ride the [`RealFftPlan`] half-complex fast path.
+/// Even lengths ride the [`RealFftPlan`] half-complex fast path; odd
+/// Bluestein-class lengths ride its half-spectrum chirp.
 pub fn rfft(x: &[f32]) -> Vec<Complex> {
     let n = x.len();
     if n == 0 {
@@ -1022,6 +1195,11 @@ mod tests {
         let plan = RealFftPlan::new(n);
         assert_eq!(plan.bins(), n / 2 + 1);
         assert_eq!(plan.is_packed(), n >= 2 && n % 2 == 0, "n={n}");
+        // Odd Bluestein-class sizes must take the half-spectrum chirp
+        // (never the full complex engine); odd smooth sizes keep the
+        // mixed fallback, which is cheaper for them.
+        let bluestein_class = n >= 3 && n % 2 == 1 && FftPlan::shared(n).strategy() == "bluestein";
+        assert_eq!(plan.is_odd_real(), bluestein_class, "n={n}");
         let (mut got, mut scratch) = (Vec::new(), Vec::new());
         plan.rfft_into(&x, &mut got, &mut scratch);
         assert_eq!(got.len(), want.len(), "n={n}");
@@ -1108,5 +1286,89 @@ mod tests {
         plan.irfft_into(&out, &mut back, &mut scratch);
         assert_eq!(series.get() - before, 2, "one forward + one inverse packed transform");
         crate::telemetry::set_enabled(was);
+    }
+
+    #[test]
+    fn real_plan_matches_complex_path_at_pinned_odd_sizes() {
+        // The satellite contract: odd acceptance sizes pinned against
+        // the complex reference — 97 prime, 361 = 19², 769 prime (all
+        // Bluestein-class → half-spectrum chirp), 1001 = 7·11·13 (odd
+        // smooth → the mixed fallback is the cheaper route).
+        for (i, n) in [97usize, 361, 769, 1001].into_iter().enumerate() {
+            assert_real_plan_matches_complex(n, 70 + i as u64);
+        }
+    }
+
+    #[test]
+    fn prop_odd_real_roundtrip() {
+        check("odd r2c roundtrip (random odd n)", |rng| {
+            let n = 2 * size(rng, 1, 1200) + 1;
+            let x = vecf(rng, n);
+            let plan = RealFftPlan::shared(n);
+            let (mut spec, mut scratch) = (Vec::new(), Vec::new());
+            plan.rfft_into(&x, &mut spec, &mut scratch);
+            assert_eq!(spec.len(), n / 2 + 1);
+            let mut back = vec![0.0f32; n];
+            plan.irfft_into(&spec, &mut back, &mut scratch);
+            assert_close(&x, &back, 1e-5, "odd r2c roundtrip");
+        });
+    }
+
+    #[test]
+    fn real_plan_counts_odd_real_path_not_fallback() {
+        let _g = crate::telemetry::test_guard();
+        let was = crate::telemetry::enabled();
+        crate::telemetry::set_enabled(true);
+        let plan = RealFftPlan::shared(769);
+        assert!(plan.is_odd_real(), "769 is Bluestein-class and must take the chirp route");
+        let fast = crate::telemetry::global().counter("fft.real_fast_path");
+        let odd = crate::telemetry::global().counter("fft.real_fast_path.odd");
+        let fallback = crate::telemetry::global().counter("fft.real_fallback");
+        let (f0, o0, b0) = (fast.get(), odd.get(), fallback.get());
+        let (mut out, mut scratch) = (Vec::new(), Vec::new());
+        plan.rfft_into(&vec![1.0f32; 769], &mut out, &mut scratch);
+        let mut back = vec![0.0f32; 769];
+        plan.irfft_into(&out, &mut back, &mut scratch);
+        assert_eq!(fast.get() - f0, 2, "odd chirp transforms count as fast-path");
+        assert_eq!(odd.get() - o0, 2, "…attributed to the odd share");
+        assert_eq!(fallback.get() - b0, 0, "odd n must not route through the complex fallback");
+        crate::telemetry::set_enabled(was);
+    }
+
+    #[test]
+    fn shared_scratch_capacity_pins_at_high_water_across_widths() {
+        // The bucketed-serving shape: one scratch/out pair shared by a
+        // shrinking-then-growing width sequence.  After one full pass
+        // establishes the high-water mark, repeated passes (including
+        // regrowth after the smallest width) must never reallocate.
+        fn roundtrip(
+            n: usize,
+            rng: &mut crate::util::rng::Rng,
+            out: &mut Vec<Complex>,
+            scratch: &mut Vec<Complex>,
+            back: &mut Vec<f32>,
+        ) {
+            let plan = RealFftPlan::shared(n);
+            let x = rng.normals(n);
+            plan.rfft_into(&x, out, scratch);
+            back.clear();
+            back.resize(n, 0.0);
+            plan.irfft_into(out, back, scratch);
+        }
+        let widths = [1024usize, 256, 96, 769, 1024, 97, 360, 1024];
+        let mut rng = crate::util::rng::Rng::new(21);
+        let (mut out, mut scratch) = (Vec::new(), Vec::new());
+        let mut back = Vec::new();
+        for &n in &widths {
+            roundtrip(n, &mut rng, &mut out, &mut scratch, &mut back);
+        }
+        let (co, cs) = (out.capacity(), scratch.capacity());
+        for _ in 0..3 {
+            for &n in &widths {
+                roundtrip(n, &mut rng, &mut out, &mut scratch, &mut back);
+            }
+        }
+        assert_eq!(out.capacity(), co, "spectrum buffer grew past its high-water mark");
+        assert_eq!(scratch.capacity(), cs, "scratch grew past its high-water mark");
     }
 }

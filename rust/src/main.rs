@@ -55,7 +55,7 @@ use anyhow::{bail, Result};
 use ski_tnn::config::RunConfig;
 use ski_tnn::coordinator::Trainer;
 use ski_tnn::runtime::{Engine, HostTensor, ModelState};
-use ski_tnn::server::{serve_model, Batcher, ServerConfig};
+use ski_tnn::server::{serve_model, Batcher, RowBatch, ServerConfig};
 use ski_tnn::util::cli::Args;
 
 fn main() -> Result<()> {
@@ -167,7 +167,7 @@ fn run_synthetic_load<F>(
     max_batch: usize,
 ) -> Result<()>
 where
-    F: FnMut(&HostTensor) -> Result<Vec<Vec<f32>>>,
+    F: FnMut(&HostTensor) -> Result<RowBatch>,
 {
     let handle = batcher.handle();
     let workers: Vec<_> = (0..clients)
@@ -382,9 +382,17 @@ fn cmd_serve_substrate(args: &Args, backend: &str) -> Result<()> {
 /// Offline perf gate: compare emitted `BENCH_*.json` medians against
 /// `bench/baseline.json` (calibration-scaled), failing the process on
 /// regressions beyond the baseline threshold.  `--update` rewrites the
-/// baseline from the current artifacts instead.
+/// baseline from the current artifacts; `--arm-from <candidate.json>`
+/// promotes a comparison run's measured candidate into the baseline
+/// (dropping `"bootstrap": true`) without re-running benches.
 fn cmd_bench_check(args: &Args) -> Result<()> {
     let baseline = args.str_or("baseline", "bench/baseline.json");
+    if let Some(candidate) = args.get("arm-from") {
+        // Promote a measured candidate (written by a prior comparison
+        // run) into the committed baseline, dropping its bootstrap
+        // marker — no benches are re-run.
+        return ski_tnn::util::benchcheck::arm_from(candidate, &baseline);
+    }
     let dir = args.str_or("dir", ".");
     let update = args.flag("update");
     let allow_missing = args.flag("allow-missing");

@@ -13,6 +13,12 @@
 //! 3. **Panic containment**: a panicking task never takes a worker
 //!    down or hangs the latch; the first payload is re-thrown on the
 //!    submitting thread after every task of the batch has finished.
+//! 4. **Allocation-free steady state**: a scope does not box tasks.
+//!    [`ThreadPool::scope_fn`] shares one borrowed closure and hands
+//!    out shard *indices* from an atomic cursor; the per-batch state
+//!    (cursor + latch) is recycled through a pool-owned arena, so a
+//!    warm pool runs whole batches without touching the allocator
+//!    (the injector ring buffer keeps its capacity across scopes).
 //!
 //! Sizing comes from `SKI_TNN_THREADS` (env) or the machine's
 //! available parallelism — see [`default_threads`] — with
@@ -22,7 +28,7 @@
 
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, Once, OnceLock};
 use std::thread::JoinHandle;
 
@@ -31,24 +37,63 @@ use std::thread::JoinHandle;
 static POOL_WORKERS: crate::telemetry::LazyGauge = crate::telemetry::LazyGauge::new("pool.workers");
 
 /// A borrowed shard task, alive only for the duration of one
-/// [`ThreadPool::scope`] call.
+/// [`ThreadPool::scope`] call.  Hot paths prefer
+/// [`ThreadPool::scope_fn`], which needs no per-task boxes at all.
 pub type Task<'a> = Box<dyn FnOnce() + Send + 'a>;
 
-/// An owned job as stored in the injector (lifetime erased — sound
-/// because `scope` blocks until its jobs have all run).
-type Job = Box<dyn FnOnce() + Send + 'static>;
+/// A lifetime-erased `&(dyn Fn(usize) + Sync)` as carried by injector
+/// entries.  Sound to dereference only behind a successful cursor
+/// claim: the originating `scope_fn` call blocks until every index has
+/// run, and once a batch is finished its cursor stays exhausted, so a
+/// stale entry popped later can never claim an index (and therefore
+/// never touches the dead closure).
+#[derive(Clone, Copy)]
+struct ErasedFn(*const (dyn Fn(usize) + Sync));
 
-struct Shared {
-    queue: Mutex<VecDeque<Job>>,
-    work: Condvar,
-    shutdown: AtomicBool,
+// SAFETY: the pointee is `Sync` and the dereference discipline above
+// confines every call to the borrow's true lifetime.
+unsafe impl Send for ErasedFn {}
+
+/// One injector entry: a batch handle some worker should help drain.
+/// Entries are many-per-batch (one per worker that could usefully
+/// join); the cursor in `state` makes consuming a stale or surplus
+/// entry a no-op.
+struct BatchEntry {
+    f: ErasedFn,
+    state: Arc<BatchState>,
 }
 
-/// Completion latch for one `scope` batch.
-struct Latch {
+/// Per-batch claim cursor + completion latch, recycled through the
+/// pool's arena so steady-state scopes allocate nothing.
+struct BatchState {
+    /// Next unclaimed shard index (`fetch_add` to claim; `>= count`
+    /// means the batch is fully claimed — or the entry was stale).
+    next: AtomicUsize,
+    /// Number of shard indices in the current batch.
+    count: AtomicUsize,
+    /// Indices not yet *completed* (claimed ≠ done — the scope only
+    /// returns once every claimed index has finished running).
     remaining: Mutex<usize>,
     done: Condvar,
     panic: Mutex<Option<Box<dyn std::any::Any + Send + 'static>>>,
+}
+
+impl BatchState {
+    fn new() -> BatchState {
+        BatchState {
+            next: AtomicUsize::new(0),
+            count: AtomicUsize::new(0),
+            remaining: Mutex::new(0),
+            done: Condvar::new(),
+            panic: Mutex::new(None),
+        }
+    }
+}
+
+struct Shared {
+    queue: Mutex<VecDeque<BatchEntry>>,
+    work: Condvar,
+    shutdown: AtomicBool,
 }
 
 /// The fixed worker pool.  Dropping it joins every worker (pending
@@ -58,7 +103,15 @@ pub struct ThreadPool {
     shared: Arc<Shared>,
     workers: Vec<JoinHandle<()>>,
     threads: usize,
+    /// Recycled batch states.  An entry is reused only when its
+    /// `Arc::strong_count` is back to 1 — i.e. no stale injector entry
+    /// still references it — which makes the reset race-free.
+    arena: Mutex<Vec<Arc<BatchState>>>,
 }
+
+/// Cap on recycled batch states kept alive (more than a handful means
+/// deeply overlapped scopes; let the extras drop).
+const ARENA_CAP: usize = 8;
 
 impl ThreadPool {
     /// A pool applying `threads` threads of parallelism: `threads - 1`
@@ -82,7 +135,7 @@ impl ThreadPool {
                     .expect("spawning pool worker")
             })
             .collect();
-        ThreadPool { shared, workers, threads }
+        ThreadPool { shared, workers, threads, arena: Mutex::new(Vec::new()) }
     }
 
     /// Configured parallelism (spawned workers + the caller).
@@ -90,10 +143,59 @@ impl ThreadPool {
         self.threads
     }
 
-    /// Run every task to completion, using the workers *and* the
-    /// calling thread.  Returns once all tasks have finished.  If any
-    /// task panicked, the first payload is re-thrown here — after the
-    /// whole batch has drained, so no borrow escapes the scope.
+    /// Run `f(0) … f(count-1)` to completion, using the workers *and*
+    /// the calling thread, without boxing anything: workers claim
+    /// indices from a shared atomic cursor, and the per-batch state is
+    /// recycled through the pool arena — a warm pool executes whole
+    /// scopes with **zero** allocations.  Returns once every index has
+    /// finished.  If any call panicked, the first payload is re-thrown
+    /// here — after the whole batch has drained, so no borrow escapes
+    /// the scope.
+    pub fn scope_fn(&self, count: usize, f: &(dyn Fn(usize) + Sync)) {
+        if count == 0 {
+            return;
+        }
+        if self.threads == 1 || count == 1 {
+            // Serial reference path: in order, on the caller.
+            for i in 0..count {
+                f(i);
+            }
+            return;
+        }
+        let state = self.arena_take(count);
+        // SAFETY: the erased borrow is only dereferenced behind a
+        // successful cursor claim, and this call does not return until
+        // `remaining` hits zero — every claim has finished by then,
+        // and later (stale) claims fail the cursor check.
+        let erased = ErasedFn(unsafe {
+            std::mem::transmute::<&(dyn Fn(usize) + Sync), &'static (dyn Fn(usize) + Sync)>(f)
+        });
+        let copies = (self.threads - 1).min(count);
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            for _ in 0..copies {
+                q.push_back(BatchEntry { f: erased, state: Arc::clone(&state) });
+            }
+            self.shared.work.notify_all();
+        }
+        // The caller works too: claim indices from its own batch
+        // instead of blocking immediately.
+        run_batch(&state, erased);
+        let mut rem = state.remaining.lock().unwrap();
+        while *rem > 0 {
+            rem = state.done.wait(rem).unwrap();
+        }
+        drop(rem);
+        let panic = state.panic.lock().unwrap().take();
+        self.arena_put(state);
+        if let Some(p) = panic {
+            resume_unwind(p);
+        }
+    }
+
+    /// Run every task to completion (see [`scope_fn`](Self::scope_fn)
+    /// — this boxed form exists for callers whose shards are genuinely
+    /// heterogeneous; it pays one `Vec` of take-once cells per call).
     pub fn scope<'a>(&self, tasks: Vec<Task<'a>>) {
         if tasks.is_empty() {
             return;
@@ -105,53 +207,67 @@ impl ThreadPool {
             }
             return;
         }
-        let latch = Arc::new(Latch {
-            remaining: Mutex::new(tasks.len()),
-            done: Condvar::new(),
-            panic: Mutex::new(None),
+        let cells: Vec<Mutex<Option<Task<'a>>>> =
+            tasks.into_iter().map(|t| Mutex::new(Some(t))).collect();
+        self.scope_fn(cells.len(), &|i| {
+            // Each index is claimed exactly once; the take is belt and
+            // braces for that invariant.
+            if let Some(t) = cells[i].lock().unwrap().take() {
+                t();
+            }
         });
-        {
-            let mut q = self.shared.queue.lock().unwrap();
-            for task in tasks {
-                let l = Arc::clone(&latch);
-                let job: Task<'a> = Box::new(move || {
-                    if let Err(p) = catch_unwind(AssertUnwindSafe(task)) {
-                        let mut slot = l.panic.lock().unwrap();
-                        if slot.is_none() {
-                            *slot = Some(p);
-                        }
-                    }
-                    let mut rem = l.remaining.lock().unwrap();
-                    *rem -= 1;
-                    if *rem == 0 {
-                        l.done.notify_all();
-                    }
-                });
-                // SAFETY: the job's borrows (inside `task`) outlive the
-                // injector's hold on it because this function does not
-                // return until `remaining` hits zero, and the wrapper
-                // only decrements after the task has been consumed.
-                let job: Job = unsafe { std::mem::transmute::<Task<'a>, Task<'static>>(job) };
-                q.push_back(job);
+    }
+
+    /// A recycled (or fresh) batch state, reset for `count` indices.
+    fn arena_take(&self, count: usize) -> Arc<BatchState> {
+        let mut arena = self.arena.lock().unwrap();
+        let reusable = arena.iter().position(|s| Arc::strong_count(s) == 1);
+        let state = match reusable {
+            Some(i) => arena.swap_remove(i),
+            None => Arc::new(BatchState::new()),
+        };
+        drop(arena);
+        // Publication to workers happens through the queue mutex, so
+        // these resets are visible before any entry is popped.
+        state.next.store(0, Ordering::Release);
+        state.count.store(count, Ordering::Release);
+        *state.remaining.lock().unwrap() = count;
+        *state.panic.lock().unwrap() = None;
+        state
+    }
+
+    fn arena_put(&self, state: Arc<BatchState>) {
+        let mut arena = self.arena.lock().unwrap();
+        if arena.len() < ARENA_CAP {
+            arena.push(state);
+        }
+    }
+}
+
+/// Drain one batch: claim indices until the cursor is exhausted.  Both
+/// workers (via popped entries) and the submitting caller run this;
+/// stale entries fall straight through the cursor check without ever
+/// dereferencing `f`.
+fn run_batch(state: &BatchState, f: ErasedFn) {
+    let count = state.count.load(Ordering::Acquire);
+    loop {
+        let i = state.next.fetch_add(1, Ordering::AcqRel);
+        if i >= count {
+            return;
+        }
+        // SAFETY: a successful claim means the owning `scope_fn` is
+        // still blocked on the latch, so the borrow is alive.
+        let task = unsafe { &*f.0 };
+        if let Err(p) = catch_unwind(AssertUnwindSafe(|| task(i))) {
+            let mut slot = state.panic.lock().unwrap();
+            if slot.is_none() {
+                *slot = Some(p);
             }
-            self.shared.work.notify_all();
         }
-        // The caller works too: drain whatever is queued (usually its
-        // own shards) instead of blocking immediately.
-        loop {
-            let job = self.shared.queue.lock().unwrap().pop_front();
-            match job {
-                Some(j) => j(),
-                None => break,
-            }
-        }
-        let mut rem = latch.remaining.lock().unwrap();
-        while *rem > 0 {
-            rem = latch.done.wait(rem).unwrap();
-        }
-        drop(rem);
-        if let Some(p) = latch.panic.lock().unwrap().take() {
-            resume_unwind(p);
+        let mut rem = state.remaining.lock().unwrap();
+        *rem -= 1;
+        if *rem == 0 {
+            state.done.notify_all();
         }
     }
 }
@@ -180,16 +296,20 @@ impl ThreadPool {
             return;
         }
         let chunk = rows.div_ceil(shards);
-        let f = &f;
-        let tasks: Vec<Task> = items
-            .chunks_mut(chunk)
-            .enumerate()
-            .map(|(s, c)| {
-                let task: Task = Box::new(move || f(s * chunk, c));
-                task
-            })
-            .collect();
-        self.scope(tasks);
+        let nchunks = rows.div_ceil(chunk);
+        // Raw-split the slice so the shared scope closure can hand each
+        // claimed index its own `&mut` chunk (usize-laundered pointer:
+        // raw pointers are not Sync).
+        let base = items.as_mut_ptr() as usize;
+        self.scope_fn(nchunks, &|s| {
+            let start = s * chunk;
+            let len = chunk.min(rows - start);
+            // SAFETY: indices are claimed exactly once and chunks are
+            // disjoint, so each `&mut` is exclusive; the backing slice
+            // outlives the scope (scope_fn blocks until all run).
+            let slice = unsafe { std::slice::from_raw_parts_mut((base as *mut T).add(start), len) };
+            f(start, slice);
+        });
     }
 }
 
@@ -213,11 +333,11 @@ impl Drop for ThreadPool {
 
 fn worker_loop(shared: &Shared) {
     loop {
-        let job = {
+        let entry = {
             let mut q = shared.queue.lock().unwrap();
             loop {
-                if let Some(j) = q.pop_front() {
-                    break j;
+                if let Some(e) = q.pop_front() {
+                    break e;
                 }
                 if shared.shutdown.load(Ordering::Acquire) {
                     return;
@@ -225,9 +345,9 @@ fn worker_loop(shared: &Shared) {
                 q = shared.work.wait(q).unwrap();
             }
         };
-        // Scope wrappers already catch panics; this is defence so a
-        // worker can never die and strand a latch.
-        let _ = catch_unwind(AssertUnwindSafe(job));
+        // `run_batch` catches per-index panics itself, so a worker can
+        // never die and strand a latch; stale entries no-op.
+        run_batch(&entry.state, entry.f);
     }
 }
 
@@ -383,6 +503,40 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn scope_fn_covers_every_index_once() {
+        let pool = ThreadPool::new(4);
+        let hits: Vec<AtomicUsize> = (0..67).map(|_| AtomicUsize::new(0)).collect();
+        for _ in 0..5 {
+            pool.scope_fn(hits.len(), &|i| {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::Relaxed), 5, "index {i}");
+        }
+    }
+
+    #[test]
+    fn scope_fn_panic_propagates_and_arena_recycles() {
+        let pool = ThreadPool::new(3);
+        let caught = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.scope_fn(6, &|i| {
+                if i == 2 {
+                    panic!("index {i} exploded");
+                }
+            });
+        }));
+        assert!(caught.is_err(), "scope_fn must re-throw the index panic");
+        // The recycled batch state must come back clean: a follow-up
+        // scope runs every index and rethrows nothing.
+        let sum = AtomicUsize::new(0);
+        pool.scope_fn(8, &|i| {
+            sum.fetch_add(i + 1, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 36);
     }
 
     #[test]

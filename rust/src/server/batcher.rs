@@ -30,6 +30,8 @@ use crate::runtime::{global_pool, Engine, HostTensor, ModelState, ThreadPool};
 use crate::telemetry;
 use crate::toeplitz::{apply_batch_flat_sharded, BackendKind, Dispatch, DispatchQuery, ToeplitzOp};
 
+use super::rows::{LogitsRow, RowBatch, RowPool};
+
 /// Server tuning knobs.
 #[derive(Debug, Clone)]
 pub struct ServerConfig {
@@ -98,7 +100,11 @@ pub struct Request {
 #[derive(Debug, Clone)]
 pub struct Response {
     /// Logits row for this request (num_classes or vocab wide).
-    pub logits: Vec<f32>,
+    /// Dereferences to `[f32]`; substrate rows are pooled — dropping
+    /// the response returns the buffer to the serving tick's
+    /// [`RowPool`], which is what keeps a warm serve tick
+    /// allocation-free end to end.
+    pub logits: LogitsRow,
     /// Time spent queued before execution started.
     pub queued: Duration,
     /// Size of the batch this request rode in (diagnostics).
@@ -269,7 +275,7 @@ impl Batcher {
     /// is gone.
     pub fn run<F>(mut self, mut exec: F) -> Result<BatcherStats>
     where
-        F: FnMut(&HostTensor) -> Result<Vec<Vec<f32>>>,
+        F: FnMut(&HostTensor) -> Result<RowBatch>,
     {
         drop(self.tx.take()); // only client handles keep the queue alive
         let widths = self.cfg.bucket_widths();
@@ -308,7 +314,7 @@ impl Batcher {
         exec: &mut F,
         stats: &mut BatcherStats,
     ) where
-        F: FnMut(&HostTensor) -> Result<Vec<Vec<f32>>>,
+        F: FnMut(&HostTensor) -> Result<RowBatch>,
     {
         // Tensor row count: the fixed-width path pads to the model
         // batch (the AOT artifact's shape is baked in); bucketed
@@ -334,7 +340,7 @@ impl Batcher {
         stats.batches += 1;
         stats.exec_rows += rows_cap;
         stats.padded_rows += rows_cap - nreq;
-        let rows = match result {
+        let mut rows = match result {
             Ok(rows) if rows.len() >= nreq => rows,
             Ok(rows) => {
                 // Contract violation — fail this batch's requests, not
@@ -354,7 +360,10 @@ impl Batcher {
                 return;
             }
         };
-        for (i, (req, logits)) in reqs.into_iter().zip(rows).enumerate() {
+        // Drain rather than consume: padded surplus rows and the batch
+        // container itself return to the executor's pool when `rows`
+        // drops at the end of this scope.
+        for (i, (req, logits)) in reqs.into_iter().zip(rows.drain(..)).enumerate() {
             let queued = started.duration_since(req.submitted);
             stats.record_queue_wait(stats.requests - nreq + i, queued);
             let _ = req.resp.send(Response {
@@ -386,7 +395,7 @@ impl Batcher {
             // struggling, and dropping them would flatter the report.
             stats.record_queue_wait(stats.requests - nreq + i, queued);
             let _ = req.resp.send(Response {
-                logits: Vec::new(),
+                logits: LogitsRow::default(),
                 queued,
                 batch_rows: rows_cap,
                 width,
@@ -400,14 +409,14 @@ impl Batcher {
 pub fn serve_model<'a>(
     engine: &'a Engine,
     state: &'a ModelState,
-) -> impl FnMut(&HostTensor) -> Result<Vec<Vec<f32>>> + 'a {
+) -> impl FnMut(&HostTensor) -> Result<RowBatch> + 'a {
     move |batch: &HostTensor| {
         let ids = batch.to_literal()?;
         let out = state.logits(engine, &ids)?;
         let shape = out.shape().to_vec();
         let data = out.as_f32()?;
         let width = shape[1];
-        Ok(data.chunks(width).map(|c| c.to_vec()).collect())
+        Ok(data.chunks(width).map(|c| c.to_vec()).collect::<Vec<_>>().into())
     }
 }
 
@@ -438,33 +447,38 @@ fn ids_to_signal(row: &[i32]) -> Vec<f32> {
 /// artifact-free load-test target of `ski-tnn serve --backend …`.
 pub fn serve_toeplitz(
     op: Arc<dyn ToeplitzOp>,
-) -> impl FnMut(&HostTensor) -> Result<Vec<Vec<f32>>> {
-    move |batch: &HostTensor| exec_toeplitz(op.as_ref(), global_pool(), batch)
+) -> impl FnMut(&HostTensor) -> Result<RowBatch> {
+    let mut bufs = TickBuffers::new();
+    move |batch: &HostTensor| exec_toeplitz(op.as_ref(), global_pool(), batch, &mut bufs)
 }
 
 /// [`serve_toeplitz`] on an explicit pool (per-run `--threads`).
 pub fn serve_toeplitz_on(
     op: Arc<dyn ToeplitzOp>,
     pool: Arc<ThreadPool>,
-) -> impl FnMut(&HostTensor) -> Result<Vec<Vec<f32>>> {
-    move |batch: &HostTensor| exec_toeplitz(op.as_ref(), &pool, batch)
+) -> impl FnMut(&HostTensor) -> Result<RowBatch> {
+    let mut bufs = TickBuffers::new();
+    move |batch: &HostTensor| exec_toeplitz(op.as_ref(), &pool, batch, &mut bufs)
 }
 
 /// Length-bucketed substrate serving: `make(width)` builds (once, then
 /// cached) the operator for each bucket width the batcher executes at,
 /// so one serve loop answers mixed-length traffic with a right-sized
-/// plan per bucket instead of padding everything to a single `n`.
+/// plan per bucket instead of padding everything to a single `n` —
+/// each width keeps its own [`TickBuffers`], so every bucket's serve
+/// tick is allocation-free once warm.
 pub fn serve_toeplitz_factory(
     make: impl Fn(usize) -> Arc<dyn ToeplitzOp>,
     pool: Arc<ThreadPool>,
-) -> impl FnMut(&HostTensor) -> Result<Vec<Vec<f32>>> {
-    let mut ops: std::collections::HashMap<usize, Arc<dyn ToeplitzOp>> =
+) -> impl FnMut(&HostTensor) -> Result<RowBatch> {
+    let mut ops: std::collections::HashMap<usize, (Arc<dyn ToeplitzOp>, TickBuffers)> =
         std::collections::HashMap::new();
     move |batch: &HostTensor| {
-        let shape = batch.shape().to_vec();
+        let shape = batch.shape();
         ensure!(shape.len() == 2, "expected a (batch, width) ids tensor, got {shape:?}");
-        let op = Arc::clone(ops.entry(shape[1]).or_insert_with(|| make(shape[1])));
-        exec_toeplitz(op.as_ref(), &pool, batch)
+        let width = shape[1];
+        let entry = ops.entry(width).or_insert_with(|| (make(width), TickBuffers::new()));
+        exec_toeplitz(entry.0.as_ref(), &pool, batch, &mut entry.1)
     }
 }
 
@@ -484,9 +498,9 @@ pub fn audit_exec<F, P, R>(
     rank_for: R,
     w: usize,
     threads: usize,
-) -> impl FnMut(&HostTensor) -> Result<Vec<Vec<f32>>>
+) -> impl FnMut(&HostTensor) -> Result<RowBatch>
 where
-    F: FnMut(&HostTensor) -> Result<Vec<Vec<f32>>>,
+    F: FnMut(&HostTensor) -> Result<RowBatch>,
     P: Fn(usize) -> (BackendKind, bool),
     R: Fn(usize) -> usize,
 {
@@ -525,27 +539,50 @@ where
     }
 }
 
+/// Reusable per-width tick state for the substrate executors: the flat
+/// signal/result buffers and the response-row pool.  Owned by the
+/// serve closures (one per bucket width in the factory), so every
+/// buffer survives from tick to tick — after one warm round through
+/// the clients a serve tick allocates nothing, which is the tier
+/// `tests/alloc_steady.rs` pins in CI.
+struct TickBuffers {
+    xs: Vec<f32>,
+    out: Vec<f32>,
+    rows: RowPool,
+}
+
+impl TickBuffers {
+    fn new() -> TickBuffers {
+        TickBuffers { xs: Vec::new(), out: Vec::new(), rows: RowPool::new() }
+    }
+}
+
 fn exec_toeplitz(
     op: &dyn ToeplitzOp,
     pool: &ThreadPool,
     batch: &HostTensor,
-) -> Result<Vec<Vec<f32>>> {
-    let shape = batch.shape().to_vec();
+    bufs: &mut TickBuffers,
+) -> Result<RowBatch> {
+    let shape = batch.shape();
     ensure!(shape.len() == 2, "expected a (batch, n) ids tensor, got {shape:?}");
     ensure!(shape[1] == op.n(), "row width {} does not match operator n {}", shape[1], op.n());
     let ids = batch.as_i32()?;
     let (rows, n) = (shape[0], shape[1]);
-    // One flat row-major signal buffer and one flat result buffer for
-    // the whole batch: the operator runs through the allocation-free
-    // flat ABI with row-aligned shards, so the only allocations on
-    // this path are these two buffers and the response rows.
-    let mut xs = vec![0.0f32; rows * n];
-    for (sig, row) in xs.chunks_mut(n).zip(ids.chunks(n)) {
+    // Flat row-major signal/result buffers recycled across ticks: the
+    // operator runs through the allocation-free flat ABI with
+    // row-aligned shards, and the response rows come from (and return
+    // to) the per-width pool — a warm tick allocates nothing.
+    bufs.xs.clear();
+    bufs.xs.resize(rows * n, 0.0);
+    for (sig, row) in bufs.xs.chunks_mut(n).zip(ids.chunks(n)) {
         ids_to_signal_into(row, sig);
     }
-    let mut out = vec![0.0f32; rows * n];
-    apply_batch_flat_sharded(op, &xs, rows, &mut out, pool);
-    Ok(out.chunks(n).map(|c| c.to_vec()).collect())
+    bufs.out.clear();
+    bufs.out.resize(rows * n, 0.0);
+    apply_batch_flat_sharded(op, &bufs.xs, rows, &mut bufs.out, pool);
+    let mut resp = bufs.rows.batch();
+    resp.extend(bufs.out.chunks(n).map(|c| bufs.rows.row(c)));
+    Ok(resp)
 }
 
 #[cfg(test)]
@@ -553,7 +590,7 @@ mod tests {
     use super::*;
 
     /// Echo executor: logits[row] = [sum of that row's non-PAD ids].
-    fn echo(batch: &HostTensor) -> Result<Vec<Vec<f32>>> {
+    fn echo(batch: &HostTensor) -> Result<RowBatch> {
         let shape = batch.shape().to_vec();
         let ids = batch.as_i32()?;
         Ok(ids
@@ -561,7 +598,8 @@ mod tests {
             .map(|row| {
                 vec![row.iter().filter(|&&t| t != PAD).map(|&t| t as f32).sum::<f32>()]
             })
-            .collect())
+            .collect::<Vec<_>>()
+            .into())
     }
 
     fn small_cfg() -> ServerConfig {
@@ -742,6 +780,31 @@ mod tests {
         let mut serial = serve_toeplitz_on(op.clone(), Arc::new(ThreadPool::new(1)));
         let mut pooled = serve_toeplitz_on(op, Arc::new(ThreadPool::new(4)));
         assert_eq!(serial(&batch).unwrap(), pooled(&batch).unwrap());
+    }
+
+    #[test]
+    fn toeplitz_executor_recycles_response_rows_across_ticks() {
+        // Once a tick's responses are consumed (dropped), the next tick
+        // must answer from the very same buffers — the envelope the
+        // allocation gate pins in CI.
+        use crate::toeplitz::{build_op, BackendKind, ToeplitzKernel};
+        let n = 16;
+        let kernel = ToeplitzKernel::from_fn(n, |lag| 1.0 / (1.0 + lag.abs() as f32));
+        let op: Arc<dyn ToeplitzOp> = Arc::from(build_op(&kernel, BackendKind::Fft, 0, 0));
+        let mut exec = serve_toeplitz_on(op, Arc::new(ThreadPool::new(1)));
+        let batch = HostTensor::i32(vec![2, n], (0..2 * n as i32).collect());
+        let first = exec(&batch).unwrap();
+        let mut ptrs: Vec<*const f32> = first.iter().map(|r| r.as_ptr()).collect();
+        let want: Vec<Vec<f32>> = first.iter().map(|r| r.to_vec()).collect();
+        drop(first); // responses consumed → rows return to the pool
+        let second = exec(&batch).unwrap();
+        let mut again: Vec<*const f32> = second.iter().map(|r| r.as_ptr()).collect();
+        ptrs.sort();
+        again.sort();
+        assert_eq!(ptrs, again, "row buffers must be recycled, not reallocated");
+        for (r, w) in second.iter().zip(want.iter()) {
+            assert_eq!(*r, *w, "recycled rows must still carry fresh results");
+        }
     }
 
     #[test]

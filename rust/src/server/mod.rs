@@ -19,11 +19,13 @@
 
 mod batcher;
 mod generate;
+mod rows;
 
 pub use batcher::{
     audit_exec, serve_model, serve_toeplitz, serve_toeplitz_factory, serve_toeplitz_on, Batcher,
     BatcherStats, Request, Response, ServerConfig,
 };
+pub use rows::{LogitsRow, RowBatch, RowPool};
 pub use generate::{
     GenClient, GenConfig, GenParams, GenRequest, GenResponse, GenScheduler, GenStats,
 };

@@ -1,0 +1,257 @@
+//! Pooled response rows — the recycling half of the serve tick's
+//! zero-allocation envelope.
+//!
+//! The batcher's executor produces one logits row per request, and each
+//! row is *moved* to its requester: ownership genuinely leaves the
+//! serve loop, so a plain `Vec<f32>` would be a fresh allocation every
+//! tick, forever.  [`RowPool`] closes the loop.  Executor rows are
+//! [`LogitsRow`]s that remember their home pool and hand their buffer
+//! back when dropped (i.e. once the client has consumed the response),
+//! and the executor's per-tick container is a [`RowBatch`] that does
+//! the same for the outer `Vec`.  After one warm round through the
+//! clients, a serve tick draws every response buffer from the free list
+//! and allocates nothing — the invariant `tests/alloc_steady.rs`
+//! enforces in CI.
+//!
+//! Rows built from plain vectors (the XLA model path, test oracles) or
+//! by cloning are *untethered*: they behave exactly like a `Vec<f32>`
+//! and simply drop.  The free lists are bounded ([`ROWS_CAP`] /
+//! [`BATCH_CAP`]), so a burst of in-flight responses returning at once
+//! can never turn the pool into a leak.
+
+use std::fmt;
+use std::ops::{Deref, DerefMut};
+use std::sync::{Arc, Mutex};
+
+/// Most row buffers a pool will hold; returns beyond this just drop.
+const ROWS_CAP: usize = 1024;
+/// Most batch containers a pool will hold.
+const BATCH_CAP: usize = 8;
+
+#[derive(Default)]
+struct PoolInner {
+    rows: Vec<Vec<f32>>,
+    batches: Vec<Vec<LogitsRow>>,
+}
+
+/// Shared free list of response-row buffers for one bucket width.
+/// Cheap to clone (one `Arc`); every [`LogitsRow`] it hands out keeps a
+/// handle so the buffer finds its way home from any thread.
+#[derive(Clone, Default)]
+pub struct RowPool {
+    inner: Arc<Mutex<PoolInner>>,
+}
+
+impl RowPool {
+    pub fn new() -> RowPool {
+        RowPool::default()
+    }
+
+    /// A row holding a copy of `data`, backed by a recycled buffer when
+    /// one is free — same-width reuse never reallocates.
+    pub fn row(&self, data: &[f32]) -> LogitsRow {
+        let mut buf = self.inner.lock().unwrap().rows.pop().unwrap_or_default();
+        buf.clear();
+        buf.extend_from_slice(data);
+        LogitsRow { data: buf, home: Some(self.clone()) }
+    }
+
+    /// An empty per-tick container, recycled when one is free.
+    pub fn batch(&self) -> RowBatch {
+        let rows = self.inner.lock().unwrap().batches.pop().unwrap_or_default();
+        RowBatch { rows, home: Some(self.clone()) }
+    }
+
+    fn give_row(&self, row: Vec<f32>) {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.rows.len() < ROWS_CAP {
+            inner.rows.push(row);
+        }
+    }
+
+    fn give_batch(&self, batch: Vec<LogitsRow>) {
+        debug_assert!(batch.is_empty(), "containers must be drained before return");
+        let mut inner = self.inner.lock().unwrap();
+        if inner.batches.len() < BATCH_CAP {
+            inner.batches.push(batch);
+        }
+    }
+
+    /// How many row buffers are currently parked in the free list.
+    pub fn free_rows(&self) -> usize {
+        self.inner.lock().unwrap().rows.len()
+    }
+}
+
+/// One response row of logits.  Dereferences to `[f32]`; pooled rows
+/// return their buffer to the [`RowPool`] they came from when dropped,
+/// untethered rows (from [`From<Vec<f32>>`] or [`Clone`]) just drop.
+#[derive(Default)]
+pub struct LogitsRow {
+    data: Vec<f32>,
+    home: Option<RowPool>,
+}
+
+impl From<Vec<f32>> for LogitsRow {
+    fn from(data: Vec<f32>) -> LogitsRow {
+        LogitsRow { data, home: None }
+    }
+}
+
+impl Deref for LogitsRow {
+    type Target = [f32];
+    fn deref(&self) -> &[f32] {
+        &self.data
+    }
+}
+
+impl Drop for LogitsRow {
+    fn drop(&mut self) {
+        if let Some(home) = self.home.take() {
+            home.give_row(std::mem::take(&mut self.data));
+        }
+    }
+}
+
+impl Clone for LogitsRow {
+    /// Clones are untethered — only the original returns to its pool.
+    fn clone(&self) -> LogitsRow {
+        LogitsRow { data: self.data.clone(), home: None }
+    }
+}
+
+impl fmt::Debug for LogitsRow {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        self.data.fmt(f)
+    }
+}
+
+impl PartialEq for LogitsRow {
+    fn eq(&self, other: &LogitsRow) -> bool {
+        self.data == other.data
+    }
+}
+
+impl PartialEq<Vec<f32>> for LogitsRow {
+    fn eq(&self, other: &Vec<f32>) -> bool {
+        self.data == *other
+    }
+}
+
+/// The executor's per-tick result: one [`LogitsRow`] per batch row.
+/// Dereferences to the inner `Vec` (the batcher drains it row by row);
+/// a pooled container returns any rows still aboard and then its own
+/// allocation to the pool on drop.
+#[derive(Default)]
+pub struct RowBatch {
+    rows: Vec<LogitsRow>,
+    home: Option<RowPool>,
+}
+
+impl RowBatch {
+    pub fn new() -> RowBatch {
+        RowBatch::default()
+    }
+}
+
+impl From<Vec<Vec<f32>>> for RowBatch {
+    fn from(rows: Vec<Vec<f32>>) -> RowBatch {
+        RowBatch { rows: rows.into_iter().map(LogitsRow::from).collect(), home: None }
+    }
+}
+
+impl Deref for RowBatch {
+    type Target = Vec<LogitsRow>;
+    fn deref(&self) -> &Vec<LogitsRow> {
+        &self.rows
+    }
+}
+
+impl DerefMut for RowBatch {
+    fn deref_mut(&mut self) -> &mut Vec<LogitsRow> {
+        &mut self.rows
+    }
+}
+
+impl Drop for RowBatch {
+    fn drop(&mut self) {
+        if let Some(home) = self.home.take() {
+            let mut rows = std::mem::take(&mut self.rows);
+            rows.clear(); // undrained rows go home first
+            home.give_batch(rows);
+        }
+    }
+}
+
+impl fmt::Debug for RowBatch {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        self.rows.fmt(f)
+    }
+}
+
+impl PartialEq for RowBatch {
+    fn eq(&self, other: &RowBatch) -> bool {
+        self.rows == other.rows
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dropped_row_returns_its_buffer_to_the_pool() {
+        let pool = RowPool::new();
+        let row = pool.row(&[1.0, 2.0, 3.0]);
+        assert_eq!(row, vec![1.0, 2.0, 3.0]);
+        assert_eq!(pool.free_rows(), 0);
+        let ptr = row.as_ptr();
+        drop(row);
+        assert_eq!(pool.free_rows(), 1);
+        // Single-threaded, the next row pops the very same buffer.
+        let again = pool.row(&[4.0, 5.0]);
+        assert_eq!(again.as_ptr(), ptr);
+        assert_eq!(again, vec![4.0, 5.0]);
+    }
+
+    #[test]
+    fn clones_and_plain_rows_are_untethered() {
+        let pool = RowPool::new();
+        let row = pool.row(&[1.0]);
+        let copy = row.clone();
+        drop(copy);
+        assert_eq!(pool.free_rows(), 0, "clone must not return to the pool");
+        drop(row);
+        assert_eq!(pool.free_rows(), 1);
+        drop(LogitsRow::from(vec![9.0]));
+        assert_eq!(pool.free_rows(), 1);
+    }
+
+    #[test]
+    fn batch_drop_returns_undrained_rows_and_container() {
+        let pool = RowPool::new();
+        let mut batch = pool.batch();
+        for i in 0..4 {
+            let row = pool.row(&[i as f32]);
+            batch.push(row);
+        }
+        // Drain half (simulating responses handed to requesters), then
+        // hand those rows back the way clients do: by dropping.
+        let taken: Vec<LogitsRow> = batch.drain(..2).collect();
+        drop(taken);
+        assert_eq!(pool.free_rows(), 2);
+        drop(batch);
+        assert_eq!(pool.free_rows(), 4, "undrained rows must return on container drop");
+        // The container itself is recycled too.
+        let next = pool.batch();
+        assert!(next.is_empty() && next.capacity() >= 4);
+    }
+
+    #[test]
+    fn from_vec_of_vecs_adapts_plain_executors() {
+        let batch = RowBatch::from(vec![vec![1.0, 2.0], vec![3.0]]);
+        assert_eq!(batch.len(), 2);
+        assert_eq!(batch[0], vec![1.0, 2.0]);
+        assert_eq!(batch[1], vec![3.0]);
+    }
+}

@@ -12,6 +12,13 @@
 //! * **Spans** — RAII timers over the named request-path sections
 //!   (`span.queue_wait`, `span.bucket_gather`, `span.dispatch_decide`,
 //!   `span.shard_exec`, `span.fft_forward`, `span.decode_tick`).
+//! * **FFT engine counters** (declared in `dsp/fft.rs`) —
+//!   `fft.plan_cache.{local_hit,hit,miss,size}` for the plan cache,
+//!   and the real-transform routing family: `fft.real_fast_path`
+//!   (any true real algorithm) split into `.packed` (even-length r2c
+//!   at the half length) and `.odd` (odd-length half-spectrum
+//!   chirp-z), with `fft.real_fallback` counting transforms that paid
+//!   the full complex engine.
 //! * **Dispatch audit** — a bounded ring of `Dispatch::plan` outcomes
 //!   with predicted-vs-measured ns per shape ([`record_dispatch`]).
 //! * **Export** — JSON snapshots ([`snapshot`], [`write_snapshot`],

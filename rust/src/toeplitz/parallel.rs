@@ -18,10 +18,13 @@
 //! [`apply_batch_flat_sharded`] is the flat-ABI counterpart: rows live
 //! packed in one input and one output buffer, shards are **row-aligned
 //! ranges** of those buffers, and each worker runs the backend's
-//! allocation-free [`ToeplitzOp::apply_batch_flat`] over its range —
-//! a steady-state serve tick allocates nothing at all.
+//! allocation-free [`ToeplitzOp::apply_batch_flat`] over its range.
+//! Shards dispatch through [`ThreadPool::scope_fn`] — no task boxes,
+//! no task `Vec`, the pool's recycled batch state — and each worker's
+//! scratch arena persists across ticks, so a steady-state sharded
+//! serve tick allocates nothing at all.
 
-use crate::runtime::pool::{Task, ThreadPool};
+use crate::runtime::pool::ThreadPool;
 
 use super::op::{with_scratch, CostModel, ToeplitzOp};
 
@@ -73,8 +76,10 @@ pub fn apply_batch_sharded(
 /// into `out`.  Shards are row-aligned ranges of the two flat buffers
 /// (a raw element split would cut rows in half), each executed by the
 /// backend's allocation-free [`ToeplitzOp::apply_batch_flat`] with the
-/// worker's thread-local scratch arena — after the arenas warm up, a
-/// call allocates nothing beyond the pool's task boxes.  Bitwise
+/// worker's thread-local scratch arena (which persists across calls
+/// and ticks).  Dispatch rides [`ThreadPool::scope_fn`] — shard
+/// indices from the pool's recycled batch cursor, no per-shard boxes —
+/// so once every arena is warm a call allocates **nothing**.  Bitwise
 /// identical to the serial flat path for every worker count.
 pub fn apply_batch_flat_sharded(
     op: &dyn ToeplitzOp,
@@ -95,18 +100,22 @@ pub fn apply_batch_flat_sharded(
         return;
     }
     let chunk_rows = rows.div_ceil(shards);
-    let tasks: Vec<Task> = out
-        .chunks_mut(chunk_rows * n)
-        .zip(xs.chunks(chunk_rows * n))
-        .map(|(shard_out, shard_xs)| {
-            let shard_rows = shard_out.len() / n;
-            let task: Task = Box::new(move || {
-                with_scratch(|s| op.apply_batch_flat(shard_xs, shard_rows, shard_out, s));
-            });
-            task
-        })
-        .collect();
-    pool.scope(tasks);
+    let nshards = rows.div_ceil(chunk_rows);
+    // usize-laundered base pointer: each claimed shard index carves its
+    // own disjoint `&mut` row range out of the flat output.
+    let out_base = out.as_mut_ptr() as usize;
+    pool.scope_fn(nshards, &|shard| {
+        let r0 = shard * chunk_rows;
+        let shard_rows = chunk_rows.min(rows - r0);
+        let shard_xs = &xs[r0 * n..(r0 + shard_rows) * n];
+        // SAFETY: shard indices are claimed exactly once and the row
+        // ranges are disjoint, so each `&mut` is exclusive; the flat
+        // buffer outlives the scope (scope_fn blocks until all run).
+        let shard_out = unsafe {
+            std::slice::from_raw_parts_mut((out_base as *mut f32).add(r0 * n), shard_rows * n)
+        };
+        with_scratch(|s| op.apply_batch_flat(shard_xs, shard_rows, shard_out, s));
+    });
 }
 
 #[cfg(test)]

@@ -64,9 +64,10 @@ pub struct Baseline {
     /// Allowed median regression, percent (25 = fail beyond 1.25×).
     pub threshold_pct: f64,
     /// True while the medians are model estimates rather than
-    /// measurements: the gate reports but never fails, so a fabricated
-    /// baseline cannot block merges.  Cleared by the first `--update`
-    /// on real hardware.
+    /// measurements: the gate is advisory for nominal regressions and
+    /// missing rows, failing only when measurements diverge beyond the
+    /// threshold from the estimates (see [`verdict`]).  Cleared by
+    /// `--update` or [`arm_from`] on real hardware.
     pub bootstrap: bool,
     /// Whether the baseline was recorded with `SKI_TNN_BENCH_QUICK=1`
     /// — quick and full mode emit different row sets, so a mismatch is
@@ -100,6 +101,16 @@ pub struct Report {
     pub regressions: Vec<Regression>,
     /// `calib_now / calib_base` applied to every baseline median.
     pub scale: f64,
+    /// The threshold this pass gated with (override or baseline's).
+    pub threshold_pct: f64,
+    /// Largest |now/scaled_base − 1|, percent, over gated rows — in
+    /// either direction.  Against a bootstrap (model-estimated)
+    /// baseline this is the arming trigger: once measurements diverge
+    /// from the estimates beyond the threshold, the estimates are
+    /// proven stale and keeping them advisory would mask regressions,
+    /// so the gate fails until the baseline is armed from a measured
+    /// candidate (see [`arm_from`]).
+    pub max_divergence_pct: f64,
 }
 
 /// Format a JSON number for a row key: integers without a trailing
@@ -266,7 +277,7 @@ pub fn compare(
     let scale =
         if base.calib_ns > 0.0 && calib_now > 0.0 { calib_now / base.calib_ns } else { 1.0 };
     let threshold = threshold_override.unwrap_or(base.threshold_pct).max(0.0);
-    let mut report = Report { scale, ..Report::default() };
+    let mut report = Report { scale, threshold_pct: threshold, ..Report::default() };
     for (bench, rows) in current {
         for (key, &now_ns) in rows {
             if !gated_key(key) {
@@ -279,6 +290,10 @@ pub fn compare(
                     report.compared += 1;
                     let base_ns = raw_base * scale;
                     let limit_ns = base_ns * (1.0 + threshold / 100.0);
+                    if base_ns > 0.0 {
+                        let dev = (now_ns / base_ns - 1.0).abs() * 100.0;
+                        report.max_divergence_pct = report.max_divergence_pct.max(dev);
+                    }
                     if now_ns > limit_ns {
                         report.regressions.push(Regression {
                             bench: bench.clone(),
@@ -305,13 +320,53 @@ pub fn compare(
 /// Gate decision for one comparison.  Regressions always fail; rows
 /// the baseline gates but this run did not emit also fail (otherwise
 /// renaming a key or shrinking the sweep silently disarms the gate)
-/// unless `allow_missing`; a `bootstrap` (model-estimated) baseline is
-/// advisory and never fails.
+/// unless `allow_missing`.  A `bootstrap` (model-estimated) baseline
+/// is advisory — missing rows and nominal regressions don't fail — but
+/// only while the measurements stay within the threshold of the
+/// estimates: beyond that the estimates are demonstrably stale, and
+/// the gate fails until the baseline is armed from a measured
+/// candidate ([`arm_from`]).
 pub fn verdict(base: &Baseline, report: &Report, allow_missing: bool) -> bool {
     if base.bootstrap {
-        return true;
+        return report.max_divergence_pct <= report.threshold_pct;
     }
     report.regressions.is_empty() && (allow_missing || report.missing.is_empty())
+}
+
+/// File name of the measured candidate baseline that every comparison
+/// run drops next to the bench artifacts, ready for [`arm_from`].
+pub const ARMED_CANDIDATE: &str = "baseline_armed_candidate.json";
+
+/// Promote a measured candidate baseline (written by a comparison run
+/// as [`ARMED_CANDIDATE`]) into the committed baseline, dropping its
+/// `"bootstrap": true` marker — the gate goes from advisory to armed
+/// without re-running the benches.  CLI: `ski-tnn bench-check
+/// --arm-from <candidate.json> --baseline bench/baseline.json`.
+pub fn arm_from(candidate_path: &str, baseline_path: &str) -> Result<()> {
+    let text = std::fs::read_to_string(candidate_path)
+        .with_context(|| format!("reading candidate baseline {candidate_path}"))?;
+    let doc = json::parse(&text).map_err(|e| anyhow!("{candidate_path}: {e}"))?;
+    let mut candidate = parse_baseline(&doc)?;
+    let rows: usize = candidate.benches.values().map(|b| b.len()).sum();
+    if rows == 0 {
+        bail!("candidate baseline {candidate_path} has no bench rows — refusing to arm");
+    }
+    candidate.bootstrap = false;
+    if let Some(parent) = Path::new(baseline_path).parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    std::fs::write(baseline_path, json::write(&baseline_to_json(&candidate)))
+        .with_context(|| format!("writing {baseline_path}"))?;
+    println!(
+        "bench-check: armed {baseline_path} from {candidate_path} ({} benches, {rows} rows, \
+         calib {:.0} ns, threshold {:.0}%) — the gate now fails on regressions",
+        candidate.benches.len(),
+        candidate.calib_ns,
+        candidate.threshold_pct
+    );
+    Ok(())
 }
 
 /// Gate a telemetry stats snapshot (see [`crate::telemetry`]): the
@@ -384,6 +439,19 @@ pub fn run(
     let doc = json::parse(&text).map_err(|e| anyhow!("{baseline_path}: {e}"))?;
     let base = parse_baseline(&doc)?;
     let report = compare(&base, &current, calib_now, threshold);
+    // Every comparison run leaves a measured candidate next to the
+    // artifacts: a baseline-shaped doc still marked bootstrap (not yet
+    // blessed) that `--arm-from` can promote without re-benching.
+    let candidate = Baseline {
+        calib_ns: calib_now,
+        threshold_pct: report.threshold_pct,
+        bootstrap: true,
+        quick: Some(crate::util::bench::quick_mode()),
+        benches: current.clone(),
+    };
+    let candidate_path = Path::new(dir).join(ARMED_CANDIDATE);
+    std::fs::write(&candidate_path, json::write(&baseline_to_json(&candidate)))
+        .with_context(|| format!("writing {}", candidate_path.display()))?;
     println!(
         "bench-check: {} medians compared (scale {:.2} = {:.0} ns now / {:.0} ns baseline), \
          {} multi-worker rows ungated, {} new, {} missing",
@@ -405,10 +473,25 @@ pub fn run(
         );
     }
     let passed = verdict(&base, &report, allow_missing);
-    if base.bootstrap {
+    if base.bootstrap && !passed {
         println!(
-            "bench-check: baseline is BOOTSTRAP (model-estimated) — advisory only; record a \
-             measured baseline with `ski-tnn bench-check --update`"
+            "bench-check: FAILED — baseline is BOOTSTRAP (model-estimated) but measured \
+             medians diverge up to {:.0}% from the estimates (threshold {:.0}%): the \
+             estimates are stale and can no longer stand in for a baseline.  Promote this \
+             run's measured candidate:\n  ski-tnn bench-check --arm-from {} \
+             --baseline {baseline_path}\nand commit the updated baseline.",
+            report.max_divergence_pct,
+            report.threshold_pct,
+            candidate_path.display()
+        );
+    } else if base.bootstrap {
+        println!(
+            "bench-check: baseline is BOOTSTRAP (model-estimated) — advisory only \
+             (max divergence {:.0}% within threshold {:.0}%); arm the gate with \
+             `ski-tnn bench-check --arm-from {}`",
+            report.max_divergence_pct,
+            report.threshold_pct,
+            candidate_path.display()
         );
     } else if passed {
         println!("bench-check: OK");
@@ -561,6 +644,79 @@ mod tests {
         assert_eq!(r.ungated, 1);
         assert!(r.regressions.is_empty() && r.missing.is_empty());
         assert!(verdict(&base, &r, false));
+    }
+
+    #[test]
+    fn bootstrap_baseline_fails_once_measurements_diverge() {
+        // Advisory only while measurements track the model estimates:
+        // a 3× divergence proves the estimates stale, and the gate
+        // must fail until the baseline is armed from a measured run.
+        let (_, cur_rows) = parse_bench_doc(&doc(vec![row(256, "fft", 3000.0)])).unwrap();
+        let mut current = BenchMap::new();
+        current.insert("t".into(), cur_rows);
+        let mut benches = BenchMap::new();
+        benches.insert("t".into(), [("backend=fft/n=256".to_string(), 1000.0)].into());
+        let base = Baseline { bootstrap: true, ..base_of(benches) };
+        let r = compare(&base, &current, 100.0, None);
+        assert!(r.max_divergence_pct > 100.0, "divergence {}", r.max_divergence_pct);
+        assert!(!verdict(&base, &r, false), "stale bootstrap estimates must fail");
+        // Divergence below the threshold (or faster-than-estimate
+        // within it) keeps the bootstrap baseline advisory.
+        let (_, ok_rows) = parse_bench_doc(&doc(vec![row(256, "fft", 1100.0)])).unwrap();
+        let mut ok = BenchMap::new();
+        ok.insert("t".into(), ok_rows);
+        let r = compare(&base, &ok, 100.0, None);
+        assert!(verdict(&base, &r, false));
+        // A large *speedup* also counts as divergence: the estimate is
+        // equally wrong in that direction.
+        let (_, fast_rows) = parse_bench_doc(&doc(vec![row(256, "fft", 100.0)])).unwrap();
+        let mut fast = BenchMap::new();
+        fast.insert("t".into(), fast_rows);
+        let r = compare(&base, &fast, 100.0, None);
+        assert!(!verdict(&base, &r, false));
+    }
+
+    #[test]
+    fn arm_from_promotes_a_candidate_and_drops_bootstrap() {
+        let dir = std::env::temp_dir();
+        let pid = std::process::id();
+        let cand = dir.join(format!("ski_tnn_arm_cand_{pid}.json"));
+        let dest = dir.join(format!("ski_tnn_arm_base_{pid}.json"));
+        let mut benches = BenchMap::new();
+        benches.insert(
+            "backend_matrix".into(),
+            [("backend=fft/n=256/threads=1".to_string(), 421.0)].into(),
+        );
+        let candidate = Baseline {
+            calib_ns: 5.0e4,
+            threshold_pct: 25.0,
+            bootstrap: true,
+            quick: Some(true),
+            benches,
+        };
+        std::fs::write(&cand, json::write(&baseline_to_json(&candidate))).unwrap();
+        arm_from(cand.to_str().unwrap(), dest.to_str().unwrap()).unwrap();
+        let armed =
+            parse_baseline(&json::parse(&std::fs::read_to_string(&dest).unwrap()).unwrap())
+                .unwrap();
+        assert!(!armed.bootstrap, "arming must drop the bootstrap marker");
+        assert_eq!(armed.calib_ns, candidate.calib_ns);
+        assert_eq!(armed.benches, candidate.benches);
+        // An empty candidate must be refused — arming it would commit
+        // a baseline that gates nothing.
+        let empty = dir.join(format!("ski_tnn_arm_empty_{pid}.json"));
+        let none = Baseline {
+            calib_ns: 1.0,
+            threshold_pct: 25.0,
+            bootstrap: true,
+            quick: None,
+            benches: BenchMap::new(),
+        };
+        std::fs::write(&empty, json::write(&baseline_to_json(&none))).unwrap();
+        assert!(arm_from(empty.to_str().unwrap(), dest.to_str().unwrap()).is_err());
+        let _ = std::fs::remove_file(&cand);
+        let _ = std::fs::remove_file(&dest);
+        let _ = std::fs::remove_file(&empty);
     }
 
     #[test]

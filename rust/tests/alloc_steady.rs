@@ -1,27 +1,41 @@
-//! Steady-state allocation gate for the flat spectral serve path.
+//! Steady-state allocation gate for the serve path, in three tiers.
 //!
 //! A counting global allocator wraps `System`; after a warmup that
-//! grows the thread-local scratch arenas to steady-state capacity, the
-//! serial flat core — `apply_batch_flat` through [`with_scratch`], the
-//! exact code one shard of a serve tick runs — must perform **zero**
-//! heap allocations per tick for every backend.  The sharded entry is
-//! additionally checked to stay bounded: its only steady-state
-//! allocations are the pool's per-shard task boxes and queue nodes, a
-//! small constant per tick independent of how many ticks have run.
+//! grows every arena and pool to steady-state capacity:
+//!
+//! 1. **Serial flat core** — `apply_batch_flat` through
+//!    [`with_scratch`], the exact code one shard of a serve tick runs —
+//!    must perform **zero** heap allocations per tick for every
+//!    backend.
+//! 2. **Batcher envelope (serial)** — the full substrate executor tick
+//!    (`serve_toeplitz_on`: ids→signal packing, flat spectral apply,
+//!    pooled response rows) must also be **zero** once the responses of
+//!    the previous tick have been consumed: dropped `LogitsRow`s return
+//!    their buffers to the executor's `RowPool`, so a warm tick draws
+//!    everything from free lists.
+//! 3. **Sharded flat path** — dispatches through the pool's recycled
+//!    batch state (`ThreadPool::scope_fn`), so the old per-tick task
+//!    boxes and queue nodes are gone; the only steady-state allocation
+//!    left is the rare arena miss when a worker still holds the
+//!    previous tick's batch handle, a small constant far below the
+//!    64/tick bound the task-box design needed.
 //!
 //! One `#[test]` on purpose: the allocation counter is process-global,
 //! so the measurement windows must not race other test threads.  The
-//! verdict is written to `ALLOC_steady_state.json` (deliberately not a
-//! `BENCH_*.json` — bench-check must not read it as a latency
-//! baseline); CI's bench-smoke job uploads it with the bench
-//! artifacts.
+//! per-tier verdicts are written to `ALLOC_steady_state.json`
+//! (deliberately not a `BENCH_*.json` — bench-check must not read it as
+//! a latency baseline); CI's bench-smoke job runs this gate as its own
+//! named step and echoes the counts into the job summary.
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 
-use ski_tnn::runtime::ThreadPool;
+use ski_tnn::runtime::{HostTensor, ThreadPool};
+use ski_tnn::server::serve_toeplitz_on;
 use ski_tnn::toeplitz::{
     apply_batch_flat_sharded, build_op, gaussian_kernel, with_scratch, BackendKind, ToeplitzKernel,
+    ToeplitzOp,
 };
 use ski_tnn::util::json::{self, Json};
 
@@ -57,6 +71,12 @@ fn allocs() -> u64 {
     ALLOCS.load(Ordering::Relaxed)
 }
 
+/// Sharded bound: strictly below the 64/tick the PR 7 task-box design
+/// needed.  The recycled batch state leaves only the occasional arena
+/// miss (a worker still holding the previous tick's `Arc`), so a small
+/// single-digit budget holds with headroom.
+const SHARDED_ALLOCS_PER_TICK: f64 = 8.0;
+
 #[test]
 fn steady_state_spectral_core_is_allocation_free() {
     let n = 1024usize;
@@ -69,7 +89,7 @@ fn steady_state_spectral_core_is_allocation_free() {
     let mut out = vec![0.0f32; rows * n];
     let mut report: Vec<Json> = Vec::new();
 
-    // ---- serial flat core: strict zero after warmup ----
+    // ---- tier 1 · serial flat core: strict zero after warmup ----
     for (kind, k) in [
         (BackendKind::Fft, &kernel),
         (BackendKind::Ski, &kernel),
@@ -101,10 +121,44 @@ fn steady_state_spectral_core_is_allocation_free() {
         ]));
     }
 
-    // ---- sharded flat path: bounded, tick-count-independent ----
-    // The pool's task boxes and queue nodes are the only steady-state
-    // allocations; the per-row spectral work itself is covered by the
-    // zero assertion above.
+    // ---- tier 2 · full batcher envelope (serial): strict zero ----
+    // The executor tick a single-width serve loop runs: pack ids into
+    // the recycled flat signal buffer, flat spectral apply, pooled
+    // response rows.  Dropping the previous tick's `RowBatch` stands in
+    // for the clients consuming (and thereby returning) their
+    // responses.
+    {
+        let op: Arc<dyn ToeplitzOp> =
+            Arc::from(build_op(&kernel, BackendKind::Fft, (n / 16).max(2), 9));
+        let mut exec = serve_toeplitz_on(op, Arc::new(ThreadPool::new(1)));
+        let ids: Vec<i32> = (0..rows * n).map(|i| (i % 256) as i32).collect();
+        let batch = HostTensor::i32(vec![rows, n], ids);
+        for _ in 0..3 {
+            let resp = exec(&batch).expect("warmup tick");
+            drop(resp); // rows return to the executor's pool
+        }
+        let before = allocs();
+        for _ in 0..ticks {
+            let resp = exec(&batch).expect("steady tick");
+            drop(resp);
+        }
+        let delta = allocs() - before;
+        assert_eq!(
+            delta, 0,
+            "batcher envelope allocated in steady state: {delta} allocs over {ticks} ticks"
+        );
+        report.push(Json::obj(vec![
+            ("backend", Json::str("fft")),
+            ("abi", Json::str("batcher_envelope")),
+            ("ticks", Json::num(ticks as f64)),
+            ("allocs", Json::num(delta as f64)),
+        ]));
+    }
+
+    // ---- tier 3 · sharded flat path: bounded, tick-count-independent ----
+    // scope_fn recycles the pool's batch state, so the per-tick task
+    // boxes and queue nodes of the old design are gone; what remains is
+    // the occasional arena miss, far below the old 64/tick budget.
     let op = build_op(&kernel, BackendKind::Fft, (n / 16).max(2), 9);
     let pool = ThreadPool::new(2);
     for _ in 0..3 {
@@ -115,13 +169,17 @@ fn steady_state_spectral_core_is_allocation_free() {
         apply_batch_flat_sharded(op.as_ref(), &xs, rows, &mut out, &pool);
     }
     let per_tick = (allocs() - before) as f64 / ticks as f64;
-    assert!(per_tick <= 64.0, "sharded serve tick allocates too much: {per_tick} allocs/tick");
+    assert!(
+        per_tick <= SHARDED_ALLOCS_PER_TICK,
+        "sharded serve tick allocates too much: {per_tick} allocs/tick (budget {SHARDED_ALLOCS_PER_TICK})"
+    );
     report.push(Json::obj(vec![
         ("backend", Json::str("fft")),
         ("abi", Json::str("sharded_flat")),
         ("threads", Json::num(2.0)),
         ("ticks", Json::num(ticks as f64)),
         ("allocs_per_tick", Json::num(per_tick)),
+        ("budget_per_tick", Json::num(SHARDED_ALLOCS_PER_TICK)),
     ]));
 
     let doc = Json::obj(vec![("alloc_gate", Json::arr(report))]);
