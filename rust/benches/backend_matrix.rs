@@ -23,9 +23,11 @@
 //!
 //! Run: `cargo bench --bench backend_matrix [-- --sizes 512,1024,4096,8192 --batch 8 --threads 1,2,4]`
 
+use std::sync::Arc;
 use std::time::Duration;
 
 use ski_tnn::dsp::{Complex, FftPlan, RealFftPlan};
+use ski_tnn::plan::{plan_shape, PlanCache, ShapeKey};
 use ski_tnn::runtime::ThreadPool;
 use ski_tnn::toeplitz::{
     apply_batch_flat_sharded, apply_batch_sharded, build_op, gaussian_kernel, BackendKind,
@@ -35,6 +37,30 @@ use ski_tnn::util::bench::{fmt_secs, quick_mode, write_bench_json, Bencher, Tabl
 use ski_tnn::util::cli::Args;
 use ski_tnn::util::json::Json;
 use ski_tnn::util::rng::Rng;
+
+/// Build one timed operator through the execution-plan layer (forced
+/// backend), the same constructor every serve entry point uses — the
+/// bench times exactly what a plan hands out.
+fn planned_op(
+    dispatch: &Dispatch,
+    kernel: &ToeplitzKernel,
+    kind: BackendKind,
+    n: usize,
+    r: usize,
+    w: usize,
+) -> Arc<dyn ToeplitzOp> {
+    let key = ShapeKey {
+        n,
+        r,
+        w,
+        causal: kind == BackendKind::Freq,
+        threads: 1,
+        batch_hint: 1,
+        kernel_id: 0,
+    };
+    let plan = plan_shape(key, dispatch, kind, |k| Arc::from(build_op(kernel, k, r, w)));
+    Arc::clone(plan.op())
+}
 
 fn rel_err(got: &[f32], want: &[f32]) -> f64 {
     let mut num = 0.0f64;
@@ -101,11 +127,11 @@ fn main() {
         // fft backend's rel_err a self-comparison).
         let exact = kernel.apply_dense(&x);
 
-        let dense = build_op(&kernel, BackendKind::Dense, r, w);
-        let fftop = build_op(&kernel, BackendKind::Fft, r, w);
-        let ski = build_op(&kernel, BackendKind::Ski, r, w);
+        let dense = planned_op(&dispatch, &kernel, BackendKind::Dense, n, r, w);
+        let fftop = planned_op(&dispatch, &kernel, BackendKind::Fft, n, r, w);
+        let ski = planned_op(&dispatch, &kernel, BackendKind::Ski, n, r, w);
         let causal_kernel = kernel.clone().causal();
-        let freq = build_op(&causal_kernel, BackendKind::Freq, r, w);
+        let freq = planned_op(&dispatch, &causal_kernel, BackendKind::Freq, n, r, w);
         let causal_exact = causal_kernel.apply_dense(&x);
 
         let time = |op: &dyn ToeplitzOp| {
@@ -219,9 +245,25 @@ fn main() {
         ),
         &header_refs,
     );
+    // One shared PlanCache over the sweep, exactly like the serving
+    // substrate: the `kernel_id` discriminator keys the bidirectional
+    // backends apart at an otherwise identical dispatch shape.
+    let plans = PlanCache::new(4);
     for kind in [BackendKind::Dense, BackendKind::Fft, BackendKind::Ski, BackendKind::Freq] {
         let k = if kind == BackendKind::Freq { &causal_kernel } else { &kernel };
-        let op = build_op(k, kind, r, w);
+        let key = ShapeKey {
+            n: bn,
+            r,
+            w,
+            causal: kind == BackendKind::Freq,
+            threads: *threads_list.last().unwrap(),
+            batch_hint: batch_rows,
+            kernel_id: kind as u64 + 1,
+        };
+        let plan = plans.get_or_build(key, || {
+            plan_shape(key, &dispatch, kind, |kk| Arc::from(build_op(k, kk, r, w)))
+        });
+        let op = Arc::clone(plan.op());
         let reference = op.apply_batch(&xs);
         // Flat-ABI twin of the same batch: rows packed in one buffer,
         // asserted bitwise equal to the per-row reference per cell.
@@ -280,6 +322,15 @@ fn main() {
         bt.row(&cells);
     }
     bt.print();
+    let ps = plans.stats();
+    println!(
+        "plan cache over the sweep: {} builds, {} resident of cap {} \
+         ({} bytes after refresh)",
+        ps.misses,
+        ps.len,
+        ps.cap,
+        plans.refresh_bytes()
+    );
     println!(
         "(bitwise identity across worker counts asserted per cell; dispatch plan at this shape: \
          {:?})",

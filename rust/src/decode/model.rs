@@ -20,7 +20,10 @@
 //! mirrors the paper model so a converter from trained checkpoints
 //! only has to fill the same arrays.
 
+use std::sync::Arc;
+
 use crate::data::VOCAB;
+use crate::plan::{ExecutionPlan, PlanCache, ShapeKey};
 use crate::runtime::pool::{global_pool, Task, ThreadPool};
 use crate::toeplitz::{
     apply_causal_plan_into, apply_causal_taps, with_scratch, BackendKind, CostModel, OpScratch,
@@ -74,13 +77,6 @@ struct Block {
     /// Original causal taps per channel (oracle + re-planning).
     taps: Vec<Vec<f32>>,
     decoders: Vec<KernelDecoder>,
-    /// Per-channel spectral oracle plan: kernel spectrum cached once
-    /// at the native context length (the plan picks its own smooth
-    /// transform size), so full-context forwards never
-    /// re-FFT the (fixed) taps.  Plans are lock-free
-    /// [`SpectralPlan`]s — transform scratch lives in the shard
-    /// runtime's per-worker arenas ([`with_scratch`]), not here.
-    spectral: Vec<SpectralPlan>,
     /// (d, d) row-major gate projection.
     gate: Vec<f32>,
     /// (d, d) row-major channel mix.
@@ -95,6 +91,21 @@ pub struct DecodeModel {
     blocks: Vec<Block>,
     /// (d, vocab) row-major.
     out_w: Vec<f32>,
+    /// Per-channel spectral oracle plans, held in the unified
+    /// execution-plan cache keyed by `(shape, kernel_id)` — every
+    /// channel shares the context-length dispatch shape, so the
+    /// `kernel_id` discriminator (block·d + channel + 1) is what keeps
+    /// their distinct spectra apart.  Each resident plan's kernel
+    /// spectrum is cached once at the native context length (the plan
+    /// picks its own smooth transform size), so full-context forwards
+    /// never re-FFT the (fixed) taps.  Spectra are lock-free
+    /// [`SpectralPlan`]s — transform scratch lives in the shard
+    /// runtime's per-worker arenas ([`with_scratch`]), not here.
+    plans: PlanCache,
+    /// Whether the configured oracle backend can ever take the cached
+    /// spectral path: decided (and the plans pre-built) at
+    /// construction — see [`spectral_oracle_possible`].
+    spectral_planned: bool,
     /// Oracle shard pool when `cfg.threads >= 1`, spawned lazily on
     /// the first `forward_full` — streaming-only workloads (`generate`
     /// serving) never pay for idle workers.  Empty = the
@@ -170,16 +181,23 @@ fn matvec(m: &[f32], x: &[f32], d: usize) -> Vec<f32> {
 /// Per-channel causal token-mix columns of the full-context oracle,
 /// packed row-major into one flat `(d, t_len)` buffer:
 /// `cols[c * t_len + t]` = channel `c`'s convolution output at
-/// position `t`.  Channels are independent, so they shard across
-/// `pool` (the model's own when `cfg.threads >= 1`, else the
-/// process-global one) as **channel-aligned ranges** of the flat
-/// buffer — spectral applies run through each worker's own scratch
-/// arena ([`with_scratch`]) and write straight into their slice, so a
-/// warm spectral forward allocates only this one buffer.  Short
-/// prefixes stay serial (the per-shard dispatch overhead would
-/// dominate).  Either way every channel runs exactly the same code, so
-/// the result is bitwise identical for any worker count.
-fn oracle_cols(block: &Block, xs: &[Vec<f32>], use_spectral: bool, pool: &ThreadPool) -> Vec<f32> {
+/// position `t`.  `plans` carries the per-channel spectra resolved
+/// from the model's [`PlanCache`] (`None` = the dense loop).  Channels
+/// are independent, so they shard across `pool` (the model's own when
+/// `cfg.threads >= 1`, else the process-global one) as
+/// **channel-aligned ranges** of the flat buffer — spectral applies
+/// run through each worker's own scratch arena ([`with_scratch`]) and
+/// write straight into their slice, so a warm spectral forward
+/// allocates only this one buffer.  Short prefixes stay serial (the
+/// per-shard dispatch overhead would dominate).  Either way every
+/// channel runs exactly the same code, so the result is bitwise
+/// identical for any worker count.
+fn oracle_cols(
+    block: &Block,
+    plans: Option<&[Arc<SpectralPlan>]>,
+    xs: &[Vec<f32>],
+    pool: &ThreadPool,
+) -> Vec<f32> {
     let d = block.taps.len();
     let t_len = xs.len();
     let mut cols = vec![0.0f32; d * t_len];
@@ -193,8 +211,8 @@ fn oracle_cols(block: &Block, xs: &[Vec<f32>], use_spectral: bool, pool: &Thread
         let mut series = std::mem::take(&mut s.row);
         series.clear();
         series.extend(xs.iter().map(|row| row[c]));
-        if use_spectral {
-            apply_causal_plan_into(&block.spectral[c], &series, out, s);
+        if let Some(plans) = plans {
+            apply_causal_plan_into(&plans[c], &series, out, s);
         } else {
             out.copy_from_slice(&apply_causal_taps(&block.taps[c], &series, BackendKind::Dense));
         }
@@ -266,31 +284,66 @@ impl DecodeModel {
                     .collect();
                 let decoders =
                     taps.iter().map(|t| KernelDecoder::plan_taps(t, cfg.policy)).collect();
-                // Spectral oracle plans only when the configured
-                // backend can ever reach them — a dense-forced or
-                // below-crossover model skips blocks·d kernel FFTs
-                // and their spectrum/scratch buffers entirely.  Plans
-                // are built at the native context length: the plan
-                // itself picks the cheapest smooth transform size, so
-                // a non-pow2 context no longer pads up to the next
-                // power of two.
-                let spectral: Vec<SpectralPlan> = if spectral_oracle_possible(&cfg) {
-                    taps.iter()
-                        .map(|t| SpectralPlan::new(&ToeplitzKernel::from_causal_taps(t)))
-                        .collect()
-                } else {
-                    Vec::new()
-                };
                 Block {
                     taps,
                     decoders,
-                    spectral,
                     gate: (0..cfg.d * cfg.d).map(|_| scale * rng.normal()).collect(),
                     mix: (0..cfg.d * cfg.d).map(|_| scale * rng.normal()).collect(),
                 }
             })
             .collect();
-        DecodeModel { cfg, embed, blocks, out_w, pool: std::sync::OnceLock::new() }
+        let model = DecodeModel {
+            cfg,
+            embed,
+            blocks,
+            out_w,
+            plans: PlanCache::new((cfg.blocks * cfg.d).max(1)),
+            spectral_planned: spectral_oracle_possible(&cfg),
+            pool: std::sync::OnceLock::new(),
+        };
+        // Spectral oracle plans only when the configured backend can
+        // ever reach them — a dense-forced or below-crossover model
+        // skips blocks·d kernel FFTs and their spectrum buffers
+        // entirely.  Plans are built at the native context length: the
+        // plan itself picks the cheapest smooth transform size, so a
+        // non-pow2 context no longer pads up to the next power of two.
+        if model.spectral_planned {
+            for b in 0..model.cfg.blocks {
+                let _ = model.block_plans(b);
+            }
+        }
+        model
+    }
+
+    /// The cache key for one channel's oracle plan: every channel
+    /// shares the context-length dispatch shape, so the `kernel_id`
+    /// discriminator is what keeps distinct spectra apart.
+    fn plan_key(&self, block: usize, channel: usize) -> ShapeKey {
+        ShapeKey {
+            n: self.cfg.n,
+            r: 0,
+            w: 0,
+            causal: true,
+            threads: 1,
+            batch_hint: 1,
+            kernel_id: (block * self.cfg.d + channel) as u64 + 1,
+        }
+    }
+
+    /// Resolve one block's per-channel spectra through the plan cache
+    /// (building any evicted/missing ones from the stored taps).
+    fn block_plans(&self, block: usize) -> Vec<Arc<SpectralPlan>> {
+        (0..self.cfg.d)
+            .map(|c| {
+                let key = self.plan_key(block, c);
+                let plan = self.plans.get_or_build(key, || {
+                    let taps = &self.blocks[block].taps[c];
+                    let spec = SpectralPlan::new(&ToeplitzKernel::from_causal_taps(taps));
+                    ExecutionPlan::from_spectral(key, spec)
+                });
+                Arc::clone(plan.spectral().expect("from_spectral plans carry a spectrum"))
+            })
+            .collect()
     }
 
     /// The pool `forward_full` shards channels across (see
@@ -365,12 +418,11 @@ impl DecodeModel {
             .collect();
         // Backend choice for the per-channel causal convolutions: the
         // direct loop at t_len vs the per-channel spectral plans whose
-        // kernel spectra were cached once at the native context length
+        // kernel spectra live in the model's plan cache
         // (`cfg.oracle_backend` forces one; Auto compares real costs).
         // Plans may be absent when construction gated them off.
-        let have_plans = self.blocks.iter().all(|b| !b.spectral.is_empty());
         let use_spectral = t_len <= self.cfg.n
-            && have_plans
+            && self.spectral_planned
             && match self.cfg.oracle_backend {
                 BackendKind::Dense | BackendKind::Ski => false,
                 BackendKind::Fft | BackendKind::Freq => true,
@@ -380,12 +432,15 @@ impl DecodeModel {
                 }
             };
         let pool = self.oracle_pool();
-        for block in &self.blocks {
+        for (bi, block) in self.blocks.iter().enumerate() {
             // cols[c * t_len + t]: channel c's token-mix output —
             // channels are independent, so they shard across the pool
             // (bitwise identical to the serial loop for any worker
-            // count).
-            let cols = oracle_cols(block, &xs, use_spectral, pool);
+            // count).  Spectral forwards resolve their per-channel
+            // plans through the cache first (rebuilding any evicted
+            // ones from the stored taps).
+            let plans = if use_spectral { Some(self.block_plans(bi)) } else { None };
+            let cols = oracle_cols(block, plans.as_deref(), &xs, pool);
             for t in 0..t_len {
                 let g = matvec(&block.gate, &xs[t], d);
                 let v: Vec<f32> = (0..d).map(|c| cols[c * t_len + t] * sigmoid(g[c])).collect();

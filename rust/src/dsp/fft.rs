@@ -46,23 +46,34 @@
 //!
 //! ## Plan-cache memory model
 //!
-//! Both plan caches are **unbounded by design**: entries are keyed by
-//! transform size, a process only ever touches the handful of sizes
-//! its configs use, and each plan's twiddle/chirp tables are O(n).
-//! The thread-local front caches add one `Arc` per (thread, size) on
-//! top of the process map, so worst-case residency is
-//! `sizes × plan + sizes × threads × Arc` — growth tracks distinct
-//! sizes, never request volume.  With telemetry enabled
+//! Both process plan maps (complex and real) are **bounded**: at most
+//! [`FFT_PLAN_CACHE_CAP`] sizes each, LRU-evicted past that
+//! (`plan::LruCore` — the same primitive behind the execution-plan
+//! cache), so mixed-length traffic over many distinct n holds
+//! residency at `cap × O(n)` table bytes instead of growing forever.
+//! The thread-local front caches add one `Arc` per (thread, size) and
+//! are cleared whenever they outgrow the same cap.  An evicted plan
+//! that is still in use (an `Arc` held by an operator or a front
+//! cache) stays alive until its holders drop; the next `shared()` for
+//! that size simply rebuilds.  With telemetry enabled
 //! (`SKI_TNN_TELEMETRY=1`) the caches account for themselves in every
-//! stats snapshot: `fft.plan_cache.local_hit` / `.hit` / `.miss`
-//! counters (front-cache hit, process-map hit, plan build) and the
-//! `fft.plan_cache.size` gauge (process-map entries), making any
-//! unexpected growth observable instead of silent.
+//! stats snapshot: `fft.plan_cache.local_hit` / `.hit` / `.miss` /
+//! `.evict` counters (front-cache hit, process-map hit, plan build,
+//! LRU displacement) and the `fft.plan_cache.size` /
+//! `fft.plan_cache.bytes` gauges (resident entries and their
+//! twiddle/chirp table bytes across both maps), making growth — and
+//! now eviction churn — observable instead of silent.
 
 use std::collections::HashMap;
-use std::sync::{Arc, Mutex, OnceLock};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock, PoisonError};
 
+use crate::plan::LruCore;
 use crate::telemetry::{LazyCounter, LazyGauge};
+
+/// Most distinct transform sizes each process map keeps (complex and
+/// real maps are bounded separately).
+pub const FFT_PLAN_CACHE_CAP: usize = 64;
 
 /// Thread-local front-cache hits (no lock taken).
 static PLAN_CACHE_LOCAL_HIT: LazyCounter = LazyCounter::new("fft.plan_cache.local_hit");
@@ -70,8 +81,38 @@ static PLAN_CACHE_LOCAL_HIT: LazyCounter = LazyCounter::new("fft.plan_cache.loca
 static PLAN_CACHE_HIT: LazyCounter = LazyCounter::new("fft.plan_cache.hit");
 /// Misses — each one builds a plan (O(n) table memory retained).
 static PLAN_CACHE_MISS: LazyCounter = LazyCounter::new("fft.plan_cache.miss");
-/// Distinct sizes resident in the process-wide map.
+/// LRU displacements from either bounded process map.
+static PLAN_CACHE_EVICT: LazyCounter = LazyCounter::new("fft.plan_cache.evict");
+/// Distinct sizes resident across both process-wide maps.
 static PLAN_CACHE_SIZE: LazyGauge = LazyGauge::new("fft.plan_cache.size");
+/// Twiddle/chirp table bytes resident across both process-wide maps.
+static PLAN_CACHE_BYTES: LazyGauge = LazyGauge::new("fft.plan_cache.bytes");
+
+/// Last published (entries, bytes) of the complex / real maps, so one
+/// map's mutation republishes a coherent cross-map gauge total.
+static COMPLEX_RESIDENT: (AtomicUsize, AtomicUsize) = (AtomicUsize::new(0), AtomicUsize::new(0));
+static REAL_RESIDENT: (AtomicUsize, AtomicUsize) = (AtomicUsize::new(0), AtomicUsize::new(0));
+
+/// Publish one map's freshly computed residency and set the cross-map
+/// `fft.plan_cache.{size,bytes}` gauges.
+fn publish_residency(slot: &(AtomicUsize, AtomicUsize), entries: usize, bytes: usize) {
+    slot.0.store(entries, Ordering::Relaxed);
+    slot.1.store(bytes, Ordering::Relaxed);
+    let size = COMPLEX_RESIDENT.0.load(Ordering::Relaxed) + REAL_RESIDENT.0.load(Ordering::Relaxed);
+    let total = COMPLEX_RESIDENT.1.load(Ordering::Relaxed) + REAL_RESIDENT.1.load(Ordering::Relaxed);
+    PLAN_CACHE_SIZE.set(size as f64);
+    PLAN_CACHE_BYTES.set(total as f64);
+}
+
+/// (resident plans, resident table bytes) across both process maps —
+/// diagnostics and the bounded-cache tests.
+#[doc(hidden)]
+pub fn plan_cache_stats() -> (usize, usize) {
+    (
+        COMPLEX_RESIDENT.0.load(Ordering::Relaxed) + REAL_RESIDENT.0.load(Ordering::Relaxed),
+        COMPLEX_RESIDENT.1.load(Ordering::Relaxed) + REAL_RESIDENT.1.load(Ordering::Relaxed),
+    )
+}
 /// Transforms served by a real fast path — packed even r2c/c2r or the
 /// odd-length half-spectrum chirp (one per direction per apply — a
 /// spectral apply at even m counts two).
@@ -520,10 +561,12 @@ impl FftPlan {
     /// The memoised per-process plan for size `n`.  A thread-local
     /// front cache makes the steady-state lookup lock-free (the
     /// sharded SKI gram path resolves plans per row — it must never
-    /// serialize workers on a process mutex); the process-wide map
+    /// serialize workers on a process mutex); the bounded process map
     /// behind it deduplicates plan construction across threads, and
     /// plans are built **outside** its lock so a first-touch Bluestein
-    /// build cannot stall every other size's lookup.
+    /// build cannot stall every other size's lookup.  The front cache
+    /// clears itself past [`FFT_PLAN_CACHE_CAP`] so per-thread
+    /// residency stays bounded too.
     pub fn shared(n: usize) -> Arc<FftPlan> {
         thread_local! {
             static LOCAL: std::cell::RefCell<HashMap<usize, Arc<FftPlan>>> =
@@ -535,15 +578,22 @@ impl FftPlan {
                 return Arc::clone(p);
             }
             let p = FftPlan::shared_global(n);
-            l.borrow_mut().insert(n, Arc::clone(&p));
+            let mut front = l.borrow_mut();
+            if front.len() >= FFT_PLAN_CACHE_CAP {
+                front.clear();
+            }
+            front.insert(n, Arc::clone(&p));
             p
         })
     }
 
     fn shared_global(n: usize) -> Arc<FftPlan> {
-        static CACHE: OnceLock<Mutex<HashMap<usize, Arc<FftPlan>>>> = OnceLock::new();
-        let cache = CACHE.get_or_init(|| Mutex::new(HashMap::new()));
-        if let Some(p) = cache.lock().unwrap().get(&n) {
+        static CACHE: OnceLock<Mutex<LruCore<usize, Arc<FftPlan>>>> = OnceLock::new();
+        let cache = CACHE.get_or_init(|| Mutex::new(LruCore::new(FFT_PLAN_CACHE_CAP)));
+        let lock = |c: &'static Mutex<LruCore<usize, Arc<FftPlan>>>| {
+            c.lock().unwrap_or_else(PoisonError::into_inner)
+        };
+        if let Some(p) = lock(cache).get(&n) {
             PLAN_CACHE_HIT.incr();
             return Arc::clone(p);
         }
@@ -551,10 +601,31 @@ impl FftPlan {
         // build; the map keeps the first, the loser's copy is dropped).
         PLAN_CACHE_MISS.incr();
         let built = Arc::new(FftPlan::new(n));
-        let mut g = cache.lock().unwrap();
-        let p = Arc::clone(g.entry(n).or_insert(built));
-        PLAN_CACHE_SIZE.set(g.len() as f64);
+        let mut g = lock(cache);
+        let p = if let Some(existing) = g.get(&n) {
+            Arc::clone(existing)
+        } else {
+            let evicted = g.insert(n, Arc::clone(&built));
+            PLAN_CACHE_EVICT.add(evicted.len() as u64);
+            built
+        };
+        let bytes = g.values().map(|p| p.table_bytes()).sum();
+        publish_residency(&COMPLEX_RESIDENT, g.len(), bytes);
         p
+    }
+
+    /// Bytes of this plan's owned twiddle/chirp tables (a Bluestein
+    /// plan includes its owned inner pow2 plan).
+    pub fn table_bytes(&self) -> usize {
+        let c = std::mem::size_of::<Complex>();
+        match &self.kind {
+            PlanKind::Trivial => 0,
+            PlanKind::Pow2 { tw } => tw.capacity() * c,
+            PlanKind::Mixed(mp) => (mp.tw.capacity() + mp.tw2.capacity()) * c,
+            PlanKind::Bluestein(bp) => {
+                (bp.chirp.capacity() + bp.bspec.capacity()) * c + bp.inner.table_bytes()
+            }
+        }
     }
 
     pub fn n(&self) -> usize {
@@ -771,7 +842,8 @@ impl RealFftPlan {
 
     /// The memoised per-process plan for size `n` (same two-level
     /// cache discipline as [`FftPlan::shared`]: lock-free thread-local
-    /// front, process map behind it, plans built outside the lock).
+    /// front — cleared past [`FFT_PLAN_CACHE_CAP`] — bounded process
+    /// map behind it, plans built outside the lock).
     pub fn shared(n: usize) -> Arc<RealFftPlan> {
         thread_local! {
             static LOCAL: std::cell::RefCell<HashMap<usize, Arc<RealFftPlan>>> =
@@ -779,23 +851,56 @@ impl RealFftPlan {
         }
         LOCAL.with(|l| {
             if let Some(p) = l.borrow().get(&n) {
+                PLAN_CACHE_LOCAL_HIT.incr();
                 return Arc::clone(p);
             }
             let p = RealFftPlan::shared_global(n);
-            l.borrow_mut().insert(n, Arc::clone(&p));
+            let mut front = l.borrow_mut();
+            if front.len() >= FFT_PLAN_CACHE_CAP {
+                front.clear();
+            }
+            front.insert(n, Arc::clone(&p));
             p
         })
     }
 
     fn shared_global(n: usize) -> Arc<RealFftPlan> {
-        static CACHE: OnceLock<Mutex<HashMap<usize, Arc<RealFftPlan>>>> = OnceLock::new();
-        let cache = CACHE.get_or_init(|| Mutex::new(HashMap::new()));
-        if let Some(p) = cache.lock().unwrap().get(&n) {
+        static CACHE: OnceLock<Mutex<LruCore<usize, Arc<RealFftPlan>>>> = OnceLock::new();
+        let cache = CACHE.get_or_init(|| Mutex::new(LruCore::new(FFT_PLAN_CACHE_CAP)));
+        let lock = |c: &'static Mutex<LruCore<usize, Arc<RealFftPlan>>>| {
+            c.lock().unwrap_or_else(PoisonError::into_inner)
+        };
+        if let Some(p) = lock(cache).get(&n) {
+            PLAN_CACHE_HIT.incr();
             return Arc::clone(p);
         }
+        PLAN_CACHE_MISS.incr();
         let built = Arc::new(RealFftPlan::new(n));
-        let mut g = cache.lock().unwrap();
-        Arc::clone(g.entry(n).or_insert(built))
+        let mut g = lock(cache);
+        let p = if let Some(existing) = g.get(&n) {
+            Arc::clone(existing)
+        } else {
+            let evicted = g.insert(n, Arc::clone(&built));
+            PLAN_CACHE_EVICT.add(evicted.len() as u64);
+            built
+        };
+        let bytes = g.values().map(|p| p.table_bytes()).sum();
+        publish_residency(&REAL_RESIDENT, g.len(), bytes);
+        p
+    }
+
+    /// Bytes of this plan's owned twiddle/chirp tables.  Inner complex
+    /// plans obtained from [`FftPlan::shared`] are *not* counted here —
+    /// they are resident (and accounted) in the complex map.
+    pub fn table_bytes(&self) -> usize {
+        let c = std::mem::size_of::<Complex>();
+        match &self.kind {
+            RealKind::Trivial | RealKind::Fallback(_) => 0,
+            RealKind::Packed { tw, .. } => tw.capacity() * c,
+            RealKind::OddChirp(op) => {
+                (op.chirp.capacity() + op.fwd_spec.capacity() + op.inv_spec.capacity()) * c
+            }
+        }
     }
 
     pub fn n(&self) -> usize {
@@ -1087,6 +1192,29 @@ mod tests {
         let b = FftPlan::shared(360);
         assert!(Arc::ptr_eq(&a, &b), "same size must share one plan");
         assert_eq!(a.n(), 360);
+    }
+
+    #[test]
+    fn plan_cache_is_bounded_under_mixed_length_traffic() {
+        // Mixed-length traffic over more distinct sizes than the cap:
+        // the process maps must stay bounded (LRU eviction), residency
+        // accounting must stay finite, and every plan must still work.
+        for i in 0..(2 * FFT_PLAN_CACHE_CAP) {
+            let n = 2_000 + 2 * i; // distinct even sizes
+            let p = RealFftPlan::shared(n);
+            assert_eq!(p.n(), n);
+            let _ = FftPlan::shared(n);
+        }
+        let (entries, bytes) = plan_cache_stats();
+        assert!(
+            entries <= 2 * FFT_PLAN_CACHE_CAP,
+            "resident plans {entries} exceed both caps combined"
+        );
+        assert!(bytes > 0, "resident plans must account table bytes");
+        // Evicted-then-requested sizes simply rebuild and still agree.
+        let x: Vec<f32> = (0..2_000).map(|i| (i % 13) as f32 - 6.0).collect();
+        let back = irfft(&rfft(&x), 2_000);
+        assert_close(&x, &back, 1e-5, "rebuilt-after-evict plan");
     }
 
     #[test]

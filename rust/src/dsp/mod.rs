@@ -12,7 +12,7 @@ mod fft;
 mod hilbert;
 
 pub use fft::{
-    fft, fft_work_units, good_conv_size, ifft, irfft, rfft, rfft_work_units, Complex, FftPlan,
-    RealFftPlan,
+    fft, fft_work_units, good_conv_size, ifft, irfft, plan_cache_stats, rfft, rfft_work_units,
+    Complex, FftPlan, RealFftPlan, FFT_PLAN_CACHE_CAP,
 };
 pub use hilbert::{analytic_window, causal_spectrum, hilbert_of_real};

@@ -29,6 +29,7 @@
 //! | [`server`] | dynamic batcher + request router, generation scheduler |
 //! | [`decode`] | streaming decode: causal-Toeplitz→SSM, sessions, sampling |
 //! | [`data`] | synthetic corpus + LRA-style task generators, batchers |
+//! | [`plan`] | execution-plan layer: shape-keyed bounded PlanCache, build→warm→execute |
 //! | [`toeplitz`] | pure-Rust Toeplitz/SKI substrate (oracles, baselines, App. B scan) |
 //! | [`dsp`] | from-scratch FFT/rFFT + discrete Hilbert transform |
 //! | [`linalg`] | dense f64 matrix helpers, Jacobi SVD, pseudo-inverse (Theorem 1 checks) |
@@ -51,6 +52,7 @@ pub mod decode;
 pub mod dsp;
 pub mod linalg;
 pub mod nn;
+pub mod plan;
 pub mod runtime;
 pub mod server;
 pub mod telemetry;

@@ -10,6 +10,10 @@
 //! * `generate` — streaming autoregressive generation through the
 //!   decode subsystem (causal-Toeplitz→SSM, O(1) per token): one-shot
 //!   text generation or a continuous-batching load test.
+//! * `plan` — explain the execution plan for a shape without serving
+//!   traffic: chosen backend, sharding decision, transform length,
+//!   estimated resident bytes, plan-cache counters
+//!   (`ski-tnn plan --explain --n 1024 --threads 4`).
 //! * `bench-check` — offline perf gate: compare the `BENCH_*.json`
 //!   artifacts emitted by the benches against `bench/baseline.json`
 //!   and fail on median regressions (CI's `bench-smoke` job; see
@@ -67,15 +71,19 @@ fn main() -> Result<()> {
         Some("eval") => cmd_eval(&args),
         Some("serve") => cmd_serve(&args),
         Some("generate") => cmd_generate(&args),
+        Some("plan") => cmd_plan(&args),
         Some("bench-check") => cmd_bench_check(&args),
         Some("stats") => cmd_stats(&args),
         Some(other) => {
             bail!(
-                "unknown subcommand {other:?} (try list|train|eval|serve|generate|bench-check|stats)"
+                "unknown subcommand {other:?} \
+                 (try list|train|eval|serve|generate|plan|bench-check|stats)"
             )
         }
         None => {
-            eprintln!("usage: ski-tnn <list|train|eval|serve|generate|bench-check|stats> [flags]");
+            eprintln!(
+                "usage: ski-tnn <list|train|eval|serve|generate|plan|bench-check|stats> [flags]"
+            );
             eprintln!("see `cargo doc` or README.md for the full flag set");
             Ok(())
         }
@@ -377,6 +385,82 @@ fn cmd_serve_substrate(args: &Args, backend: &str) -> Result<()> {
             max_batch,
         )
     }
+}
+
+/// Explain the execution plan for a shape without serving traffic:
+/// build it through the same [`PlanCache`](ski_tnn::plan::PlanCache) /
+/// [`plan_shape`](ski_tnn::plan::plan_shape) path the serve executors
+/// use, warm it, and print the chosen backend, sharding decision,
+/// transform length, estimated resident bytes, and the plan-cache
+/// counters the lookup touched.
+///
+/// ```text
+/// ski-tnn plan --explain --n 1024 --rank 64 --band 9 --batch 8 \
+///   --threads 4 --backend auto [--causal]
+/// ```
+fn cmd_plan(args: &Args) -> Result<()> {
+    use ski_tnn::plan::{plan_shape, PlanCache, ShapeKey};
+    use ski_tnn::runtime::resolve_threads;
+    use ski_tnn::toeplitz::{build_op, gaussian_kernel, BackendKind, Dispatch, ToeplitzKernel};
+
+    let rc = RunConfig::from_args(args)?;
+    let _stats_writer = telemetry_setup(&rc);
+    let n = args.usize_or("n", 256);
+    anyhow::ensure!(n >= 16, "--n must be at least 16, got {n}");
+    let r = args.usize_or("rank", (n / 16).max(2));
+    let w = args.usize_or("band", 9);
+    let batch = args.usize_or("batch", 8);
+    let threads = resolve_threads(rc.threads);
+    let causal = args.flag("causal");
+    let backend_flag = rc.backend.clone().unwrap_or_else(|| "auto".to_string());
+    let requested = BackendKind::parse(&backend_flag).ok_or_else(|| {
+        anyhow::anyhow!("unknown backend {backend_flag:?} (auto|dense|fft|ski|freq)")
+    })?;
+    let key = ShapeKey { n, r, w, causal, threads, batch_hint: batch, kernel_id: 0 };
+    let dispatch = Dispatch::default();
+    let cache = PlanCache::new(1);
+    let plan = cache.get_or_build(key, || {
+        plan_shape(key, &dispatch, requested, |kind| {
+            let kernel =
+                ToeplitzKernel::from_fn(n, |lag| gaussian_kernel(lag as f64, n as f64 / 8.0));
+            let kernel = if kind == BackendKind::Freq { kernel.causal() } else { kernel };
+            std::sync::Arc::from(build_op(&kernel, kind, r, w))
+        })
+    });
+    plan.warm();
+    let report = plan.report();
+    println!(
+        "execution plan for n={n} r={r} w={w} causal={causal} batch={batch} threads={threads}"
+    );
+    println!("  backend        : {} (requested {})", report.backend, requested.name());
+    let sharding = if report.parallel {
+        format!("parallel across {threads} threads")
+    } else {
+        "serial (shard overhead beats the win at this shape)".to_string()
+    };
+    println!("  sharding       : {sharding}");
+    if let Some(ns) = report.predicted_ns {
+        println!("  predicted cost : {ns:.0} ns/batch");
+    }
+    match (report.transform_len, report.transform_strategy) {
+        (Some(len), Some(strategy)) => println!("  transform      : {len} points ({strategy})"),
+        (Some(len), None) => println!("  transform      : {len} points"),
+        _ => println!("  transform      : none (time-domain backend)"),
+    }
+    println!("  flops estimate : {:.0} per apply", report.flops_estimate);
+    println!(
+        "  resident bytes : {} (this plan) / {} (cache total, warmed)",
+        report.resident_bytes,
+        cache.refresh_bytes()
+    );
+    let s = cache.stats();
+    println!(
+        "  plan cache     : {} hit / {} miss / {} evict, {}/{} resident",
+        s.hits, s.misses, s.evicts, s.len, s.cap
+    );
+    let (fft_entries, fft_bytes) = ski_tnn::dsp::plan_cache_stats();
+    println!("  fft plan cache : {fft_entries} transform plans, {fft_bytes} table bytes");
+    Ok(())
 }
 
 /// Offline perf gate: compare emitted `BENCH_*.json` medians against

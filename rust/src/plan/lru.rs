@@ -1,0 +1,132 @@
+//! The one bounded-map primitive behind every cache in the crate.
+//!
+//! [`LruCore`] is deliberately tiny: a `HashMap` plus a monotonic
+//! use-stamp, evicting the least-recently-used entry whenever an
+//! insert pushes the map past its capacity.  It does **no locking and
+//! no telemetry** — each consumer wraps it in whatever concurrency
+//! shell it needs ([`PlanCache`](super::PlanCache) puts it behind a
+//! `Mutex` with hit/miss/evict accounting, the FFT plan maps in
+//! `dsp::fft` behind their process `Mutex`es, and
+//! `runtime::Engine`'s executable cache behind a `RefCell`, since
+//! `Rc<Executable>` is single-threaded anyway).
+//!
+//! Eviction scans for the minimum stamp, O(len) per displaced entry.
+//! Every cache in this crate is small (tens of entries) and inserts
+//! are rare (one per *distinct shape*, not per request), so the scan
+//! is cheaper than maintaining an intrusive list — and the warm-path
+//! `get` stays a single hash lookup plus one integer store, which is
+//! what the zero-allocation serving gate cares about.
+
+use std::collections::HashMap;
+use std::hash::Hash;
+
+/// A bounded map with least-recently-used eviction.  `cap` is the
+/// maximum number of resident entries; `cap == 0` is clamped to 1.
+#[derive(Debug)]
+pub struct LruCore<K: Eq + Hash + Clone, V> {
+    cap: usize,
+    tick: u64,
+    map: HashMap<K, (V, u64)>,
+}
+
+impl<K: Eq + Hash + Clone, V> LruCore<K, V> {
+    pub fn new(cap: usize) -> LruCore<K, V> {
+        LruCore { cap: cap.max(1), tick: 0, map: HashMap::new() }
+    }
+
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Look up `k`, marking it most-recently-used on a hit.  The warm
+    /// path: one hash probe and one stamp store, no allocation.
+    pub fn get(&mut self, k: &K) -> Option<&V> {
+        self.tick += 1;
+        let tick = self.tick;
+        self.map.get_mut(k).map(|(v, stamp)| {
+            *stamp = tick;
+            &*v
+        })
+    }
+
+    /// Look up `k` without touching recency (diagnostics only).
+    pub fn peek(&self, k: &K) -> Option<&V> {
+        self.map.get(k).map(|(v, _)| v)
+    }
+
+    /// Insert `k → v` as most-recently-used and evict down to
+    /// capacity, returning the displaced `(key, value)` pairs so the
+    /// caller can account for released memory.  Replacing an existing
+    /// key never evicts.
+    pub fn insert(&mut self, k: K, v: V) -> Vec<(K, V)> {
+        self.tick += 1;
+        self.map.insert(k, (v, self.tick));
+        let mut evicted = Vec::new();
+        while self.map.len() > self.cap {
+            let oldest = self
+                .map
+                .iter()
+                .min_by_key(|(_, (_, stamp))| *stamp)
+                .map(|(k, _)| k.clone())
+                .expect("non-empty map has a minimum stamp");
+            if let Some((v, _)) = self.map.remove(&oldest) {
+                evicted.push((oldest, v));
+            }
+        }
+        evicted
+    }
+
+    /// Visit every resident value (memory accounting sweeps).
+    pub fn values(&self) -> impl Iterator<Item = &V> {
+        self.map.values().map(|(v, _)| v)
+    }
+
+    pub fn clear(&mut self) {
+        self.map.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn evicts_least_recently_used_past_cap() {
+        let mut c: LruCore<usize, usize> = LruCore::new(2);
+        assert!(c.insert(1, 10).is_empty());
+        assert!(c.insert(2, 20).is_empty());
+        // Touch 1 so 2 becomes the LRU entry.
+        assert_eq!(c.get(&1), Some(&10));
+        let evicted = c.insert(3, 30);
+        assert_eq!(evicted, vec![(2, 20)]);
+        assert_eq!(c.len(), 2);
+        assert!(c.peek(&1).is_some() && c.peek(&3).is_some());
+    }
+
+    #[test]
+    fn replacing_a_key_does_not_evict() {
+        let mut c: LruCore<&str, u32> = LruCore::new(2);
+        c.insert("a", 1);
+        c.insert("b", 2);
+        assert!(c.insert("a", 3).is_empty());
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.peek(&"a"), Some(&3));
+    }
+
+    #[test]
+    fn zero_cap_clamps_to_one() {
+        let mut c: LruCore<u8, u8> = LruCore::new(0);
+        c.insert(1, 1);
+        let evicted = c.insert(2, 2);
+        assert_eq!(c.len(), 1);
+        assert_eq!(evicted, vec![(1, 1)]);
+    }
+}

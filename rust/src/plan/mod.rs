@@ -1,0 +1,559 @@
+//! The unified execution-plan layer: one bounded, shape-keyed cache
+//! from backend choice down to serve-tick buffers.
+//!
+//! The paper's contribution is *planning* — choosing the right
+//! operator per shape (sparse + low-rank SKI for bidirectional sites,
+//! the Hilbert-completed frequency response for causal ones) so every
+//! apply runs at O(n) / O(n log n) (§3.2, §3.3).  Before this module
+//! that decision was scattered: `Dispatch` picked backends,
+//! `server::batcher` cached per-width operators and tick buffers,
+//! `decode::model` held per-channel spectra, and `dsp::fft` grew a
+//! process-wide plan map without bound.  Here the pieces meet in one
+//! lifecycle:
+//!
+//! ```text
+//!   ShapeKey ──▶ PlanCache::get_or_build ──▶ ExecutionPlan (build)
+//!                      │ bounded, LRU                │ warm()
+//!                      │ hit/miss/evict/bytes        ▼
+//!                      └──────────▶ execute_rows (warm tick:
+//!                                   zero allocations, shared plan)
+//! ```
+//!
+//! * [`ShapeKey`] — the full dispatch shape `(n, r, w, causal,
+//!   threads, batch-hint)` plus a `kernel_id` for sites (the decode
+//!   oracle) that hold *different* kernels at the same shape.
+//! * [`ExecutionPlan`] — everything a warm tick needs, built once:
+//!   the backend choice and predicted cost from
+//!   [`Dispatch`], the operator (with its cached
+//!   [`SpectralPlan`] spectrum where spectral), and the tick state —
+//!   flat signal/result buffers plus the response [`RowPool`] — whose
+//!   reuse across ticks is what keeps the serve path allocation-free.
+//! * [`PlanCache`] — a concurrently shared, **bounded** map of plans
+//!   with LRU eviction ([`LruCore`]), exact hit/miss/evict accounting
+//!   (lookups are resolved under the lock, so `hits + misses` equals
+//!   lookups even under a thread hammer), and per-plan + aggregate
+//!   resident-byte accounting surfaced as the
+//!   `plan.cache.{hit,miss,evict,bytes,size}` telemetry series.
+//!
+//! The FFT plan maps in [`dsp::fft`](crate::dsp) are this cache's
+//! inner tier: an [`ExecutionPlan`] holds its spectrum, the spectrum
+//! holds its shared transform plan, and both tiers are bounded with
+//! the same [`LruCore`] primitive.
+
+mod lru;
+
+pub use lru::LruCore;
+
+use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, PoisonError};
+
+use anyhow::{ensure, Result};
+
+use crate::runtime::ThreadPool;
+use crate::server::{RowBatch, RowPool};
+use crate::telemetry::{LazyCounter, LazyGauge};
+use crate::toeplitz::{
+    apply_batch_flat_sharded, BackendKind, Dispatch, DispatchQuery, FftOp, SpectralPlan,
+    ToeplitzOp,
+};
+
+static PLAN_CACHE_HIT: LazyCounter = LazyCounter::new("plan.cache.hit");
+static PLAN_CACHE_MISS: LazyCounter = LazyCounter::new("plan.cache.miss");
+static PLAN_CACHE_EVICT: LazyCounter = LazyCounter::new("plan.cache.evict");
+static PLAN_CACHE_BYTES: LazyGauge = LazyGauge::new("plan.cache.bytes");
+static PLAN_CACHE_SIZE: LazyGauge = LazyGauge::new("plan.cache.size");
+
+/// Aggregate resident bytes / plan count across every live
+/// [`PlanCache`] in the process — the gauges report totals, not one
+/// cache's view, so a serve cache and a decode cache sum coherently.
+static TOTAL_BYTES: AtomicI64 = AtomicI64::new(0);
+static TOTAL_SIZE: AtomicI64 = AtomicI64::new(0);
+
+/// The full shape one execution plan is keyed on — everything
+/// [`Dispatch`] looks at, plus a `kernel_id` discriminator for callers
+/// (the decode oracle) that cache *different kernels* at the same
+/// dispatch shape.  `kernel_id == 0` means "the kernel is determined
+/// by the shape" (the serving substrate's width-derived kernels).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ShapeKey {
+    /// Sequence length (row width).
+    pub n: usize,
+    /// SKI rank available (0 ⇒ SKI ineligible).
+    pub r: usize,
+    /// Band width for the sparse component.
+    pub w: usize,
+    /// Causal site (excludes SKI, prefers the Hilbert spectrum).
+    pub causal: bool,
+    /// Worker threads the executing pool offers.
+    pub threads: usize,
+    /// Expected rows per tick (sizes the warmed buffers; 0 = unknown).
+    pub batch_hint: usize,
+    /// Distinguishes kernels sharing a dispatch shape (0 = none).
+    pub kernel_id: u64,
+}
+
+impl ShapeKey {
+    /// The serving substrate's key: one plan per bucket width.
+    pub fn for_width(n: usize, threads: usize) -> ShapeKey {
+        ShapeKey { n, r: 0, w: 0, causal: false, threads, batch_hint: 0, kernel_id: 0 }
+    }
+
+    /// This key as a [`Dispatch`] query.
+    pub fn query(&self) -> DispatchQuery {
+        DispatchQuery {
+            n: self.n,
+            r: self.r,
+            w: self.w,
+            causal: self.causal,
+            batch: self.batch_hint.max(1),
+            threads: self.threads.max(1),
+        }
+    }
+}
+
+/// Per-plan tick state: the flat signal/result buffers and the
+/// response-row pool.  Living inside the plan (rather than the serve
+/// closure) is what lets every consumer of a cached plan inherit the
+/// zero-allocation warm tick.
+struct TickState {
+    xs: Vec<f32>,
+    out: Vec<f32>,
+    rows: RowPool,
+}
+
+/// Everything a warm tick needs for one shape, built once and shared:
+/// backend choice + predicted cost, the operator (holding its cached
+/// spectrum), and the recycled tick buffers.  Lifecycle: **build**
+/// (constructors) → **warm** ([`warm`](Self::warm), optional — sizes
+/// buffers and runs one throwaway apply so scratch arenas and FFT
+/// twiddles exist before traffic) → **execute**
+/// ([`execute_rows`](Self::execute_rows), allocation-free once warm).
+pub struct ExecutionPlan {
+    key: ShapeKey,
+    backend: BackendKind,
+    parallel: bool,
+    predicted_ns: Option<f64>,
+    op: Arc<dyn ToeplitzOp>,
+    spectral: Option<Arc<SpectralPlan>>,
+    tick: Mutex<TickState>,
+    warmed: AtomicBool,
+}
+
+impl ExecutionPlan {
+    /// Build from an explicit dispatch decision (the `plan --explain`
+    /// path and [`plan_shape`]).
+    pub fn new(
+        key: ShapeKey,
+        backend: BackendKind,
+        parallel: bool,
+        predicted_ns: Option<f64>,
+        op: Arc<dyn ToeplitzOp>,
+    ) -> ExecutionPlan {
+        ExecutionPlan {
+            key,
+            backend,
+            parallel,
+            predicted_ns,
+            op,
+            spectral: None,
+            tick: Mutex::new(TickState { xs: Vec::new(), out: Vec::new(), rows: RowPool::new() }),
+            warmed: AtomicBool::new(false),
+        }
+    }
+
+    /// Wrap an already-built operator (the serve executors: their
+    /// factories decided the backend when they built the op).
+    pub fn from_op(key: ShapeKey, op: Arc<dyn ToeplitzOp>) -> ExecutionPlan {
+        let backend = BackendKind::parse(op.name()).unwrap_or(BackendKind::Auto);
+        ExecutionPlan::new(key, backend, key.threads > 1, None, op)
+    }
+
+    /// Wrap a causal spectrum (the decode oracle's per-channel plans):
+    /// the plan object and the operator share one `Arc`'d spectrum —
+    /// no duplicate tables.
+    pub fn from_spectral(key: ShapeKey, plan: SpectralPlan) -> ExecutionPlan {
+        let plan = Arc::new(plan);
+        let op: Arc<dyn ToeplitzOp> = Arc::new(FftOp::from_shared(Arc::clone(&plan)));
+        ExecutionPlan {
+            key,
+            backend: if key.causal { BackendKind::Freq } else { BackendKind::Fft },
+            parallel: key.threads > 1,
+            predicted_ns: None,
+            op,
+            spectral: Some(plan),
+            tick: Mutex::new(TickState { xs: Vec::new(), out: Vec::new(), rows: RowPool::new() }),
+            warmed: AtomicBool::new(false),
+        }
+    }
+
+    pub fn key(&self) -> &ShapeKey {
+        &self.key
+    }
+
+    pub fn backend(&self) -> BackendKind {
+        self.backend
+    }
+
+    /// Whether the dispatch decision was to shard batches across the
+    /// pool (informational; the executing pool is the ground truth).
+    pub fn parallel(&self) -> bool {
+        self.parallel
+    }
+
+    /// The winning backend's predicted batch cost, when the plan was
+    /// built through [`Dispatch`].
+    pub fn predicted_ns(&self) -> Option<f64> {
+        self.predicted_ns
+    }
+
+    pub fn op(&self) -> &Arc<dyn ToeplitzOp> {
+        &self.op
+    }
+
+    /// The cached causal spectrum, for consumers (the decode oracle)
+    /// that apply it directly rather than through the operator.
+    pub fn spectral(&self) -> Option<&Arc<SpectralPlan>> {
+        self.spectral.as_ref()
+    }
+
+    /// Whether at least one tick (or an explicit [`warm`](Self::warm))
+    /// has run through this plan.
+    pub fn warmed(&self) -> bool {
+        self.warmed.load(Ordering::Acquire)
+    }
+
+    /// Pre-size the tick buffers for `key.batch_hint` rows and run one
+    /// throwaway apply, so the first real tick finds warm scratch
+    /// arenas and built FFT tables.
+    pub fn warm(&self) {
+        let rows = self.key.batch_hint.max(1);
+        let n = self.op.n();
+        let mut guard = self.tick.lock().unwrap_or_else(PoisonError::into_inner);
+        let t = &mut *guard;
+        t.xs.clear();
+        t.xs.resize(rows * n, 0.0);
+        t.out.clear();
+        t.out.resize(rows * n, 0.0);
+        crate::toeplitz::with_scratch(|s| self.op.apply_batch_flat(&t.xs, rows, &mut t.out, s));
+        self.warmed.store(true, Ordering::Release);
+    }
+
+    /// Execute one tick of `rows` width-`width` rows: `encode` writes
+    /// each row's f32 signal into the recycled flat buffer, the
+    /// operator runs through the allocation-free sharded flat ABI, and
+    /// the responses come from (and return to) this plan's [`RowPool`]
+    /// — a warm tick allocates nothing.
+    pub fn execute_rows(
+        &self,
+        rows: usize,
+        width: usize,
+        encode: &mut dyn FnMut(usize, &mut [f32]),
+        pool: &ThreadPool,
+    ) -> Result<RowBatch> {
+        let n = self.op.n();
+        ensure!(width == n, "row width {width} does not match operator n {n}");
+        let mut guard = self.tick.lock().unwrap_or_else(PoisonError::into_inner);
+        let t = &mut *guard;
+        t.xs.clear();
+        t.xs.resize(rows * n, 0.0);
+        for (i, sig) in t.xs.chunks_mut(n).enumerate() {
+            encode(i, sig);
+        }
+        t.out.clear();
+        t.out.resize(rows * n, 0.0);
+        apply_batch_flat_sharded(self.op.as_ref(), &t.xs, rows, &mut t.out, pool);
+        let mut resp = t.rows.batch();
+        resp.extend(t.out.chunks(n).map(|c| t.rows.row(c)));
+        self.warmed.store(true, Ordering::Release);
+        Ok(resp)
+    }
+
+    /// Estimated resident bytes: the operator's tables (spectrum,
+    /// band, kernel lags) plus this plan's tick buffers and pooled
+    /// response rows.
+    pub fn resident_bytes(&self) -> usize {
+        let t = self.tick.lock().unwrap_or_else(PoisonError::into_inner);
+        self.op.resident_bytes()
+            + (t.xs.capacity() + t.out.capacity()) * std::mem::size_of::<f32>()
+            + t.rows.resident_bytes()
+    }
+
+    /// The shape report `ski-tnn plan --explain` prints.
+    pub fn report(&self) -> PlanReport {
+        PlanReport {
+            key: self.key,
+            backend: self.backend.name(),
+            parallel: self.parallel,
+            predicted_ns: self.predicted_ns,
+            transform_len: self.op.transform_len(),
+            transform_strategy: self.op.transform_strategy(),
+            flops_estimate: self.op.flops_estimate(),
+            resident_bytes: self.resident_bytes(),
+        }
+    }
+}
+
+/// One shape's plan, flattened for display (`ski-tnn plan --explain`).
+#[derive(Debug, Clone)]
+pub struct PlanReport {
+    pub key: ShapeKey,
+    pub backend: &'static str,
+    pub parallel: bool,
+    pub predicted_ns: Option<f64>,
+    pub transform_len: Option<usize>,
+    pub transform_strategy: Option<&'static str>,
+    pub flops_estimate: f64,
+    pub resident_bytes: usize,
+}
+
+/// Build a full [`ExecutionPlan`] for a shape through the cost-model
+/// dispatcher: decide the backend (honouring a forced `kind`), whether
+/// sharding pays, and the predicted batch cost; then build the
+/// operator via `make(kind)`.
+pub fn plan_shape(
+    key: ShapeKey,
+    dispatch: &Dispatch,
+    kind: BackendKind,
+    make: impl FnOnce(BackendKind) -> Arc<dyn ToeplitzOp>,
+) -> ExecutionPlan {
+    let q = key.query();
+    let (chosen, parallel, predicted) = match kind {
+        BackendKind::Auto => dispatch.plan_costed(&q),
+        k => {
+            let q = DispatchQuery { causal: k == BackendKind::Freq, ..q };
+            let parallel = dispatch.should_shard(k, &q);
+            (k, parallel, dispatch.predicted_ns(k, &q).unwrap_or(0.0))
+        }
+    };
+    ExecutionPlan::new(key, chosen, parallel, Some(predicted), make(chosen))
+}
+
+/// Exact counters for one [`PlanCache`] — mirrored into the global
+/// `plan.cache.*` telemetry series, kept separately so tests can
+/// assert exact counts without enabling telemetry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PlanCacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evicts: u64,
+    pub len: usize,
+    pub cap: usize,
+}
+
+struct CacheInner {
+    lru: LruCore<ShapeKey, Arc<ExecutionPlan>>,
+    published_bytes: i64,
+    published_size: i64,
+}
+
+/// A concurrently shared, bounded map of [`ExecutionPlan`]s with LRU
+/// eviction and exact accounting.
+///
+/// Lookups resolve **under the lock** — including the build on a miss
+/// — so `hits + misses` equals lookups exactly even when 8 threads
+/// hammer mixed shapes, and two threads can never build the same plan
+/// twice.  Plan builds are rare (one per distinct shape, not per
+/// request) and never re-enter the cache, so holding the lock through
+/// a build cannot deadlock; the warm path is one mutex, one hash
+/// probe, one `Arc` clone — no allocation.
+pub struct PlanCache {
+    inner: Mutex<CacheInner>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evicts: AtomicU64,
+}
+
+impl PlanCache {
+    /// A cache holding at most `cap` plans (`0` is clamped to 1).
+    pub fn new(cap: usize) -> PlanCache {
+        PlanCache {
+            inner: Mutex::new(CacheInner {
+                lru: LruCore::new(cap),
+                published_bytes: 0,
+                published_size: 0,
+            }),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evicts: AtomicU64::new(0),
+        }
+    }
+
+    /// The resident plan for `key`, building (and caching, evicting
+    /// the LRU plan past capacity) on a miss.
+    pub fn get_or_build(
+        &self,
+        key: ShapeKey,
+        build: impl FnOnce() -> ExecutionPlan,
+    ) -> Arc<ExecutionPlan> {
+        let mut inner = self.inner.lock().unwrap_or_else(PoisonError::into_inner);
+        if let Some(p) = inner.lru.get(&key) {
+            let p = Arc::clone(p);
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            PLAN_CACHE_HIT.incr();
+            return p;
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        PLAN_CACHE_MISS.incr();
+        let plan = Arc::new(build());
+        let evicted = inner.lru.insert(key, Arc::clone(&plan));
+        if !evicted.is_empty() {
+            self.evicts.fetch_add(evicted.len() as u64, Ordering::Relaxed);
+            PLAN_CACHE_EVICT.add(evicted.len() as u64);
+        }
+        Self::republish(&mut inner);
+        plan
+    }
+
+    /// The resident plan for `key` without building (diagnostics).
+    pub fn peek(&self, key: &ShapeKey) -> Option<Arc<ExecutionPlan>> {
+        self.inner.lock().unwrap_or_else(PoisonError::into_inner).lru.peek(key).cloned()
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap_or_else(PoisonError::into_inner).lru.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn cap(&self) -> usize {
+        self.inner.lock().unwrap_or_else(PoisonError::into_inner).lru.cap()
+    }
+
+    /// Exact lifetime counters plus current occupancy.
+    pub fn stats(&self) -> PlanCacheStats {
+        let inner = self.inner.lock().unwrap_or_else(PoisonError::into_inner);
+        PlanCacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evicts: self.evicts.load(Ordering::Relaxed),
+            len: inner.lru.len(),
+            cap: inner.lru.cap(),
+        }
+    }
+
+    /// Recompute and return this cache's resident bytes (tick buffers
+    /// grow with traffic after insert, so accounting published at
+    /// mutation time can lag; callers wanting fresh totals — the stats
+    /// snapshot path, `plan --explain` — refresh here).
+    pub fn refresh_bytes(&self) -> usize {
+        let mut inner = self.inner.lock().unwrap_or_else(PoisonError::into_inner);
+        Self::republish(&mut inner);
+        inner.published_bytes.max(0) as usize
+    }
+
+    /// Republishes this cache's resident-byte / size contribution into
+    /// the process-wide totals behind the `plan.cache.{bytes,size}`
+    /// gauges.  Called with the cache lock held.
+    fn republish(inner: &mut CacheInner) {
+        let bytes: usize = inner.lru.values().map(|p| p.resident_bytes()).sum();
+        let size = inner.lru.len();
+        let db = bytes as i64 - inner.published_bytes;
+        let ds = size as i64 - inner.published_size;
+        inner.published_bytes = bytes as i64;
+        inner.published_size = size as i64;
+        let tb = TOTAL_BYTES.fetch_add(db, Ordering::Relaxed) + db;
+        let ts = TOTAL_SIZE.fetch_add(ds, Ordering::Relaxed) + ds;
+        PLAN_CACHE_BYTES.set(tb.max(0) as f64);
+        PLAN_CACHE_SIZE.set(ts.max(0) as f64);
+    }
+}
+
+impl Drop for PlanCache {
+    fn drop(&mut self) {
+        let inner = self.inner.get_mut().unwrap_or_else(PoisonError::into_inner);
+        TOTAL_BYTES.fetch_sub(inner.published_bytes, Ordering::Relaxed);
+        TOTAL_SIZE.fetch_sub(inner.published_size, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::toeplitz::{build_op, ToeplitzKernel};
+
+    fn plan_for(n: usize) -> ExecutionPlan {
+        let kernel = ToeplitzKernel::from_fn(n, |lag| 1.0 / (1.0 + lag.abs() as f32));
+        let op: Arc<dyn ToeplitzOp> =
+            Arc::from(build_op(&kernel, BackendKind::Fft, 0, 0));
+        ExecutionPlan::from_op(ShapeKey::for_width(n, 1), op)
+    }
+
+    #[test]
+    fn cache_counts_hits_misses_and_evictions_exactly() {
+        let cache = PlanCache::new(2);
+        for &n in &[8usize, 16, 8, 16, 24, 8] {
+            let _ = cache.get_or_build(ShapeKey::for_width(n, 1), || plan_for(n));
+        }
+        let s = cache.stats();
+        // 8 → miss, 16 → miss, 8 → hit, 16 → hit, 24 → miss (evicts 8),
+        // 8 → miss (evicts 16).
+        assert_eq!((s.hits, s.misses, s.evicts), (2, 4, 2), "{s:?}");
+        assert_eq!(s.len, 2);
+        assert!(s.len <= s.cap);
+    }
+
+    #[test]
+    fn execute_rows_matches_direct_apply_and_recycles_buffers() {
+        let n = 16;
+        let kernel = ToeplitzKernel::from_fn(n, |lag| 1.0 / (1.0 + lag.abs() as f32));
+        let op: Arc<dyn ToeplitzOp> = Arc::from(build_op(&kernel, BackendKind::Fft, 0, 0));
+        let plan = ExecutionPlan::from_op(ShapeKey::for_width(n, 1), Arc::clone(&op));
+        let pool = ThreadPool::new(1);
+        let xs: Vec<f32> = (0..2 * n).map(|i| (i as f32) / 7.0 - 2.0).collect();
+        let mut encode = |i: usize, sig: &mut [f32]| {
+            sig.copy_from_slice(&xs[i * n..(i + 1) * n]);
+        };
+        assert!(!plan.warmed());
+        let first = plan.execute_rows(2, n, &mut encode, &pool).unwrap();
+        assert!(plan.warmed());
+        for (row, x) in first.iter().zip(xs.chunks(n)) {
+            assert_eq!(**row, *op.apply(x), "plan tick must equal direct apply");
+        }
+        let mut ptrs: Vec<*const f32> = first.iter().map(|r| r.as_ptr()).collect();
+        drop(first);
+        let second = plan.execute_rows(2, n, &mut encode, &pool).unwrap();
+        let mut again: Vec<*const f32> = second.iter().map(|r| r.as_ptr()).collect();
+        ptrs.sort();
+        again.sort();
+        assert_eq!(ptrs, again, "response rows must recycle through the plan's pool");
+    }
+
+    #[test]
+    fn execute_rows_rejects_width_mismatch() {
+        let plan = plan_for(4);
+        let pool = ThreadPool::new(1);
+        let err = plan
+            .execute_rows(1, 8, &mut |_i, sig| sig.fill(0.0), &pool)
+            .expect_err("width mismatch must error");
+        assert!(err.to_string().contains("does not match operator n"), "{err}");
+    }
+
+    #[test]
+    fn plan_shape_prices_forced_and_auto_backends() {
+        let dispatch = Dispatch::default();
+        let key = ShapeKey {
+            n: 256,
+            r: 16,
+            w: 9,
+            causal: false,
+            threads: 2,
+            batch_hint: 8,
+            kernel_id: 0,
+        };
+        let kernel = ToeplitzKernel::from_fn(256, |lag| 1.0 / (1.0 + lag.abs() as f32));
+        let auto = plan_shape(key, &dispatch, BackendKind::Auto, |kind| {
+            Arc::from(build_op(&kernel, kind, key.r, key.w))
+        });
+        assert_ne!(auto.backend(), BackendKind::Auto, "auto must resolve");
+        assert!(auto.predicted_ns().unwrap() > 0.0);
+        let forced = plan_shape(key, &dispatch, BackendKind::Dense, |kind| {
+            Arc::from(build_op(&kernel, kind, key.r, key.w))
+        });
+        assert_eq!(forced.backend(), BackendKind::Dense);
+        let report = forced.report();
+        assert_eq!(report.backend, "dense");
+        assert!(report.resident_bytes > 0);
+    }
+}

@@ -5,10 +5,13 @@
 //! ids, sidestepping the 64-bit-id protos jax ≥ 0.5 emits that
 //! xla_extension 0.5.1 rejects).  Compiles are cached by
 //! `(config, entry)` so a training run pays exactly one compile per
-//! entrypoint regardless of step count.
+//! entrypoint regardless of step count.  The cache is **bounded**
+//! ([`EXE_CACHE_CAP`], LRU eviction through the same
+//! [`LruCore`] primitive as the execution-plan and FFT-plan caches) —
+//! a long-lived process cycling through many configs re-compiles cold
+//! entries instead of holding every executable ever built.
 
 use std::cell::RefCell;
-use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::rc::Rc;
 use std::time::Instant;
@@ -16,7 +19,13 @@ use std::time::Instant;
 use anyhow::{bail, Context, Result};
 use xla::{Literal, PjRtClient, PjRtLoadedExecutable};
 
+use crate::plan::LruCore;
+
 use super::manifest::{Entry, Manifest, ModelConfig};
+
+/// Most compiled executables kept resident; past this the least
+/// recently used entry drops (and recompiles if ever needed again).
+pub const EXE_CACHE_CAP: usize = 32;
 
 /// A compiled entrypoint plus its manifest signature.
 pub struct Executable {
@@ -62,7 +71,7 @@ pub struct Engine {
     client: PjRtClient,
     dir: PathBuf,
     manifest: Manifest,
-    cache: RefCell<HashMap<(String, String), Rc<Executable>>>,
+    cache: RefCell<LruCore<(String, String), Rc<Executable>>>,
     /// (key, compile seconds) log — surfaced by `stats()` for EXPERIMENTS.md.
     compile_log: RefCell<Vec<(String, f64)>>,
 }
@@ -77,7 +86,7 @@ impl Engine {
             client,
             dir,
             manifest,
-            cache: RefCell::new(HashMap::new()),
+            cache: RefCell::new(LruCore::new(EXE_CACHE_CAP)),
             compile_log: RefCell::new(Vec::new()),
         })
     }
@@ -97,7 +106,7 @@ impl Engine {
     /// Load (compile-once) an entrypoint of a config.
     pub fn load(&self, config: &str, entry: &str) -> Result<Rc<Executable>> {
         let key = (config.to_string(), entry.to_string());
-        if let Some(exe) = self.cache.borrow().get(&key) {
+        if let Some(exe) = self.cache.borrow_mut().get(&key) {
             return Ok(exe.clone());
         }
         let cfg = self.manifest.config(config)?;
@@ -116,8 +125,16 @@ impl Engine {
         let secs = t0.elapsed().as_secs_f64();
         self.compile_log.borrow_mut().push((format!("{config}.{entry}"), secs));
         let exe = Rc::new(Executable { exe, entry: ent, key: key.clone() });
-        self.cache.borrow_mut().insert(key, exe.clone());
+        // Past capacity the LRU executable drops here (its PJRT
+        // resources free once no caller still holds the `Rc`).
+        let _evicted = self.cache.borrow_mut().insert(key, exe.clone());
         Ok(exe)
+    }
+
+    /// (resident executables, capacity) of the compile cache.
+    pub fn cache_stats(&self) -> (usize, usize) {
+        let cache = self.cache.borrow();
+        (cache.len(), cache.cap())
     }
 
     /// (entry, seconds) for every compile done so far.
@@ -174,6 +191,28 @@ mod tests {
         let b = eng.load("lm_fd_3l", "init").unwrap();
         assert!(Rc::ptr_eq(&a, &b), "cache must return the same executable");
         assert_eq!(eng.compile_log().len(), 1);
+    }
+
+    #[test]
+    fn executable_cache_is_bounded() {
+        let Some(eng) = engine() else { return };
+        let (len, cap) = eng.cache_stats();
+        assert_eq!((len, cap), (0, EXE_CACHE_CAP));
+        // Load every entrypoint the manifest declares — the cache must
+        // never outgrow its capacity, however many configs exist.
+        let names: Vec<(String, Vec<String>)> = eng
+            .manifest()
+            .configs
+            .values()
+            .map(|c| (c.name.clone(), c.entries.keys().cloned().collect()))
+            .collect();
+        for (config, entries) in &names {
+            for entry in entries {
+                let _ = eng.load(config, entry);
+            }
+        }
+        let (len, cap) = eng.cache_stats();
+        assert!(len <= cap, "{len} resident executables exceed cap {cap}");
     }
 
     #[test]

@@ -6,8 +6,9 @@
 //!
 //! * [`Manifest`] / [`ModelConfig`] — the artifact contract: per-config
 //!   shapes, flat parameter order, and entrypoints.
-//! * [`Engine`] — PJRT client + executable cache keyed by
-//!   `(config, entry)`; all compiles happen through here.
+//! * [`Engine`] — PJRT client + bounded (LRU, [`EXE_CACHE_CAP`])
+//!   executable cache keyed by `(config, entry)`; all compiles happen
+//!   through here.
 //! * [`ModelState`] — the device-facing training state (`params`, Adam
 //!   `m`/`v`, step counter) driven by the fused `step` artifact.
 //! * [`HostTensor`] — dtype-tagged host arrays for batches and outputs.
@@ -26,7 +27,7 @@ pub mod pool;
 mod state;
 mod tensor;
 
-pub use engine::Engine;
+pub use engine::{Engine, EXE_CACHE_CAP};
 pub use manifest::{Dtype, Entry, IoDesc, Manifest, ModelConfig, Task, Variant};
 pub use pool::{default_threads, global_pool, resolve_threads, ThreadPool};
 pub use state::ModelState;

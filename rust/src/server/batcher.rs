@@ -26,11 +26,12 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, ensure, Result};
 
 use crate::data::PAD;
+use crate::plan::{ExecutionPlan, PlanCache, ShapeKey};
 use crate::runtime::{global_pool, Engine, HostTensor, ModelState, ThreadPool};
 use crate::telemetry;
-use crate::toeplitz::{apply_batch_flat_sharded, BackendKind, Dispatch, DispatchQuery, ToeplitzOp};
+use crate::toeplitz::{BackendKind, Dispatch, DispatchQuery, ToeplitzOp};
 
-use super::rows::{LogitsRow, RowBatch, RowPool};
+use super::rows::{LogitsRow, RowBatch};
 
 /// Server tuning knobs.
 #[derive(Debug, Clone)]
@@ -101,9 +102,9 @@ pub struct Request {
 pub struct Response {
     /// Logits row for this request (num_classes or vocab wide).
     /// Dereferences to `[f32]`; substrate rows are pooled — dropping
-    /// the response returns the buffer to the serving tick's
-    /// [`RowPool`], which is what keeps a warm serve tick
-    /// allocation-free end to end.
+    /// the response returns the buffer to the serving plan's
+    /// [`RowPool`](super::rows::RowPool), which is what keeps a warm
+    /// serve tick allocation-free end to end.
     pub logits: LogitsRow,
     /// Time spent queued before execution started.
     pub queued: Duration,
@@ -437,19 +438,32 @@ fn ids_to_signal(row: &[i32]) -> Vec<f32> {
     out
 }
 
+/// Most per-width [`ExecutionPlan`]s one bucketed serve loop keeps
+/// resident — comfortably above any realistic bucket count, small
+/// enough that adversarial width traffic stays bounded.
+pub const SERVE_PLAN_CAP: usize = 8;
+
 /// Adapt a [`ToeplitzOp`] backend into a [`Batcher::run`] executor:
 /// each row's ids become an f32 signal and the response row is the
 /// operator applied to it, with the batch packed into one flat buffer
 /// and **sharded row-aligned across the global thread pool**
 /// (`SKI_TNN_THREADS`-sized) instead of looped serially.
-/// This is how the backend dispatcher rides the same
-/// queueing/batching policy as the XLA model path — and the
-/// artifact-free load-test target of `ski-tnn serve --backend …`.
+/// The operator rides a single-entry [`PlanCache`] whose
+/// [`ExecutionPlan`] owns the tick buffers and response-row pool, so a
+/// warm serve tick allocates nothing.  This is how the backend
+/// dispatcher rides the same queueing/batching policy as the XLA model
+/// path — and the artifact-free load-test target of
+/// `ski-tnn serve --backend …`.
 pub fn serve_toeplitz(
     op: Arc<dyn ToeplitzOp>,
 ) -> impl FnMut(&HostTensor) -> Result<RowBatch> {
-    let mut bufs = TickBuffers::new();
-    move |batch: &HostTensor| exec_toeplitz(op.as_ref(), global_pool(), batch, &mut bufs)
+    let plans = PlanCache::new(1);
+    move |batch: &HostTensor| {
+        let pool = global_pool();
+        let key = ShapeKey::for_width(op.n(), pool.threads());
+        let plan = plans.get_or_build(key, || ExecutionPlan::from_op(key, Arc::clone(&op)));
+        exec_plan(&plan, pool, batch)
+    }
 }
 
 /// [`serve_toeplitz`] on an explicit pool (per-run `--threads`).
@@ -457,28 +471,35 @@ pub fn serve_toeplitz_on(
     op: Arc<dyn ToeplitzOp>,
     pool: Arc<ThreadPool>,
 ) -> impl FnMut(&HostTensor) -> Result<RowBatch> {
-    let mut bufs = TickBuffers::new();
-    move |batch: &HostTensor| exec_toeplitz(op.as_ref(), &pool, batch, &mut bufs)
+    let plans = PlanCache::new(1);
+    move |batch: &HostTensor| {
+        let key = ShapeKey::for_width(op.n(), pool.threads());
+        let plan = plans.get_or_build(key, || ExecutionPlan::from_op(key, Arc::clone(&op)));
+        exec_plan(&plan, &pool, batch)
+    }
 }
 
 /// Length-bucketed substrate serving: `make(width)` builds (once, then
 /// cached) the operator for each bucket width the batcher executes at,
 /// so one serve loop answers mixed-length traffic with a right-sized
-/// plan per bucket instead of padding everything to a single `n` —
-/// each width keeps its own [`TickBuffers`], so every bucket's serve
-/// tick is allocation-free once warm.
+/// plan per bucket instead of padding everything to a single `n`.
+/// Plans live in a bounded [`PlanCache`] keyed by
+/// [`ShapeKey::for_width`]; each resident plan owns its own tick
+/// buffers and row pool, so every bucket's serve tick is
+/// allocation-free once warm, and an eviction (more than
+/// [`SERVE_PLAN_CAP`] widths) simply rebuilds on the next request.
 pub fn serve_toeplitz_factory(
     make: impl Fn(usize) -> Arc<dyn ToeplitzOp>,
     pool: Arc<ThreadPool>,
 ) -> impl FnMut(&HostTensor) -> Result<RowBatch> {
-    let mut ops: std::collections::HashMap<usize, (Arc<dyn ToeplitzOp>, TickBuffers)> =
-        std::collections::HashMap::new();
+    let plans = PlanCache::new(SERVE_PLAN_CAP);
     move |batch: &HostTensor| {
         let shape = batch.shape();
         ensure!(shape.len() == 2, "expected a (batch, width) ids tensor, got {shape:?}");
         let width = shape[1];
-        let entry = ops.entry(width).or_insert_with(|| (make(width), TickBuffers::new()));
-        exec_toeplitz(entry.0.as_ref(), &pool, batch, &mut entry.1)
+        let key = ShapeKey::for_width(width, pool.threads());
+        let plan = plans.get_or_build(key, || ExecutionPlan::from_op(key, make(width)));
+        exec_plan(&plan, &pool, batch)
     }
 }
 
@@ -539,50 +560,19 @@ where
     }
 }
 
-/// Reusable per-width tick state for the substrate executors: the flat
-/// signal/result buffers and the response-row pool.  Owned by the
-/// serve closures (one per bucket width in the factory), so every
-/// buffer survives from tick to tick — after one warm round through
-/// the clients a serve tick allocates nothing, which is the tier
-/// `tests/alloc_steady.rs` pins in CI.
-struct TickBuffers {
-    xs: Vec<f32>,
-    out: Vec<f32>,
-    rows: RowPool,
-}
-
-impl TickBuffers {
-    fn new() -> TickBuffers {
-        TickBuffers { xs: Vec::new(), out: Vec::new(), rows: RowPool::new() }
-    }
-}
-
-fn exec_toeplitz(
-    op: &dyn ToeplitzOp,
-    pool: &ThreadPool,
-    batch: &HostTensor,
-    bufs: &mut TickBuffers,
-) -> Result<RowBatch> {
+/// Execute one batcher tick through a cached [`ExecutionPlan`]: decode
+/// the ids tensor into the plan's recycled flat signal buffer, run the
+/// allocation-free sharded flat ABI, and answer from the plan's row
+/// pool.  The plan owns every buffer, so a warm tick allocates nothing
+/// — the tier `tests/alloc_steady.rs` pins in CI.
+fn exec_plan(plan: &ExecutionPlan, pool: &ThreadPool, batch: &HostTensor) -> Result<RowBatch> {
     let shape = batch.shape();
     ensure!(shape.len() == 2, "expected a (batch, n) ids tensor, got {shape:?}");
-    ensure!(shape[1] == op.n(), "row width {} does not match operator n {}", shape[1], op.n());
     let ids = batch.as_i32()?;
-    let (rows, n) = (shape[0], shape[1]);
-    // Flat row-major signal/result buffers recycled across ticks: the
-    // operator runs through the allocation-free flat ABI with
-    // row-aligned shards, and the response rows come from (and return
-    // to) the per-width pool — a warm tick allocates nothing.
-    bufs.xs.clear();
-    bufs.xs.resize(rows * n, 0.0);
-    for (sig, row) in bufs.xs.chunks_mut(n).zip(ids.chunks(n)) {
-        ids_to_signal_into(row, sig);
-    }
-    bufs.out.clear();
-    bufs.out.resize(rows * n, 0.0);
-    apply_batch_flat_sharded(op, &bufs.xs, rows, &mut bufs.out, pool);
-    let mut resp = bufs.rows.batch();
-    resp.extend(bufs.out.chunks(n).map(|c| bufs.rows.row(c)));
-    Ok(resp)
+    let (rows, width) = (shape[0], shape[1]);
+    let mut encode =
+        |i: usize, sig: &mut [f32]| ids_to_signal_into(&ids[i * width..(i + 1) * width], sig);
+    plan.execute_rows(rows, width, &mut encode, pool)
 }
 
 #[cfg(test)]

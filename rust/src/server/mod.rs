@@ -23,7 +23,7 @@ mod rows;
 
 pub use batcher::{
     audit_exec, serve_model, serve_toeplitz, serve_toeplitz_factory, serve_toeplitz_on, Batcher,
-    BatcherStats, Request, Response, ServerConfig,
+    BatcherStats, Request, Response, ServerConfig, SERVE_PLAN_CAP,
 };
 pub use rows::{LogitsRow, RowBatch, RowPool};
 pub use generate::{

@@ -81,6 +81,17 @@ impl RowPool {
     pub fn free_rows(&self) -> usize {
         self.inner.lock().unwrap().rows.len()
     }
+
+    /// Bytes currently parked in the free lists (rows in flight with
+    /// clients are owed to their requesters, not the pool).
+    pub fn resident_bytes(&self) -> usize {
+        let inner = self.inner.lock().unwrap();
+        let rows: usize =
+            inner.rows.iter().map(|r| r.capacity() * std::mem::size_of::<f32>()).sum();
+        let batches: usize =
+            inner.batches.iter().map(|b| b.capacity() * std::mem::size_of::<LogitsRow>()).sum();
+        rows + batches
+    }
 }
 
 /// One response row of logits.  Dereferences to `[f32]`; pooled rows

@@ -101,7 +101,9 @@ impl Drop for StatsWriter {
 
 /// Validate a snapshot document: the core series must be present
 /// (queue-wait span with samples and a finite p99, `pool.workers`
-/// gauge ≥ 1, at least one dispatch audit row) and no number anywhere
+/// gauge ≥ 1, at least one dispatch audit row, `plan.cache.{hit,miss}`
+/// counters recording at least one lookup with the
+/// `plan.cache.{size,bytes}` gauges alongside) and no number anywhere
 /// in the document may be NaN/±inf.  `ski-tnn bench-check
 /// --stats-snapshot` refuses files failing any of these.
 pub fn check_snapshot(doc: &Json) -> Result<()> {
@@ -135,6 +137,29 @@ pub fn check_snapshot(doc: &Json) -> Result<()> {
         .and_then(Json::as_arr)
         .ok_or_else(|| anyhow!("snapshot missing dispatch_audit rows"))?;
     ensure!(!rows.is_empty(), "snapshot has no dispatch audit rows");
+    // The execution-plan cache: every serve/decode path resolves its
+    // operators through it, so a run that produced traffic must show
+    // lookups (a `hit` counter may be absent when every lookup missed;
+    // `miss` cannot be — the first build is always a miss) and the
+    // occupancy gauges beside them.  `evict` is legitimately absent
+    // under capacity.
+    let counter = |k: &str| doc.get("counters").and_then(|c| c.get(k)).and_then(Json::as_f64);
+    let plan_miss = counter("plan.cache.miss")
+        .ok_or_else(|| anyhow!("snapshot missing the plan.cache.miss counter"))?;
+    let plan_hits = counter("plan.cache.hit").unwrap_or(0.0);
+    ensure!(plan_hits + plan_miss > 0.0, "plan.cache.{{hit,miss}} recorded no lookups");
+    let plan_size = doc
+        .get("gauges")
+        .and_then(|g| g.get("plan.cache.size"))
+        .and_then(Json::as_f64)
+        .ok_or_else(|| anyhow!("snapshot missing the plan.cache.size gauge"))?;
+    ensure!(plan_size >= 1.0, "plan.cache.size gauge is {plan_size}, want >= 1");
+    let plan_bytes = doc
+        .get("gauges")
+        .and_then(|g| g.get("plan.cache.bytes"))
+        .and_then(Json::as_f64)
+        .ok_or_else(|| anyhow!("snapshot missing the plan.cache.bytes gauge"))?;
+    ensure!(plan_bytes >= 0.0, "plan.cache.bytes gauge is {plan_bytes}, want >= 0");
     let mut bad = Vec::new();
     sweep_nonfinite("$", doc, &mut bad);
     ensure!(bad.is_empty(), "snapshot contains non-finite series: {}", bad.join(", "));
@@ -203,14 +228,32 @@ pub fn print_snapshot(doc: &Json) {
 
     if let Some(cs) = doc.get("counters").and_then(Json::as_obj) {
         let c = |k: &str| cs.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+        let g = |k: &str| {
+            doc.get("gauges").and_then(|g| g.get(k)).and_then(Json::as_f64).unwrap_or(0.0)
+        };
         let miss = c("fft.plan_cache.miss");
         let looked = c("fft.plan_cache.hit") + c("fft.plan_cache.local_hit") + miss;
         if looked > 0.0 {
             println!(
-                "\nfft plan cache: {:.1}% hit rate ({} lookups, {} plan builds)",
+                "\nfft plan cache: {:.1}% hit rate ({} lookups, {} plan builds, {} evictions)",
                 100.0 * (looked - miss) / looked,
                 looked as u64,
-                miss as u64
+                miss as u64,
+                c("fft.plan_cache.evict") as u64
+            );
+        }
+        let pmiss = c("plan.cache.miss");
+        let plooked = c("plan.cache.hit") + pmiss;
+        if plooked > 0.0 {
+            println!(
+                "execution-plan cache: {:.1}% hit rate ({} lookups, {} builds, {} evictions; \
+                 {} plans resident, {} bytes)",
+                100.0 * (plooked - pmiss) / plooked,
+                plooked as u64,
+                pmiss as u64,
+                c("plan.cache.evict") as u64,
+                g("plan.cache.size") as u64,
+                g("plan.cache.bytes") as u64
             );
         }
     }
@@ -301,6 +344,19 @@ mod tests {
         reg.gauge("pool.workers").set(4.0);
         assert!(check_snapshot(&snapshot_json(&reg, &audit)).is_err(), "still no audit rows");
         audit.record(audit_row());
+        assert!(
+            check_snapshot(&snapshot_json(&reg, &audit)).is_err(),
+            "still no plan.cache lookups"
+        );
+        reg.counter("plan.cache.miss").add(2);
+        reg.counter("plan.cache.hit").add(6);
+        assert!(
+            check_snapshot(&snapshot_json(&reg, &audit)).is_err(),
+            "still no plan.cache gauges"
+        );
+        reg.gauge("plan.cache.size").set(2.0);
+        assert!(check_snapshot(&snapshot_json(&reg, &audit)).is_err(), "still no bytes gauge");
+        reg.gauge("plan.cache.bytes").set(4096.0);
         check_snapshot(&snapshot_json(&reg, &audit)).unwrap();
     }
 
@@ -309,6 +365,9 @@ mod tests {
         let reg = Registry::new();
         reg.histogram("span.queue_wait").record(1000);
         reg.gauge("pool.workers").set(2.0);
+        reg.counter("plan.cache.miss").add(1);
+        reg.gauge("plan.cache.size").set(1.0);
+        reg.gauge("plan.cache.bytes").set(512.0);
         let audit = DispatchAudit::new();
         audit.record(audit_row());
         let mut doc = snapshot_json(&reg, &audit);

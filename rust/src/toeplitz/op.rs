@@ -82,6 +82,27 @@ pub trait ToeplitzOp: Send + Sync {
     /// to [`Dispatch`]'s cost model and the bench reports.
     fn flops_estimate(&self) -> f64;
 
+    /// Estimated bytes of operator-owned tables (kernel lags, band
+    /// taps, cached spectra) — the per-plan memory accounting behind
+    /// the `plan.cache.bytes` gauge.  Shared process-wide FFT twiddle
+    /// tables are *not* counted here; the `fft.plan_cache.bytes` gauge
+    /// accounts for those.
+    fn resident_bytes(&self) -> usize {
+        4 * self.n()
+    }
+
+    /// The spectral transform length this operator applies on, when it
+    /// has one (`None` for time-domain backends).
+    fn transform_len(&self) -> Option<usize> {
+        None
+    }
+
+    /// Which complex engine backs the spectral path
+    /// (`trivial|pow2|mixed|bluestein`), when there is one.
+    fn transform_strategy(&self) -> Option<&'static str> {
+        None
+    }
+
     /// `y = T x` for one length-n signal.
     fn apply(&self, x: &[f32]) -> Vec<f32>;
 
@@ -136,6 +157,10 @@ impl ToeplitzOp for DenseOp {
 
     fn flops_estimate(&self) -> f64 {
         2.0 * (self.kernel.n as f64) * (self.kernel.n as f64)
+    }
+
+    fn resident_bytes(&self) -> usize {
+        self.kernel.lags.len() * std::mem::size_of::<f32>()
     }
 
     fn apply(&self, x: &[f32]) -> Vec<f32> {
@@ -234,6 +259,18 @@ impl SpectralPlan {
         self.m
     }
 
+    /// Which complex engine the shared transform plan runs on
+    /// (`trivial|pow2|mixed|bluestein`).
+    pub fn strategy(&self) -> &'static str {
+        self.rplan.strategy()
+    }
+
+    /// Bytes of plan-owned spectrum tables (the shared r2c transform
+    /// plan is accounted by the FFT plan cache, not here).
+    pub fn resident_bytes(&self) -> usize {
+        (self.spec_re.capacity() + self.spec_im.capacity()) * std::mem::size_of::<f64>()
+    }
+
     /// One circulant apply through caller buffers — the lock-free,
     /// allocation-free hot path (scratch grows once, then every apply
     /// reuses it).  Accepts any prefix `x.len() ≤ n`, zero-padded to
@@ -285,7 +322,7 @@ impl SpectralPlan {
 /// never contend and the hot path allocates nothing beyond the output
 /// row (nothing at all on the flat ABI).
 pub struct FftOp {
-    plan: SpectralPlan,
+    plan: Arc<SpectralPlan>,
 }
 
 impl FftOp {
@@ -299,6 +336,12 @@ impl FftOp {
     }
 
     pub fn from_plan(plan: SpectralPlan) -> FftOp {
+        FftOp { plan: Arc::new(plan) }
+    }
+
+    /// Wrap an already-shared plan without copying its spectrum — how
+    /// an `ExecutionPlan` and its operator share one set of tables.
+    pub fn from_shared(plan: Arc<SpectralPlan>) -> FftOp {
         FftOp { plan }
     }
 
@@ -323,6 +366,18 @@ impl ToeplitzOp for FftOp {
         // multiply.
         let m = self.plan.transform_len();
         2.0 * 10.0 * rfft_work_units(m) + 6.0 * m as f64
+    }
+
+    fn resident_bytes(&self) -> usize {
+        self.plan.resident_bytes()
+    }
+
+    fn transform_len(&self) -> Option<usize> {
+        Some(self.plan.transform_len())
+    }
+
+    fn transform_strategy(&self) -> Option<&'static str> {
+        Some(self.plan.strategy())
     }
 
     fn apply(&self, x: &[f32]) -> Vec<f32> {
@@ -434,6 +489,14 @@ impl ToeplitzOp for SparseLowRankOp {
         2.0 * n * self.band.len() as f64 + 8.0 * n + a
     }
 
+    fn resident_bytes(&self) -> usize {
+        self.band.capacity() * std::mem::size_of::<f32>() + self.ski.resident_bytes()
+    }
+
+    fn transform_len(&self) -> Option<usize> {
+        self.ski.gram_fft.then(|| good_conv_size(2 * self.ski.r.max(1) - 1))
+    }
+
     fn apply(&self, x: &[f32]) -> Vec<f32> {
         with_scratch(|s| self.apply_with_scratch(x, s))
     }
@@ -524,6 +587,18 @@ impl ToeplitzOp for FreqCausalOp {
 
     fn flops_estimate(&self) -> f64 {
         self.fft.flops_estimate()
+    }
+
+    fn resident_bytes(&self) -> usize {
+        self.taps.capacity() * std::mem::size_of::<f32>() + self.fft.resident_bytes()
+    }
+
+    fn transform_len(&self) -> Option<usize> {
+        self.fft.transform_len()
+    }
+
+    fn transform_strategy(&self) -> Option<&'static str> {
+        self.fft.transform_strategy()
     }
 
     fn apply(&self, x: &[f32]) -> Vec<f32> {

@@ -94,6 +94,13 @@ impl Ski {
         Ski::new(n, r, a)
     }
 
+    /// Bytes of factorisation-owned tables: the inducing Gram lags
+    /// plus the cached gram spectrum when the spectral route won.
+    pub fn resident_bytes(&self) -> usize {
+        self.a.lags.capacity() * std::mem::size_of::<f32>()
+            + self.gram_plan.as_ref().map_or(0, SpectralPlan::resident_bytes)
+    }
+
     /// `u = Wᵀ x` — sparse scatter, O(n).
     pub fn wt_apply(&self, x: &[f32]) -> Vec<f32> {
         let mut u = vec![0.0f32; self.r];

@@ -735,10 +735,14 @@ mod tests {
         assert!(format!("{err:#}").contains("stats snapshot"), "{err:#}");
 
         // A snapshot with the core series — span histogram, pool
-        // gauge, audit rows — passes.
+        // gauge, audit rows, plan-cache counters/gauges — passes.
         let reg = crate::telemetry::Registry::default();
         reg.histogram("span.queue_wait").record(1_000);
         reg.gauge("pool.workers").set(2.0);
+        reg.counter("plan.cache.miss").add(1);
+        reg.counter("plan.cache.hit").add(3);
+        reg.gauge("plan.cache.size").set(1.0);
+        reg.gauge("plan.cache.bytes").set(2048.0);
         let audit = crate::telemetry::DispatchAudit::new();
         audit.record(crate::telemetry::AuditRow {
             n: 64,

@@ -1,0 +1,110 @@
+//! PlanCache under contention and across evictions.
+//!
+//! Two guarantees the unified execution-plan layer makes beyond its
+//! unit tests:
+//!
+//! 1. **Exact accounting under a thread hammer** — lookups resolve
+//!    under the cache lock, so `hits + misses` equals the number of
+//!    lookups *exactly* (no lost counts, no double builds) even with
+//!    8 threads racing over more distinct shapes than the cache holds.
+//! 2. **Eviction is invisible to correctness** — a plan rebuilt after
+//!    being evicted produces bitwise-identical tick output, because a
+//!    plan is a pure function of its `ShapeKey` + kernel recipe.
+
+use std::sync::Arc;
+
+use ski_tnn::plan::{ExecutionPlan, PlanCache, ShapeKey};
+use ski_tnn::runtime::ThreadPool;
+use ski_tnn::toeplitz::{build_op, BackendKind, ToeplitzKernel, ToeplitzOp};
+
+/// A deterministic spectral plan for width `n` — the same recipe every
+/// time, so rebuilds after eviction must reproduce identical bits.
+fn plan_for(n: usize) -> ExecutionPlan {
+    let kernel = ToeplitzKernel::from_fn(n, |lag| 1.0 / (1.0 + lag.abs() as f32));
+    let op: Arc<dyn ToeplitzOp> = Arc::from(build_op(&kernel, BackendKind::Fft, 0, 0));
+    ExecutionPlan::from_op(ShapeKey::for_width(n, 1), op)
+}
+
+/// 8 threads × 200 lookups over 12 distinct shapes against a cap-4
+/// cache: every lookup is either a hit or a miss (never lost, never
+/// both), occupancy stays bounded, and the insert/evict ledger
+/// balances to the resident count.
+#[test]
+fn hammered_cache_accounts_for_every_lookup() {
+    const THREADS: usize = 8;
+    const LOOKUPS: usize = 200;
+    let cache = Arc::new(PlanCache::new(4));
+    let shapes: Vec<usize> = (0..12).map(|i| 8 + 8 * i).collect();
+    let handles: Vec<_> = (0..THREADS)
+        .map(|t| {
+            let cache = Arc::clone(&cache);
+            let shapes = shapes.clone();
+            std::thread::spawn(move || {
+                for i in 0..LOOKUPS {
+                    // Each thread walks the shape list at a different
+                    // stride so hits, misses, and evictions interleave.
+                    let n = shapes[(i * (t + 1) + t) % shapes.len()];
+                    let plan = cache.get_or_build(ShapeKey::for_width(n, 1), || plan_for(n));
+                    assert_eq!(plan.key().n, n, "cache returned a plan for the wrong shape");
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().expect("hammer thread");
+    }
+    let s = cache.stats();
+    assert_eq!(
+        s.hits + s.misses,
+        (THREADS * LOOKUPS) as u64,
+        "every lookup must be counted exactly once: {s:?}"
+    );
+    assert!(s.len <= s.cap, "occupancy {} exceeds cap {}", s.len, s.cap);
+    assert_eq!(
+        s.misses,
+        s.evicts + s.len as u64,
+        "every miss inserts; inserts minus evictions must equal residency: {s:?}"
+    );
+    assert!(s.evicts > 0, "12 shapes through a cap-4 cache must have evicted");
+}
+
+/// Evict a plan by displacement, rebuild it through the same cache,
+/// and assert the rebuilt plan's tick output is bitwise identical to
+/// the original's.
+#[test]
+fn evicted_plan_rebuilds_bitwise_identical() {
+    let n = 64usize;
+    let rows = 2usize;
+    let cache = PlanCache::new(2);
+    let pool = ThreadPool::new(1);
+    let key_a = ShapeKey::for_width(n, 1);
+    let xs: Vec<f32> = (0..rows * n).map(|i| (i as f32) / 9.0 - 3.0).collect();
+    let mut encode = |i: usize, sig: &mut [f32]| {
+        sig.copy_from_slice(&xs[i * n..(i + 1) * n]);
+    };
+
+    let first: Vec<Vec<f32>> = {
+        let plan = cache.get_or_build(key_a, || plan_for(n));
+        let out = plan.execute_rows(rows, n, &mut encode, &pool).expect("first tick");
+        out.iter().map(|r| (**r).to_vec()).collect()
+    };
+
+    // Two fresh shapes through a cap-2 cache displace plan A.
+    for m in [96usize, 128] {
+        let _ = cache.get_or_build(ShapeKey::for_width(m, 1), || plan_for(m));
+    }
+    assert!(cache.peek(&key_a).is_none(), "plan A must have been evicted");
+
+    let plan = cache.get_or_build(key_a, || plan_for(n));
+    let out = plan.execute_rows(rows, n, &mut encode, &pool).expect("rebuilt tick");
+    for (i, (row, want)) in out.iter().zip(first.iter()).enumerate() {
+        assert_eq!(
+            &**row,
+            want.as_slice(),
+            "rebuilt plan diverged from the evicted original at row {i}"
+        );
+    }
+    let s = cache.stats();
+    assert!(s.evicts >= 1, "displacement must have evicted: {s:?}");
+    assert_eq!(s.misses, 4, "A, B, C, and the rebuild of A are the only builds: {s:?}");
+}
