@@ -83,6 +83,7 @@ fn main() -> Result<()> {
         queue_depth: args.usize_or("queue-depth", 64),
         max_new_cap: 512,
         threads: args.usize_or("threads", 0),
+        ..GenConfig::default()
     });
     let handle = sched.handle();
     let params = GenParams {

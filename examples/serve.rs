@@ -49,6 +49,7 @@ fn main() -> Result<()> {
         max_wait: Duration::from_millis(args.u64_or("max-wait-ms", 2)),
         queue_depth: args.usize_or("queue-depth", 64),
         buckets: Vec::new(),
+        ..ServerConfig::default()
     };
     println!(
         "serving {} (batch {}, n {}, {} classes/vocab) · {clients} clients · {requests} requests",

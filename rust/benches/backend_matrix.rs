@@ -16,6 +16,12 @@
 //! counter went nonzero: the spectral cells must actually be riding
 //! the r2c engine.
 //!
+//! A final table prices the overload-control ingress: one
+//! submit→recv round trip through the bounded admission queue
+//! (`server::admission`) at 0/50/90% standing occupancy, so the
+//! serving stack's per-request queue overhead is tracked by the same
+//! baseline gate as the math kernels.
+//!
 //! Emits `BENCH_backend_matrix.json` (median + p90 ns/op per cell) so
 //! the perf trajectory — and the calibrated crossovers quoted in the
 //! README — are tracked across PRs.  `SKI_TNN_BENCH_QUICK=1` shrinks
@@ -24,11 +30,12 @@
 //! Run: `cargo bench --bench backend_matrix [-- --sizes 512,1024,4096,8192 --batch 8 --threads 1,2,4]`
 
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use ski_tnn::dsp::{Complex, FftPlan, RealFftPlan};
 use ski_tnn::plan::{plan_shape, PlanCache, ShapeKey};
 use ski_tnn::runtime::ThreadPool;
+use ski_tnn::server::{admission_queue, Admissible, AdmissionPolicy, ServeError, TryRecv};
 use ski_tnn::toeplitz::{
     apply_batch_flat_sharded, apply_batch_sharded, build_op, gaussian_kernel, BackendKind,
     Dispatch, DispatchQuery, FftOp, ToeplitzKernel, ToeplitzOp,
@@ -60,6 +67,20 @@ fn planned_op(
     };
     let plan = plan_shape(key, dispatch, kind, |k| Arc::from(build_op(kernel, k, r, w)));
     Arc::clone(plan.op())
+}
+
+/// Minimal [`Admissible`] request for pricing the admission queue in
+/// isolation: a deadline stamp and a no-op rejection sink.
+struct Ping {
+    deadline: Option<Instant>,
+}
+
+impl Admissible for Ping {
+    fn deadline(&self) -> Option<Instant> {
+        self.deadline
+    }
+
+    fn reject(self, _err: ServeError) {}
 }
 
 fn rel_err(got: &[f32], want: &[f32]) -> f64 {
@@ -522,6 +543,58 @@ fn main() {
         }
     }
     ot.print();
+
+    // ---- admission queue: serving-stack ingress overhead ----
+    // The overload-control layer (`server::admission`) fronts every
+    // batcher tick; this table prices one submit→recv round trip
+    // through the bounded queue at three standing depths — idle, half
+    // full, and near capacity (the `PRESSURE_DOWNSHIFT` regime) —
+    // under the soak default policy.  Each timed pair pushes one item
+    // and pops one, so depth is held constant across iterations and
+    // the medians isolate queue transit cost: the shed/expiry paths
+    // only engage at capacity and never fire here.
+    let cap = 64usize;
+    let policy = AdmissionPolicy::ShedExpiredFirst;
+    let budget = Duration::from_millis(250);
+    let mut at = Table::new(
+        &format!("admission queue: submit→recv round trip (cap = {cap}, {})", policy.name()),
+        &["pressure", "depth", "median", "p90", "gauge"],
+    );
+    for &pct in &[0usize, 50, 90] {
+        let (tx, rx) = admission_queue::<Ping>(cap, policy, Some(budget));
+        let depth = cap * pct / 100;
+        for _ in 0..depth {
+            tx.submit(Ping { deadline: Some(Instant::now() + budget) })
+                .expect("prefill submit on a live queue");
+        }
+        let s = bench.run(|| {
+            tx.submit(Ping { deadline: Some(Instant::now() + budget) })
+                .expect("bench submit on a live queue");
+            match rx.try_recv() {
+                TryRecv::Item(p) => {
+                    std::hint::black_box(&p);
+                }
+                _ => unreachable!("queue is never empty right after a submit"),
+            }
+        });
+        at.row(&[
+            format!("{pct}%"),
+            depth.to_string(),
+            fmt_secs(s.p50_s),
+            fmt_secs(s.p90_s),
+            format!("{:.2}", rx.pressure()),
+        ]);
+        rows.push(Json::obj(vec![
+            ("mode", Json::str("admission")),
+            ("policy", Json::str(policy.name())),
+            ("cap", Json::num(cap as f64)),
+            ("pressure_pct", Json::num(pct as f64)),
+            ("threads", Json::num(1.0)),
+            ("med_ns", Json::num(1e9 * s.p50_s)),
+            ("p90_ns", Json::num(1e9 * s.p90_s)),
+        ]));
+    }
+    at.print();
 
     // Every spectral cell above ran even-length transforms and the
     // odd sweep ran the chirp-z real path, so both fast-path flavours

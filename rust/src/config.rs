@@ -68,6 +68,17 @@ pub struct RunConfig {
     /// (atomic-rename writes; a final snapshot lands on shutdown).
     /// Setting it implies `telemetry = true`.  CLI `--stats-json`.
     pub stats_json: Option<PathBuf>,
+    /// Per-request deadline for `serve`/`generate`/`soak` in
+    /// milliseconds: requests still queued past this budget are
+    /// answered with a typed `DeadlineExceeded` error instead of being
+    /// executed late.  `None` = no deadline.  JSON `"deadline_ms"` or
+    /// CLI `--deadline-ms 250`.
+    pub deadline_ms: Option<u64>,
+    /// Admission policy for the serving queues
+    /// (`block|shed-newest|shed-expired-first`, see
+    /// `server::AdmissionPolicy`).  `None` keeps the default
+    /// (`block`).  JSON `"admission"` or CLI `--admission shed-newest`.
+    pub admission: Option<String>,
 }
 
 impl Default for RunConfig {
@@ -90,6 +101,8 @@ impl Default for RunConfig {
             buckets: Vec::new(),
             telemetry: false,
             stats_json: None,
+            deadline_ms: None,
+            admission: None,
         }
     }
 }
@@ -135,6 +148,19 @@ impl RunConfig {
                 }
                 "stats_json" => {
                     self.stats_json = Some(val.as_str().context("stats_json")?.into());
+                }
+                "deadline_ms" => {
+                    self.deadline_ms = Some(val.as_usize().context("deadline_ms")? as u64);
+                }
+                "admission" => {
+                    let s = val.as_str().context("admission")?;
+                    crate::server::AdmissionPolicy::parse(s).ok_or_else(|| {
+                        anyhow!(
+                            "unknown admission policy {s:?} \
+                             (block|shed-newest|shed-expired-first)"
+                        )
+                    })?;
+                    self.admission = Some(s.to_string());
                 }
                 other => return Err(anyhow!("unknown run-config key {other:?}")),
             }
@@ -203,6 +229,28 @@ impl RunConfig {
         if let Some(v) = a.get("stats-json") {
             self.stats_json = Some(v.into());
         }
+        if let Some(v) = a.get("deadline-ms") {
+            self.deadline_ms = v.parse().ok().or(self.deadline_ms);
+        }
+        if let Some(v) = a.get("admission") {
+            self.admission = Some(v.to_string());
+        }
+    }
+
+    /// Parsed admission policy (default [`AdmissionPolicy::Block`]);
+    /// errors on an unrecognised CLI value.
+    pub fn admission_policy(&self) -> Result<crate::server::AdmissionPolicy> {
+        match self.admission.as_deref() {
+            None => Ok(crate::server::AdmissionPolicy::default()),
+            Some(s) => crate::server::AdmissionPolicy::parse(s).ok_or_else(|| {
+                anyhow!("unknown admission policy {s:?} (block|shed-newest|shed-expired-first)")
+            }),
+        }
+    }
+
+    /// Per-request deadline as a [`Duration`](std::time::Duration).
+    pub fn deadline(&self) -> Option<std::time::Duration> {
+        self.deadline_ms.map(std::time::Duration::from_millis)
     }
 
     /// Resolve from CLI: defaults ← `--config-file` ← flags.
@@ -303,6 +351,44 @@ mod tests {
         let args = Args::parse_from(["--telemetry".to_string(), "off".to_string()], false);
         rc.apply_args(&args);
         assert!(!rc.telemetry, "--telemetry off stays disabled");
+    }
+
+    #[test]
+    fn admission_and_deadline_parsed_and_validated() {
+        let mut rc = RunConfig::default();
+        assert!(rc.deadline_ms.is_none() && rc.admission.is_none());
+        assert_eq!(
+            rc.admission_policy().unwrap(),
+            crate::server::AdmissionPolicy::Block,
+            "default policy is block"
+        );
+        let j = json::parse(r#"{"deadline_ms": 250, "admission": "shed-newest"}"#).unwrap();
+        rc.apply_json(&j).unwrap();
+        assert_eq!(rc.deadline_ms, Some(250));
+        assert_eq!(rc.deadline(), Some(std::time::Duration::from_millis(250)));
+        assert_eq!(rc.admission_policy().unwrap(), crate::server::AdmissionPolicy::ShedNewest);
+        let bad = json::parse(r#"{"admission": "drop-everything"}"#).unwrap();
+        assert!(rc.apply_json(&bad).is_err(), "unknown policy must be rejected");
+
+        let args = Args::parse_from(
+            [
+                "--deadline-ms".to_string(),
+                "40".to_string(),
+                "--admission".to_string(),
+                "shed-expired-first".to_string(),
+            ],
+            false,
+        );
+        rc.apply_args(&args);
+        assert_eq!(rc.deadline_ms, Some(40), "CLI overrides JSON");
+        assert_eq!(
+            rc.admission_policy().unwrap(),
+            crate::server::AdmissionPolicy::ShedExpiredFirst
+        );
+
+        let args = Args::parse_from(["--admission".to_string(), "bogus".to_string()], false);
+        rc.apply_args(&args);
+        assert!(rc.admission_policy().is_err(), "bad CLI policy surfaces at resolve time");
     }
 
     #[test]

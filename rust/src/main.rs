@@ -23,6 +23,12 @@
 //! * `stats` — pretty-print a telemetry stats snapshot written by
 //!   `--stats-json` (latency percentiles, counters/gauges, dispatch
 //!   audit); `--check` applies the CI completeness gate first.
+//! * `soak` — deterministic chaos soak: overload the substrate batcher
+//!   with a burst far beyond capacity while seeded fault injection
+//!   (`SKI_TNN_CHAOS` / `--chaos-seed`) fails executors and stalls
+//!   ticks, then hard-verify the exactly-one-response contract and the
+//!   admission-ledger balance, writing a machine-readable verdict
+//!   (CI's `robustness-soak` job gates on it).
 //!
 //! Shared flags come from [`ski_tnn::config::RunConfig`]
 //! (`--config-file run.json` plus per-flag overrides).  Examples:
@@ -35,7 +41,15 @@
 //! ski-tnn serve --backend auto --n 4096 --requests 500   # artifact-free substrate serving
 //! ski-tnn generate --prompt "ski to go " --tokens 120 --temperature 0.8
 //! ski-tnn generate --sessions 8 --requests 64 --tokens 96 --slots 8
+//! ski-tnn soak --requests 400 --clients 8 --queue-depth 32 --chaos-seed 1337
 //! ```
+//!
+//! Overload control (`serve`, `generate`, `soak`): `--admission
+//! block|shed-newest|shed-expired-first` picks the admission policy of
+//! the bounded request queue and `--deadline-ms N` answers requests
+//! still queued past the budget with a typed `DeadlineExceeded` error
+//! instead of executing them late (see README "Overload &
+//! robustness").
 //!
 //! `--backend auto|dense|fft|ski|freq` selects the Toeplitz operator
 //! backend (`toeplitz::ToeplitzOp`): `serve` runs it behind the
@@ -74,15 +88,17 @@ fn main() -> Result<()> {
         Some("plan") => cmd_plan(&args),
         Some("bench-check") => cmd_bench_check(&args),
         Some("stats") => cmd_stats(&args),
+        Some("soak") => cmd_soak(&args),
         Some(other) => {
             bail!(
                 "unknown subcommand {other:?} \
-                 (try list|train|eval|serve|generate|plan|bench-check|stats)"
+                 (try list|train|eval|serve|generate|plan|bench-check|stats|soak)"
             )
         }
         None => {
             eprintln!(
-                "usage: ski-tnn <list|train|eval|serve|generate|plan|bench-check|stats> [flags]"
+                "usage: ski-tnn <list|train|eval|serve|generate|plan|bench-check|stats|soak> \
+                 [flags]"
             );
             eprintln!("see `cargo doc` or README.md for the full flag set");
             Ok(())
@@ -186,7 +202,10 @@ where
                 for _ in 0..per_client {
                     let len = 8 + rng.below(n - 8);
                     let ids: Vec<i32> = (0..len).map(|_| rng.below(256) as i32).collect();
-                    let _ = h.infer(ids).expect("infer");
+                    // Typed overload/deadline answers are expected
+                    // under burst load; the admission line below
+                    // accounts for every one of them.
+                    let _ = h.infer(ids);
                 }
             })
         })
@@ -214,6 +233,13 @@ where
         1e3 * p99,
         100.0 * stats.exec_seconds / total
     );
+    let adm = stats.admission;
+    if adm.shed + adm.expired + adm.retries > 0 {
+        println!(
+            "admission: {} submitted, {} shed, {} expired, {} retries (peak queue depth {})",
+            adm.submitted, adm.shed, adm.expired, adm.retries, adm.peak_depth
+        );
+    }
     Ok(())
 }
 
@@ -247,6 +273,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         queue_depth: args.usize_or("queue-depth", 64),
         // The AOT artifact's batch shape is baked in — no buckets.
         buckets: Vec::new(),
+        policy: rc.admission_policy()?,
+        deadline: rc.deadline(),
     };
     println!(
         "serving {} (batch {}, n {}) with {clients} clients × {} requests",
@@ -276,12 +304,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
 /// turns on length-bucketed batching: mixed-length request streams
 /// batch within buckets, each with a right-sized per-width operator.
 fn cmd_serve_substrate(args: &Args, backend: &str) -> Result<()> {
-    use ski_tnn::runtime::{resolve_threads, ThreadPool};
-    use ski_tnn::server::{audit_exec, serve_toeplitz_factory, serve_toeplitz_on};
-    use ski_tnn::toeplitz::{
-        build_op, gaussian_kernel, BackendKind, Dispatch, DispatchQuery, ToeplitzKernel,
-        ToeplitzOp,
-    };
+    use ski_tnn::runtime::resolve_threads;
+    use ski_tnn::toeplitz::BackendKind;
 
     let n = args.usize_or("n", 256);
     anyhow::ensure!(n >= 16, "--n must be at least 16, got {n}");
@@ -303,18 +327,67 @@ fn cmd_serve_substrate(args: &Args, backend: &str) -> Result<()> {
         max_wait: std::time::Duration::from_millis(args.u64_or("max-wait-ms", 2)),
         queue_depth: args.usize_or("queue-depth", 64),
         buckets: rc.buckets.clone(),
+        policy: rc.admission_policy()?,
+        deadline: rc.deadline(),
     };
-    let dispatch = Dispatch::default();
     let max_batch = server_cfg.max_batch;
-    // Per-width backend choice: `plan` decides backend AND whether
-    // sharding pays at that shape; for a forced backend the same model
-    // still gates the sharding (tiny shapes run serially instead of
-    // paying shard overhead).
+    let widths = server_cfg.bucket_widths();
+    let batcher = Batcher::new(server_cfg);
+    let (kind, pool_threads, exec) = substrate_exec(&batcher, requested, r, w, threads, false);
+    let seed = args.u64_or("seed", 0);
+    let per_client = (requests / clients).max(1);
+    if widths.len() > 1 {
+        println!(
+            "serving substrate backend {} (requested {requested:?}), n={n}, length buckets \
+             {widths:?}, batch {max_batch} sharded over {pool_threads} threads",
+            kind.name()
+        );
+    } else {
+        println!(
+            "serving substrate backend {} (requested {requested:?} → dispatched), n={n}, \
+             batch {max_batch} sharded over {pool_threads} threads",
+            kind.name()
+        );
+    }
+    run_synthetic_load(batcher, exec, clients, per_client, n, seed, max_batch)
+}
+
+/// The substrate executor both `serve --backend …` and `soak` run:
+/// pressure-adaptive per-tick backend replanning through the batcher's
+/// [`PressureGauge`](ski_tnn::server::PressureGauge), per-`(width,
+/// rung)` plan caching, optional chaos fault injection, and the
+/// telemetry dispatch audit.  Returns the unpressured plan for `n`
+/// (backend kind + pool threads) alongside the executor, for the
+/// startup banner.
+fn substrate_exec(
+    batcher: &Batcher,
+    requested: ski_tnn::toeplitz::BackendKind,
+    r: usize,
+    w: usize,
+    threads: usize,
+    chaos: bool,
+) -> (ski_tnn::toeplitz::BackendKind, usize, impl FnMut(&HostTensor) -> Result<RowBatch>) {
+    use ski_tnn::runtime::ThreadPool;
+    use ski_tnn::server::{audit_exec, serve_toeplitz_pressured, PressureGauge};
+    use ski_tnn::toeplitz::{
+        build_op, gaussian_kernel, BackendKind, Dispatch, DispatchQuery, ToeplitzKernel,
+        ToeplitzOp,
+    };
+
+    let n = batcher.cfg.n;
+    let max_batch = batcher.cfg.max_batch;
+    let dispatch = Dispatch::default();
     // SKI rank scales with the bucket width (same r/n ratio at every
     // width) — one definition shared by the dispatch query and the
     // operator build so the two can never diverge.
     let rank_for = move |width: usize| (width * r / n.max(1)).max(2);
-    let plan_for = move |width: usize| -> (BackendKind, bool) {
+    // Per-width backend choice at a given pressure reading: `plan`
+    // decides backend AND whether sharding pays at that shape; past
+    // `PRESSURE_DOWNSHIFT` the auto path degrades fft → SKI one cost
+    // rung.  A forced backend never downshifts, but the cost model
+    // still gates its sharding (tiny shapes run serially instead of
+    // paying shard overhead).
+    let plan_at = move |width: usize, pressure: f64| -> (BackendKind, bool) {
         let query = DispatchQuery {
             n: width,
             r: rank_for(width),
@@ -324,67 +397,34 @@ fn cmd_serve_substrate(args: &Args, backend: &str) -> Result<()> {
             threads,
         };
         match requested {
-            BackendKind::Auto => dispatch.plan(&query),
+            BackendKind::Auto => dispatch.plan_pressured(&query, pressure),
             k => {
                 let q = DispatchQuery { causal: k == BackendKind::Freq, ..query };
                 (k, dispatch.should_shard(k, &q))
             }
         }
     };
-    let make_op = move |width: usize| -> std::sync::Arc<dyn ToeplitzOp> {
-        let (kind, _) = plan_for(width);
+    let make = move |width: usize, kind: BackendKind| -> std::sync::Arc<dyn ToeplitzOp> {
         let kernel =
             ToeplitzKernel::from_fn(width, |lag| gaussian_kernel(lag as f64, width as f64 / 8.0));
         let kernel = if kind == BackendKind::Freq { kernel.causal() } else { kernel };
         std::sync::Arc::from(build_op(&kernel, kind, rank_for(width), w))
     };
-    let widths = server_cfg.bucket_widths();
-    let (kind, parallelize) = plan_for(n);
+    let (kind, parallelize) = plan_at(n, 0.0);
     let pool_threads = if parallelize { threads } else { 1 };
     let pool = std::sync::Arc::new(ThreadPool::new(pool_threads));
-    let batcher = Batcher::new(server_cfg);
-    let seed = args.u64_or("seed", 0);
-    let per_client = (requests / clients).max(1);
-    if widths.len() > 1 {
-        println!(
-            "serving substrate backend {} (requested {requested:?}), n={n}, length buckets \
-             {widths:?}, batch {max_batch} sharded over {pool_threads} threads",
-            kind.name()
-        );
-        run_synthetic_load(
-            batcher,
-            audit_exec(
-                serve_toeplitz_factory(make_op, pool),
-                dispatch,
-                plan_for,
-                rank_for,
-                w,
-                threads,
-            ),
-            clients,
-            per_client,
-            n,
-            seed,
-            max_batch,
-        )
+    // Live replanning: the batcher publishes queue pressure on every
+    // gather; each tick re-reads it through the gauge.
+    let gauge = batcher.pressure();
+    let pressured = move |g: PressureGauge| move |width: usize| plan_at(width, g.get());
+    let base = serve_toeplitz_pressured(make, pressured(gauge.clone()), pool);
+    let base: Box<dyn FnMut(&HostTensor) -> Result<RowBatch>> = if chaos {
+        Box::new(ski_tnn::server::chaos::chaos_exec(base))
     } else {
-        let op = make_op(n);
-        println!(
-            "serving substrate backend {} (requested {requested:?} → dispatched), n={n}, \
-             ~{:.0} flops/apply, batch {max_batch} sharded over {pool_threads} threads",
-            op.name(),
-            op.flops_estimate()
-        );
-        run_synthetic_load(
-            batcher,
-            audit_exec(serve_toeplitz_on(op, pool), dispatch, plan_for, rank_for, w, threads),
-            clients,
-            per_client,
-            n,
-            seed,
-            max_batch,
-        )
-    }
+        Box::new(base)
+    };
+    let exec = audit_exec(base, dispatch, pressured(gauge.clone()), rank_for, w, threads, gauge);
+    (kind, pool_threads, exec)
 }
 
 /// Explain the execution plan for a shape without serving traffic:
@@ -526,6 +566,8 @@ fn cmd_generate(args: &Args) -> Result<()> {
     // the CLI flag precedence).
     let rc = RunConfig::from_args(args)?;
     let _stats_writer = telemetry_setup(&rc);
+    let policy = rc.admission_policy()?;
+    let deadline = rc.deadline();
     let backend_flag = rc.backend.unwrap_or_else(|| "auto".to_string());
     let oracle_backend = BackendKind::parse(&backend_flag)
         .ok_or_else(|| anyhow::anyhow!("unknown backend {backend_flag:?} (auto|dense|fft|ski|freq)"))?;
@@ -583,6 +625,8 @@ fn cmd_generate(args: &Args) -> Result<()> {
         queue_depth: args.usize_or("queue-depth", 64),
         max_new_cap: args.usize_or("max-new-cap", 512),
         threads: rc.threads,
+        policy,
+        deadline,
     });
     let handle = sched.handle();
     let sessions = args.usize_or("sessions", 1);
@@ -619,7 +663,9 @@ fn cmd_generate(args: &Args) -> Result<()> {
                     let len = 4 + rng.below(28);
                     let prompt: Vec<i32> = (0..len).map(|_| rng.below(256) as i32).collect();
                     let p = GenParams { seed: rng.next_u64(), ..params };
-                    let _ = h.generate(prompt, p).expect("generate");
+                    // Typed overload/deadline answers are expected
+                    // when shedding is configured.
+                    let _ = h.generate(prompt, p);
                 }
             })
         })
@@ -647,6 +693,284 @@ fn cmd_generate(args: &Args) -> Result<()> {
         1e3 * p50,
         1e3 * p95,
         1e3 * p99
+    );
+    let adm = stats.admission;
+    if adm.shed + adm.expired + adm.retries > 0 {
+        println!(
+            "admission: {} submitted, {} shed, {} expired, {} retries (peak queue depth {})",
+            adm.submitted, adm.shed, adm.expired, adm.retries, adm.peak_depth
+        );
+    }
+    Ok(())
+}
+
+/// Deterministic chaos soak (CI's `robustness-soak` hard gate): burst
+/// the substrate batcher far past capacity with seeded fault injection
+/// armed, then verify the two serving invariants the overload layer
+/// promises — every accepted request is answered exactly once (no
+/// losses, no doubles), and the admission ledger balances exactly
+/// (`submitted == admitted + shed`, `admitted == completed +
+/// expired`).  Half the clients fire non-blocking bursts
+/// (`try_submit`), half go through the jittered retry path, so both
+/// client disciplines are exercised in one run.  The verdict is
+/// written as JSON (`--out`, default `CHAOS_soak.json`) and the
+/// process exits non-zero on any violation.
+fn cmd_soak(args: &Args) -> Result<()> {
+    use std::time::Duration;
+
+    use ski_tnn::runtime::resolve_threads;
+    use ski_tnn::server::chaos::{self, ChaosConfig};
+    use ski_tnn::server::{AdmissionPolicy, RetryPolicy, ServeError, SubmitError};
+    use ski_tnn::toeplitz::BackendKind;
+    use ski_tnn::util::json::{self, Json};
+
+    #[derive(Debug, Default)]
+    struct Tally {
+        accepted: u64,
+        rejected_fast: u64,
+        responses: u64,
+        ok: u64,
+        overloaded: u64,
+        deadline_exceeded: u64,
+        exec_failed: u64,
+        lost: u64,
+        double_answered: u64,
+        retry_ok: u64,
+        retry_gave_up: u64,
+    }
+
+    impl Tally {
+        fn merge(&mut self, o: &Tally) {
+            self.accepted += o.accepted;
+            self.rejected_fast += o.rejected_fast;
+            self.responses += o.responses;
+            self.ok += o.ok;
+            self.overloaded += o.overloaded;
+            self.deadline_exceeded += o.deadline_exceeded;
+            self.exec_failed += o.exec_failed;
+            self.lost += o.lost;
+            self.double_answered += o.double_answered;
+            self.retry_ok += o.retry_ok;
+            self.retry_gave_up += o.retry_gave_up;
+        }
+    }
+
+    let rc = RunConfig::from_args(args)?;
+    let _stats_writer = telemetry_setup(&rc);
+    let n = args.usize_or("n", 256);
+    anyhow::ensure!(n >= 16, "--n must be at least 16, got {n}");
+    let requests = args.usize_or("requests", 400);
+    let clients = args.usize_or("clients", 8).max(2);
+    let queue_depth = args.usize_or("queue-depth", 32);
+    let seed = args.u64_or("seed", 0);
+    let out = args.str_or("out", "CHAOS_soak.json");
+    let r = args.usize_or("rank", (n / 16).max(2));
+    let w = args.usize_or("band", 9);
+    // Shed under pressure by default — a purely blocking soak would
+    // never reach the overload paths this command exists to verify.
+    // Explicit `--admission` / `--deadline-ms` still win.
+    let policy = if rc.admission.is_some() {
+        rc.admission_policy()?
+    } else {
+        AdmissionPolicy::ShedExpiredFirst
+    };
+    let deadline = rc.deadline().or(Some(Duration::from_millis(250)));
+    // Arm fault injection: `--chaos-seed` wins, else the
+    // `SKI_TNN_CHAOS` env already parsed by the chaos module.
+    if let Some(s) = args.get("chaos-seed") {
+        chaos::install(ChaosConfig::from_seed(s.parse().unwrap_or(1)));
+    }
+    let armed = chaos::enabled();
+    let threads = resolve_threads(rc.threads);
+    let backend_flag = rc.backend.clone().unwrap_or_else(|| "auto".to_string());
+    let requested = BackendKind::parse(&backend_flag).ok_or_else(|| {
+        anyhow::anyhow!("unknown backend {backend_flag:?} (auto|dense|fft|ski|freq)")
+    })?;
+
+    let server_cfg = ServerConfig {
+        max_batch: args.usize_or("max-batch", 8),
+        n,
+        max_wait: std::time::Duration::from_millis(args.u64_or("max-wait-ms", 2)),
+        queue_depth,
+        buckets: rc.buckets.clone(),
+        policy,
+        deadline,
+    };
+    let batcher = Batcher::new(server_cfg);
+    let (kind, pool_threads, exec) = substrate_exec(&batcher, requested, r, w, threads, true);
+
+    let burst_clients = (clients / 2).max(1);
+    let retry_clients = clients - burst_clients;
+    let per_client = (requests / clients).max(1);
+    println!(
+        "soak: backend {} over {pool_threads} threads, {burst_clients} burst + {retry_clients} \
+         retry clients × {per_client} requests, queue {queue_depth} ({}), deadline {:?}, chaos {}",
+        kind.name(),
+        policy.name(),
+        deadline,
+        if armed { "armed" } else { "off" },
+    );
+
+    let handle = batcher.handle();
+    let mut workers = Vec::new();
+    // Burst clients: submit the whole allotment without waiting (each
+    // response channel holds its one slot), then drain — 10×-capacity
+    // pressure plus a per-receiver exactly-once check.  Even-numbered
+    // clients use the blocking-admission `submit` (a shed policy
+    // answers the overflow with typed `Overloaded`), odd-numbered ones
+    // the non-blocking `try_submit` (overflow rejected client-side as
+    // `QueueFull`) — both disciplines hammer the same queue.
+    for c in 0..burst_clients {
+        let h = handle.clone();
+        workers.push(std::thread::spawn(move || {
+            let mut rng = ski_tnn::util::rng::Rng::new(seed ^ (0x9e37 + c as u64));
+            let mut t = Tally::default();
+            let mut pending = Vec::new();
+            for _ in 0..per_client {
+                let len = 8 + rng.below(n - 8);
+                let ids: Vec<i32> = (0..len).map(|_| rng.below(256) as i32).collect();
+                let submitted = if c % 2 == 0 {
+                    h.submit(ids)
+                } else {
+                    h.try_submit(ids)
+                };
+                match submitted {
+                    Ok(rx) => {
+                        t.accepted += 1;
+                        pending.push(rx);
+                    }
+                    Err(SubmitError::QueueFull) | Err(SubmitError::Stopped) => {
+                        t.rejected_fast += 1;
+                    }
+                }
+            }
+            for rx in pending {
+                match rx.recv_timeout(Duration::from_secs(30)) {
+                    Ok(resp) => {
+                        t.responses += 1;
+                        match resp.error {
+                            None => t.ok += 1,
+                            Some(ServeError::Overloaded) => t.overloaded += 1,
+                            Some(ServeError::DeadlineExceeded) => t.deadline_exceeded += 1,
+                            Some(ServeError::Exec(_)) => t.exec_failed += 1,
+                        }
+                        if rx.try_recv().is_ok() {
+                            t.double_answered += 1;
+                        }
+                    }
+                    Err(_) => t.lost += 1,
+                }
+            }
+            t
+        }));
+    }
+    // Retry clients: the jittered-backoff discipline a well-behaved
+    // caller uses; retryable typed answers get re-attempted within the
+    // budget.
+    for c in 0..retry_clients {
+        let h = handle.clone();
+        workers.push(std::thread::spawn(move || {
+            let mut rng = ski_tnn::util::rng::Rng::new(seed ^ (0x51ab + c as u64));
+            let retry = RetryPolicy { seed: seed ^ (c as u64 + 1), ..RetryPolicy::default() };
+            let mut t = Tally::default();
+            for _ in 0..per_client {
+                let len = 8 + rng.below(n - 8);
+                let ids: Vec<i32> = (0..len).map(|_| rng.below(256) as i32).collect();
+                match h.infer_with_retry(ids, &retry) {
+                    Ok(_) => t.retry_ok += 1,
+                    Err(_) => t.retry_gave_up += 1,
+                }
+            }
+            t
+        }));
+    }
+    drop(handle);
+
+    let stats = batcher.run(exec)?;
+    let mut tally = Tally::default();
+    for worker in workers {
+        tally.merge(&worker.join().expect("soak client thread"));
+    }
+
+    let adm = stats.admission;
+    let counts = chaos::counts();
+    let balanced = adm.balanced();
+    let exactly_once =
+        tally.lost == 0 && tally.double_answered == 0 && tally.responses == tally.accepted;
+    let pass = balanced && exactly_once;
+    let verdict = Json::obj(vec![
+        (
+            "chaos",
+            Json::obj(vec![
+                ("armed", Json::Bool(armed)),
+                ("exec_failures", Json::num(counts.exec_failures as f64)),
+                ("stalls", Json::num(counts.stalls as f64)),
+                ("poisoned", Json::num(counts.poisoned as f64)),
+            ]),
+        ),
+        (
+            "admission",
+            Json::obj(vec![
+                ("policy", Json::str(policy.name())),
+                ("queue_depth", Json::num(queue_depth as f64)),
+                ("submitted", Json::num(adm.submitted as f64)),
+                ("admitted", Json::num(adm.admitted as f64)),
+                ("shed", Json::num(adm.shed as f64)),
+                ("expired", Json::num(adm.expired as f64)),
+                ("completed", Json::num(adm.completed as f64)),
+                ("retries", Json::num(adm.retries as f64)),
+                ("peak_depth", Json::num(adm.peak_depth as f64)),
+            ]),
+        ),
+        (
+            "client",
+            Json::obj(vec![
+                ("accepted", Json::num(tally.accepted as f64)),
+                ("rejected_fast", Json::num(tally.rejected_fast as f64)),
+                ("responses", Json::num(tally.responses as f64)),
+                ("ok", Json::num(tally.ok as f64)),
+                ("overloaded", Json::num(tally.overloaded as f64)),
+                ("deadline_exceeded", Json::num(tally.deadline_exceeded as f64)),
+                ("exec_failed", Json::num(tally.exec_failed as f64)),
+                ("lost", Json::num(tally.lost as f64)),
+                ("double_answered", Json::num(tally.double_answered as f64)),
+                ("retry_ok", Json::num(tally.retry_ok as f64)),
+                ("retry_gave_up", Json::num(tally.retry_gave_up as f64)),
+            ]),
+        ),
+        ("balanced", Json::Bool(balanced)),
+        ("exactly_once", Json::Bool(exactly_once)),
+        ("pass", Json::Bool(pass)),
+    ]);
+    std::fs::write(&out, json::write(&verdict))?;
+    println!(
+        "soak verdict → {out}: {} ({} admitted, {} shed, {} expired; {} injected failures, {} \
+         stalls)",
+        if pass { "PASS" } else { "FAIL" },
+        adm.admitted,
+        adm.shed,
+        adm.expired,
+        counts.exec_failures,
+        counts.stalls
+    );
+    anyhow::ensure!(
+        balanced,
+        "admission ledger unbalanced: {} submitted != {} admitted + {} shed, or {} admitted != \
+         {} completed + {} expired",
+        adm.submitted,
+        adm.admitted,
+        adm.shed,
+        adm.admitted,
+        adm.completed,
+        adm.expired
+    );
+    anyhow::ensure!(
+        exactly_once,
+        "exactly-one-response violated: {} accepted, {} responses, {} lost, {} double-answered",
+        tally.accepted,
+        tally.responses,
+        tally.lost,
+        tally.double_answered
     );
     Ok(())
 }

@@ -1,0 +1,811 @@
+//! Bounded admission control for the serving stack.
+//!
+//! Both serve loops ([`super::Batcher`] and [`super::GenScheduler`])
+//! used to accept work on std mpsc channels: bounded, but with no
+//! deadline awareness and only one overflow behaviour (block).  Under
+//! sustained overload the queue-wait histogram just recorded the
+//! collapse.  This module replaces the channel with an explicit
+//! admission queue that owns the overload policy:
+//!
+//! * **Capacity** is a hard bound — `peak_depth` never exceeds it, so
+//!   overload cannot become unbounded memory.
+//! * **Policy** picks what happens when the bound is hit:
+//!   [`AdmissionPolicy::Block`] reproduces the old backpressure,
+//!   [`AdmissionPolicy::ShedNewest`] answers the incoming request with
+//!   a typed [`ServeError::Overloaded`], and
+//!   [`AdmissionPolicy::ShedExpiredFirst`] first evicts queued
+//!   requests whose deadline already passed (answering each with
+//!   [`ServeError::DeadlineExceeded`]) before shedding the newcomer.
+//! * **Deadlines** ride each request ([`Admissible::deadline`]).  An
+//!   expired request is *answered*, never silently dropped — the
+//!   exactly-one-response contract `tests/overload.rs` enforces.
+//! * **Accounting** is exact: the always-on [`AdmissionLedger`]
+//!   satisfies `submitted == admitted + shed` and
+//!   `admitted == completed + expired` at quiescence, which is what
+//!   the chaos soak gate balances in CI.  The same counts mirror into
+//!   the telemetry registry (`server.admission.*`) when it is enabled.
+//!
+//! The [`PressureGauge`] folds queue occupancy and deadline headroom
+//! into one [0, 1] scalar the dispatcher uses to walk the backend cost
+//! ladder *down* (fft → SKI) and the batcher uses to shrink its gather
+//! window — graceful degradation instead of collapse.
+
+use std::collections::VecDeque;
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, PoisonError};
+use std::time::{Duration, Instant};
+
+use crate::telemetry::{LazyCounter, LazyGauge};
+use crate::util::rng::Rng;
+
+/// `server.admission.admitted` — requests that entered the queue
+/// (including ones later answered as expired).
+static ADMITTED: LazyCounter = LazyCounter::new("server.admission.admitted");
+/// `server.admission.shed` — requests answered `Overloaded` at the
+/// gate without ever being queued.
+static SHED: LazyCounter = LazyCounter::new("server.admission.shed");
+/// `server.admission.expired` — admitted requests answered
+/// `DeadlineExceeded` before execution.
+static EXPIRED: LazyCounter = LazyCounter::new("server.admission.expired");
+/// `server.admission.retries` — client-side re-submissions after an
+/// overload answer (see [`RetryPolicy`]).
+static RETRIES: LazyCounter = LazyCounter::new("server.admission.retries");
+/// `server.pressure` — the most recent [`PressureGauge`] publication.
+pub static SERVER_PRESSURE: LazyGauge = LazyGauge::new("server.pressure");
+
+/// Typed serve-path error carried in `Response::error` /
+/// `GenResponse::error` — the load-control outcomes are first-class
+/// values clients can match on, not string prefixes.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeError {
+    /// Shed at the admission gate: the queue was full and the policy
+    /// chose this request.  Retryable by definition.
+    Overloaded,
+    /// The request's deadline passed before its batch executed.
+    DeadlineExceeded,
+    /// The executor (or decode session) failed; the message is the
+    /// underlying error chain.
+    Exec(String),
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServeError::Overloaded => write!(f, "overloaded: shed by admission control"),
+            ServeError::DeadlineExceeded => write!(f, "deadline exceeded before execution"),
+            ServeError::Exec(msg) => f.write_str(msg),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+impl ServeError {
+    /// Overload outcomes are worth re-submitting; executor failures
+    /// are not — the same batch would fail again.
+    pub fn retryable(&self) -> bool {
+        matches!(self, ServeError::Overloaded | ServeError::DeadlineExceeded)
+    }
+}
+
+/// Typed submit failure from the non-blocking client paths.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The queue is at capacity right now (backpressure; retryable).
+    QueueFull,
+    /// The serve loop is gone — no retry will ever succeed.
+    Stopped,
+}
+
+impl fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SubmitError::QueueFull => write!(f, "queue full"),
+            SubmitError::Stopped => write!(f, "server stopped"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// What a full queue does to a blocking submit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum AdmissionPolicy {
+    /// Wait for a slot (the pre-admission-control behaviour).
+    #[default]
+    Block,
+    /// Answer the incoming request with [`ServeError::Overloaded`].
+    ShedNewest,
+    /// Evict already-expired queued requests first (each answered with
+    /// [`ServeError::DeadlineExceeded`]); shed the newcomer only if
+    /// nothing in the queue had expired.
+    ShedExpiredFirst,
+}
+
+impl AdmissionPolicy {
+    /// Parse the CLI/config spelling (`block | shed-newest |
+    /// shed-expired-first`).
+    pub fn parse(s: &str) -> Option<AdmissionPolicy> {
+        match s {
+            "block" => Some(AdmissionPolicy::Block),
+            "shed-newest" => Some(AdmissionPolicy::ShedNewest),
+            "shed-expired-first" => Some(AdmissionPolicy::ShedExpiredFirst),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            AdmissionPolicy::Block => "block",
+            AdmissionPolicy::ShedNewest => "shed-newest",
+            AdmissionPolicy::ShedExpiredFirst => "shed-expired-first",
+        }
+    }
+}
+
+/// A queueable request: carries an optional absolute deadline and
+/// knows how to answer itself with a typed error — rejection consumes
+/// the request, so every path out of the queue produces exactly one
+/// response.
+pub trait Admissible: Send {
+    fn deadline(&self) -> Option<Instant>;
+
+    /// Answer the request's client with `err` (exactly once).
+    fn reject(self, err: ServeError);
+
+    fn expired(&self, now: Instant) -> bool {
+        self.deadline().is_some_and(|d| now >= d)
+    }
+}
+
+/// Exact admission accounting, always on (plain relaxed atomics — the
+/// telemetry mirror is the only part gated on the registry flag).
+#[derive(Debug, Default)]
+pub struct AdmissionLedger {
+    submitted: AtomicU64,
+    admitted: AtomicU64,
+    shed: AtomicU64,
+    expired: AtomicU64,
+    completed: AtomicU64,
+    retries: AtomicU64,
+    peak_depth: AtomicU64,
+}
+
+impl AdmissionLedger {
+    fn note_submitted(&self) {
+        self.submitted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn note_admitted(&self, depth: usize) {
+        self.admitted.fetch_add(1, Ordering::Relaxed);
+        self.peak_depth.fetch_max(depth as u64, Ordering::Relaxed);
+        ADMITTED.incr();
+    }
+
+    fn note_shed(&self) {
+        self.shed.fetch_add(1, Ordering::Relaxed);
+        SHED.incr();
+    }
+
+    /// An admitted request answered `DeadlineExceeded` — callable from
+    /// the serve loops too (post-gather expiry happens outside the
+    /// queue).
+    pub fn note_expired(&self) {
+        self.expired.fetch_add(1, Ordering::Relaxed);
+        EXPIRED.incr();
+    }
+
+    /// `k` admitted requests answered by the serve loop (success or
+    /// executor error — every non-expired answer counts).
+    pub fn note_completed(&self, k: u64) {
+        self.completed.fetch_add(k, Ordering::Relaxed);
+    }
+
+    pub fn note_retry(&self) {
+        self.retries.fetch_add(1, Ordering::Relaxed);
+        RETRIES.incr();
+    }
+
+    pub fn snapshot(&self) -> AdmissionSnapshot {
+        AdmissionSnapshot {
+            submitted: self.submitted.load(Ordering::Relaxed),
+            admitted: self.admitted.load(Ordering::Relaxed),
+            shed: self.shed.load(Ordering::Relaxed),
+            expired: self.expired.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            retries: self.retries.load(Ordering::Relaxed),
+            peak_depth: self.peak_depth.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Point-in-time ledger view; rides `BatcherStats` / `GenStats`.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct AdmissionSnapshot {
+    pub submitted: u64,
+    pub admitted: u64,
+    pub shed: u64,
+    pub expired: u64,
+    pub completed: u64,
+    pub retries: u64,
+    pub peak_depth: u64,
+}
+
+impl AdmissionSnapshot {
+    /// The exactly-once contract at quiescence: every submit was
+    /// either admitted or shed, and every admit was either completed
+    /// or expired — so `expired == admitted - completed` exactly.
+    pub fn balanced(&self) -> bool {
+        self.submitted == self.admitted + self.shed
+            && self.admitted == self.completed + self.expired
+    }
+
+    /// Total responses the queue side guarantees were sent.
+    pub fn answered(&self) -> u64 {
+        self.completed + self.shed + self.expired
+    }
+}
+
+/// Overload pressure in [0, 1], shared between the serve loop (writer)
+/// and the dispatch closures (readers).  Stored as `f64` bits in one
+/// atomic — reading it costs a relaxed load.
+#[derive(Debug, Clone, Default)]
+pub struct PressureGauge(Arc<AtomicU64>);
+
+impl PressureGauge {
+    pub fn new() -> PressureGauge {
+        PressureGauge::default()
+    }
+
+    pub fn set(&self, p: f64) {
+        self.0.store(p.clamp(0.0, 1.0).to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+struct Inner<T> {
+    q: VecDeque<T>,
+    senders: usize,
+    receiver_alive: bool,
+}
+
+struct Shared<T> {
+    inner: Mutex<Inner<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    cap: usize,
+    policy: AdmissionPolicy,
+    /// The config's default deadline budget — normalises deadline
+    /// headroom into the pressure signal's urgency term.
+    budget: Option<Duration>,
+    ledger: Arc<AdmissionLedger>,
+}
+
+impl<T> Shared<T> {
+    fn lock(&self) -> std::sync::MutexGuard<'_, Inner<T>> {
+        self.inner.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+}
+
+/// Producer half of the admission queue (cloneable, like a channel
+/// sender; the receiver observes disconnect when the last clone
+/// drops).
+pub struct AdmissionSender<T: Admissible>(Arc<Shared<T>>);
+
+/// Consumer half; owned by the serve loop.  Dropping it makes every
+/// subsequent submit fail with [`SubmitError::Stopped`].
+pub struct AdmissionReceiver<T: Admissible>(Arc<Shared<T>>);
+
+/// Non-blocking receive outcome.
+pub enum TryRecv<T> {
+    Item(T),
+    Empty,
+    Disconnected,
+}
+
+/// Bounded-wait receive outcome.
+pub enum RecvTimeout<T> {
+    Item(T),
+    TimedOut,
+    Disconnected,
+}
+
+/// Build a bounded admission queue.  `budget` is the default deadline
+/// the pressure signal normalises headroom against (the server
+/// config's `deadline`).
+pub fn admission_queue<T: Admissible>(
+    cap: usize,
+    policy: AdmissionPolicy,
+    budget: Option<Duration>,
+) -> (AdmissionSender<T>, AdmissionReceiver<T>) {
+    let cap = cap.max(1);
+    let shared = Arc::new(Shared {
+        inner: Mutex::new(Inner {
+            q: VecDeque::with_capacity(cap),
+            senders: 1,
+            receiver_alive: true,
+        }),
+        not_empty: Condvar::new(),
+        not_full: Condvar::new(),
+        cap,
+        policy,
+        budget,
+        ledger: Arc::new(AdmissionLedger::default()),
+    });
+    (AdmissionSender(Arc::clone(&shared)), AdmissionReceiver(shared))
+}
+
+impl<T: Admissible> Clone for AdmissionSender<T> {
+    fn clone(&self) -> Self {
+        self.0.lock().senders += 1;
+        AdmissionSender(Arc::clone(&self.0))
+    }
+}
+
+impl<T: Admissible> Drop for AdmissionSender<T> {
+    fn drop(&mut self) {
+        let mut g = self.0.lock();
+        g.senders -= 1;
+        if g.senders == 0 {
+            drop(g);
+            // Wake a receiver blocked on an empty queue so it can
+            // observe the disconnect.
+            self.0.not_empty.notify_all();
+        }
+    }
+}
+
+impl<T: Admissible> Drop for AdmissionReceiver<T> {
+    fn drop(&mut self) {
+        self.0.lock().receiver_alive = false;
+        // Wake blocked submitters so they fail with `Stopped`.
+        self.0.not_full.notify_all();
+    }
+}
+
+impl<T: Admissible> AdmissionSender<T> {
+    pub fn ledger(&self) -> Arc<AdmissionLedger> {
+        Arc::clone(&self.0.ledger)
+    }
+
+    /// Blocking submit under the queue's policy.  `Ok(())` guarantees
+    /// the request's client will receive exactly one response —
+    /// possibly a typed `Overloaded`/`DeadlineExceeded` sent right
+    /// here.  `Err(Stopped)` means the request was returned unanswered
+    /// because the serve loop is gone.
+    pub fn submit(&self, item: T) -> Result<(), SubmitError> {
+        let shared = &self.0;
+        let ledger = &shared.ledger;
+        let now = Instant::now();
+        let mut g = shared.lock();
+        if !g.receiver_alive {
+            return Err(SubmitError::Stopped);
+        }
+        // Expired on arrival: admitted for accounting, answered
+        // immediately, never queued.
+        if item.expired(now) {
+            ledger.note_submitted();
+            ledger.note_admitted(g.q.len());
+            ledger.note_expired();
+            drop(g);
+            item.reject(ServeError::DeadlineExceeded);
+            return Ok(());
+        }
+        while g.q.len() >= shared.cap {
+            match shared.policy {
+                AdmissionPolicy::Block => {
+                    // Bounded wait: a deadlined request must not block
+                    // past its own deadline.
+                    let wait = item
+                        .deadline()
+                        .map(|d| d.saturating_duration_since(Instant::now()))
+                        .unwrap_or(Duration::from_millis(50));
+                    if wait.is_zero() {
+                        ledger.note_submitted();
+                        ledger.note_admitted(g.q.len());
+                        ledger.note_expired();
+                        drop(g);
+                        item.reject(ServeError::DeadlineExceeded);
+                        return Ok(());
+                    }
+                    let (guard, _timeout) = shared
+                        .not_full
+                        .wait_timeout(g, wait)
+                        .unwrap_or_else(PoisonError::into_inner);
+                    g = guard;
+                    if !g.receiver_alive {
+                        return Err(SubmitError::Stopped);
+                    }
+                }
+                AdmissionPolicy::ShedNewest => {
+                    ledger.note_submitted();
+                    ledger.note_shed();
+                    drop(g);
+                    item.reject(ServeError::Overloaded);
+                    return Ok(());
+                }
+                AdmissionPolicy::ShedExpiredFirst => {
+                    let now = Instant::now();
+                    let mut evicted = Vec::new();
+                    let mut kept = VecDeque::with_capacity(g.q.len());
+                    while let Some(queued) = g.q.pop_front() {
+                        if queued.expired(now) {
+                            evicted.push(queued);
+                        } else {
+                            kept.push_back(queued);
+                        }
+                    }
+                    g.q = kept;
+                    if evicted.is_empty() {
+                        // Nothing reclaimable: shed the newcomer.
+                        ledger.note_submitted();
+                        ledger.note_shed();
+                        drop(g);
+                        item.reject(ServeError::Overloaded);
+                        return Ok(());
+                    }
+                    for stale in evicted {
+                        ledger.note_expired();
+                        stale.reject(ServeError::DeadlineExceeded);
+                    }
+                    // Loop re-checks: the queue now has room.
+                }
+            }
+        }
+        ledger.note_submitted();
+        g.q.push_back(item);
+        let depth = g.q.len();
+        ledger.note_admitted(depth);
+        drop(g);
+        shared.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Non-blocking submit: a full queue is an immediate typed
+    /// [`SubmitError::QueueFull`] — no response channel was consumed,
+    /// so the caller retries (or sheds) client-side.
+    pub fn try_submit(&self, item: T) -> Result<(), SubmitError> {
+        let shared = &self.0;
+        let ledger = &shared.ledger;
+        let now = Instant::now();
+        let mut g = shared.lock();
+        if !g.receiver_alive {
+            return Err(SubmitError::Stopped);
+        }
+        if item.expired(now) {
+            ledger.note_submitted();
+            ledger.note_admitted(g.q.len());
+            ledger.note_expired();
+            drop(g);
+            item.reject(ServeError::DeadlineExceeded);
+            return Ok(());
+        }
+        if g.q.len() >= shared.cap {
+            return Err(SubmitError::QueueFull);
+        }
+        ledger.note_submitted();
+        g.q.push_back(item);
+        let depth = g.q.len();
+        ledger.note_admitted(depth);
+        drop(g);
+        shared.not_empty.notify_one();
+        Ok(())
+    }
+}
+
+impl<T: Admissible> AdmissionReceiver<T> {
+    pub fn ledger(&self) -> Arc<AdmissionLedger> {
+        Arc::clone(&self.0.ledger)
+    }
+
+    /// Blocking receive; `None` when every sender is gone and the
+    /// queue has drained (shutdown) — mpsc `recv` semantics.
+    pub fn recv(&self) -> Option<T> {
+        let mut g = self.0.lock();
+        loop {
+            if let Some(item) = g.q.pop_front() {
+                drop(g);
+                self.0.not_full.notify_one();
+                return Some(item);
+            }
+            if g.senders == 0 {
+                return None;
+            }
+            g = self.0.not_empty.wait(g).unwrap_or_else(PoisonError::into_inner);
+        }
+    }
+
+    /// Bounded-wait receive — mpsc `recv_timeout` semantics.
+    pub fn recv_timeout(&self, dur: Duration) -> RecvTimeout<T> {
+        let deadline = Instant::now() + dur;
+        let mut g = self.0.lock();
+        loop {
+            if let Some(item) = g.q.pop_front() {
+                drop(g);
+                self.0.not_full.notify_one();
+                return RecvTimeout::Item(item);
+            }
+            if g.senders == 0 {
+                return RecvTimeout::Disconnected;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return RecvTimeout::TimedOut;
+            }
+            let (guard, _timeout) = self
+                .0
+                .not_empty
+                .wait_timeout(g, deadline - now)
+                .unwrap_or_else(PoisonError::into_inner);
+            g = guard;
+        }
+    }
+
+    /// Non-blocking receive — mpsc `try_recv` semantics.
+    pub fn try_recv(&self) -> TryRecv<T> {
+        let mut g = self.0.lock();
+        if let Some(item) = g.q.pop_front() {
+            drop(g);
+            self.0.not_full.notify_one();
+            return TryRecv::Item(item);
+        }
+        if g.senders == 0 {
+            return TryRecv::Disconnected;
+        }
+        TryRecv::Empty
+    }
+
+    /// Queue depth right now (diagnostics; racy by nature).
+    pub fn depth(&self) -> usize {
+        self.0.lock().q.len()
+    }
+
+    /// Overload pressure in [0, 1]: occupancy × (½ + ½ × urgency),
+    /// where urgency is how much of the *oldest* queued request's
+    /// deadline budget has already been spent waiting.  A full queue
+    /// of fresh requests reads 0.5; a full queue whose head is about
+    /// to expire reads 1.0; without deadlines the signal is occupancy
+    /// alone, halved — still enough to cross the downshift threshold
+    /// only when genuinely saturated.
+    pub fn pressure(&self) -> f64 {
+        let g = self.0.lock();
+        let occupancy = g.q.len() as f64 / self.0.cap as f64;
+        let urgency = match (g.q.front().and_then(|i| i.deadline()), self.0.budget) {
+            (Some(deadline), Some(budget)) if !budget.is_zero() => {
+                let left = deadline.saturating_duration_since(Instant::now());
+                (1.0 - left.as_secs_f64() / budget.as_secs_f64()).clamp(0.0, 1.0)
+            }
+            _ => 0.0,
+        };
+        (occupancy * (0.5 + 0.5 * urgency)).clamp(0.0, 1.0)
+    }
+}
+
+/// Client-side retry policy: jittered exponential backoff with a
+/// total-attempt deadline.  Used by `ClientHandle::infer_with_retry`
+/// and `GenClient::generate_with_retry`; retries count into
+/// `server.admission.retries`.
+#[derive(Debug, Clone, Copy)]
+pub struct RetryPolicy {
+    /// Attempts including the first (≥ 1).
+    pub attempts: usize,
+    /// First backoff; doubles per retry.
+    pub base: Duration,
+    /// Per-retry backoff ceiling.
+    pub max_backoff: Duration,
+    /// Total budget across attempts — no retry starts past this.
+    pub budget: Duration,
+    /// Jitter seed (deterministic backoff stream per client).
+    pub seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            attempts: 4,
+            base: Duration::from_millis(1),
+            max_backoff: Duration::from_millis(50),
+            budget: Duration::from_millis(500),
+            seed: 0,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// Backoff before retry number `retry` (0-based): exponential,
+    /// capped, with half-interval jitter so synchronized clients
+    /// desynchronize instead of re-stampeding the gate.
+    pub fn backoff(&self, retry: u32, rng: &mut Rng) -> Duration {
+        let exp = self
+            .base
+            .saturating_mul(1u32 << retry.min(16))
+            .min(self.max_backoff)
+            .max(Duration::from_micros(1));
+        exp.mul_f64(0.5 + 0.5 * rng.f64())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::{sync_channel, SyncSender};
+
+    struct Item {
+        id: usize,
+        deadline: Option<Instant>,
+        resp: SyncSender<Result<usize, ServeError>>,
+    }
+
+    impl Admissible for Item {
+        fn deadline(&self) -> Option<Instant> {
+            self.deadline
+        }
+
+        fn reject(self, err: ServeError) {
+            let _ = self.resp.send(Err(err));
+        }
+    }
+
+    fn item(
+        id: usize,
+        deadline: Option<Instant>,
+    ) -> (Item, std::sync::mpsc::Receiver<Result<usize, ServeError>>) {
+        let (tx, rx) = sync_channel(1);
+        (Item { id, deadline, resp: tx }, rx)
+    }
+
+    #[test]
+    fn fifo_roundtrip_and_disconnect() {
+        let (tx, rx) = admission_queue::<Item>(4, AdmissionPolicy::Block, None);
+        for i in 0..3 {
+            let (it, _rx) = item(i, None);
+            tx.submit(it).unwrap();
+        }
+        assert_eq!(rx.depth(), 3);
+        for i in 0..3 {
+            match rx.try_recv() {
+                TryRecv::Item(it) => assert_eq!(it.id, i),
+                _ => panic!("expected item {i}"),
+            }
+        }
+        drop(tx);
+        assert!(rx.recv().is_none(), "all senders gone => disconnect");
+        let snap = rx.ledger().snapshot();
+        assert_eq!(snap.submitted, 3);
+        assert_eq!(snap.admitted, 3);
+        assert_eq!(snap.peak_depth, 3);
+    }
+
+    #[test]
+    fn try_submit_full_is_typed_queue_full() {
+        let (tx, rx) = admission_queue::<Item>(2, AdmissionPolicy::ShedNewest, None);
+        let (it, _r1) = item(0, None);
+        tx.try_submit(it).unwrap();
+        let (it, _r2) = item(1, None);
+        tx.try_submit(it).unwrap();
+        let (it, _r3) = item(2, None);
+        assert_eq!(tx.try_submit(it).unwrap_err(), SubmitError::QueueFull);
+        let snap = rx.ledger().snapshot();
+        assert_eq!(snap.submitted, 2, "a QueueFull submit is not counted as submitted");
+        assert_eq!(snap.shed, 0, "try_submit rejects client-side, not at the gate");
+    }
+
+    #[test]
+    fn submit_after_receiver_drop_is_stopped() {
+        let (tx, rx) = admission_queue::<Item>(2, AdmissionPolicy::Block, None);
+        drop(rx);
+        let (it, _r) = item(0, None);
+        assert_eq!(tx.submit(it).unwrap_err(), SubmitError::Stopped);
+        let (it, _r) = item(1, None);
+        assert_eq!(tx.try_submit(it).unwrap_err(), SubmitError::Stopped);
+    }
+
+    #[test]
+    fn shed_newest_answers_overloaded() {
+        let (tx, rx) = admission_queue::<Item>(1, AdmissionPolicy::ShedNewest, None);
+        let (it, _r1) = item(0, None);
+        tx.submit(it).unwrap();
+        let (it, r2) = item(1, None);
+        tx.submit(it).unwrap();
+        assert_eq!(r2.recv().unwrap(), Err(ServeError::Overloaded));
+        let snap = rx.ledger().snapshot();
+        assert_eq!(snap.submitted, 2);
+        assert_eq!(snap.admitted, 1);
+        assert_eq!(snap.shed, 1);
+        assert!(!snap.balanced(), "one request still queued");
+    }
+
+    #[test]
+    fn shed_expired_first_evicts_stale_queue_entries() {
+        let (tx, rx) = admission_queue::<Item>(2, AdmissionPolicy::ShedExpiredFirst, None);
+        let soon = Instant::now() + Duration::from_millis(1);
+        let (stale, stale_rx) = item(0, Some(soon));
+        tx.submit(stale).unwrap();
+        let (fresh, _fresh_rx) = item(1, Some(Instant::now() + Duration::from_secs(60)));
+        tx.submit(fresh).unwrap();
+        std::thread::sleep(Duration::from_millis(5)); // head expires
+        let (newcomer, _new_rx) = item(2, Some(Instant::now() + Duration::from_secs(60)));
+        tx.submit(newcomer).unwrap();
+        assert_eq!(
+            stale_rx.recv().unwrap(),
+            Err(ServeError::DeadlineExceeded),
+            "stale head evicted with a typed answer"
+        );
+        assert_eq!(rx.depth(), 2, "fresh + newcomer remain");
+        let snap = rx.ledger().snapshot();
+        assert_eq!(snap.submitted, 3);
+        assert_eq!(snap.admitted, 3);
+        assert_eq!(snap.expired, 1);
+        assert_eq!(snap.shed, 0);
+    }
+
+    #[test]
+    fn expired_on_arrival_is_answered_not_queued() {
+        let (tx, rx) = admission_queue::<Item>(4, AdmissionPolicy::Block, None);
+        let (it, r) = item(0, Some(Instant::now() - Duration::from_millis(1)));
+        tx.submit(it).unwrap();
+        assert_eq!(r.recv().unwrap(), Err(ServeError::DeadlineExceeded));
+        assert_eq!(rx.depth(), 0);
+        let snap = rx.ledger().snapshot();
+        assert_eq!((snap.admitted, snap.expired), (1, 1));
+        assert!(snap.balanced());
+    }
+
+    #[test]
+    fn pressure_combines_occupancy_and_headroom() {
+        let budget = Duration::from_millis(100);
+        let (tx, rx) = admission_queue::<Item>(4, AdmissionPolicy::Block, Some(budget));
+        assert_eq!(rx.pressure(), 0.0, "empty queue has no pressure");
+        for i in 0..4 {
+            let (it, _r) = item(i, Some(Instant::now() + budget));
+            tx.submit(it).unwrap();
+        }
+        let p = rx.pressure();
+        assert!((0.45..=0.65).contains(&p), "full queue of fresh deadlines: {p}");
+        std::thread::sleep(Duration::from_millis(80));
+        let p = rx.pressure();
+        assert!(p > 0.8, "full queue with the head nearly expired: {p}");
+        let gauge = PressureGauge::new();
+        gauge.set(p);
+        assert!((gauge.get() - p).abs() < 1e-12);
+        gauge.set(7.0);
+        assert_eq!(gauge.get(), 1.0, "gauge clamps to [0, 1]");
+    }
+
+    #[test]
+    fn backoff_is_jittered_exponential_and_capped() {
+        let policy = RetryPolicy::default();
+        let mut rng = Rng::new(42);
+        let b0 = policy.backoff(0, &mut rng);
+        assert!(b0 >= policy.base / 2 && b0 <= policy.base, "{b0:?}");
+        let b4 = policy.backoff(4, &mut rng);
+        assert!(b4 >= policy.base * 8, "exponential growth: {b4:?}");
+        let b30 = policy.backoff(30, &mut rng);
+        assert!(b30 <= policy.max_backoff, "cap honoured: {b30:?}");
+        // Same seed => same jitter stream (deterministic clients).
+        let s1: Vec<_> = {
+            let mut r = Rng::new(9);
+            (0..5).map(|i| policy.backoff(i, &mut r)).collect()
+        };
+        let s2: Vec<_> = {
+            let mut r = Rng::new(9);
+            (0..5).map(|i| policy.backoff(i, &mut r)).collect()
+        };
+        assert_eq!(s1, s2);
+    }
+
+    #[test]
+    fn policy_parse_roundtrip() {
+        for p in
+            [AdmissionPolicy::Block, AdmissionPolicy::ShedNewest, AdmissionPolicy::ShedExpiredFirst]
+        {
+            assert_eq!(AdmissionPolicy::parse(p.name()), Some(p));
+        }
+        assert_eq!(AdmissionPolicy::parse("nope"), None);
+        assert_eq!(AdmissionPolicy::default(), AdmissionPolicy::Block);
+    }
+}

@@ -1,10 +1,10 @@
 //! Dynamic batching policy and request plumbing.
 //!
 //! Policy: block for the first request, then keep admitting until
-//! either the model batch is full or `max_wait` has elapsed since the
-//! first admit — the standard latency/throughput knob.  Short rows are
-//! padded with PAD; surplus capacity is padded with zero rows and the
-//! corresponding logits discarded.
+//! either the model batch is full or the gather window has elapsed
+//! since the first admit — the standard latency/throughput knob.
+//! Short rows are padded with PAD; surplus capacity is padded with
+//! zero rows and the corresponding logits discarded.
 //!
 //! **Length buckets**: with `ServerConfig::buckets` set, a gathered
 //! batch is partitioned by row length into per-bucket sub-batches —
@@ -18,8 +18,18 @@
 //! with error responses and the serve loop keeps going — a malformed
 //! batch can no longer abort the batcher (`BatcherStats::exec_errors`
 //! counts the casualties).
+//!
+//! **Overload control** (see [`super::admission`]): the request queue
+//! is a bounded [`admission_queue`] with a configurable shed policy
+//! and per-request deadlines.  Requests whose deadline passes while
+//! queued are answered with a typed [`ServeError::DeadlineExceeded`]
+//! after every gather, the loop publishes a [`PressureGauge`] the
+//! dispatch closures read to downshift backends, and the gather window
+//! itself shrinks under pressure ([`pressure_scaled_wait`]) — under
+//! load the batcher trades batching efficiency for latency headroom
+//! instead of collapsing.
 
-use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -29,8 +39,14 @@ use crate::data::PAD;
 use crate::plan::{ExecutionPlan, PlanCache, ShapeKey};
 use crate::runtime::{global_pool, Engine, HostTensor, ModelState, ThreadPool};
 use crate::telemetry;
-use crate::toeplitz::{BackendKind, Dispatch, DispatchQuery, ToeplitzOp};
+use crate::toeplitz::{BackendKind, Dispatch, DispatchQuery, ToeplitzOp, PRESSURE_DOWNSHIFT};
+use crate::util::rng::Rng;
 
+use super::admission::{
+    admission_queue, Admissible, AdmissionLedger, AdmissionPolicy, AdmissionReceiver,
+    AdmissionSender, AdmissionSnapshot, PressureGauge, RecvTimeout, RetryPolicy, ServeError,
+    SubmitError, SERVER_PRESSURE,
+};
 use super::rows::{LogitsRow, RowBatch};
 
 /// Server tuning knobs.
@@ -40,14 +56,21 @@ pub struct ServerConfig {
     pub max_batch: usize,
     /// Model context length (rows are padded/truncated to this).
     pub n: usize,
-    /// How long to hold an open batch hoping for more requests.
+    /// How long to hold an open batch hoping for more requests (the
+    /// zero-pressure gather window; it shrinks as pressure rises).
     pub max_wait: Duration,
-    /// Bounded queue depth — overflow is backpressure, not OOM.
+    /// Bounded queue depth — overflow is backpressure or shedding
+    /// (per `policy`), never OOM.
     pub queue_depth: usize,
     /// Length buckets (row widths) for mixed-length serving; empty =
     /// one fixed width `n`.  Normalised at startup: sorted, deduped,
     /// clamped to `n`, with `n` always the top bucket.
     pub buckets: Vec<usize>,
+    /// What a full queue does to a blocking submit.
+    pub policy: AdmissionPolicy,
+    /// Default per-request deadline (from submit); `None` = no
+    /// deadline.  Clients may override per handle.
+    pub deadline: Option<Duration>,
 }
 
 impl Default for ServerConfig {
@@ -58,6 +81,8 @@ impl Default for ServerConfig {
             max_wait: Duration::from_millis(2),
             queue_depth: 64,
             buckets: Vec::new(),
+            policy: AdmissionPolicy::Block,
+            deadline: None,
         }
     }
 }
@@ -95,6 +120,26 @@ pub struct Request {
     pub ids: Vec<i32>,
     pub resp: SyncSender<Response>,
     pub submitted: Instant,
+    /// Absolute deadline; past it the request is answered with
+    /// [`ServeError::DeadlineExceeded`] instead of executing.
+    pub deadline: Option<Instant>,
+}
+
+impl Admissible for Request {
+    fn deadline(&self) -> Option<Instant> {
+        self.deadline
+    }
+
+    fn reject(self, err: ServeError) {
+        let queued = self.submitted.elapsed();
+        let _ = self.resp.send(Response {
+            logits: LogitsRow::default(),
+            queued,
+            batch_rows: 0,
+            width: 0,
+            error: Some(err),
+        });
+    }
 }
 
 /// One inference response.
@@ -113,10 +158,12 @@ pub struct Response {
     /// Row width this request executed at (its length bucket; `cfg.n`
     /// when bucketing is off).
     pub width: usize,
-    /// Set when this request's batch failed to execute: the request
-    /// errored, the batcher loop carried on.  [`ClientHandle::infer`]
-    /// surfaces it as an `Err`.
-    pub error: Option<String>,
+    /// Set when this request did not execute successfully: a typed
+    /// overload/deadline answer from admission control, or
+    /// [`ServeError::Exec`] when its batch's executor failed (the
+    /// batcher loop carried on).  [`ClientHandle::infer`] surfaces it
+    /// as an `Err`.
+    pub error: Option<ServeError>,
 }
 
 /// Aggregate server-side counters.
@@ -146,6 +193,10 @@ pub struct BatcherStats {
     /// long-lived server reports percentiles over **every** request
     /// instead of the bounded recent-sample window above.
     pub queue_hist: Arc<telemetry::Histogram>,
+    /// End-of-run admission ledger snapshot — at this point
+    /// [`AdmissionSnapshot::balanced`] must hold (the chaos soak
+    /// gates on it).
+    pub admission: AdmissionSnapshot,
 }
 
 /// Latency-sample window size shared by the batcher and the
@@ -193,73 +244,179 @@ impl BatcherStats {
 /// Client handle: submit sequences, receive logits.
 #[derive(Clone)]
 pub struct ClientHandle {
-    tx: SyncSender<Request>,
+    tx: AdmissionSender<Request>,
+    deadline: Option<Duration>,
 }
 
 impl ClientHandle {
+    /// This handle with a different per-request deadline (`None`
+    /// disables; the config default is what [`Batcher::handle`]
+    /// installs).
+    pub fn with_deadline(mut self, deadline: Option<Duration>) -> ClientHandle {
+        self.deadline = deadline;
+        self
+    }
+
+    fn request(&self, ids: Vec<i32>) -> (Request, Receiver<Response>) {
+        let (rtx, rrx) = sync_channel(1);
+        let now = Instant::now();
+        let deadline = self.deadline.map(|d| now + d);
+        (Request { ids, resp: rtx, submitted: now, deadline }, rrx)
+    }
+
     /// Blocking round-trip: submit and wait for the response.  A
     /// failed execution comes back as `Err` (the response's `error`
     /// field), not a dead server.
     pub fn infer(&self, ids: Vec<i32>) -> Result<Response> {
-        let (rtx, rrx) = sync_channel(1);
-        self.tx
-            .send(Request { ids, resp: rtx, submitted: Instant::now() })
-            .map_err(|_| anyhow!("server stopped"))?;
-        let resp = rrx.recv().map_err(|_| anyhow!("server dropped request"))?;
-        if let Some(e) = &resp.error {
-            return Err(anyhow!("inference failed: {e}"));
+        let resp = self.infer_response(ids)?;
+        match &resp.error {
+            None => Ok(resp),
+            Some(e) => Err(anyhow!("inference failed: {e}")),
         }
-        Ok(resp)
     }
 
-    /// Non-blocking submit; `Err` means the queue is full (backpressure).
-    pub fn try_submit(&self, ids: Vec<i32>) -> Result<Receiver<Response>> {
-        let (rtx, rrx) = sync_channel(1);
-        match self.tx.try_send(Request { ids, resp: rtx, submitted: Instant::now() }) {
-            Ok(()) => Ok(rrx),
-            Err(TrySendError::Full(_)) => Err(anyhow!("queue full")),
-            Err(TrySendError::Disconnected(_)) => Err(anyhow!("server stopped")),
-        }
+    /// [`infer`](Self::infer) without the error-field mapping: the
+    /// typed overload/deadline/executor answer comes back as the
+    /// response itself — the raw form retry loops match on.
+    pub fn infer_response(&self, ids: Vec<i32>) -> Result<Response> {
+        let (req, rrx) = self.request(ids);
+        self.tx.submit(req).map_err(|e| anyhow!("{e}"))?;
+        rrx.recv().map_err(|_| anyhow!("server dropped request"))
     }
+
+    /// Blocking-admission submit that hands back the response channel
+    /// without waiting for the answer.  Under a `block` policy this
+    /// waits for queue room; under a shed policy it returns
+    /// immediately and the queue may shed — the typed `Overloaded` /
+    /// `DeadlineExceeded` answer arrives on the channel like any
+    /// other.  `Ok` therefore guarantees exactly one response;
+    /// `Err(Stopped)` means the serve loop is gone.
+    pub fn submit(&self, ids: Vec<i32>) -> Result<Receiver<Response>, SubmitError> {
+        let (req, rrx) = self.request(ids);
+        self.tx.submit(req)?;
+        Ok(rrx)
+    }
+
+    /// Non-blocking submit; a full queue is an immediate typed
+    /// [`SubmitError::QueueFull`] (client-side backpressure — nothing
+    /// was queued and no response will arrive).
+    pub fn try_submit(&self, ids: Vec<i32>) -> Result<Receiver<Response>, SubmitError> {
+        let (req, rrx) = self.request(ids);
+        self.tx.try_submit(req)?;
+        Ok(rrx)
+    }
+
+    /// Submit with client-side retry: jittered exponential backoff on
+    /// `QueueFull` and on typed overload answers, bounded by the
+    /// policy's attempt count and total-time budget.  Non-retryable
+    /// failures (executor errors, server stopped) return immediately.
+    pub fn infer_with_retry(&self, ids: Vec<i32>, policy: &RetryPolicy) -> Result<Response> {
+        let ledger = self.tx.ledger();
+        let started = Instant::now();
+        let mut rng = Rng::new(policy.seed);
+        let mut last_err = anyhow!("no attempt made");
+        for attempt in 0..policy.attempts.max(1) {
+            if attempt > 0 {
+                let pause = policy.backoff(attempt as u32 - 1, &mut rng);
+                if started.elapsed() + pause >= policy.budget {
+                    break;
+                }
+                std::thread::sleep(pause);
+                ledger.note_retry();
+            }
+            match self.try_submit(ids.clone()) {
+                Err(SubmitError::Stopped) => return Err(anyhow!("server stopped")),
+                Err(SubmitError::QueueFull) => {
+                    last_err = anyhow!("queue full");
+                }
+                Ok(rrx) => {
+                    let resp = rrx.recv().map_err(|_| anyhow!("server dropped request"))?;
+                    match &resp.error {
+                        None => return Ok(resp),
+                        Some(e) if e.retryable() => {
+                            last_err = anyhow!("inference failed: {e}");
+                        }
+                        Some(e) => return Err(anyhow!("inference failed: {e}")),
+                    }
+                }
+            }
+        }
+        Err(last_err.context(format!(
+            "retries exhausted ({} attempts, {:?} elapsed)",
+            policy.attempts,
+            started.elapsed()
+        )))
+    }
+}
+
+/// Fraction of the gather window surrendered at full pressure: the
+/// batcher stops waiting for stragglers when the queue is the
+/// bottleneck, trading batch fill for deadline headroom.
+pub const GATHER_SHRINK: f64 = 0.75;
+
+/// The gather window at a given pressure: `max_wait` at 0, shrinking
+/// linearly to `(1 - GATHER_SHRINK) * max_wait` at 1.
+pub fn pressure_scaled_wait(max_wait: Duration, pressure: f64) -> Duration {
+    max_wait.mul_f64(1.0 - GATHER_SHRINK * pressure.clamp(0.0, 1.0))
 }
 
 /// The dynamic batcher. Owns the request queue; `run` drives an
 /// executor closure until all client handles are dropped.
 pub struct Batcher {
     pub cfg: ServerConfig,
-    rx: Receiver<Request>,
-    tx: Option<SyncSender<Request>>,
+    rx: AdmissionReceiver<Request>,
+    tx: Option<AdmissionSender<Request>>,
+    pressure: PressureGauge,
 }
 
 impl Batcher {
     pub fn new(cfg: ServerConfig) -> Batcher {
-        let (tx, rx) = sync_channel(cfg.queue_depth);
-        Batcher { cfg, rx, tx: Some(tx) }
+        let (tx, rx) = admission_queue(cfg.queue_depth, cfg.policy, cfg.deadline);
+        Batcher { cfg, rx, tx: Some(tx), pressure: PressureGauge::new() }
     }
 
-    /// A cloneable client handle (hand to worker threads).
+    /// A cloneable client handle (hand to worker threads), carrying
+    /// the config's default deadline.
     pub fn handle(&self) -> ClientHandle {
-        ClientHandle { tx: self.tx.clone().expect("server already running") }
+        ClientHandle {
+            tx: self.tx.clone().expect("server already running"),
+            deadline: self.cfg.deadline,
+        }
+    }
+
+    /// The overload gauge this batcher publishes each gather — hand a
+    /// clone to the dispatch closures for pressure-aware planning
+    /// ([`Dispatch::plan_pressured`](crate::toeplitz::Dispatch::plan_pressured)).
+    pub fn pressure(&self) -> PressureGauge {
+        self.pressure.clone()
+    }
+
+    /// Live admission accounting (the end-of-run snapshot rides
+    /// [`BatcherStats::admission`]).
+    pub fn ledger(&self) -> Arc<AdmissionLedger> {
+        self.rx.ledger()
     }
 
     /// Drain one batch according to the policy. `None` = all senders
     /// gone and queue empty (shutdown).
     fn gather(&self) -> Option<Vec<Request>> {
-        let first = match self.rx.recv() {
-            Ok(r) => r,
-            Err(_) => return None,
-        };
+        let first = self.rx.recv()?;
+        // Publish pressure once per gather, from the post-pop queue
+        // state: the gauge feeds the dispatch closures and telemetry,
+        // and scales this gather's own window.
+        let pressure = self.rx.pressure();
+        self.pressure.set(pressure);
+        SERVER_PRESSURE.set(pressure);
         let mut reqs = vec![first];
-        let deadline = Instant::now() + self.cfg.max_wait;
+        let deadline = Instant::now() + pressure_scaled_wait(self.cfg.max_wait, pressure);
         while reqs.len() < self.cfg.max_batch {
             let now = Instant::now();
             if now >= deadline {
                 break;
             }
             match self.rx.recv_timeout(deadline - now) {
-                Ok(r) => reqs.push(r),
-                Err(RecvTimeoutError::Timeout) => break,
-                Err(RecvTimeoutError::Disconnected) => break,
+                RecvTimeout::Item(r) => reqs.push(r),
+                RecvTimeout::TimedOut | RecvTimeout::Disconnected => break,
             }
         }
         Some(reqs)
@@ -279,10 +436,30 @@ impl Batcher {
         F: FnMut(&HostTensor) -> Result<RowBatch>,
     {
         drop(self.tx.take()); // only client handles keep the queue alive
+        let ledger = self.rx.ledger();
         let widths = self.cfg.bucket_widths();
         let mut stats = BatcherStats::default();
+        let mut expired_total = 0usize;
         while let Some(reqs) = self.gather() {
             let started = Instant::now();
+            // Deadline sweep: anything that expired while queued (or
+            // while the gather window held the batch open) gets its
+            // typed answer now, before any compute is spent on it.
+            let mut live = Vec::with_capacity(reqs.len());
+            for req in reqs {
+                if req.expired(started) {
+                    let queued = started.duration_since(req.submitted);
+                    stats.record_queue_wait(stats.requests + expired_total, queued);
+                    expired_total += 1;
+                    ledger.note_expired();
+                    req.reject(ServeError::DeadlineExceeded);
+                } else {
+                    live.push(req);
+                }
+            }
+            if live.is_empty() {
+                continue;
+            }
             // Partition into per-bucket sub-batches (arrival order is
             // kept within a bucket; one bucket ⇒ one execution, so
             // the non-bucketed path is exactly the old single batch).
@@ -290,7 +467,7 @@ impl Batcher {
                 let _span = telemetry::span(&telemetry::SPAN_BUCKET_GATHER);
                 let mut groups: Vec<(usize, Vec<Request>)> =
                     widths.iter().map(|&w| (w, Vec::new())).collect();
-                for req in reqs {
+                for req in live {
                     let slot = bucket_index(&widths, req.ids.len());
                     groups[slot].1.push(req);
                 }
@@ -298,10 +475,11 @@ impl Batcher {
             };
             for (width, group) in groups {
                 if !group.is_empty() {
-                    self.execute(width, group, started, &mut exec, &mut stats);
+                    self.execute(width, group, started, &mut exec, &mut stats, &ledger);
                 }
             }
         }
+        stats.admission = ledger.snapshot();
         Ok(stats)
     }
 
@@ -314,6 +492,7 @@ impl Batcher {
         started: Instant,
         exec: &mut F,
         stats: &mut BatcherStats,
+        ledger: &AdmissionLedger,
     ) where
         F: FnMut(&HostTensor) -> Result<RowBatch>,
     {
@@ -353,11 +532,12 @@ impl Batcher {
                     width,
                     rows_cap,
                     stats,
+                    ledger,
                 );
                 return;
             }
             Err(e) => {
-                self.fail_batch(reqs, &format!("{e:#}"), started, width, rows_cap, stats);
+                self.fail_batch(reqs, &format!("{e:#}"), started, width, rows_cap, stats, ledger);
                 return;
             }
         };
@@ -375,9 +555,11 @@ impl Batcher {
                 error: None,
             });
         }
+        ledger.note_completed(nreq as u64);
     }
 
     /// Answer every request of a failed batch with an error response.
+    #[allow(clippy::too_many_arguments)]
     fn fail_batch(
         &self,
         reqs: Vec<Request>,
@@ -386,6 +568,7 @@ impl Batcher {
         width: usize,
         rows_cap: usize,
         stats: &mut BatcherStats,
+        ledger: &AdmissionLedger,
     ) {
         let nreq = reqs.len();
         stats.exec_errors += nreq;
@@ -400,9 +583,13 @@ impl Batcher {
                 queued,
                 batch_rows: rows_cap,
                 width,
-                error: Some(msg.to_string()),
+                error: Some(ServeError::Exec(msg.to_string())),
             });
         }
+        // Executor failures are completions for the admission ledger:
+        // the request was admitted and answered (just not happily) —
+        // only deadline answers count as `expired`.
+        ledger.note_completed(nreq as u64);
     }
 }
 
@@ -503,6 +690,37 @@ pub fn serve_toeplitz_factory(
     }
 }
 
+/// Pressure-adaptive bucketed serving: like
+/// [`serve_toeplitz_factory`], but the backend each batch executes on
+/// is re-chosen **per tick** through `plan_for` — which typically
+/// reads the batcher's [`PressureGauge`] via
+/// [`Dispatch::plan_pressured`](crate::toeplitz::Dispatch::plan_pressured)
+/// and downshifts fft → SKI one cost rung under overload.  Each
+/// `(width, backend)` pair caches its own [`ExecutionPlan`]
+/// (`kernel_id` encodes the backend rung), so shifting down under a
+/// burst and back up afterwards is two warm cache hits, not a plan
+/// rebuild — and the un-pressured plan is never evicted by its
+/// degraded twin.
+pub fn serve_toeplitz_pressured(
+    make: impl Fn(usize, BackendKind) -> Arc<dyn ToeplitzOp>,
+    plan_for: impl Fn(usize) -> (BackendKind, bool),
+    pool: Arc<ThreadPool>,
+) -> impl FnMut(&HostTensor) -> Result<RowBatch> {
+    let plans = PlanCache::new(SERVE_PLAN_CAP);
+    move |batch: &HostTensor| {
+        let shape = batch.shape();
+        ensure!(shape.len() == 2, "expected a (batch, width) ids tensor, got {shape:?}");
+        let width = shape[1];
+        let (kind, _parallel) = plan_for(width);
+        let mut key = ShapeKey::for_width(width, pool.threads());
+        // Backend rung in the key (1-based; 0 stays the rung-less
+        // factory/fixed-op entries' id).
+        key.kernel_id = 1 + kind as u64;
+        let plan = plans.get_or_build(key, || ExecutionPlan::from_op(key, make(width, kind)));
+        exec_plan(&plan, &pool, batch)
+    }
+}
+
 /// Wrap a substrate executor with the telemetry **dispatch audit**:
 /// when telemetry is enabled, every executed batch re-derives its
 /// dispatch query from the tensor shape (through the same `plan_for` /
@@ -510,8 +728,10 @@ pub fn serve_toeplitz_factory(
 /// the chosen backend with the cost model, measures the actual batch
 /// wall time, and records the pair via `telemetry::record_dispatch` —
 /// the data behind the cost-model calibration table in stats
-/// snapshots.  With telemetry disabled this is a transparent
-/// pass-through.
+/// snapshots.  The row also carries the pressure reading and whether
+/// the executed backend was a pressure downshift of the unpressured
+/// plan, so degradation is auditable after the fact.  With telemetry
+/// disabled this is a transparent pass-through.
 pub fn audit_exec<F, P, R>(
     mut exec: F,
     dispatch: Dispatch,
@@ -519,6 +739,7 @@ pub fn audit_exec<F, P, R>(
     rank_for: R,
     w: usize,
     threads: usize,
+    pressure: PressureGauge,
 ) -> impl FnMut(&HostTensor) -> Result<RowBatch>
 where
     F: FnMut(&HostTensor) -> Result<RowBatch>,
@@ -532,6 +753,7 @@ where
         let shape = batch.shape().to_vec();
         let rows = shape.first().copied().unwrap_or(0);
         let width = shape.get(1).copied().unwrap_or(0);
+        let p = pressure.get();
         let (kind, parallel) = plan_for(width);
         let query = DispatchQuery {
             n: width,
@@ -541,6 +763,10 @@ where
             batch: rows,
             threads: if parallel { threads } else { 1 },
         };
+        let unpressured = dispatch.plan(&query).0;
+        let downshifted = p >= PRESSURE_DOWNSHIFT
+            && kind != unpressured
+            && dispatch.downshift(unpressured, &query) == Some(kind);
         let predicted = dispatch.predicted_ns(kind, &query).unwrap_or(0.0);
         let t0 = Instant::now();
         let out = exec(batch);
@@ -555,6 +781,8 @@ where
             backend: kind.name(),
             predicted_ns: predicted,
             measured_ns: measured,
+            pressure: p,
+            downshifted,
         });
         out
     }
@@ -599,6 +827,8 @@ mod tests {
             max_wait: Duration::from_millis(5),
             queue_depth: 16,
             buckets: Vec::new(),
+            policy: AdmissionPolicy::Block,
+            deadline: None,
         }
     }
 
@@ -628,6 +858,12 @@ mod tests {
         assert_eq!(stats.requests, 60);
         assert!(stats.batches <= 60);
         assert!(stats.batches >= 15, "batching should coalesce: {}", stats.batches);
+        // The admission ledger balances exactly at quiescence.
+        assert!(stats.admission.balanced(), "{:?}", stats.admission);
+        assert_eq!(stats.admission.submitted, 60);
+        assert_eq!(stats.admission.completed, 60);
+        assert_eq!(stats.admission.shed + stats.admission.expired, 0);
+        assert!(stats.admission.peak_depth <= 16);
     }
 
     #[test]
@@ -650,6 +886,37 @@ mod tests {
         // 8 requests at max_batch 4 must ride exactly 2 full batches
         assert_eq!(stats.batches, 2, "burst should fill batches");
         assert_eq!(stats.padded_rows, 0);
+    }
+
+    #[test]
+    fn try_submit_failure_paths_are_typed() {
+        // Queue full: the batcher is not draining, so the bounded
+        // queue fills and the next try_submit must say so immediately.
+        let b = Batcher::new(ServerConfig { queue_depth: 2, ..small_cfg() });
+        let h = b.handle();
+        let _p1 = h.try_submit(vec![1]).unwrap();
+        let _p2 = h.try_submit(vec![2]).unwrap();
+        assert_eq!(h.try_submit(vec![3]).unwrap_err(), SubmitError::QueueFull);
+        // Submit after shutdown: dropping the batcher drops the
+        // receiver; every submit path reports Stopped, typed.
+        drop(b);
+        assert_eq!(h.try_submit(vec![4]).unwrap_err(), SubmitError::Stopped);
+        let err = h.infer(vec![5]).unwrap_err();
+        assert_eq!(err.to_string(), "server stopped");
+    }
+
+    #[test]
+    fn pressure_scales_the_gather_window() {
+        let w = Duration::from_millis(8);
+        assert_eq!(pressure_scaled_wait(w, 0.0), w, "no pressure keeps the full window");
+        let full = pressure_scaled_wait(w, 1.0);
+        assert!(
+            (1_900_000..=2_100_000).contains(&full.as_nanos()),
+            "full pressure leaves (1 - GATHER_SHRINK) = 25%: {full:?}"
+        );
+        let mid = pressure_scaled_wait(w, 0.5);
+        assert!(mid < w && mid > full, "monotone in pressure: {mid:?}");
+        assert_eq!(pressure_scaled_wait(w, 7.0), full, "pressure clamps to 1");
     }
 
     #[test]
@@ -718,6 +985,7 @@ mod tests {
             |_width| 4,
             9,
             2,
+            PressureGauge::new(),
         );
         let batch = HostTensor::i32(vec![2, 8], vec![1; 16]);
         exec(&batch).unwrap();
@@ -731,6 +999,78 @@ mod tests {
         assert_eq!(row.threads, 1, "serial plan audits as one thread");
         assert!(row.predicted_ns > 0.0, "cost model must price the fft row");
         assert!(row.measured_ns > 0.0);
+        assert_eq!(row.pressure, 0.0, "idle gauge audits as zero pressure");
+        assert!(!row.downshifted, "fft at zero pressure is not a downshift");
+    }
+
+    #[test]
+    fn audit_exec_flags_pressure_downshifts() {
+        let _g = telemetry::test_guard();
+        let was = telemetry::enabled();
+        telemetry::set_enabled(true);
+        let gauge = PressureGauge::new();
+        gauge.set(0.95);
+        // The serving path chose SKI at a shape whose unpressured plan
+        // is fft (the wide band makes SKI the pricier rung): the audit
+        // row must carry the downshift flag.
+        let mut exec = audit_exec(
+            echo,
+            Dispatch::default(),
+            |_width| (BackendKind::Ski, false),
+            |_width| 8,
+            400,
+            1,
+            gauge,
+        );
+        let n = 4096;
+        let batch = HostTensor::i32(vec![1, n], vec![1; n]);
+        exec(&batch).unwrap();
+        let rows = telemetry::global_audit().rows();
+        telemetry::set_enabled(was);
+        let row = rows.last().unwrap();
+        assert_eq!(row.backend, "ski");
+        assert!((row.pressure - 0.95).abs() < 1e-12);
+        assert!(
+            row.downshifted,
+            "ski under pressure at an fft-planned shape must audit as a downshift"
+        );
+    }
+
+    #[test]
+    fn pressured_executor_switches_rungs_per_tick() {
+        use crate::toeplitz::{build_op, ToeplitzKernel};
+        use std::sync::Mutex;
+        let n = 16;
+        let gauge = PressureGauge::new();
+        let g = gauge.clone();
+        let built = Arc::new(Mutex::new(Vec::new()));
+        let b2 = built.clone();
+        let make = move |w: usize, kind: BackendKind| -> Arc<dyn ToeplitzOp> {
+            b2.lock().unwrap().push(kind);
+            let kernel = ToeplitzKernel::from_fn(w, |lag| 1.0 / (1.0 + lag.abs() as f32));
+            Arc::from(build_op(&kernel, kind, 4, 3))
+        };
+        let plan_for = move |_width: usize| {
+            if g.get() >= PRESSURE_DOWNSHIFT {
+                (BackendKind::Ski, false)
+            } else {
+                (BackendKind::Fft, false)
+            }
+        };
+        let mut exec = serve_toeplitz_pressured(make, plan_for, Arc::new(ThreadPool::new(1)));
+        let batch = HostTensor::i32(vec![2, n], (0..2 * n as i32).collect());
+        gauge.set(0.0);
+        let calm = exec(&batch).unwrap();
+        assert_eq!(calm.len(), 2);
+        gauge.set(0.9);
+        let pressed = exec(&batch).unwrap();
+        assert!(pressed.iter().all(|r| r.iter().all(|v| v.is_finite())));
+        gauge.set(0.0);
+        exec(&batch).unwrap();
+        let kinds = built.lock().unwrap().clone();
+        // Each rung built exactly once; the return to fft was a cache
+        // hit on the still-resident unpressured plan.
+        assert_eq!(kinds, vec![BackendKind::Fft, BackendKind::Ski]);
     }
 
     #[test]
@@ -832,6 +1172,7 @@ mod tests {
             max_wait: Duration::from_millis(20),
             queue_depth: 32,
             buckets: vec![8],
+            ..ServerConfig::default()
         });
         let h = b.handle();
         let t = std::thread::spawn(move || {
@@ -900,6 +1241,9 @@ mod tests {
         assert_eq!(good.unwrap().logits, vec![3.0], "server must keep serving after a failure");
         assert_eq!(stats.exec_errors, 1);
         assert_eq!(stats.requests, 2);
+        // Executor failures count as completed (answered) admissions.
+        assert!(stats.admission.balanced(), "{:?}", stats.admission);
+        assert_eq!(stats.admission.completed, 2);
     }
 
     #[test]
@@ -912,6 +1256,7 @@ mod tests {
             max_wait: Duration::from_millis(10),
             queue_depth: 16,
             buckets: vec![8],
+            ..ServerConfig::default()
         });
         let h = b.handle();
         let t = std::thread::spawn(move || {

@@ -1,0 +1,267 @@
+//! Deterministic fault injection for the serving stack.
+//!
+//! The same zero-cost discipline as the telemetry handles: every hook
+//! is one relaxed atomic load when chaos is off (the default), and the
+//! decision stream is drawn from one seeded [`Rng`] when it is on —
+//! the same seed replays the same injection sequence, which is what
+//! lets `tests/overload.rs` and the CI `robustness-soak` job assert
+//! exact invariants under induced failure instead of flaky ones.
+//!
+//! Arming: set the `SKI_TNN_CHAOS` environment variable to a seed
+//! (`0`/`off`/empty leaves it disarmed) or call [`install`] with an
+//! explicit [`ChaosConfig`].  [`disarm`] returns to the no-op state.
+//!
+//! Faults injected (each an independent Bernoulli draw per site):
+//! * **Executor failures** — [`chaos_exec`] wraps a batcher executor
+//!   and makes it fail whole batches, exercising the fail-the-batch-
+//!   not-the-loop hardening.
+//! * **Slow ticks** — [`inject_stall`] sleeps inside the serve/decode
+//!   loop, inflating queue waits until deadlines and shedding engage.
+//! * **Poisoned sessions** — [`poison_next_session`] tells the
+//!   generation scheduler to corrupt a freshly admitted session, which
+//!   must fail only its own request.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, Once, PoisonError};
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use crate::runtime::HostTensor;
+use crate::util::rng::Rng;
+
+use super::rows::RowBatch;
+
+/// Injection rates and knobs; [`ChaosConfig::from_seed`] gives the
+/// soak defaults, struct-update syntax tunes individual rates.
+#[derive(Debug, Clone, Copy)]
+pub struct ChaosConfig {
+    /// PRNG seed — the whole decision stream derives from it.
+    pub seed: u64,
+    /// P(an executed batch fails wholesale).
+    pub exec_failure: f64,
+    /// P(a serve/decode tick stalls for `stall` first).
+    pub slow_tick: f64,
+    /// Stall duration for an injected slow tick.
+    pub stall: Duration,
+    /// P(a freshly admitted decode session is poisoned).
+    pub poison_session: f64,
+}
+
+impl ChaosConfig {
+    /// Soak-calibrated defaults: frequent enough that a few hundred
+    /// requests exercise every failure path, rare enough that most
+    /// traffic still completes.
+    pub fn from_seed(seed: u64) -> ChaosConfig {
+        ChaosConfig {
+            seed,
+            exec_failure: 0.08,
+            slow_tick: 0.05,
+            stall: Duration::from_millis(3),
+            poison_session: 0.05,
+        }
+    }
+}
+
+/// What chaos actually did — lets a soak report injected fault counts
+/// next to the admission ledger.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct ChaosCounts {
+    pub exec_failures: u64,
+    pub stalls: u64,
+    pub poisoned: u64,
+}
+
+struct State {
+    cfg: ChaosConfig,
+    rng: Rng,
+    counts: ChaosCounts,
+}
+
+/// Fast-path gate: hooks bail on one relaxed load when disarmed.
+static ARMED: AtomicBool = AtomicBool::new(false);
+static ENV_INIT: Once = Once::new();
+static STATE: Mutex<Option<State>> = Mutex::new(None);
+
+fn lock_state() -> std::sync::MutexGuard<'static, Option<State>> {
+    STATE.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+fn env_init() {
+    ENV_INIT.call_once(|| {
+        if let Ok(v) = std::env::var("SKI_TNN_CHAOS") {
+            let v = v.trim();
+            if !(v.is_empty() || v == "0" || v.eq_ignore_ascii_case("off")) {
+                // Any non-numeric value still arms with a fixed seed so
+                // `SKI_TNN_CHAOS=on` does something sensible.
+                let seed = v.parse::<u64>().unwrap_or(1);
+                install(ChaosConfig::from_seed(seed));
+            }
+        }
+    });
+}
+
+/// Is fault injection armed?  The only cost every hook pays when off.
+pub fn enabled() -> bool {
+    env_init();
+    ARMED.load(Ordering::Relaxed)
+}
+
+/// Arm fault injection with an explicit config (tests, `ski-tnn
+/// soak`).  Resets the decision stream and counts.
+pub fn install(cfg: ChaosConfig) {
+    let mut g = lock_state();
+    *g = Some(State { rng: Rng::new(cfg.seed), cfg, counts: ChaosCounts::default() });
+    drop(g);
+    ARMED.store(true, Ordering::Relaxed);
+}
+
+/// Disarm: every hook returns to the no-op fast path.
+pub fn disarm() {
+    ARMED.store(false, Ordering::Relaxed);
+    *lock_state() = None;
+}
+
+/// Fault counts injected since [`install`].
+pub fn counts() -> ChaosCounts {
+    lock_state().as_ref().map(|s| s.counts).unwrap_or_default()
+}
+
+/// Draw one decision; `None` when disarmed (between `enabled()` and
+/// the lock, `disarm` may have raced — treated as disarmed).
+fn draw(p: impl Fn(&ChaosConfig) -> f64, count: impl Fn(&mut ChaosCounts)) -> bool {
+    let mut g = lock_state();
+    let Some(state) = g.as_mut() else { return false };
+    let hit = state.rng.bool(p(&state.cfg));
+    if hit {
+        count(&mut state.counts);
+    }
+    hit
+}
+
+/// Should the current batch execution fail?  Returns the injected
+/// error message so callers produce a recognisable failure.
+pub fn inject_exec_failure() -> Option<&'static str> {
+    if !enabled() {
+        return None;
+    }
+    draw(|c| c.exec_failure, |k| k.exec_failures += 1)
+        .then_some("chaos: injected executor failure")
+}
+
+/// Maybe stall the calling serve/decode tick.
+pub fn inject_stall() {
+    if !enabled() {
+        return;
+    }
+    let stall = {
+        let mut g = lock_state();
+        let Some(state) = g.as_mut() else { return };
+        if !state.rng.bool(state.cfg.slow_tick) {
+            return;
+        }
+        state.counts.stalls += 1;
+        state.cfg.stall
+    };
+    // Sleep outside the lock: a stall must slow one tick, not every
+    // concurrent hook.
+    std::thread::sleep(stall);
+}
+
+/// Should the session being admitted right now be poisoned?
+pub fn poison_next_session() -> bool {
+    if !enabled() {
+        return false;
+    }
+    draw(|c| c.poison_session, |k| k.poisoned += 1)
+}
+
+/// Wrap a [`super::Batcher::run`] executor with executor-failure and
+/// slow-tick injection.  Disarmed, the wrapper is a pass-through
+/// costing one atomic load per batch.
+pub fn chaos_exec<F>(mut exec: F) -> impl FnMut(&HostTensor) -> Result<RowBatch>
+where
+    F: FnMut(&HostTensor) -> Result<RowBatch>,
+{
+    move |batch: &HostTensor| {
+        if let Some(msg) = inject_exec_failure() {
+            return Err(anyhow!(msg));
+        }
+        inject_stall();
+        exec(batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Serializes tests that arm/disarm the global chaos state (the
+    /// same discipline as `telemetry::test_guard`).
+    pub(crate) fn test_guard() -> std::sync::MutexGuard<'static, ()> {
+        static GUARD: Mutex<()> = Mutex::new(());
+        GUARD.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    fn decision_stream(seed: u64, n: usize) -> Vec<(bool, bool)> {
+        install(ChaosConfig { stall: Duration::ZERO, ..ChaosConfig::from_seed(seed) });
+        let out = (0..n)
+            .map(|_| (inject_exec_failure().is_some(), poison_next_session()))
+            .collect();
+        disarm();
+        out
+    }
+
+    #[test]
+    fn disarmed_hooks_are_no_ops() {
+        let _g = test_guard();
+        let _ = enabled(); // settle any env-var arming first
+        disarm();
+        assert!(!enabled());
+        assert!(inject_exec_failure().is_none());
+        assert!(!poison_next_session());
+        inject_stall(); // must not sleep or panic
+        let mut exec = chaos_exec(|_b: &HostTensor| Ok(RowBatch::from(vec![vec![1.0f32]])));
+        let batch = HostTensor::i32(vec![1, 1], vec![0]);
+        assert!(exec(&batch).is_ok(), "disarmed wrapper is a pass-through");
+    }
+
+    #[test]
+    fn same_seed_replays_same_decision_stream() {
+        let _g = test_guard();
+        let a = decision_stream(1234, 256);
+        let b = decision_stream(1234, 256);
+        assert_eq!(a, b, "seeded chaos must be deterministic");
+        let c = decision_stream(99, 256);
+        assert_ne!(a, c, "different seeds must diverge");
+        assert!(a.iter().any(|&(f, _)| f), "rates must actually fire over 256 draws");
+    }
+
+    #[test]
+    fn counts_track_injections() {
+        let _g = test_guard();
+        install(ChaosConfig {
+            exec_failure: 1.0,
+            poison_session: 1.0,
+            slow_tick: 0.0,
+            ..ChaosConfig::from_seed(7)
+        });
+        assert_eq!(inject_exec_failure(), Some("chaos: injected executor failure"));
+        assert!(poison_next_session());
+        let k = counts();
+        assert_eq!((k.exec_failures, k.poisoned, k.stalls), (1, 1, 0));
+        disarm();
+        assert_eq!(counts().exec_failures, 0, "disarm clears state");
+    }
+
+    #[test]
+    fn chaos_exec_injects_failures_at_rate_one() {
+        let _g = test_guard();
+        install(ChaosConfig { exec_failure: 1.0, ..ChaosConfig::from_seed(3) });
+        let mut exec = chaos_exec(|_b: &HostTensor| Ok(RowBatch::from(vec![vec![1.0f32]])));
+        let batch = HostTensor::i32(vec![1, 1], vec![0]);
+        let err = exec(&batch).unwrap_err();
+        assert!(err.to_string().contains("chaos: injected executor failure"), "{err}");
+        disarm();
+    }
+}

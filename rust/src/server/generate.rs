@@ -14,23 +14,38 @@
 //! Queue latency is recorded server-side per session (the same
 //! p50/p95/p99 surface as [`super::BatcherStats`]) so `ski-tnn
 //! generate` reports come from the scheduler, not client-side timing.
+//!
+//! Overload control mirrors the batcher's (see [`super::admission`]):
+//! the prompt queue is a bounded admission queue with a shed policy
+//! and per-request deadlines, prompts that expire while queued are
+//! answered with a typed [`ServeError::DeadlineExceeded`] before any
+//! prefill compute is spent, and every request is accounted in the
+//! scheduler's [`AdmissionLedger`].
 
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TryRecvError, TrySendError};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
+use super::admission::{
+    admission_queue, Admissible, AdmissionLedger, AdmissionPolicy, AdmissionReceiver,
+    AdmissionSender, AdmissionSnapshot, RetryPolicy, ServeError, SubmitError, TryRecv,
+    SERVER_PRESSURE,
+};
 use super::batcher::QUEUE_SAMPLE_CAP;
+use super::chaos;
 use crate::decode::{DecodeError, DecodeModel, Sampler, Session};
 use crate::runtime::pool::{resolve_threads, ThreadPool};
 use crate::util::bench::{percentiles_of, push_sample};
+use crate::util::rng::Rng;
 
 /// Scheduler tuning knobs.
 #[derive(Debug, Clone)]
 pub struct GenConfig {
     /// Concurrent decode slots (live sessions per tick).
     pub max_sessions: usize,
-    /// Bounded prompt queue — overflow is backpressure, not OOM.
+    /// Bounded prompt queue — overflow is backpressure or shedding
+    /// (per `policy`), not OOM.
     pub queue_depth: usize,
     /// Server-side cap on tokens per request.
     pub max_new_cap: usize,
@@ -39,11 +54,22 @@ pub struct GenConfig {
     /// serial reference).  Sessions are independent, so generated
     /// tokens are bitwise identical for any value.
     pub threads: usize,
+    /// What a full queue does to a blocking submit.
+    pub policy: AdmissionPolicy,
+    /// Default per-request deadline; `None` = no deadline.
+    pub deadline: Option<Duration>,
 }
 
 impl Default for GenConfig {
     fn default() -> Self {
-        GenConfig { max_sessions: 8, queue_depth: 64, max_new_cap: 512, threads: 0 }
+        GenConfig {
+            max_sessions: 8,
+            queue_depth: 64,
+            max_new_cap: 512,
+            threads: 0,
+            policy: AdmissionPolicy::Block,
+            deadline: None,
+        }
     }
 }
 
@@ -70,6 +96,20 @@ pub struct GenRequest {
     pub params: GenParams,
     resp: SyncSender<GenResponse>,
     submitted: Instant,
+    /// Absolute deadline; past it the prompt is answered with
+    /// [`ServeError::DeadlineExceeded`] instead of decoding.
+    deadline: Option<Instant>,
+}
+
+impl Admissible for GenRequest {
+    fn deadline(&self) -> Option<Instant> {
+        self.deadline
+    }
+
+    fn reject(self, err: ServeError) {
+        let queued = self.submitted.elapsed();
+        let _ = self.resp.send(GenResponse { tokens: Vec::new(), queued, error: Some(err) });
+    }
 }
 
 /// One finished generation.
@@ -79,10 +119,12 @@ pub struct GenResponse {
     pub tokens: Vec<i32>,
     /// Time between submit and admission to a decode slot.
     pub queued: Duration,
-    /// Set when this session failed (corrupted decode state): the
-    /// request errored, the serve process and every other live session
-    /// carried on.  [`GenClient::generate`] surfaces it as an `Err`.
-    pub error: Option<String>,
+    /// Set when this request did not generate: a typed
+    /// overload/deadline answer from admission control, or
+    /// [`ServeError::Exec`] when its session failed (corrupted decode
+    /// state — the serve process and every other live session carried
+    /// on).  [`GenClient::generate`] surfaces it as an `Err`.
+    pub error: Option<ServeError>,
 }
 
 /// Aggregate scheduler counters.
@@ -101,6 +143,9 @@ pub struct GenStats {
     /// Per-session queue wait, recorded at admission.  Bounded to the
     /// most recent `QUEUE_SAMPLE_CAP` samples, like the batcher's.
     pub queue_seconds: Vec<f64>,
+    /// End-of-run admission ledger snapshot — must satisfy
+    /// [`AdmissionSnapshot::balanced`] at quiescence.
+    pub admission: AdmissionSnapshot,
 }
 
 impl GenStats {
@@ -132,37 +177,104 @@ impl GenStats {
 /// Client handle: submit prompts, receive generations.
 #[derive(Clone)]
 pub struct GenClient {
-    tx: SyncSender<GenRequest>,
+    tx: AdmissionSender<GenRequest>,
+    deadline: Option<Duration>,
 }
 
 impl GenClient {
-    /// Blocking round-trip.  A per-session decode failure comes back
-    /// as `Err` (the response's `error` field), not a dead server.
-    pub fn generate(&self, prompt: Vec<i32>, params: GenParams) -> Result<GenResponse> {
-        let (rtx, rrx) = sync_channel(1);
-        self.tx
-            .send(GenRequest { prompt, params, resp: rtx, submitted: Instant::now() })
-            .map_err(|_| anyhow!("generation server stopped"))?;
-        let resp = rrx.recv().map_err(|_| anyhow!("generation server dropped session"))?;
-        if let Some(e) = &resp.error {
-            return Err(anyhow!("generation failed: {e}"));
-        }
-        Ok(resp)
+    /// This handle with a different per-request deadline (`None`
+    /// disables; the config default is what [`GenScheduler::handle`]
+    /// installs).
+    pub fn with_deadline(mut self, deadline: Option<Duration>) -> GenClient {
+        self.deadline = deadline;
+        self
     }
 
-    /// Non-blocking submit; `Err` on a full queue (backpressure).
+    fn request(&self, prompt: Vec<i32>, params: GenParams) -> (GenRequest, Receiver<GenResponse>) {
+        let (rtx, rrx) = sync_channel(1);
+        let now = Instant::now();
+        let deadline = self.deadline.map(|d| now + d);
+        (GenRequest { prompt, params, resp: rtx, submitted: now, deadline }, rrx)
+    }
+
+    /// Blocking round-trip.  A per-session decode failure (or a typed
+    /// overload/deadline answer) comes back as `Err`, not a dead
+    /// server.
+    pub fn generate(&self, prompt: Vec<i32>, params: GenParams) -> Result<GenResponse> {
+        let resp = self.generate_response(prompt, params)?;
+        match &resp.error {
+            None => Ok(resp),
+            Some(e) => Err(anyhow!("generation failed: {e}")),
+        }
+    }
+
+    /// [`generate`](Self::generate) without the error-field mapping:
+    /// typed overload/deadline/session answers come back as the
+    /// response itself — the raw form retry loops match on.
+    pub fn generate_response(&self, prompt: Vec<i32>, params: GenParams) -> Result<GenResponse> {
+        let (req, rrx) = self.request(prompt, params);
+        self.tx.submit(req).map_err(|_| anyhow!("generation server stopped"))?;
+        rrx.recv().map_err(|_| anyhow!("generation server dropped session"))
+    }
+
+    /// Non-blocking submit; a full queue is an immediate typed
+    /// [`SubmitError::QueueFull`] (backpressure — nothing was queued
+    /// and no response will arrive).
     pub fn try_submit(
         &self,
         prompt: Vec<i32>,
         params: GenParams,
-    ) -> Result<Receiver<GenResponse>> {
-        let (rtx, rrx) = sync_channel(1);
-        let req = GenRequest { prompt, params, resp: rtx, submitted: Instant::now() };
-        match self.tx.try_send(req) {
-            Ok(()) => Ok(rrx),
-            Err(TrySendError::Full(_)) => Err(anyhow!("generation queue full")),
-            Err(TrySendError::Disconnected(_)) => Err(anyhow!("generation server stopped")),
+    ) -> Result<Receiver<GenResponse>, SubmitError> {
+        let (req, rrx) = self.request(prompt, params);
+        self.tx.try_submit(req)?;
+        Ok(rrx)
+    }
+
+    /// Submit with client-side retry: jittered exponential backoff on
+    /// `QueueFull` and on typed overload answers, bounded by the
+    /// policy's attempt count and total-time budget.
+    pub fn generate_with_retry(
+        &self,
+        prompt: Vec<i32>,
+        params: GenParams,
+        policy: &RetryPolicy,
+    ) -> Result<GenResponse> {
+        let ledger = self.tx.ledger();
+        let started = Instant::now();
+        let mut rng = Rng::new(policy.seed);
+        let mut last_err = anyhow!("no attempt made");
+        for attempt in 0..policy.attempts.max(1) {
+            if attempt > 0 {
+                let pause = policy.backoff(attempt as u32 - 1, &mut rng);
+                if started.elapsed() + pause >= policy.budget {
+                    break;
+                }
+                std::thread::sleep(pause);
+                ledger.note_retry();
+            }
+            match self.try_submit(prompt.clone(), params) {
+                Err(SubmitError::Stopped) => return Err(anyhow!("generation server stopped")),
+                Err(SubmitError::QueueFull) => {
+                    last_err = anyhow!("generation queue full");
+                }
+                Ok(rrx) => {
+                    let resp =
+                        rrx.recv().map_err(|_| anyhow!("generation server dropped session"))?;
+                    match &resp.error {
+                        None => return Ok(resp),
+                        Some(e) if e.retryable() => {
+                            last_err = anyhow!("generation failed: {e}");
+                        }
+                        Some(e) => return Err(anyhow!("generation failed: {e}")),
+                    }
+                }
+            }
         }
+        Err(last_err.context(format!(
+            "retries exhausted ({} attempts, {:?} elapsed)",
+            policy.attempts,
+            started.elapsed()
+        )))
     }
 }
 
@@ -201,20 +313,24 @@ fn prompt_bucket(len: usize) -> usize {
 /// session has drained.
 pub struct GenScheduler {
     pub cfg: GenConfig,
-    rx: Receiver<GenRequest>,
-    tx: Option<SyncSender<GenRequest>>,
+    rx: AdmissionReceiver<GenRequest>,
+    tx: Option<AdmissionSender<GenRequest>>,
     next_id: u64,
 }
 
 impl GenScheduler {
     pub fn new(cfg: GenConfig) -> GenScheduler {
-        let (tx, rx) = sync_channel(cfg.queue_depth);
+        let (tx, rx) = admission_queue(cfg.queue_depth, cfg.policy, cfg.deadline);
         GenScheduler { cfg, rx, tx: Some(tx), next_id: 0 }
     }
 
-    /// A cloneable client handle (hand to worker threads).
+    /// A cloneable client handle (hand to worker threads), carrying
+    /// the config's default deadline.
     pub fn handle(&self) -> GenClient {
-        GenClient { tx: self.tx.clone().expect("scheduler already running") }
+        GenClient {
+            tx: self.tx.clone().expect("scheduler already running"),
+            deadline: self.cfg.deadline,
+        }
     }
 
     /// Admit a group of requests: record queue waits, assign ids in
@@ -233,6 +349,7 @@ impl GenScheduler {
         pool: &ThreadPool,
         stats: &mut GenStats,
         active: &mut Vec<Live>,
+        ledger: &AdmissionLedger,
     ) {
         let mut adms: Vec<Admission> = reqs
             .into_iter()
@@ -273,14 +390,23 @@ impl GenScheduler {
         stats.prefill_seconds += t0.elapsed().as_secs_f64();
         for a in adms {
             match a.built.expect("prefill ran for every admission") {
-                Ok(session) => {
+                Ok(mut session) => {
+                    // Chaos hook: a freshly admitted session may be
+                    // corrupted here, which must fail only its own
+                    // request (the fault the tick loop is hardened
+                    // against).
+                    if chaos::poison_next_session() {
+                        session.poison_for_test();
+                    }
                     active.push(Live { session, resp: a.resp, queued: a.queued, error: None })
                 }
                 Err(e) => {
+                    // Answered ⇒ completed, for the admission ledger.
+                    ledger.note_completed(1);
                     let _ = a.resp.send(GenResponse {
                         tokens: Vec::new(),
                         queued: a.queued,
-                        error: Some(e.to_string()),
+                        error: Some(ServeError::Exec(e.to_string())),
                     });
                 }
             }
@@ -292,6 +418,7 @@ impl GenScheduler {
     pub fn run(mut self, model: &DecodeModel) -> Result<GenStats> {
         drop(self.tx.take()); // only client handles keep the queue alive
         let pool = ThreadPool::new(resolve_threads(self.cfg.threads));
+        let ledger = self.rx.ledger();
         let mut stats = GenStats::default();
         let mut active: Vec<Live> = Vec::new();
         let mut disconnected = false;
@@ -304,28 +431,44 @@ impl GenScheduler {
                     break;
                 }
                 match self.rx.recv() {
-                    Ok(r) => incoming.push(r),
-                    Err(_) => break,
+                    Some(r) => incoming.push(r),
+                    None => break,
                 }
             }
             while !disconnected && active.len() + incoming.len() < self.cfg.max_sessions {
                 match self.rx.try_recv() {
-                    Ok(r) => incoming.push(r),
-                    Err(TryRecvError::Empty) => break,
-                    Err(TryRecvError::Disconnected) => {
+                    TryRecv::Item(r) => incoming.push(r),
+                    TryRecv::Empty => break,
+                    TryRecv::Disconnected => {
                         disconnected = true;
                         break;
                     }
                 }
             }
-            if !incoming.is_empty() {
-                self.admit_group(incoming, model, &pool, &mut stats, &mut active);
+            // Publish pressure once per scheduling round (the same
+            // gauge the batcher feeds; whichever loop is serving owns
+            // the reading).
+            SERVER_PRESSURE.set(self.rx.pressure());
+            // Deadline sweep: prompts that expired while queued are
+            // answered before any prefill compute is spent on them.
+            let now = Instant::now();
+            let (live_in, expired): (Vec<_>, Vec<_>) =
+                incoming.into_iter().partition(|r| !r.expired(now));
+            for req in expired {
+                ledger.note_expired();
+                req.reject(ServeError::DeadlineExceeded);
+            }
+            if !live_in.is_empty() {
+                self.admit_group(live_in, model, &pool, &mut stats, &mut active, &ledger);
             }
             if active.is_empty() {
-                // Every admission this round failed prefill (or none
-                // arrived): nothing to tick.
+                // Every admission this round failed prefill or
+                // expired (or none arrived): nothing to tick.
                 continue;
             }
+            // Chaos hook: an injected slow tick inflates queue waits,
+            // exercising deadlines and shedding downstream.
+            chaos::inject_stall();
             // One tick: a decode step for every live session, sharded
             // across the pool (sessions are independent — each owns
             // its state and sampler — so this is bitwise identical to
@@ -339,8 +482,9 @@ impl GenScheduler {
             stats.ticks += 1;
             stats.active_session_ticks += active.len();
             stats.tokens += stepped;
-            retire_finished(&mut active);
+            retire_finished(&mut active, &ledger);
         }
+        stats.admission = ledger.snapshot();
         Ok(stats)
     }
 }
@@ -371,13 +515,15 @@ fn step_sessions(pool: &ThreadPool, model: &DecodeModel, active: &mut [Live]) ->
 /// Retire finished and failed sessions — their slots free mid-stream.
 /// A failed session answers its own request with the error; every
 /// other live session (and the serve loop itself) is untouched.
-fn retire_finished(active: &mut Vec<Live>) {
+/// Either way the answer is a completion for the admission ledger.
+fn retire_finished(active: &mut Vec<Live>, ledger: &AdmissionLedger) {
     active.retain_mut(|live| {
         if let Some(e) = live.error.take() {
+            ledger.note_completed(1);
             let _ = live.resp.send(GenResponse {
                 tokens: Vec::new(),
                 queued: live.queued,
-                error: Some(e),
+                error: Some(ServeError::Exec(e)),
             });
             return false;
         }
@@ -385,6 +531,7 @@ fn retire_finished(active: &mut Vec<Live>) {
             return true;
         }
         let tokens = live.session.generated().to_vec();
+        ledger.note_completed(1);
         let _ = live.resp.send(GenResponse { tokens, queued: live.queued, error: None });
         false
     });
@@ -415,6 +562,7 @@ mod tests {
             queue_depth: 16,
             max_new_cap: 64,
             threads: 4,
+            ..GenConfig::default()
         });
         let h = sched.handle();
         let clients: Vec<_> = (0..3)
@@ -441,6 +589,9 @@ mod tests {
         assert_eq!(stats.queue_seconds.len(), 12);
         let (p50, p95, p99) = stats.queue_percentiles();
         assert!(p50 <= p95 && p95 <= p99);
+        // The admission ledger balances exactly at quiescence.
+        assert!(stats.admission.balanced(), "{:?}", stats.admission);
+        assert_eq!(stats.admission.completed, 12);
     }
 
     #[test]
@@ -451,6 +602,7 @@ mod tests {
             queue_depth: 16,
             max_new_cap: 64,
             threads: 2,
+            ..GenConfig::default()
         });
         let h = sched.handle();
         let t = std::thread::spawn(move || {
@@ -509,6 +661,7 @@ mod tests {
                 queue_depth: 16,
                 max_new_cap: 64,
                 threads,
+                ..GenConfig::default()
             });
             let h = sched.handle();
             let t = std::thread::spawn(move || {
@@ -541,6 +694,7 @@ mod tests {
         // response while the healthy session generates to completion.
         let model = tiny_model();
         let pool = ThreadPool::new(2);
+        let ledger = AdmissionLedger::default();
         let (tx_bad, rx_bad) = sync_channel(1);
         let (tx_ok, rx_ok) = sync_channel(1);
         let mut bad = Session::new(&model, 0, &[1, 2], Sampler::greedy(), 4).unwrap();
@@ -553,7 +707,7 @@ mod tests {
         let mut guard = 0;
         while !active.is_empty() {
             step_sessions(&pool, &model, &mut active);
-            retire_finished(&mut active);
+            retire_finished(&mut active, &ledger);
             guard += 1;
             assert!(guard < 32, "sessions must drain");
         }
@@ -563,6 +717,7 @@ mod tests {
         let ok_resp = rx_ok.recv().unwrap();
         assert!(ok_resp.error.is_none(), "healthy session must be unaffected");
         assert_eq!(ok_resp.tokens.len(), 4);
+        assert_eq!(ledger.snapshot().completed, 2, "every answer is a ledger completion");
     }
 
     #[test]
@@ -572,13 +727,14 @@ mod tests {
         // alive), and a subsequent healthy request still serves.
         let model = tiny_model();
         let pool = ThreadPool::new(1);
+        let ledger = AdmissionLedger::default();
         let (tx_bad, rx_bad) = sync_channel::<GenResponse>(1);
         let mut bad = Session::new(&model, 7, &[9], Sampler::greedy(), 8).unwrap();
         bad.poison_for_test();
         let mut active =
             vec![Live { session: bad, resp: tx_bad, queued: Duration::ZERO, error: None }];
         step_sessions(&pool, &model, &mut active);
-        retire_finished(&mut active);
+        retire_finished(&mut active, &ledger);
         assert!(active.is_empty(), "failed session must free its slot");
         assert!(rx_bad.recv().unwrap().error.is_some());
         // The scheduler keeps serving healthy traffic afterwards.
@@ -604,6 +760,7 @@ mod tests {
                 queue_depth: 16,
                 max_new_cap: 64,
                 threads,
+                ..GenConfig::default()
             });
             let h = sched.handle();
             let t = std::thread::spawn(move || {
@@ -660,11 +817,36 @@ mod tests {
         });
         let h = sched.handle();
         // Scheduler not running: the bounded queue must reject the
-        // second submit instead of buffering unboundedly.
+        // second submit instead of buffering unboundedly, with the
+        // typed error.
         let _first = h.try_submit(vec![1], GenParams::default()).unwrap();
-        assert!(h.try_submit(vec![2], GenParams::default()).is_err());
+        assert_eq!(
+            h.try_submit(vec![2], GenParams::default()).unwrap_err(),
+            SubmitError::QueueFull
+        );
         drop(h);
         let stats = sched.run(&model).unwrap();
         assert_eq!(stats.sessions, 1);
+    }
+
+    #[test]
+    fn expired_prompt_answers_typed_deadline_error() {
+        // A prompt whose deadline passes while queued must get exactly
+        // one DeadlineExceeded answer and never occupy a decode slot.
+        let model = tiny_model();
+        let sched = GenScheduler::new(GenConfig {
+            deadline: Some(Duration::ZERO),
+            ..GenConfig::default()
+        });
+        let h = sched.handle();
+        let t = std::thread::spawn(move || {
+            h.generate(vec![1, 2], GenParams { max_new: 4, ..GenParams::default() })
+        });
+        let stats = sched.run(&model).unwrap();
+        let err = t.join().unwrap().expect_err("zero deadline must expire");
+        assert!(err.to_string().contains("deadline exceeded"), "{err}");
+        assert_eq!(stats.sessions, 0, "expired prompts never reach prefill");
+        assert!(stats.admission.balanced(), "{:?}", stats.admission);
+        assert_eq!(stats.admission.expired, 1);
     }
 }

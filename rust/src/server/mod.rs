@@ -16,16 +16,32 @@
 //! [`GenScheduler`] is the autoregressive sibling: a continuous-
 //! batching loop over live [`crate::decode::Session`]s that interleaves
 //! one O(1) decode step per session per tick (see `server::generate`).
+//!
+//! **Overload control** lives in [`admission`]: both loops sit behind a
+//! bounded admission queue with a shed policy and per-request
+//! deadlines, publish a [`PressureGauge`] the dispatcher consumes to
+//! downshift backends one cost rung, and account every request in an
+//! [`AdmissionLedger`] that must balance exactly at quiescence.
+//! [`chaos`] is the matching deterministic fault-injection harness
+//! (seeded, zero cost when off) that the soak CI job drives.
 
+mod admission;
 mod batcher;
+pub mod chaos;
 mod generate;
 mod rows;
 
-pub use batcher::{
-    audit_exec, serve_model, serve_toeplitz, serve_toeplitz_factory, serve_toeplitz_on, Batcher,
-    BatcherStats, Request, Response, ServerConfig, SERVE_PLAN_CAP,
+pub use admission::{
+    admission_queue, Admissible, AdmissionLedger, AdmissionPolicy, AdmissionReceiver,
+    AdmissionSender, AdmissionSnapshot, PressureGauge, RecvTimeout, RetryPolicy, ServeError,
+    SubmitError, TryRecv, SERVER_PRESSURE,
 };
-pub use rows::{LogitsRow, RowBatch, RowPool};
+pub use batcher::{
+    audit_exec, pressure_scaled_wait, serve_model, serve_toeplitz, serve_toeplitz_factory,
+    serve_toeplitz_on, serve_toeplitz_pressured, Batcher, BatcherStats, Request, Response,
+    ServerConfig, GATHER_SHRINK, SERVE_PLAN_CAP,
+};
 pub use generate::{
     GenClient, GenConfig, GenParams, GenRequest, GenResponse, GenScheduler, GenStats,
 };
+pub use rows::{LogitsRow, RowBatch, RowPool};

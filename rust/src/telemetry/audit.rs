@@ -33,6 +33,15 @@ pub struct AuditRow {
     pub predicted_ns: f64,
     /// Measured wall time of the executed batch, ns.
     pub measured_ns: f64,
+    /// The server [`PressureGauge`](crate::server::PressureGauge)
+    /// reading at execution time (0.0 at sites with no gauge).
+    pub pressure: f64,
+    /// True when the executed backend was a graceful-degradation
+    /// downshift of the unpressured plan
+    /// ([`Dispatch::downshift`](crate::toeplitz::Dispatch::downshift)
+    /// under pressure ≥ `PRESSURE_DOWNSHIFT`) — makes load shedding
+    /// auditable after the fact.
+    pub downshifted: bool,
 }
 
 impl AuditRow {
@@ -56,6 +65,8 @@ impl AuditRow {
             ("backend", Json::str(self.backend)),
             ("predicted_ns", Json::num(self.predicted_ns)),
             ("measured_ns", Json::num(self.measured_ns)),
+            ("pressure", Json::num(self.pressure)),
+            ("downshifted", Json::Bool(self.downshifted)),
         ])
     }
 }
@@ -169,6 +180,8 @@ mod tests {
             backend: "fft",
             predicted_ns,
             measured_ns,
+            pressure: 0.0,
+            downshifted: false,
         }
     }
 

@@ -160,6 +160,22 @@ pub fn check_snapshot(doc: &Json) -> Result<()> {
         .and_then(Json::as_f64)
         .ok_or_else(|| anyhow!("snapshot missing the plan.cache.bytes gauge"))?;
     ensure!(plan_bytes >= 0.0, "plan.cache.bytes gauge is {plan_bytes}, want >= 0");
+    // Overload control: every serve/generate path admits through the
+    // bounded admission queue, so a run that produced traffic must
+    // show admissions and a pressure reading.  The shed/expired/retry
+    // counters are legitimately absent on an uncontended run.
+    let admitted = counter("server.admission.admitted")
+        .ok_or_else(|| anyhow!("snapshot missing the server.admission.admitted counter"))?;
+    ensure!(admitted >= 1.0, "server.admission.admitted is {admitted}, want >= 1");
+    let pressure = doc
+        .get("gauges")
+        .and_then(|g| g.get("server.pressure"))
+        .and_then(Json::as_f64)
+        .ok_or_else(|| anyhow!("snapshot missing the server.pressure gauge"))?;
+    ensure!(
+        (0.0..=1.0).contains(&pressure),
+        "server.pressure gauge is {pressure}, want within [0, 1]"
+    );
     let mut bad = Vec::new();
     sweep_nonfinite("$", doc, &mut bad);
     ensure!(bad.is_empty(), "snapshot contains non-finite series: {}", bad.join(", "));
@@ -242,6 +258,17 @@ pub fn print_snapshot(doc: &Json) {
                 c("fft.plan_cache.evict") as u64
             );
         }
+        let admitted = c("server.admission.admitted");
+        if admitted > 0.0 {
+            println!(
+                "admission: {} admitted, {} shed, {} expired, {} retries (pressure {:.2})",
+                admitted as u64,
+                c("server.admission.shed") as u64,
+                c("server.admission.expired") as u64,
+                c("server.admission.retries") as u64,
+                g("server.pressure")
+            );
+        }
         let pmiss = c("plan.cache.miss");
         let plooked = c("plan.cache.hit") + pmiss;
         if plooked > 0.0 {
@@ -301,6 +328,8 @@ mod tests {
             backend: "ski",
             predicted_ns: 4000.0,
             measured_ns: 5000.0,
+            pressure: 0.0,
+            downshifted: false,
         }
     }
 
@@ -357,6 +386,21 @@ mod tests {
         reg.gauge("plan.cache.size").set(2.0);
         assert!(check_snapshot(&snapshot_json(&reg, &audit)).is_err(), "still no bytes gauge");
         reg.gauge("plan.cache.bytes").set(4096.0);
+        assert!(
+            check_snapshot(&snapshot_json(&reg, &audit)).is_err(),
+            "still no admission counter"
+        );
+        reg.counter("server.admission.admitted").add(5);
+        assert!(
+            check_snapshot(&snapshot_json(&reg, &audit)).is_err(),
+            "still no pressure gauge"
+        );
+        reg.gauge("server.pressure").set(1.5);
+        assert!(
+            check_snapshot(&snapshot_json(&reg, &audit)).is_err(),
+            "pressure outside [0, 1] must be rejected"
+        );
+        reg.gauge("server.pressure").set(0.25);
         check_snapshot(&snapshot_json(&reg, &audit)).unwrap();
     }
 
@@ -368,6 +412,8 @@ mod tests {
         reg.counter("plan.cache.miss").add(1);
         reg.gauge("plan.cache.size").set(1.0);
         reg.gauge("plan.cache.bytes").set(512.0);
+        reg.counter("server.admission.admitted").add(1);
+        reg.gauge("server.pressure").set(0.0);
         let audit = DispatchAudit::new();
         audit.record(audit_row());
         let mut doc = snapshot_json(&reg, &audit);

@@ -21,7 +21,7 @@ pub use kernels::{decay_bias, gaussian_kernel, rational_kernel, warp, TableKerne
 pub use op::{
     apply_causal_plan, apply_causal_plan_into, apply_causal_plan_with, apply_causal_taps, build_op,
     with_scratch, BackendKind, CostModel, DenseOp, Dispatch, DispatchQuery, FftOp, FreqCausalOp,
-    OpScratch, SparseLowRankOp, SpectralPlan, ToeplitzOp,
+    OpScratch, SparseLowRankOp, SpectralPlan, ToeplitzOp, PRESSURE_DOWNSHIFT,
 };
 pub use parallel::{apply_batch_flat_sharded, apply_batch_sharded};
 pub use ski::{causal_ski_scan, inducing_grid, interp_weights, Ski};

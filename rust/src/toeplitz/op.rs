@@ -776,6 +776,13 @@ pub struct DispatchQuery {
     pub threads: usize,
 }
 
+/// Queue pressure (see `server::admission::PressureGauge`, in [0, 1])
+/// at which [`Dispatch::plan_pressured`] starts downshifting the
+/// chosen backend one rung down the cost ladder: past this the server
+/// is trading throughput for survival, below it the cost model's
+/// accuracy-preferred pick stands.
+pub const PRESSURE_DOWNSHIFT: f64 = 0.6;
+
 /// Cost-model auto-dispatcher: picks the cheapest eligible backend
 /// for a query.  Construct with a re-calibrated [`CostModel`] to
 /// shift the crossovers for a different machine.
@@ -855,6 +862,38 @@ impl Dispatch {
     /// The cheapest eligible backend for this shape (never `Auto`).
     pub fn select(&self, q: &DispatchQuery) -> BackendKind {
         self.plan(q).0
+    }
+
+    /// One rung **down** the paper's cost ladder from `kind` at this
+    /// shape, or `None` when there is nowhere cheaper to go: the only
+    /// admissible downshift is fft → SKI (O(n log n) → O(n)), and only
+    /// where SKI is numerically eligible — non-causal sites with a
+    /// usable rank (causal sites exclude SKI, Appendix B, and `Freq`
+    /// is already the cheapest causal plan).  Dense never downshifts
+    /// here: at dense-winning shapes dense is already the cheapest, so
+    /// a "cheaper" rung does not exist.
+    pub fn downshift(&self, kind: BackendKind, q: &DispatchQuery) -> Option<BackendKind> {
+        match kind {
+            BackendKind::Fft if !q.causal && q.r >= 2 => Some(BackendKind::Ski),
+            _ => None,
+        }
+    }
+
+    /// [`plan`](Self::plan) with graceful degradation: past
+    /// [`PRESSURE_DOWNSHIFT`] the chosen backend steps one rung down
+    /// the cost ladder where [`downshift`](Self::downshift) allows,
+    /// trading the cost model's accuracy pick for strictly lower
+    /// asymptotic work while the serving queue is the bottleneck.
+    /// Below the threshold this is exactly `plan`.
+    pub fn plan_pressured(&self, q: &DispatchQuery, pressure: f64) -> (BackendKind, bool) {
+        let (kind, parallel) = self.plan(q);
+        if pressure < PRESSURE_DOWNSHIFT {
+            return (kind, parallel);
+        }
+        match self.downshift(kind, q) {
+            Some(down) => (down, self.should_shard(down, q)),
+            None => (kind, parallel),
+        }
     }
 
     /// Whether sharding `q.batch` rows of a **given** backend across
@@ -1291,6 +1330,42 @@ mod tests {
         assert!(!d.should_shard(BackendKind::Freq, &big), "ineligible kind answers serial");
         // threads=1 never shards.
         assert!(!d.should_shard(BackendKind::Fft, &DispatchQuery { threads: 1, ..big }));
+    }
+
+    #[test]
+    fn downshift_is_fft_to_ski_where_admissible() {
+        let d = Dispatch::default();
+        let q = DispatchQuery { n: 4096, r: 8, w: 400, causal: false, batch: 1, threads: 1 };
+        assert_eq!(d.downshift(BackendKind::Fft, &q), Some(BackendKind::Ski));
+        // No usable rank → SKI ineligible → nowhere to go.
+        assert_eq!(d.downshift(BackendKind::Fft, &DispatchQuery { r: 0, ..q }), None);
+        assert_eq!(d.downshift(BackendKind::Fft, &DispatchQuery { r: 1, ..q }), None);
+        // Causal sites exclude SKI entirely.
+        assert_eq!(d.downshift(BackendKind::Fft, &DispatchQuery { causal: true, ..q }), None);
+        assert_eq!(d.downshift(BackendKind::Freq, &DispatchQuery { causal: true, ..q }), None);
+        // Already at (or below) the bottom of the ladder.
+        assert_eq!(d.downshift(BackendKind::Ski, &q), None);
+        assert_eq!(d.downshift(BackendKind::Dense, &q), None);
+    }
+
+    #[test]
+    fn plan_pressured_downshifts_past_threshold_only() {
+        let d = Dispatch::default();
+        // Wide band: SKI prices above fft, so the unpressured plan is
+        // fft — the interesting shape, where pressure changes the
+        // answer.
+        let q = DispatchQuery { n: 4096, r: 8, w: 400, causal: false, batch: 1, threads: 1 };
+        assert_eq!(d.plan(&q).0, BackendKind::Fft, "precondition: fft wins unpressured");
+        assert_eq!(d.plan_pressured(&q, 0.0), d.plan(&q));
+        assert_eq!(d.plan_pressured(&q, PRESSURE_DOWNSHIFT - 1e-9), d.plan(&q));
+        assert_eq!(d.plan_pressured(&q, PRESSURE_DOWNSHIFT).0, BackendKind::Ski);
+        assert_eq!(d.plan_pressured(&q, 1.0).0, BackendKind::Ski);
+        // Where the ladder has no lower rung, pressure changes nothing.
+        let causal = DispatchQuery { causal: true, ..q };
+        assert_eq!(d.plan_pressured(&causal, 1.0), d.plan(&causal));
+        let ski_wins = DispatchQuery { w: 3, ..q };
+        assert_eq!(d.plan(&ski_wins).0, BackendKind::Ski, "precondition: ski wins at w=3");
+        assert_eq!(d.plan_pressured(&ski_wins, 1.0), d.plan(&ski_wins));
     }
 
     #[test]

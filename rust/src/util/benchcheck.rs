@@ -743,6 +743,8 @@ mod tests {
         reg.counter("plan.cache.hit").add(3);
         reg.gauge("plan.cache.size").set(1.0);
         reg.gauge("plan.cache.bytes").set(2048.0);
+        reg.counter("server.admission.admitted").add(4);
+        reg.gauge("server.pressure").set(0.1);
         let audit = crate::telemetry::DispatchAudit::new();
         audit.record(crate::telemetry::AuditRow {
             n: 64,
@@ -754,6 +756,8 @@ mod tests {
             backend: "fft",
             predicted_ns: 1000.0,
             measured_ns: 1200.0,
+            pressure: 0.0,
+            downshifted: false,
         });
         let good = dir.join(format!("ski_tnn_gate_good_{pid}.json"));
         std::fs::write(&good, json::write(&crate::telemetry::snapshot_json(&reg, &audit)))

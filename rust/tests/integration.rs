@@ -165,6 +165,7 @@ fn logits_entry_serves_through_batcher() {
         max_wait: std::time::Duration::from_millis(1),
         queue_depth: 16,
         buckets: Vec::new(),
+        ..ServerConfig::default()
     });
     let handle = batcher.handle();
     let vocab = cfg.vocab;
@@ -327,6 +328,7 @@ fn batcher_serves_dispatched_backend_end_to_end() {
         max_wait: Duration::from_millis(2),
         queue_depth: 16,
         buckets: Vec::new(),
+        ..ServerConfig::default()
     };
     let batcher = Batcher::new(cfg);
     let handle = batcher.handle();
@@ -376,6 +378,7 @@ fn bucketed_serving_handles_mixed_length_traffic_at_awkward_widths() {
         max_wait: Duration::from_millis(2),
         queue_depth: 64,
         buckets: vec![24, 96],
+        ..ServerConfig::default()
     };
     let batcher = Batcher::new(cfg);
     let handle = batcher.handle();

@@ -1,0 +1,340 @@
+//! Overload-control and fault-injection robustness: the serving
+//! invariants the admission layer promises, proven end-to-end against
+//! the public API under deterministic chaos.
+//!
+//! The contract under test:
+//!
+//! * every accepted request is answered **exactly once** — a typed
+//!   `Overloaded` / `DeadlineExceeded` / `Exec` answer counts, a lost
+//!   or doubled response never does;
+//! * the admission ledger balances exactly at quiescence:
+//!   `submitted == admitted + shed` and
+//!   `admitted == completed + expired`;
+//! * the queue stays bounded at 10× overcapacity (peak depth never
+//!   exceeds `queue_depth`).
+
+use std::sync::{Mutex, PoisonError};
+use std::time::Duration;
+
+use anyhow::Result;
+use ski_tnn::data::PAD;
+use ski_tnn::runtime::HostTensor;
+use ski_tnn::server::{
+    chaos, AdmissionPolicy, Batcher, Response, RetryPolicy, RowBatch, ServeError, ServerConfig,
+    SubmitError,
+};
+
+/// Chaos state is process-global; tests that arm it take this lock so
+/// they never observe each other's fault streams.  The guard disarms
+/// on drop, panic included.
+static CHAOS_LOCK: Mutex<()> = Mutex::new(());
+
+struct ChaosSession<'a>(#[allow(dead_code)] std::sync::MutexGuard<'a, ()>);
+
+impl ChaosSession<'_> {
+    fn arm(seed: u64) -> ChaosSession<'static> {
+        let guard = CHAOS_LOCK.lock().unwrap_or_else(PoisonError::into_inner);
+        // Settle env-var arming first so `install` owns the state.
+        let _ = chaos::enabled();
+        chaos::install(chaos::ChaosConfig::from_seed(seed));
+        ChaosSession(guard)
+    }
+}
+
+impl Drop for ChaosSession<'_> {
+    fn drop(&mut self) {
+        chaos::disarm();
+    }
+}
+
+/// Echo executor: logits[row] = [sum of that row's non-PAD ids].
+fn echo(batch: &HostTensor) -> Result<RowBatch> {
+    let shape = batch.shape().to_vec();
+    let ids = batch.as_i32()?;
+    Ok(ids
+        .chunks(shape[1])
+        .map(|row| vec![row.iter().filter(|&&t| t != PAD).map(|&t| t as f32).sum::<f32>()])
+        .collect::<Vec<_>>()
+        .into())
+}
+
+fn cfg(queue_depth: usize, policy: AdmissionPolicy, deadline: Option<Duration>) -> ServerConfig {
+    ServerConfig {
+        max_batch: 4,
+        n: 32,
+        max_wait: Duration::from_millis(1),
+        queue_depth,
+        buckets: Vec::new(),
+        policy,
+        deadline,
+    }
+}
+
+#[derive(Debug, Default)]
+struct Drained {
+    ok: u64,
+    overloaded: u64,
+    deadline_exceeded: u64,
+    exec_failed: u64,
+    lost: u64,
+    double_answered: u64,
+}
+
+/// Drain every pending receiver, classifying the typed answers and
+/// checking the exactly-once contract per channel.
+fn drain(pending: Vec<std::sync::mpsc::Receiver<Response>>) -> Drained {
+    let mut d = Drained::default();
+    for rx in pending {
+        match rx.recv_timeout(Duration::from_secs(10)) {
+            Ok(resp) => {
+                match resp.error {
+                    None => d.ok += 1,
+                    Some(ServeError::Overloaded) => d.overloaded += 1,
+                    Some(ServeError::DeadlineExceeded) => d.deadline_exceeded += 1,
+                    Some(ServeError::Exec(_)) => d.exec_failed += 1,
+                }
+                if rx.try_recv().is_ok() {
+                    d.double_answered += 1;
+                }
+            }
+            Err(_) => d.lost += 1,
+        }
+    }
+    d
+}
+
+impl Drained {
+    fn responses(&self) -> u64 {
+        self.ok + self.overloaded + self.deadline_exceeded + self.exec_failed
+    }
+
+    fn merge(&mut self, o: &Drained) {
+        self.ok += o.ok;
+        self.overloaded += o.overloaded;
+        self.deadline_exceeded += o.deadline_exceeded;
+        self.exec_failed += o.exec_failed;
+        self.lost += o.lost;
+        self.double_answered += o.double_answered;
+    }
+}
+
+/// The centerpiece: 80 requests against a depth-8 queue (10×
+/// overcapacity) with executor failures and slow ticks injected, under
+/// the shed-expired-first policy and a real deadline.  Every accepted
+/// request must be answered exactly once, the ledger must balance to
+/// the request, and the queue must stay bounded.
+#[test]
+fn chaos_soak_survives_ten_x_overcapacity() {
+    let _chaos = ChaosSession::arm(7);
+    let b = Batcher::new(cfg(
+        8,
+        AdmissionPolicy::ShedExpiredFirst,
+        Some(Duration::from_millis(200)),
+    ));
+    let h = b.handle();
+    let clients: Vec<_> = (0..4)
+        .map(|c| {
+            let h = h.clone();
+            std::thread::spawn(move || {
+                let mut accepted = 0u64;
+                let mut pending = Vec::new();
+                for i in 0..20 {
+                    // Blocking-admission submit: under a shed policy
+                    // this never blocks — overflow comes back as a
+                    // typed answer on the channel.
+                    match h.submit(vec![c as i32 + 1; (i % 8) + 1]) {
+                        Ok(rx) => {
+                            accepted += 1;
+                            pending.push(rx);
+                        }
+                        Err(SubmitError::Stopped) => panic!("server stopped mid-soak"),
+                        Err(SubmitError::QueueFull) => unreachable!("submit never QueueFulls"),
+                    }
+                }
+                (accepted, drain(pending))
+            })
+        })
+        .collect();
+    drop(h);
+    let stats = b.run(chaos::chaos_exec(echo)).unwrap();
+
+    let mut accepted = 0u64;
+    let mut d = Drained::default();
+    for c in clients {
+        let (a, part) = c.join().unwrap();
+        accepted += a;
+        d.merge(&part);
+    }
+    assert_eq!(accepted, 80, "shed policies accept every submit");
+    assert_eq!(d.responses(), accepted, "every accepted request answered: {d:?}");
+    assert_eq!(d.lost, 0, "no lost responses: {d:?}");
+    assert_eq!(d.double_answered, 0, "no double responses: {d:?}");
+
+    let adm = stats.admission;
+    assert!(adm.balanced(), "ledger must balance exactly: {adm:?}");
+    assert_eq!(adm.submitted, 80, "{adm:?}");
+    assert_eq!(adm.admitted + adm.shed, 80, "{adm:?}");
+    assert_eq!(adm.completed + adm.expired, adm.admitted, "{adm:?}");
+    assert!(adm.peak_depth <= 8, "queue must stay bounded: {adm:?}");
+    // The client-side view and the server-side ledger agree.
+    assert_eq!(d.overloaded, adm.shed, "{d:?} vs {adm:?}");
+    assert_eq!(d.deadline_exceeded, adm.expired, "{d:?} vs {adm:?}");
+}
+
+/// With the server not yet draining, shed-newest answers exactly the
+/// overflow with typed `Overloaded` and executes the rest — fully
+/// deterministic because every submit lands before the serve loop
+/// starts.
+#[test]
+fn shed_newest_answers_typed_overloaded() {
+    let b = Batcher::new(cfg(2, AdmissionPolicy::ShedNewest, None));
+    let h = b.handle();
+    let pending: Vec<_> = (0..10).map(|i| h.submit(vec![i + 1]).unwrap()).collect();
+    drop(h);
+    let stats = b.run(echo).unwrap();
+    let d = drain(pending);
+    assert_eq!(d.ok, 2, "the two queued requests execute: {d:?}");
+    assert_eq!(d.overloaded, 8, "all overflow typed Overloaded: {d:?}");
+    assert_eq!(d.lost + d.double_answered, 0, "{d:?}");
+    let adm = stats.admission;
+    assert!(adm.balanced(), "{adm:?}");
+    assert_eq!(adm.shed, 8, "{adm:?}");
+    assert_eq!(adm.completed, 2, "{adm:?}");
+}
+
+/// Boundary: a zero deadline expires on arrival — rejected inside
+/// submit, never queued, exactly one typed answer.
+#[test]
+fn zero_deadline_expires_on_arrival() {
+    let b = Batcher::new(cfg(16, AdmissionPolicy::Block, Some(Duration::ZERO)));
+    let h = b.handle();
+    let t = std::thread::spawn(move || {
+        (0..3)
+            .map(|i| h.infer_response(vec![i + 1]).unwrap())
+            .map(|resp| resp.error)
+            .collect::<Vec<_>>()
+    });
+    let stats = b.run(echo).unwrap();
+    let errors = t.join().unwrap();
+    assert_eq!(errors, vec![Some(ServeError::DeadlineExceeded); 3]);
+    let adm = stats.admission;
+    assert!(adm.balanced(), "{adm:?}");
+    assert_eq!(adm.expired, 3, "{adm:?}");
+    assert_eq!(adm.completed, 0, "{adm:?}");
+    assert_eq!(stats.requests, 0, "nothing executed");
+}
+
+/// Boundary: requests that outlive their deadline *while queued*
+/// behind a slow batch get the typed answer from the pre-execute
+/// sweep; the one that made it into the executor completes.
+#[test]
+fn deadline_expires_while_queued_behind_a_slow_batch() {
+    let b = Batcher::new(ServerConfig {
+        max_batch: 1,
+        deadline: Some(Duration::from_millis(50)),
+        ..cfg(16, AdmissionPolicy::Block, None)
+    });
+    let h = b.handle();
+    let t = std::thread::spawn(move || {
+        let pending: Vec<_> = (0..3).map(|i| h.submit(vec![i + 1]).unwrap()).collect();
+        drain(pending)
+    });
+    let slow = |batch: &HostTensor| {
+        std::thread::sleep(Duration::from_millis(150));
+        echo(batch)
+    };
+    let stats = b.run(slow).unwrap();
+    let d = t.join().unwrap();
+    assert_eq!(d.ok, 1, "the executing request completes: {d:?}");
+    assert_eq!(d.deadline_exceeded, 2, "the queued ones expire: {d:?}");
+    assert_eq!(d.lost + d.double_answered, 0, "{d:?}");
+    let adm = stats.admission;
+    assert!(adm.balanced(), "{adm:?}");
+    assert_eq!(adm.expired, 2, "{adm:?}");
+}
+
+/// Boundary: a deadline shorter than one gather window — the lone
+/// request sits through the window, and the sweep answers it with
+/// exactly one typed error instead of executing it late.
+#[test]
+fn deadline_shorter_than_gather_window_is_typed() {
+    let b = Batcher::new(ServerConfig {
+        max_wait: Duration::from_millis(50),
+        deadline: Some(Duration::from_millis(10)),
+        ..cfg(16, AdmissionPolicy::Block, None)
+    });
+    let h = b.handle();
+    let t = std::thread::spawn(move || h.infer_response(vec![1, 2, 3]).unwrap());
+    let stats = b.run(echo).unwrap();
+    let resp = t.join().unwrap();
+    assert_eq!(resp.error, Some(ServeError::DeadlineExceeded));
+    let adm = stats.admission;
+    assert!(adm.balanced(), "{adm:?}");
+    assert_eq!(adm.expired, 1, "{adm:?}");
+    assert_eq!(stats.requests, 0, "never executed");
+}
+
+/// Client-side retry: against a live, healthy server the first attempt
+/// lands; against a full queue with no drain the attempts exhaust into
+/// a typed `queue full` failure with the retries on the ledger.
+#[test]
+fn retry_exhausts_typed_on_queue_full_and_succeeds_live() {
+    // Exhaustion: fill the depth-1 queue, never start the server.
+    let b = Batcher::new(cfg(1, AdmissionPolicy::Block, None));
+    let h = b.handle();
+    let parked = h.try_submit(vec![9]).unwrap();
+    let policy = RetryPolicy {
+        attempts: 4,
+        base: Duration::from_millis(1),
+        max_backoff: Duration::from_millis(2),
+        budget: Duration::from_secs(2),
+        seed: 11,
+    };
+    let err = h.infer_with_retry(vec![1, 2], &policy).unwrap_err();
+    assert!(format!("{err:#}").contains("queue full"), "typed root cause: {err:#}");
+    assert_eq!(b.ledger().snapshot().retries, 3, "one per re-attempt");
+    // Now drain: the parked request is still answered exactly once.
+    drop(h);
+    let stats = b.run(echo).unwrap();
+    assert_eq!(parked.recv().unwrap().error, None);
+    assert!(stats.admission.balanced(), "{:?}", stats.admission);
+    assert_eq!(stats.admission.submitted, 1, "QueueFull is not a submission");
+
+    // Live server: retry path degenerates to one clean attempt.
+    let b = Batcher::new(cfg(16, AdmissionPolicy::Block, None));
+    let h = b.handle();
+    let t = std::thread::spawn(move || h.infer_with_retry(vec![2, 3, 4], &policy).unwrap());
+    let stats = b.run(echo).unwrap();
+    let resp = t.join().unwrap();
+    assert_eq!(resp.logits, vec![9.0]);
+    assert!(stats.admission.balanced(), "{:?}", stats.admission);
+    assert_eq!(stats.admission.retries, 0);
+}
+
+/// Chaos-injected executor failures surface as typed `Exec` answers on
+/// the affected batch only — the serve loop keeps going, and failed
+/// requests still count as completed (answered) on the ledger.
+#[test]
+fn injected_executor_failures_answer_without_killing_the_loop() {
+    let _chaos = ChaosSession::arm(3);
+    let b = Batcher::new(cfg(16, AdmissionPolicy::Block, None));
+    let h = b.handle();
+    let t = std::thread::spawn(move || {
+        let pending: Vec<_> = (0..24).map(|i| h.submit(vec![i + 1]).unwrap()).collect();
+        drain(pending)
+    });
+    let stats = b.run(chaos::chaos_exec(echo)).unwrap();
+    let d = t.join().unwrap();
+    assert_eq!(d.responses(), 24, "every request answered: {d:?}");
+    assert_eq!(d.lost + d.double_answered, 0, "{d:?}");
+    assert_eq!(d.overloaded + d.deadline_exceeded, 0, "no shedding configured: {d:?}");
+    let adm = stats.admission;
+    assert!(adm.balanced(), "{adm:?}");
+    assert_eq!(adm.completed, 24, "failed batches still answer: {adm:?}");
+    // The chaos stream at seed 3 injects at least one failure across
+    // 24 single-row batches at p=0.08 (deterministic: same seed, same
+    // stream).
+    if chaos::counts().exec_failures > 0 {
+        assert!(d.exec_failed > 0, "injected failures must reach clients: {d:?}");
+    }
+}

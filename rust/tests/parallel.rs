@@ -223,6 +223,7 @@ fn serve_toeplitz_pooled_end_to_end_matches_dense_oracle() {
         max_wait: Duration::from_millis(2),
         queue_depth: 32,
         buckets: Vec::new(),
+        ..ServerConfig::default()
     };
     let batcher = Batcher::new(cfg);
     let handle = batcher.handle();

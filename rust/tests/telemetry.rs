@@ -54,6 +54,7 @@ fn serve_substrate_emits_complete_snapshot() {
         max_wait: std::time::Duration::from_millis(1),
         queue_depth: 64,
         buckets: vec![32],
+        ..ServerConfig::default()
     });
     let handle = batcher.handle();
     let client = std::thread::spawn(move || {
@@ -70,6 +71,7 @@ fn serve_substrate_emits_complete_snapshot() {
         rank_for,
         w,
         threads,
+        batcher.pressure(),
     );
     let stats = batcher.run(exec).expect("serve loop");
     client.join().unwrap();
@@ -120,6 +122,7 @@ fn generate_ticks_record_decode_span() {
         queue_depth: 8,
         max_new_cap: 16,
         threads: 1,
+        ..GenConfig::default()
     });
     let handle = sched.handle();
     let client = std::thread::spawn(move || {
